@@ -1,0 +1,29 @@
+//! System-level tour: builds the TiM-DNN-style accelerator with SiTe CiM
+//! I/II arrays, runs the paper's five benchmarks against both NM
+//! baselines (Figs 12/13), and prints one full per-layer breakdown.
+//!
+//! Run: cargo run --release --example accelerator_tour
+
+use sitecim::arch::{AccelConfig, Accelerator};
+use sitecim::array::area::Design;
+use sitecim::device::Tech;
+use sitecim::dnn::benchmarks;
+use sitecim::repro;
+use sitecim::util::units::{fmt_energy, fmt_time};
+
+fn main() {
+    print!("{}", repro::fig12());
+    print!("{}", repro::fig13());
+
+    // Breakdown of one run: AlexNet on FEMFET SiTe CiM I.
+    let accel = Accelerator::new(AccelConfig::sitecim(Tech::Femfet3T, Design::Cim1));
+    let r = accel.run(&benchmarks::alexnet());
+    println!("\nAlexNet on 3T-FEMFET SiTe CiM I (32 arrays):");
+    println!("  latency : {} (compute {}, weight-streaming {})",
+        fmt_time(r.latency), fmt_time(r.compute_latency), fmt_time(r.write_latency));
+    println!("  energy  : {} (compute {}, writes {}, periphery {})",
+        fmt_energy(r.energy), fmt_energy(r.compute_energy),
+        fmt_energy(r.write_energy), fmt_energy(r.periph_energy));
+    println!("  work    : {} MAC windows, {} weight-row writes",
+        r.total_windows, r.total_write_rows);
+}

@@ -1,0 +1,17 @@
+//! Array-level analysis: regenerates the circuit/array figures of the
+//! paper (Fig 4(c), Fig 7(c), Fig 9, Fig 11, the area table and the
+//! CiM I vs II comparison) — same output as `sitecim figures`.
+//!
+//! Run: cargo run --release --example array_analysis
+
+use sitecim::repro;
+
+fn main() {
+    print!("{}", repro::fig4());
+    print!("{}", repro::fig7());
+    print!("{}", repro::area_table());
+    print!("{}", repro::fig9());
+    print!("{}", repro::fig11());
+    print!("{}", repro::cim1_vs_cim2());
+    print!("{}", repro::error_prob());
+}

@@ -1,0 +1,51 @@
+//! Quickstart: program a SiTe CiM I array, run a signed-ternary dot
+//! product, and look at the electrical metrics — the 60-second tour of
+//! the public API.
+//!
+//! Run: cargo run --release --example quickstart
+
+use sitecim::array::metrics::{all_designs, ArrayGeom};
+use sitecim::array::SiTeCim1Array;
+use sitecim::device::{PeriphParams, Tech, TechParams};
+use sitecim::util::rng::Rng;
+use sitecim::util::units::{fmt_energy, fmt_time};
+
+fn main() {
+    // 1. A 256x256 signed-ternary CiM array (FEMFET flavor).
+    let mut array = SiTeCim1Array::new(Tech::Femfet3T);
+
+    // 2. Program ternary weights (W ∈ {-1, 0, +1}; ~50% zeros, like a
+    //    TWN-quantized DNN layer).
+    let mut rng = Rng::new(7);
+    let weights = rng.ternary_vec(256 * 256, 0.5);
+    array.write_matrix(&weights);
+
+    // 3. One signed-ternary matrix-vector product: 16 rows assert per
+    //    cycle, two 3-bit ADCs per column, outputs saturate at ±8/cycle.
+    let inputs = rng.ternary_vec(256, 0.5);
+    let outputs = array.dot(&inputs);
+    println!("dot product of 256-long ternary input against 256 columns:");
+    println!("  first 8 outputs: {:?}", &outputs[..8]);
+
+    // 4. What does a MAC window cost, and how does it compare to the
+    //    near-memory baseline?
+    let p = TechParams::new(Tech::Femfet3T);
+    let pp = PeriphParams::default_45nm();
+    let [nm, cim1, _] = all_designs(&p, &pp, ArrayGeom::default());
+    println!("\nper-window (16 rows x 256 columns) on 3T-FEMFET:");
+    println!(
+        "  SiTe CiM I : {} / {}",
+        fmt_time(cim1.mac.latency),
+        fmt_energy(cim1.mac.energy)
+    );
+    println!(
+        "  NM baseline: {} / {}",
+        fmt_time(nm.mac.latency),
+        fmt_energy(nm.mac.energy)
+    );
+    println!(
+        "  => {:.1}x faster, {:.1}x less energy",
+        nm.mac.latency / cim1.mac.latency,
+        nm.mac.energy / cim1.mac.energy
+    );
+}

@@ -1,0 +1,45 @@
+//! Serving demo: starts the coordinator (dynamic batcher + PJRT workers)
+//! over the AOT-compiled ternary MLP and pushes a closed-loop synthetic
+//! workload, reporting wall-clock latency/throughput and the simulated
+//! SiTe CiM hardware cost of the same traffic.
+//!
+//! Requires `make artifacts`. Run:
+//!   cargo run --release --example serve_demo
+
+use std::time::Instant;
+
+use sitecim::coordinator::{Server, ServerConfig};
+use sitecim::runtime::{default_dir, Manifest};
+
+fn main() -> anyhow::Result<()> {
+    let dir = default_dir();
+    let manifest = Manifest::load(&dir)?;
+    let (x, y) = manifest.load_test_set()?;
+
+    let mut cfg = ServerConfig::new(dir);
+    cfg.n_workers = 2;
+    let server = Server::start(cfg)?;
+
+    // Open-loop burst: 1024 requests.
+    let n = 1024;
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n);
+    for i in 0..n {
+        let s = i % manifest.test_n;
+        let input = x[s * manifest.in_dim..(s + 1) * manifest.in_dim].to_vec();
+        pending.push((s, server.infer_async(input).map_err(anyhow::Error::msg)?));
+    }
+    let mut correct = 0;
+    for (s, rx) in pending {
+        let r = rx.recv()?.map_err(anyhow::Error::msg)?;
+        correct += usize::from(r.pred == y[s] as usize);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    println!("burst of {n} requests: {:.0} req/s, accuracy {:.2}%",
+        n as f64 / dt, 100.0 * correct as f64 / n as f64);
+    println!("{}", server.metrics.report());
+    println!("(simulated figures = what the FEMFET SiTe CiM I accelerator would spend)");
+    server.shutdown();
+    Ok(())
+}

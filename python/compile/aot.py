@@ -1,0 +1,138 @@
+"""AOT compile path: train the ternary MLP, lower the inference graphs to
+HLO *text* and write all runtime artifacts.
+
+HLO text (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifacts written to --out (default ../artifacts):
+  mlp_cim1.hlo.txt     batch-32 CiM-I MLP forward (Pallas kernel inlined)
+  mlp_cim2.hlo.txt     same, CiM-II saturation semantics
+  mlp_exact.hlo.txt    unsaturated (NM-reference) forward
+  kernel_MxKxN.hlo.txt standalone CiM matmul (for the rust equivalence test)
+  w0.bin w1.bin w2.bin ternary weights, row-major int8
+  test_x.bin test_y.bin  held-out synthetic-digit test set (int8 / uint8)
+  manifest.json        shapes, files, scales, training log, accuracies
+
+Python runs ONCE (make artifacts); the rust binary is self-contained
+afterwards.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels.sitecim_mac import cim_matmul
+from .model import accuracy, mlp_infer, mlp_infer_exact
+from .train import train
+
+BATCH = 32
+KERNEL_SHAPE = (16, 64, 32)  # (M, K, N) for the standalone kernel artifact
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_mlp(weights, flavor):
+    # Weights cross the AOT boundary as f32 *parameters*, not baked int8
+    # constants: xla_extension 0.5.1's HLO-text parser mishandles large
+    # s8 dense constants (observed as garbled logits), while the f32
+    # parameter path is the well-trodden one.
+    xspec = jax.ShapeDtypeStruct((BATCH, 64), jnp.float32)
+    wspecs = [jax.ShapeDtypeStruct(w.shape, jnp.float32) for w in weights]
+
+    if flavor == "exact":
+        def fn(x, *wf):
+            return (mlp_infer_exact(x, [w.astype(jnp.int8) for w in wf]),)
+    else:
+        def fn(x, *wf):
+            return (mlp_infer(x, [w.astype(jnp.int8) for w in wf], flavor),)
+
+    return to_hlo_text(jax.jit(fn).lower(xspec, *wspecs))
+
+
+def lower_kernel(flavor="cim1"):
+    m, k, n = KERNEL_SHAPE
+    xs = jax.ShapeDtypeStruct((m, k), jnp.float32)
+    ws = jax.ShapeDtypeStruct((k, n), jnp.float32)
+
+    def fn(x, w):
+        out = cim_matmul(x.astype(jnp.int8), w.astype(jnp.int8), flavor)
+        return (out.astype(jnp.float32),)
+
+    return to_hlo_text(jax.jit(fn).lower(xs, ws))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=int(os.environ.get("SITECIM_TRAIN_STEPS", 400)))
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    print(f"[aot] training ternary MLP ({args.steps} steps)...")
+    weights, scales, (xte, yte), log = train(steps=args.steps, verbose=True, log_every=100)
+
+    # Accuracy report (full test set, reference semantics).
+    wj = [jnp.array(w) for w in weights]
+    xf = jnp.array(xte, jnp.float32)
+    yj = jnp.array(yte)
+    accs = {
+        "exact": float(accuracy(mlp_infer_exact(xf, wj), yj)),
+        "cim1": float(accuracy(mlp_infer(xf, wj, "cim1", use_kernel=False), yj)),
+        "cim2": float(accuracy(mlp_infer(xf, wj, "cim2", use_kernel=False), yj)),
+    }
+    print(f"[aot] test accuracy: {accs}")
+
+    files = {}
+    for flavor in ("cim1", "cim2", "exact"):
+        name = f"mlp_{flavor}.hlo.txt"
+        text = lower_mlp(weights, flavor)
+        open(os.path.join(args.out, name), "w").write(text)
+        files[f"mlp_{flavor}"] = name
+        print(f"[aot] wrote {name} ({len(text)} chars)")
+
+    m, k, n = KERNEL_SHAPE
+    kname = f"kernel_{m}x{k}x{n}.hlo.txt"
+    open(os.path.join(args.out, kname), "w").write(lower_kernel("cim1"))
+    files["kernel"] = kname
+    print(f"[aot] wrote {kname}")
+
+    wfiles = []
+    for i, w in enumerate(weights):
+        fname = f"w{i}.bin"
+        w.astype(np.int8).tofile(os.path.join(args.out, fname))
+        wfiles.append({"file": fname, "shape": list(w.shape)})
+    xte.astype(np.int8).tofile(os.path.join(args.out, "test_x.bin"))
+    yte.astype(np.uint8).tofile(os.path.join(args.out, "test_y.bin"))
+
+    manifest = {
+        "batch": BATCH,
+        "dims": [64, 256, 128, 10],
+        "act_thresholds": [6.0, 5.0],
+        "kernel_shape": list(KERNEL_SHAPE),
+        "files": files,
+        "weights": wfiles,
+        "scales": scales,
+        "test_set": {"x": "test_x.bin", "y": "test_y.bin", "n": int(len(yte)), "in_dim": 64},
+        "accuracy": accs,
+        "training": log,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote manifest.json; done.")
+
+
+if __name__ == "__main__":
+    main()

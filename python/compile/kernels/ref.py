@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the SiTe CiM saturating ternary matmul.
+
+This is the numerical *specification* of what the arrays compute
+(mirrors rust `array::mac::Flavor`):
+
+- inputs x (M, K) and weights w (K, N) are signed ternary (int8 in
+  {-1, 0, +1});
+- the K dimension is processed in groups of 16 rows (one MAC cycle);
+- per group and output column, a = #(+1 products), b = #(-1 products);
+- SiTe CiM I digitizes a and b separately with 3-bit ADCs (+ extra SA):
+  partial = min(a, 8) - min(b, 8);
+- SiTe CiM II subtracts first, then digitizes the magnitude:
+  partial = sign(a-b) * min(|a-b|, 8);
+- partials accumulate exactly in the digital periphery (PCUs).
+"""
+
+import jax.numpy as jnp
+
+GROUP = 16
+SAT = 8
+
+
+def _group_counts(x, w):
+    """Per-group (+1, -1) product counts.
+
+    x: (M, K) int8, w: (K, N) int8 -> a, b: (M, K//GROUP, N) int32.
+    """
+    m, k = x.shape
+    assert k % GROUP == 0, f"K={k} must be a multiple of {GROUP}"
+    n = w.shape[1]
+    xg = x.reshape(m, k // GROUP, GROUP).astype(jnp.int32)
+    wg = w.reshape(k // GROUP, GROUP, n).astype(jnp.int32)
+    # products: (M, K//GROUP, GROUP, N)
+    prod = xg[:, :, :, None] * wg[None, :, :, :]
+    a = jnp.sum(prod == 1, axis=2, dtype=jnp.int32)
+    b = jnp.sum(prod == -1, axis=2, dtype=jnp.int32)
+    return a, b
+
+
+def cim_matmul_ref(x, w, flavor="cim1"):
+    """Saturating ternary matmul, (M, K) x (K, N) -> (M, N) int32."""
+    a, b = _group_counts(x, w)
+    if flavor == "cim1":
+        part = jnp.minimum(a, SAT) - jnp.minimum(b, SAT)
+    elif flavor == "cim2":
+        d = a - b
+        part = jnp.sign(d) * jnp.minimum(jnp.abs(d), SAT)
+    else:
+        raise ValueError(f"unknown flavor {flavor!r}")
+    return jnp.sum(part, axis=1, dtype=jnp.int32)
+
+
+def exact_matmul_ref(x, w):
+    """Unsaturated ternary matmul (the NM baseline / accuracy reference)."""
+    return jnp.matmul(x.astype(jnp.int32), w.astype(jnp.int32))

@@ -1,0 +1,93 @@
+"""Layer-1 Pallas kernel: the SiTe CiM saturating ternary matmul.
+
+Hardware adaptation (DESIGN.md §6): the analog array's parallelism
+(16 wordlines x 256 columns per cycle) becomes a blocked MXU-style
+formulation. The grid tiles (M, N); each program instance holds an
+(block_m, K) activation tile and a (K, block_n) weight tile in VMEM and
+walks K in 16-row groups — exactly the array's MAC-cycle granularity —
+applying the 3-bit-ADC saturation per group before accumulating into the
+output tile. On a real TPU the int8 products feed the MXU and the clamp
+is a cheap VPU op; on this image the kernel runs with interpret=True
+(Mosaic lowering is TPU-only) so structure, not wallclock, is what the
+kernel optimizes.
+
+VMEM footprint per program instance (int8/int32):
+    x tile: block_m*K, w tile: K*block_n, out: block_m*block_n*4
+e.g. block_m=64, block_n=128, K=1024 -> 64 KiB + 128 KiB + 32 KiB,
+comfortably inside a TPU core's ~16 MiB VMEM with double buffering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GROUP = 16
+SAT = 8
+
+
+def _mac_kernel(x_ref, w_ref, o_ref, *, flavor: str):
+    """One (block_m, block_n) output tile; K walked in 16-row groups."""
+    x = x_ref[...].astype(jnp.int32)  # (bm, K)
+    w = w_ref[...].astype(jnp.int32)  # (K, bn)
+    bm, k = x.shape
+    bn = w.shape[1]
+    groups = k // GROUP
+
+    def body(g, acc):
+        xg = jax.lax.dynamic_slice(x, (0, g * GROUP), (bm, GROUP))
+        wg = jax.lax.dynamic_slice(w, (g * GROUP, 0), (GROUP, bn))
+        prod = xg[:, :, None] * wg[None, :, :]  # (bm, GROUP, bn)
+        a = jnp.sum(prod == 1, axis=1, dtype=jnp.int32)
+        b = jnp.sum(prod == -1, axis=1, dtype=jnp.int32)
+        if flavor == "cim1":
+            part = jnp.minimum(a, SAT) - jnp.minimum(b, SAT)
+        else:  # cim2
+            d = a - b
+            part = jnp.sign(d) * jnp.minimum(jnp.abs(d), SAT)
+        return acc + part
+
+    o_ref[...] = jax.lax.fori_loop(0, groups, body, jnp.zeros((bm, bn), jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("flavor", "block_m", "block_n"))
+def cim_matmul(x, w, flavor="cim1", block_m=None, block_n=None):
+    """Saturating ternary matmul via the Pallas kernel.
+
+    x: (M, K) int8 trits, w: (K, N) int8 trits -> (M, N) int32.
+    M and N must be divisible by the chosen block sizes; K by 16.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"shape mismatch {x.shape} @ {w.shape}"
+    assert k % GROUP == 0, f"K={k} must be a multiple of {GROUP}"
+    bm = block_m or _pick_block(m, 64)
+    bn = block_n or _pick_block(n, 128)
+    assert m % bm == 0 and n % bn == 0, (m, n, bm, bn)
+
+    kern = functools.partial(_mac_kernel, flavor=flavor)
+    return pl.pallas_call(
+        kern,
+        grid=(m // bm, n // bn),
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(x, w)
+
+
+def _pick_block(dim, preferred):
+    """Largest divisor of `dim` not exceeding `preferred`."""
+    b = min(dim, preferred)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def vmem_footprint_bytes(block_m, block_n, k):
+    """Estimated VMEM bytes per program instance (for DESIGN.md §Perf)."""
+    return block_m * k + k * block_n + 4 * block_m * block_n

@@ -1,0 +1,61 @@
+"""Layer-2 JAX model: a ternary MLP whose matmuls run through the SiTe
+CiM Pallas kernel (Layer 1).
+
+Architecture (synthetic 8x8 digit corpus): 64 -> 256 -> 128 -> 10.
+All reduction dims are multiples of 16 (the array's MAC-cycle group).
+
+Two inference graphs are exported:
+- `mlp_infer(..., flavor)`: every matmul uses the saturating CiM kernel —
+  this is what the accelerator computes;
+- `mlp_infer_exact`: unsaturated ternary matmuls — the NM-baseline
+  reference used to quantify the accuracy cost of the 3-bit ADC clamp.
+
+Interface convention for the AOT boundary: activations cross as f32
+tensors holding ternary values (the PJRT literal path for f32 is the
+best-trodden one); weights are baked into the graph as int8 constants.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.ref import cim_matmul_ref, exact_matmul_ref
+from .kernels.sitecim_mac import cim_matmul
+
+# Layer sizes.
+DIMS = (64, 256, 128, 10)
+# Fixed activation-ternarization thresholds (calibrated during training:
+# pre-activation std ~ sqrt(fan_in * density); threshold ~0.7 x mean abs).
+ACT_THRESHOLDS = (6.0, 5.0)
+
+
+def ternarize_acts(z, theta):
+    """Signed ternary activation: sign(z) * 1[|z| > theta]."""
+    return jnp.where(z > theta, 1, jnp.where(z < -theta, -1, 0)).astype(jnp.int8)
+
+
+def mlp_infer(x_f32, weights, flavor="cim1", use_kernel=True):
+    """Ternary MLP forward with CiM (saturating) matmuls.
+
+    x_f32: (B, 64) f32 holding trits; weights: list of int8 (K, N).
+    Returns (B, 10) f32 logits.
+    """
+    matmul = cim_matmul if use_kernel else cim_matmul_ref
+    h = x_f32.astype(jnp.int8)
+    for li, w in enumerate(weights[:-1]):
+        z = matmul(h, w, flavor)
+        h = ternarize_acts(z, ACT_THRESHOLDS[li])
+    logits = matmul(h, weights[-1], flavor)
+    return logits.astype(jnp.float32)
+
+
+def mlp_infer_exact(x_f32, weights):
+    """Same network with exact (NM baseline) ternary matmuls."""
+    h = x_f32.astype(jnp.int8)
+    for li, w in enumerate(weights[:-1]):
+        z = exact_matmul_ref(h, w)
+        h = ternarize_acts(z, ACT_THRESHOLDS[li])
+    logits = exact_matmul_ref(h, weights[-1])
+    return logits.astype(jnp.float32)
+
+
+def accuracy(logits, labels):
+    return jnp.mean((jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32))

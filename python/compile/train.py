@@ -1,0 +1,153 @@
+"""Build-time training of the ternary MLP (straight-through estimator)
+on a synthetic 8x8 digit corpus.
+
+The corpus: ten fixed prototype glyphs (deterministic from the seed),
+each sample = prototype + Gaussian pixel noise, ternarized to {-1,0,+1}.
+This stands in for the paper's (proprietary-pipeline) benchmark training
+runs — see DESIGN.md §1. Training is full-precision weights with TWN
+ternarization applied through an STE, and STE-ternarized activations, so
+the network the accelerator executes is exactly what was trained.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .model import ACT_THRESHOLDS, DIMS
+
+TWN_FACTOR = 0.7
+
+
+# ----------------------------- dataset -----------------------------------
+def make_dataset(n_train=4096, n_test=1024, seed=7, noise=1.05):
+    """Synthetic ternary digit corpus: ((x_train, y_train), (x_test, y_test))."""
+    rng = np.random.default_rng(seed)
+    protos = rng.normal(0.0, 1.0, size=(10, 64)).astype(np.float32)
+
+    def sample(n):
+        y = rng.integers(0, 10, size=n)
+        x = protos[y] + rng.normal(0.0, noise, size=(n, 64)).astype(np.float32)
+        # Ternarize pixels around +-0.5.
+        xt = np.where(x > 0.5, 1, np.where(x < -0.5, -1, 0)).astype(np.int8)
+        return xt, y.astype(np.int32)
+
+    return sample(n_train), sample(n_test)
+
+
+# ----------------------------- STE ops ------------------------------------
+@jax.custom_vjp
+def ste_ternarize_w(w):
+    """TWN weight ternarization with straight-through gradient."""
+    delta = TWN_FACTOR * jnp.mean(jnp.abs(w))
+    return jnp.where(w > delta, 1.0, jnp.where(w < -delta, -1.0, 0.0))
+
+
+def _stw_fwd(w):
+    return ste_ternarize_w(w), None
+
+
+def _stw_bwd(_, g):
+    return (g,)
+
+
+ste_ternarize_w.defvjp(_stw_fwd, _stw_bwd)
+
+
+@jax.custom_vjp
+def ste_ternarize_a(z, theta):
+    return jnp.where(z > theta, 1.0, jnp.where(z < -theta, -1.0, 0.0))
+
+
+def _sta_fwd(z, theta):
+    return ste_ternarize_a(z, theta), (z, theta)
+
+
+def _sta_bwd(res, g):
+    z, theta = res
+    # Pass gradient inside a window around the thresholds (hard-tanh STE).
+    mask = (jnp.abs(z) < 2.0 * theta).astype(g.dtype)
+    return (g * mask, None)
+
+
+ste_ternarize_a.defvjp(_sta_fwd, _sta_bwd)
+
+
+# ----------------------------- training -----------------------------------
+def init_params(seed=1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), len(DIMS) - 1)
+    return [
+        jax.random.normal(k, (DIMS[i], DIMS[i + 1])) * (1.5 / np.sqrt(DIMS[i]))
+        for i, k in enumerate(ks)
+    ]
+
+
+def forward_train(params, x):
+    h = x.astype(jnp.float32)
+    for li, w in enumerate(params[:-1]):
+        z = h @ ste_ternarize_w(w)
+        h = ste_ternarize_a(z, ACT_THRESHOLDS[li])
+    return h @ ste_ternarize_w(params[-1])
+
+
+def loss_fn(params, x, y):
+    logits = forward_train(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def adam_step(params, m, v, t, x, y, lr=3e-3, b1=0.9, b2=0.999, eps=1e-8):
+    loss, grads = jax.value_and_grad(loss_fn)(params, x, y)
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1 - b1) * g
+        vi = b2 * vi + (1 - b2) * g * g
+        mhat = mi / (1 - b1**t)
+        vhat = vi / (1 - b2**t)
+        new_p.append(p - lr * mhat / (jnp.sqrt(vhat) + eps))
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, loss
+
+
+def export_ternary(params):
+    """Float params -> int8 ternary weights + per-layer TWN scales."""
+    weights, scales = [], []
+    for w in params:
+        wn = np.asarray(w)
+        delta = TWN_FACTOR * np.mean(np.abs(wn))
+        t = np.where(wn > delta, 1, np.where(wn < -delta, -1, 0)).astype(np.int8)
+        surv = np.abs(wn)[np.abs(wn) > delta]
+        scales.append(float(surv.mean()) if surv.size else 1.0)
+        weights.append(t)
+    return weights, scales
+
+
+def train(steps=400, batch=128, seed=7, log_every=50, verbose=False):
+    """Train and return (ternary_weights, scales, log dict)."""
+    (xtr, ytr), (xte, yte) = make_dataset(seed=seed)
+    params = init_params(seed)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    rng = np.random.default_rng(seed)
+    losses = []
+    for t in range(1, steps + 1):
+        idx = rng.integers(0, len(xtr), size=batch)
+        params, m, v, loss = adam_step(
+            params, m, v, t, jnp.array(xtr[idx], jnp.float32), jnp.array(ytr[idx])
+        )
+        if t % log_every == 0 or t == 1:
+            losses.append((t, float(loss)))
+            if verbose:
+                print(f"step {t:4d} loss {float(loss):.4f}")
+    weights, scales = export_ternary(params)
+    log = {
+        "steps": steps,
+        "batch": batch,
+        "seed": seed,
+        "loss_curve": losses,
+        "final_loss": losses[-1][1],
+    }
+    return weights, scales, (xte, yte), log

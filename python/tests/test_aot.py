@@ -1,0 +1,57 @@
+"""AOT path: HLO text lowering is well-formed and the artifacts
+directory (if built) is internally consistent."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import KERNEL_SHAPE, lower_kernel
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lower_kernel_produces_hlo_text():
+    text = lower_kernel("cim1")
+    assert "HloModule" in text
+    assert "ENTRY" in text
+    # Interpret-mode pallas must lower to plain HLO — no Mosaic
+    # custom-calls the CPU PJRT client can't run.
+    assert "mosaic" not in text.lower()
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+class TestArtifacts:
+    @pytest.fixture(autouse=True)
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            self.m = json.load(f)
+
+    def test_manifest_files_exist(self):
+        for f in self.m["files"].values():
+            assert os.path.exists(os.path.join(ART, f)), f
+        for w in self.m["weights"]:
+            assert os.path.exists(os.path.join(ART, w["file"]))
+
+    def test_weight_sizes_match_shapes(self):
+        for w in self.m["weights"]:
+            size = os.path.getsize(os.path.join(ART, w["file"]))
+            assert size == w["shape"][0] * w["shape"][1]
+
+    def test_testset_sizes(self):
+        ts = self.m["test_set"]
+        n, d = ts["n"], ts["in_dim"]
+        assert os.path.getsize(os.path.join(ART, ts["x"])) == n * d
+        assert os.path.getsize(os.path.join(ART, ts["y"])) == n
+
+    def test_recorded_accuracy_is_high_and_cim_close(self):
+        acc = self.m["accuracy"]
+        assert acc["exact"] > 0.9
+        assert acc["exact"] - acc["cim1"] < 0.02
+        assert acc["exact"] - acc["cim2"] < 0.02
+
+    def test_kernel_shape_recorded(self):
+        assert tuple(self.m["kernel_shape"]) == KERNEL_SHAPE

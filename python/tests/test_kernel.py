@@ -1,0 +1,98 @@
+"""L1 correctness: the Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (multiples of the 16-row group), sparsity and
+flavor; plus directed edge cases for the ADC saturation semantics.
+This is the CORE correctness signal for the compute hot-spot.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.ref import cim_matmul_ref, exact_matmul_ref
+from compile.kernels.sitecim_mac import cim_matmul, vmem_footprint_bytes
+
+
+def random_trits(rng, shape, p_zero):
+    u = rng.random(shape)
+    return np.where(u < p_zero, 0, np.where(u < p_zero + (1 - p_zero) / 2, 1, -1)).astype(
+        np.int8
+    )
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 8).map(lambda v: v * 4),
+    kg=st.integers(1, 8),
+    n=st.integers(1, 6).map(lambda v: v * 8),
+    p_zero=st.floats(0.0, 0.9),
+    flavor=st.sampled_from(["cim1", "cim2"]),
+    seed=st.integers(0, 2**31),
+)
+def test_kernel_matches_ref(m, kg, n, p_zero, flavor, seed):
+    rng = np.random.default_rng(seed)
+    k = kg * 16
+    x = random_trits(rng, (m, k), p_zero)
+    w = random_trits(rng, (k, n), p_zero)
+    got = np.asarray(cim_matmul(jnp.array(x), jnp.array(w), flavor))
+    want = np.asarray(cim_matmul_ref(jnp.array(x), jnp.array(w), flavor))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    kg=st.integers(1, 6),
+    seed=st.integers(0, 2**31),
+)
+def test_sparse_saturating_close_to_exact(kg, seed):
+    # At realistic sparsity the clamp rarely binds: results differ little
+    # from the exact ternary matmul.
+    rng = np.random.default_rng(seed)
+    k = kg * 16
+    x = random_trits(rng, (8, k), 0.6)
+    w = random_trits(rng, (k, 16), 0.6)
+    sat = np.asarray(cim_matmul_ref(jnp.array(x), jnp.array(w), "cim1"))
+    exact = np.asarray(exact_matmul_ref(jnp.array(x), jnp.array(w)))
+    assert np.mean(sat != exact) < 0.12
+
+
+class TestSaturationSemantics:
+    def _one_group(self, xrow, wcol, flavor):
+        x = jnp.array(np.array(xrow, np.int8).reshape(1, 16))
+        w = jnp.array(np.array(wcol, np.int8).reshape(16, 1))
+        return int(np.asarray(cim_matmul_ref(x, w, flavor))[0, 0])
+
+    def test_all_agree_saturates_to_8(self):
+        assert self._one_group([1] * 16, [1] * 16, "cim1") == 8
+        assert self._one_group([1] * 16, [1] * 16, "cim2") == 8
+        assert self._one_group([-1] * 16, [1] * 16, "cim1") == -8
+
+    def test_flavor_divergence_on_double_saturation(self):
+        # a = 10, b = 6: CiM I -> 8-6 = 2; CiM II -> min(4,8) = 4.
+        x = [1] * 16
+        w = [1] * 10 + [-1] * 6
+        assert self._one_group(x, w, "cim1") == 2
+        assert self._one_group(x, w, "cim2") == 4
+
+    def test_zero_inputs_give_zero(self):
+        assert self._one_group([0] * 16, [1] * 16, "cim1") == 0
+
+    def test_i_times_w_signs(self):
+        # I = -1 row flips the stored weight (the cross-coupling case).
+        x = [-1] + [0] * 15
+        w = [1] + [0] * 15
+        assert self._one_group(x, w, "cim1") == -1
+        assert self._one_group(x, w, "cim2") == -1
+
+
+def test_rejects_non_group_multiple_k():
+    x = jnp.zeros((4, 20), jnp.int8)
+    w = jnp.zeros((20, 8), jnp.int8)
+    with pytest.raises(AssertionError):
+        cim_matmul(x, w)
+
+
+def test_vmem_footprint_within_tpu_budget():
+    # DESIGN.md §Perf: chosen blocks must fit VMEM with double buffering.
+    assert vmem_footprint_bytes(64, 128, 1024) < 4 * 1024 * 1024

@@ -1,0 +1,66 @@
+"""L2 correctness: model shapes, kernel-vs-ref equivalence inside the
+full forward pass, and exact-vs-CiM accuracy behaviour."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ACT_THRESHOLDS,
+    DIMS,
+    accuracy,
+    mlp_infer,
+    mlp_infer_exact,
+    ternarize_acts,
+)
+
+
+@pytest.fixture(scope="module")
+def weights():
+    rng = np.random.default_rng(3)
+    ws = []
+    for i in range(len(DIMS) - 1):
+        ws.append(rng.integers(-1, 2, size=(DIMS[i], DIMS[i + 1])).astype(np.int8))
+    return [jnp.array(w) for w in ws]
+
+
+@pytest.fixture(scope="module")
+def batch():
+    rng = np.random.default_rng(4)
+    return jnp.array(rng.integers(-1, 2, size=(32, DIMS[0])), jnp.float32)
+
+
+def test_logit_shapes(weights, batch):
+    for fl in ("cim1", "cim2"):
+        out = mlp_infer(batch, weights, fl, use_kernel=False)
+        assert out.shape == (32, DIMS[-1])
+        assert out.dtype == jnp.float32
+
+
+def test_kernel_and_ref_paths_agree(weights, batch):
+    for fl in ("cim1", "cim2"):
+        via_kernel = mlp_infer(batch, weights, fl, use_kernel=True)
+        via_ref = mlp_infer(batch, weights, fl, use_kernel=False)
+        np.testing.assert_array_equal(np.asarray(via_kernel), np.asarray(via_ref))
+
+
+def test_ternarize_acts_range(weights, batch):
+    t = ternarize_acts(jnp.array([[10.0, -10.0, 0.1, -0.1]]), 5.0)
+    np.testing.assert_array_equal(np.asarray(t), [[1, -1, 0, 0]])
+
+
+def test_thresholds_cover_hidden_layers():
+    assert len(ACT_THRESHOLDS) == len(DIMS) - 2
+
+
+def test_cim_close_to_exact_on_random_net(weights, batch):
+    exact = np.argmax(np.asarray(mlp_infer_exact(batch, weights)), axis=1)
+    cim = np.argmax(np.asarray(mlp_infer(batch, weights, "cim1", use_kernel=False)), axis=1)
+    # Random nets saturate more than trained ones; still mostly agree.
+    assert np.mean(exact == cim) > 0.5
+
+
+def test_accuracy_helper():
+    logits = jnp.array([[0.0, 1.0], [1.0, 0.0]])
+    labels = jnp.array([1, 0])
+    assert float(accuracy(logits, labels)) == 1.0

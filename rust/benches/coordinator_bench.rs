@@ -1,0 +1,37 @@
+//! Coordinator benchmarks: batcher throughput and (if artifacts exist)
+//! closed-loop serving round-trips. §Perf L3(c).
+use std::time::Duration;
+
+use sitecim::coordinator::batcher::{next_batch, BatchPolicy};
+use sitecim::coordinator::{Server, ServerConfig};
+use sitecim::runtime::{default_dir, Manifest};
+use sitecim::util::bench::{config_from_env, run};
+
+fn main() {
+    let cfg = config_from_env();
+    println!("== coordinator_bench ==");
+
+    // Batcher in isolation: pre-filled queue drain rate.
+    run("next_batch over full queue (32)", &cfg, || {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..32 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(10) };
+        next_batch(&rx, &policy)
+    });
+
+    // End-to-end serving round-trip (needs artifacts).
+    if let Ok(manifest) = Manifest::load(default_dir()) {
+        let (x, _) = manifest.load_test_set().unwrap();
+        let server = Server::start(ServerConfig::new(default_dir())).unwrap();
+        let input = x[..manifest.in_dim].to_vec();
+        let r = run("server round-trip (single request)", &cfg, || {
+            server.infer(input.clone()).unwrap()
+        });
+        println!("single-request latency: {:.3} ms", r.mean_s * 1e3);
+        server.shutdown();
+    } else {
+        println!("(skipping serving bench: run `make artifacts`)");
+    }
+}

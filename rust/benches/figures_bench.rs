@@ -1,0 +1,11 @@
+//! Regenerates every paper table/figure (the canonical `cargo bench`
+//! reproduction output) and times the full harness.
+use std::time::Instant;
+
+use sitecim::repro;
+
+fn main() {
+    let t0 = Instant::now();
+    print!("{}", repro::run_all());
+    println!("\n[figures_bench] full reproduction harness: {:.2}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,23 @@
+//! System-simulator benchmarks: full benchmark-suite evaluation cost —
+//! this is what `figures --fig12/--fig13` pays. §Perf L3(b).
+use sitecim::arch::{AccelConfig, Accelerator};
+use sitecim::array::area::Design;
+use sitecim::device::Tech;
+use sitecim::dnn::benchmarks;
+use sitecim::util::bench::{config_from_env, run};
+
+fn main() {
+    let cfg = config_from_env();
+    println!("== system_bench ==");
+    let nets = benchmarks::suite();
+    run("accel.run(AlexNet) CiM I", &cfg, || {
+        Accelerator::new(AccelConfig::sitecim(Tech::Sram8T, Design::Cim1)).run(&nets[0])
+    });
+    run("accel.run(ResNet34) CiM I", &cfg, || {
+        Accelerator::new(AccelConfig::sitecim(Tech::Sram8T, Design::Cim1)).run(&nets[1])
+    });
+    let accel = Accelerator::new(AccelConfig::sitecim(Tech::Femfet3T, Design::Cim1));
+    run("accel.run full suite (prebuilt accel)", &cfg, || {
+        nets.iter().map(|n| accel.run(n).latency).sum::<f64>()
+    });
+}

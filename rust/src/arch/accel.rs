@@ -1,0 +1,237 @@
+//! System-level accelerator simulator (§VI): executes a benchmark network
+//! on an `AccelConfig` and accounts latency + energy from the array-level
+//! metrics, the PCU/peripheral costs and the weight-streaming writes.
+//!
+//! Latency: compute windows (CiM cycles or NM row reads) and weight writes
+//! serialize over the available arrays; PCU accumulation and the
+//! quantize+activation stage are pipelined behind compute (they add
+//! energy, not latency — checked against the PCU drain-rate constraint).
+
+use super::config::AccelConfig;
+use super::mapper::{map_layer, LayerWork};
+use crate::array::area::Design;
+use crate::array::metrics::{all_designs, DesignMetrics};
+use crate::device::{PeriphParams, TechParams};
+use crate::dnn::Network;
+
+/// Per-output quantize + activation energy in the digital periphery (J).
+const E_ACT_OUT: f64 = 60e-15;
+
+/// Execution report for one network on one config.
+#[derive(Clone, Debug)]
+pub struct SystemReport {
+    pub config: String,
+    pub network: String,
+    /// End-to-end latency per inference (s).
+    pub latency: f64,
+    /// Energy per inference (J).
+    pub energy: f64,
+    /// Breakdown.
+    pub compute_latency: f64,
+    pub write_latency: f64,
+    pub compute_energy: f64,
+    pub write_energy: f64,
+    pub periph_energy: f64,
+    pub total_windows: u64,
+    pub total_write_rows: u64,
+}
+
+impl SystemReport {
+    pub fn speedup_vs(&self, base: &SystemReport) -> f64 {
+        base.latency / self.latency
+    }
+
+    pub fn energy_reduction_vs(&self, base: &SystemReport) -> f64 {
+        base.energy / self.energy
+    }
+
+    /// Throughput in inferences/second.
+    pub fn throughput(&self) -> f64 {
+        1.0 / self.latency
+    }
+}
+
+/// The simulator.
+#[derive(Clone, Debug)]
+pub struct Accelerator {
+    pub cfg: AccelConfig,
+    pub metrics: DesignMetrics,
+    params: TechParams,
+    periph: PeriphParams,
+}
+
+impl Accelerator {
+    pub fn new(cfg: AccelConfig) -> Accelerator {
+        let params = TechParams::new(cfg.tech);
+        let periph = PeriphParams::default_45nm();
+        let all = all_designs(&params, &periph, cfg.geom);
+        let metrics = match cfg.design {
+            Design::NearMemory => all[0],
+            Design::Cim1 => all[1],
+            Design::Cim2 => all[2],
+        };
+        Accelerator { cfg, metrics, params, periph }
+    }
+
+    /// Execute one layer's work accounting. `resident` = the whole
+    /// network fits on-chip, so weights are programmed once and amortize
+    /// to zero in steady-state serving (batch-streaming only applies to
+    /// nets larger than the 2 M-word capacity, like the paper suite).
+    fn layer_cost(&self, w: &LayerWork, resident: bool) -> (f64, f64, f64, f64, f64) {
+        let n_arrays = self.cfg.n_arrays as f64;
+        let m = &self.metrics;
+
+        let (compute_latency, compute_energy) = if self.cfg.design == Design::NearMemory {
+            // NM: reads serialize at the pipelined row-stream cycle (the
+            // per-row share of the 16-read MAC window); the NMC MAC is
+            // pipelined behind them.
+            let row_cycle = m.mac.latency / self.cfg.geom.n_active as f64;
+            let serial_reads = (w.nm_reads as f64 / n_arrays).ceil();
+            let lat = serial_reads * row_cycle + self.periph.t_nm_mac;
+            let e = w.nm_reads as f64 * (m.mac.energy / self.cfg.geom.n_active as f64);
+            (lat, e)
+        } else {
+            let serial_windows = (w.windows as f64 / n_arrays).ceil();
+            (serial_windows * m.mac.latency, w.windows as f64 * m.mac.energy)
+        };
+
+        // Weight streaming (same write path family for all designs).
+        let (write_latency, write_energy) = if resident {
+            (0.0, 0.0)
+        } else {
+            let serial_writes = (w.write_rows as f64 / n_arrays).ceil();
+            (serial_writes * m.write.latency, w.write_rows as f64 * m.write.energy)
+        };
+
+        // Periphery: PCU sample/hold+accumulate per window per column, and
+        // quantize+activation per output element.
+        let pcu = w.windows as f64 * self.cfg.geom.n_cols as f64 * self.periph.e_pcu;
+        let act = w.outputs as f64 * E_ACT_OUT;
+        (compute_latency, write_latency, compute_energy, write_energy, pcu + act)
+    }
+
+    /// Run a full network.
+    pub fn run(&self, net: &Network) -> SystemReport {
+        let mut r = SystemReport {
+            config: self.cfg.name.clone(),
+            network: net.name.clone(),
+            latency: 0.0,
+            energy: 0.0,
+            compute_latency: 0.0,
+            write_latency: 0.0,
+            compute_energy: 0.0,
+            write_energy: 0.0,
+            periph_energy: 0.0,
+            total_windows: 0,
+            total_write_rows: 0,
+        };
+        let resident = net.total_weight_words() <= self.cfg.capacity_words();
+        for layer in &net.layers {
+            let w = map_layer(&self.cfg, layer);
+            let (cl, wl, ce, we, pe) = self.layer_cost(&w, resident);
+            r.compute_latency += cl;
+            r.write_latency += wl;
+            r.compute_energy += ce;
+            r.write_energy += we;
+            r.periph_energy += pe;
+            r.total_windows += w.windows;
+            r.total_write_rows += w.write_rows;
+        }
+        r.latency = r.compute_latency + r.write_latency;
+        r.energy = r.compute_energy + r.write_energy + r.periph_energy;
+        r
+    }
+
+    pub fn params(&self) -> &TechParams {
+        &self.params
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Tech;
+    use crate::dnn::benchmarks;
+
+    fn run(tech: Tech, design: Design, net: &Network) -> SystemReport {
+        let cfg = match design {
+            Design::NearMemory => AccelConfig::iso_capacity_nm(tech),
+            d => AccelConfig::sitecim(tech, d),
+        };
+        Accelerator::new(cfg).run(net)
+    }
+
+    #[test]
+    fn cim1_speedup_vs_iso_capacity_in_paper_band() {
+        // Paper Fig 12: 6.74X / 6.59X / 7.12X average over the suite.
+        for tech in Tech::ALL {
+            let mut speedups = Vec::new();
+            for net in benchmarks::suite() {
+                let cim = run(tech, Design::Cim1, &net);
+                let nm = run(tech, Design::NearMemory, &net);
+                speedups.push(cim.speedup_vs(&nm));
+            }
+            let avg = crate::util::stats::mean(&speedups);
+            assert!((4.5..=9.5).contains(&avg), "{}: avg speedup {avg:.2}", tech.name());
+        }
+    }
+
+    #[test]
+    fn cim1_energy_reduction_in_paper_band() {
+        // Paper: 2.46X / 2.52X / 2.54X average energy reduction.
+        for tech in Tech::ALL {
+            let mut reds = Vec::new();
+            for net in benchmarks::suite() {
+                let cim = run(tech, Design::Cim1, &net);
+                let nm = run(tech, Design::NearMemory, &net);
+                reds.push(cim.energy_reduction_vs(&nm));
+            }
+            let avg = crate::util::stats::mean(&reds);
+            assert!((1.8..=3.6).contains(&avg), "{}: avg energy red {avg:.2}", tech.name());
+        }
+    }
+
+    #[test]
+    fn cim2_slower_than_cim1_but_faster_than_nm() {
+        for tech in Tech::ALL {
+            let net = benchmarks::alexnet();
+            let c1 = run(tech, Design::Cim1, &net);
+            let c2 = run(tech, Design::Cim2, &net);
+            let nm = run(tech, Design::NearMemory, &net);
+            assert!(c2.latency > c1.latency, "{}", tech.name());
+            assert!(c2.latency < nm.latency, "{}", tech.name());
+            assert!(c2.energy < nm.energy, "{}", tech.name());
+        }
+    }
+
+    #[test]
+    fn iso_area_baseline_faster_than_iso_capacity() {
+        let net = benchmarks::resnet34();
+        let isoc = Accelerator::new(AccelConfig::iso_capacity_nm(Tech::Sram8T)).run(&net);
+        let isoa = Accelerator::new(AccelConfig::iso_area_nm(Tech::Sram8T, Design::Cim1)).run(&net);
+        assert!(isoa.latency < isoc.latency);
+        // Energy is ~unchanged (same op count — §VI.C).
+        let ratio = isoa.energy / isoc.energy;
+        assert!((0.95..=1.05).contains(&ratio), "energy ratio {ratio}");
+    }
+
+    #[test]
+    fn report_breakdown_sums() {
+        let net = benchmarks::gru();
+        let r = run(Tech::Femfet3T, Design::Cim1, &net);
+        assert!((r.latency - (r.compute_latency + r.write_latency)).abs() < 1e-12);
+        assert!(
+            (r.energy - (r.compute_energy + r.write_energy + r.periph_energy)).abs()
+                < 1e-9 * r.energy.max(1.0)
+        );
+        assert!(r.total_windows > 0);
+    }
+
+    #[test]
+    fn recurrent_nets_dominated_by_projection_layer() {
+        // Sanity: the 10k-way projection dwarfs the cell GEMMs.
+        let net = benchmarks::lstm();
+        let r = run(Tech::Sram8T, Design::Cim1, &net);
+        assert!(r.total_windows > 100_000);
+    }
+}

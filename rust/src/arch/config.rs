@@ -1,0 +1,125 @@
+//! Accelerator configuration (TiM-DNN-style, §VI.A) and the construction
+//! of the iso-capacity / iso-area near-memory baselines.
+//!
+//! SiTe systems: 32 arrays of 256×256 ternary cells (2 M ternary words,
+//! 512 kB), 32 PCUs per array, 16 rows asserted per cycle → 8192 parallel
+//! dot-product lanes. Baselines:
+//! - iso-capacity: 32 NM arrays (same 2 M words).
+//! - iso-area: as many NM arrays as fit in the CiM system's macro area —
+//!   *derived from the area model*, which lands on the paper's 41/48/47
+//!   (vs CiM I) and 38/42/41 (vs CiM II) within ±2 arrays.
+
+use crate::array::area::{macro_area, Design};
+use crate::array::metrics::ArrayGeom;
+use crate::device::{PeriphParams, Tech, TechParams};
+
+#[derive(Clone, Debug)]
+pub struct AccelConfig {
+    pub name: String,
+    pub tech: Tech,
+    pub design: Design,
+    pub n_arrays: usize,
+    pub geom: ArrayGeom,
+    pub n_pcus: usize,
+}
+
+impl AccelConfig {
+    /// The paper's SiTe CiM system (either flavor).
+    pub fn sitecim(tech: Tech, design: Design) -> AccelConfig {
+        assert!(design != Design::NearMemory, "use iso_* constructors for baselines");
+        AccelConfig {
+            name: format!("{} {}", design.name(), tech.name()),
+            tech,
+            design,
+            n_arrays: 32,
+            geom: ArrayGeom::default(),
+            n_pcus: 32,
+        }
+    }
+
+    /// Iso-capacity NM baseline: same number of arrays (same 2 M words).
+    pub fn iso_capacity_nm(tech: Tech) -> AccelConfig {
+        AccelConfig {
+            name: format!("NM iso-capacity {}", tech.name()),
+            tech,
+            design: Design::NearMemory,
+            n_arrays: 32,
+            geom: ArrayGeom::default(),
+            n_pcus: 32,
+        }
+    }
+
+    /// Iso-area NM baseline vs the given CiM flavor: array count derived
+    /// from the macro-area model.
+    pub fn iso_area_nm(tech: Tech, vs: Design) -> AccelConfig {
+        let p = TechParams::new(tech);
+        let pp = PeriphParams::default_45nm();
+        let cim = 32.0 * macro_area(&p, &pp, vs, 256, 256);
+        let nm_one = macro_area(&p, &pp, Design::NearMemory, 256, 256);
+        let n_arrays = (cim / nm_one).floor() as usize;
+        AccelConfig {
+            name: format!("NM iso-area({}) {}", vs.name(), tech.name()),
+            tech,
+            design: Design::NearMemory,
+            n_arrays,
+            geom: ArrayGeom::default(),
+            n_pcus: 32,
+        }
+    }
+
+    /// Ternary-word capacity of the whole system.
+    pub fn capacity_words(&self) -> u64 {
+        (self.n_arrays * self.geom.n_rows * self.geom.n_cols) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sitecim_capacity_is_2m_words() {
+        let c = AccelConfig::sitecim(Tech::Sram8T, Design::Cim1);
+        assert_eq!(c.capacity_words(), 2 * 1024 * 1024);
+    }
+
+    #[test]
+    fn iso_area_array_counts_near_paper() {
+        // Paper: 41/48/47 arrays vs CiM I; 38/42/41 vs CiM II (±3).
+        let expect1 = [(Tech::Sram8T, 41), (Tech::Edram3T, 48), (Tech::Femfet3T, 47)];
+        for (tech, n) in expect1 {
+            let c = AccelConfig::iso_area_nm(tech, Design::Cim1);
+            assert!(
+                (c.n_arrays as i64 - n).abs() <= 3,
+                "{}: {} arrays vs paper {n}",
+                tech.name(),
+                c.n_arrays
+            );
+        }
+        let expect2 = [(Tech::Sram8T, 38), (Tech::Edram3T, 42), (Tech::Femfet3T, 41)];
+        for (tech, n) in expect2 {
+            let c = AccelConfig::iso_area_nm(tech, Design::Cim2);
+            assert!(
+                (c.n_arrays as i64 - n).abs() <= 3,
+                "{}: {} arrays vs paper {n}",
+                tech.name(),
+                c.n_arrays
+            );
+        }
+    }
+
+    #[test]
+    fn iso_area_has_more_arrays_than_iso_capacity() {
+        for tech in Tech::ALL {
+            for d in [Design::Cim1, Design::Cim2] {
+                assert!(AccelConfig::iso_area_nm(tech, d).n_arrays > 32);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn sitecim_rejects_nm_design() {
+        AccelConfig::sitecim(Tech::Sram8T, Design::NearMemory);
+    }
+}

@@ -1,0 +1,123 @@
+//! Layer → array mapping.
+//!
+//! Weight-stationary mapping: a GEMM's K (reduction) dimension maps to
+//! array rows, N (output channels) to columns. A weight *tile* is one
+//! 256(K)×256(N) array-full. For every input vector, a tile's dot product
+//! takes ⌈K_tile/16⌉ MAC windows (16 rows per cycle); the NM baseline
+//! instead performs K_tile sequential row reads feeding the NMC unit.
+//!
+//! All benchmarks exceed the 2 M-word on-chip capacity, so weights stream:
+//! every tile is programmed once per inference (256 row writes), matching
+//! the paper's batch-1 inference accounting.
+
+use super::config::AccelConfig;
+use crate::array::area::Design;
+use crate::dnn::Layer;
+
+/// Work accounting for one layer on one accelerator config.
+#[derive(Clone, Debug)]
+pub struct LayerWork {
+    pub name: String,
+    /// Weight tiles (k_tiles × n_tiles).
+    pub tiles: u64,
+    /// Total MAC windows (CiM cycle / NM 16-read window equivalents).
+    pub windows: u64,
+    /// Total single-row reads the NM design performs (0 for CiM).
+    pub nm_reads: u64,
+    /// Row writes to stream the layer's weights in.
+    pub write_rows: u64,
+    /// Output elements produced (for PCU/activation accounting).
+    pub outputs: u64,
+    /// Operand sparsity carried through for energy/error analyses.
+    pub act_nz: f64,
+}
+
+/// Map one layer onto a config.
+pub fn map_layer(cfg: &AccelConfig, layer: &Layer) -> LayerWork {
+    let g = &layer.gemm;
+    let rows = cfg.geom.n_rows;
+    let cols = cfg.geom.n_cols;
+    let k_tiles = g.k.div_ceil(rows) as u64;
+    let n_tiles = g.n.div_ceil(cols) as u64;
+    let vectors = (g.m * layer.repeats) as u64;
+
+    // Windows: ⌈K/16⌉ spread across the K-tiles, per vector, per N-tile.
+    let windows_per_vec = (g.k.div_ceil(cfg.geom.n_active)) as u64;
+    let windows = vectors * windows_per_vec * n_tiles;
+
+    // NM: one read per (occupied) row per vector per N-tile. The paper's
+    // baseline reads row-by-row without zero-input gating (§V preamble).
+    let nm_reads = if cfg.design == Design::NearMemory { vectors * g.k as u64 * n_tiles } else { 0 };
+
+    // Streaming weights: every tile programmed once per inference. Only
+    // occupied rows are written.
+    let write_rows = {
+        let full = (g.k as u64 / rows as u64) * rows as u64;
+        let partial = (g.k as u64) % rows as u64;
+        (full + partial) * n_tiles
+    };
+
+    LayerWork {
+        name: layer.name.clone(),
+        tiles: k_tiles * n_tiles,
+        windows,
+        nm_reads,
+        write_rows,
+        outputs: vectors * g.n as u64,
+        act_nz: layer.act_nz,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Tech;
+
+    fn cim_cfg() -> AccelConfig {
+        AccelConfig::sitecim(Tech::Sram8T, Design::Cim1)
+    }
+
+    fn nm_cfg() -> AccelConfig {
+        AccelConfig::iso_capacity_nm(Tech::Sram8T)
+    }
+
+    #[test]
+    fn exact_tile_fit() {
+        let l = Layer::linear("fc", 4, 512, 512);
+        let w = map_layer(&cim_cfg(), &l);
+        assert_eq!(w.tiles, 4); // 2 k-tiles × 2 n-tiles
+        assert_eq!(w.windows, 4 * (512 / 16) * 2); // vecs × ⌈K/16⌉ × n_tiles
+        assert_eq!(w.write_rows, 512 * 2);
+        assert_eq!(w.outputs, 4 * 512);
+        assert_eq!(w.nm_reads, 0);
+    }
+
+    #[test]
+    fn ragged_dims_round_up() {
+        let l = Layer::linear("fc", 1, 300, 300);
+        let w = map_layer(&cim_cfg(), &l);
+        assert_eq!(w.tiles, 4); // ⌈300/256⌉² = 2×2
+        assert_eq!(w.windows, (300f64 / 16.0).ceil() as u64 * 2);
+        assert_eq!(w.write_rows, 300 * 2);
+    }
+
+    #[test]
+    fn nm_reads_every_row_per_vector() {
+        let l = Layer::linear("fc", 8, 256, 256);
+        let w = map_layer(&nm_cfg(), &l);
+        assert_eq!(w.nm_reads, 8 * 256);
+        // Windows still accounted (16-read groups) for cross-checks.
+        assert_eq!(w.windows, 8 * 16);
+    }
+
+    #[test]
+    fn recurrent_layers_multiply_by_steps() {
+        let l = Layer::recurrent("lstm", 35, 650, 650, 4);
+        let w = map_layer(&cim_cfg(), &l);
+        // K = 1300 (6 k-tiles… ⌈1300/256⌉ = 6), N = 2600 (11 n-tiles).
+        assert_eq!(w.tiles, 6 * 11);
+        assert_eq!(w.windows, 35 * (1300f64 / 16.0).ceil() as u64 * 11);
+        // Weights written once per inference, NOT per step.
+        assert_eq!(w.write_rows, 1300 * 11);
+    }
+}

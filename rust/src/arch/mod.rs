@@ -1,0 +1,11 @@
+//! Accelerator architecture layer: the TiM-DNN-style SiTe CiM system
+//! (32 arrays × 256×256, 32 PCUs) plus iso-capacity / iso-area
+//! near-memory baselines, a weight-stationary layer mapper and the
+//! system-level latency/energy simulator behind Figs 12/13.
+
+pub mod accel;
+pub mod config;
+pub mod mapper;
+
+pub use accel::{Accelerator, SystemReport};
+pub use config::AccelConfig;

@@ -1,0 +1,160 @@
+//! Signed-ternary encodings and the scalar-product truth tables
+//! (paper Fig 3 for SiTe CiM I, Fig 5(b–e) for SiTe CiM II).
+//!
+//! Differential weight encoding (both flavors):
+//!   W = 0  → (M1, M2) = (0, 0)
+//!   W = +1 → (M1, M2) = (1, 0)
+//!   W = −1 → (M1, M2) = (0, 1)
+//! (M1 = M2 = 1 is unused/illegal.)
+//!
+//! Input encoding, SiTe CiM I (RWL1, RWL2):
+//!   I = 0  → (0, 0);  I = +1 → (VDD, 0);  I = −1 → (0, VDD)
+//! Input encoding, SiTe CiM II (RWL, RWL_t1, RWL_t2):
+//!   I = 0  → (0, 0, 0);  I = +1 → (VDD, VDD, 0);  I = −1 → (VDD, 0, VDD)
+//!
+//! Output encoding (voltage sensing): O = +1 ⇔ RBL1 discharges,
+//! O = −1 ⇔ RBL2 discharges, O = 0 ⇔ neither.
+
+/// A signed ternary value. Stored as i8 ∈ {−1, 0, +1} throughout the
+/// crate; this module centralizes validation and encode/decode.
+pub type Trit = i8;
+
+/// Validate a trit.
+pub fn is_trit(x: i8) -> bool {
+    (-1..=1).contains(&x)
+}
+
+/// Weight → (M1, M2) differential encoding (Fig 3(a)).
+pub fn encode_weight(w: Trit) -> (bool, bool) {
+    debug_assert!(is_trit(w));
+    match w {
+        1 => (true, false),
+        -1 => (false, true),
+        _ => (false, false),
+    }
+}
+
+/// (M1, M2) → weight. `(true, true)` is an illegal cell state; we surface
+/// it as an error so array tests can assert it never occurs.
+pub fn decode_weight(m1: bool, m2: bool) -> Result<Trit, IllegalCellState> {
+    match (m1, m2) {
+        (false, false) => Ok(0),
+        (true, false) => Ok(1),
+        (false, true) => Ok(-1),
+        (true, true) => Err(IllegalCellState),
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("illegal ternary cell state M1=M2=1")]
+pub struct IllegalCellState;
+
+/// SiTe CiM I input → (RWL1, RWL2) levels (Fig 3(b)).
+pub fn encode_input_cim1(i: Trit) -> (bool, bool) {
+    debug_assert!(is_trit(i));
+    match i {
+        1 => (true, false),
+        -1 => (false, true),
+        _ => (false, false),
+    }
+}
+
+/// SiTe CiM II input → (RWL, RWL_t1, RWL_t2) levels (Fig 5(c)).
+pub fn encode_input_cim2(i: Trit) -> (bool, bool, bool) {
+    debug_assert!(is_trit(i));
+    match i {
+        1 => (true, true, false),
+        -1 => (true, false, true),
+        _ => (false, false, false),
+    }
+}
+
+/// Which RBL (if any) the cell pulls down in SiTe CiM I, given the input
+/// encoding — the electrical truth table behind O = I·W (Fig 3(c–d)).
+/// Returns (discharges_rbl1, discharges_rbl2).
+pub fn rbl_pulldown_cim1(i: Trit, w: Trit) -> (bool, bool) {
+    let (rwl1, rwl2) = encode_input_cim1(i);
+    let (m1, m2) = encode_weight(w);
+    // RWL1 asserts AX1 (M1→RBL1) and AX2 (M2→RBL2): straight coupling.
+    // RWL2 asserts AX3 (M1→RBL2) and AX4 (M2→RBL1): cross coupling.
+    let rbl1 = (rwl1 && m1) || (rwl2 && m2);
+    let rbl2 = (rwl1 && m2) || (rwl2 && m1);
+    (rbl1, rbl2)
+}
+
+/// The same for SiTe CiM II: which RBL receives the LRS current
+/// (Fig 5(e)). RWL gates the cell onto the LRBLs; RWL_t1 couples straight
+/// (LRBL1→RBL1, LRBL2→RBL2), RWL_t2 couples crossed.
+pub fn rbl_current_cim2(i: Trit, w: Trit) -> (bool, bool) {
+    let (rwl, t1, t2) = encode_input_cim2(i);
+    let (m1, m2) = encode_weight(w);
+    let lrbl1 = rwl && m1;
+    let lrbl2 = rwl && m2;
+    let rbl1 = (t1 && lrbl1) || (t2 && lrbl2);
+    let rbl2 = (t1 && lrbl2) || (t2 && lrbl1);
+    (rbl1, rbl2)
+}
+
+/// Decode a scalar product from the RBL pair (Fig 3(c)).
+pub fn decode_output(rbl1: bool, rbl2: bool) -> Trit {
+    match (rbl1, rbl2) {
+        (true, false) => 1,
+        (false, true) => -1,
+        _ => 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig 3(d): the full 9-entry ternary multiplication truth table must
+    /// emerge from the SiTe CiM I cell's electrical behaviour.
+    #[test]
+    fn cim1_truth_table_is_ternary_product() {
+        for i in [-1i8, 0, 1] {
+            for w in [-1i8, 0, 1] {
+                let (r1, r2) = rbl_pulldown_cim1(i, w);
+                assert_eq!(decode_output(r1, r2), i * w, "I={i} W={w}");
+                assert!(!(r1 && r2), "both RBLs discharged for I={i} W={w}");
+            }
+        }
+    }
+
+    /// Fig 5(e): same for SiTe CiM II's current steering.
+    #[test]
+    fn cim2_truth_table_is_ternary_product() {
+        for i in [-1i8, 0, 1] {
+            for w in [-1i8, 0, 1] {
+                let (r1, r2) = rbl_current_cim2(i, w);
+                assert_eq!(decode_output(r1, r2), i * w, "I={i} W={w}");
+                assert!(!(r1 && r2));
+            }
+        }
+    }
+
+    #[test]
+    fn weight_encode_decode_roundtrip() {
+        for w in [-1i8, 0, 1] {
+            let (m1, m2) = encode_weight(w);
+            assert_eq!(decode_weight(m1, m2).unwrap(), w);
+        }
+        assert!(decode_weight(true, true).is_err());
+    }
+
+    #[test]
+    fn input_zero_deasserts_everything() {
+        assert_eq!(encode_input_cim1(0), (false, false));
+        assert_eq!(encode_input_cim2(0), (false, false, false));
+    }
+
+    #[test]
+    fn read_uses_plus_one_encoding() {
+        // Reading a row = applying I = +1 (§III.1.b.i: "identical to
+        // reading out the weight value").
+        for w in [-1i8, 0, 1] {
+            let (r1, r2) = rbl_pulldown_cim1(1, w);
+            assert_eq!(decode_output(r1, r2), w);
+        }
+    }
+}

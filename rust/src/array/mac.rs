@@ -1,0 +1,197 @@
+//! MAC semantics shared by both flavors: 16-row groups, per-group ADC
+//! saturation, and the reference (pure-integer) implementations that the
+//! analog simulations and the AOT Pallas kernel are all tested against.
+//!
+//! Saturation semantics (§III.2, §IV.3):
+//! - SiTe CiM I digitizes the two RBL counts *separately* with two 3-bit
+//!   ADCs (+ extra SA): O = min(a, 8) − min(b, 8).
+//! - SiTe CiM II subtracts *first* (comparator + analog subtractor) and
+//!   digitizes the magnitude with one ADC: O = sign(a−b)·min(|a−b|, 8).
+//! Both approximate outputs beyond 8 as 8; they differ when a and b are
+//! simultaneously large (e.g. a=10, b=9 → CiM I: 0, CiM II: +1).
+
+use super::encoding::Trit;
+use super::storage::{pack_inputs16, TernaryStorage};
+
+/// Rows asserted per MAC cycle (N_A in the paper).
+pub const GROUP_ROWS: usize = 16;
+/// ADC saturation code.
+pub const SAT: u32 = 8;
+
+/// Which flavor's digitization path to apply to a group's (a, b) counts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Flavor {
+    Cim1,
+    Cim2,
+}
+
+impl Flavor {
+    /// Group output after the flavor's ADC/subtract path, ideal circuits.
+    #[inline]
+    pub fn group_output(&self, a: u32, b: u32) -> i32 {
+        match self {
+            Flavor::Cim1 => (a.min(SAT) as i32) - (b.min(SAT) as i32),
+            Flavor::Cim2 => {
+                let d = a as i32 - b as i32;
+                d.signum() * d.unsigned_abs().min(SAT) as i32
+            }
+        }
+    }
+
+    /// Row-grouping for a full-column dot product: SiTe CiM I asserts 16
+    /// *consecutive* rows per cycle; SiTe CiM II asserts one row from each
+    /// of the 16 blocks (strided), because the cross-coupling transistors
+    /// are shared per block (§IV.3).
+    pub fn group_rows(&self, n_rows: usize, cycle: usize) -> Vec<usize> {
+        let n_groups = n_rows / GROUP_ROWS;
+        debug_assert!(cycle < n_groups);
+        match self {
+            Flavor::Cim1 => (cycle * GROUP_ROWS..(cycle + 1) * GROUP_ROWS).collect(),
+            Flavor::Cim2 => (0..GROUP_ROWS).map(|blk| blk * n_groups + cycle).collect(),
+        }
+    }
+}
+
+/// Reference dot product of a full input vector against every column,
+/// applying the flavor's grouping + saturation — pure integer math, no
+/// circuit models. This is the specification the analog paths, the bit-
+/// packed fast path and the Pallas kernel must all agree with.
+pub fn dot_ref(storage: &TernaryStorage, inputs: &[Trit], flavor: Flavor) -> Vec<i32> {
+    assert_eq!(inputs.len(), storage.n_rows());
+    let n_cycles = storage.n_rows() / GROUP_ROWS;
+    let mut out = vec![0i32; storage.n_cols()];
+    for cycle in 0..n_cycles {
+        let rows = flavor.group_rows(storage.n_rows(), cycle);
+        for col in 0..storage.n_cols() {
+            let mut a = 0u32;
+            let mut b = 0u32;
+            for &r in &rows {
+                let p = inputs[r] as i32 * storage.read(r, col) as i32;
+                if p == 1 {
+                    a += 1;
+                } else if p == -1 {
+                    b += 1;
+                }
+            }
+            out[col] += flavor.group_output(a, b);
+        }
+    }
+    out
+}
+
+/// Fast bit-packed equivalent of `dot_ref` for `Flavor::Cim1` (consecutive
+/// groups align with the packed blocks). The hot path of functional
+/// inference; see benches/array_bench.
+pub fn dot_fast_cim1(storage: &TernaryStorage, inputs: &[Trit]) -> Vec<i32> {
+    assert_eq!(inputs.len(), storage.n_rows());
+    let n_cycles = storage.n_rows() / GROUP_ROWS;
+    let mut out = vec![0i32; storage.n_cols()];
+    for cycle in 0..n_cycles {
+        let base = cycle * GROUP_ROWS;
+        let (ip, in_) = pack_inputs16(&inputs[base..base + GROUP_ROWS]);
+        if ip == 0 && in_ == 0 {
+            continue; // all-zero input group: no wordline asserted
+        }
+        for (col, o) in out.iter_mut().enumerate() {
+            let (a, b) = storage.block_ab(base, col, ip, in_);
+            *o += Flavor::Cim1.group_output(a, b);
+        }
+    }
+    out
+}
+
+/// Exact (no saturation) dot products — the near-memory baseline's
+/// digital MAC and the accuracy reference.
+pub fn dot_exact(storage: &TernaryStorage, inputs: &[Trit]) -> Vec<i64> {
+    (0..storage.n_cols()).map(|c| storage.column_dot_exact(c, inputs)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_setup(seed: u64, rows: usize, cols: usize, sparsity: f64) -> (TernaryStorage, Vec<i8>) {
+        let mut rng = Rng::new(seed);
+        let mut s = TernaryStorage::new(rows, cols);
+        s.write_matrix(&rng.ternary_vec(rows * cols, sparsity));
+        let inputs = rng.ternary_vec(rows, sparsity);
+        (s, inputs)
+    }
+
+    #[test]
+    fn group_output_saturates_both_flavors() {
+        assert_eq!(Flavor::Cim1.group_output(10, 9), 0); // both clamp to 8
+        assert_eq!(Flavor::Cim2.group_output(10, 9), 1); // diff clamps after
+        assert_eq!(Flavor::Cim1.group_output(16, 0), 8);
+        assert_eq!(Flavor::Cim2.group_output(16, 0), 8);
+        assert_eq!(Flavor::Cim1.group_output(0, 12), -8);
+        assert_eq!(Flavor::Cim2.group_output(3, 2), 1);
+    }
+
+    #[test]
+    fn groupings_partition_rows() {
+        for flavor in [Flavor::Cim1, Flavor::Cim2] {
+            let mut seen = vec![false; 256];
+            for cycle in 0..16 {
+                for r in flavor.group_rows(256, cycle) {
+                    assert!(!seen[r], "{flavor:?}: row {r} grouped twice");
+                    seen[r] = true;
+                }
+            }
+            assert!(seen.iter().all(|&s| s), "{flavor:?}: rows missing");
+        }
+    }
+
+    #[test]
+    fn cim2_groups_are_strided() {
+        let rows = Flavor::Cim2.group_rows(256, 0);
+        assert_eq!(rows[0], 0);
+        assert_eq!(rows[1], 16);
+        assert_eq!(rows[15], 240);
+    }
+
+    #[test]
+    fn fast_path_matches_reference() {
+        let (s, inputs) = random_setup(42, 256, 64, 0.45);
+        assert_eq!(dot_fast_cim1(&s, &inputs), dot_ref(&s, &inputs, Flavor::Cim1));
+    }
+
+    #[test]
+    fn sparse_inputs_rarely_saturate() {
+        // At the paper's operating sparsity, the saturating dot product
+        // should agree with the exact one almost everywhere.
+        let (s, inputs) = random_setup(7, 256, 128, 0.65);
+        let sat = dot_ref(&s, &inputs, Flavor::Cim1);
+        let exact = dot_exact(&s, &inputs);
+        let mismatches = sat
+            .iter()
+            .zip(&exact)
+            .filter(|&(&a, &e)| a as i64 != e)
+            .count();
+        assert!(mismatches < 8, "saturation distorted {mismatches}/128 columns");
+    }
+
+    #[test]
+    fn dense_worst_case_saturates() {
+        // All +1 weights, all +1 inputs: every group pegs at +8.
+        let mut s = TernaryStorage::new(256, 4);
+        s.write_matrix(&vec![1i8; 256 * 4]);
+        let inputs = vec![1i8; 256];
+        for flavor in [Flavor::Cim1, Flavor::Cim2] {
+            let out = dot_ref(&s, &inputs, flavor);
+            assert!(out.iter().all(|&o| o == 16 * 8), "{flavor:?}: {out:?}");
+        }
+    }
+
+    #[test]
+    fn flavors_agree_except_double_saturation() {
+        let (s, inputs) = random_setup(11, 256, 256, 0.5);
+        let o1 = dot_ref(&s, &inputs, Flavor::Cim1);
+        let o2 = dot_ref(&s, &inputs, Flavor::Cim2);
+        // Different groupings/saturation make tiny differences, but the
+        // results must be strongly correlated.
+        let close = o1.iter().zip(&o2).filter(|&(&a, &b)| (a - b).abs() <= 2).count();
+        assert!(close > 240, "only {close}/256 columns close");
+    }
+}

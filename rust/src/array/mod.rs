@@ -1,0 +1,29 @@
+//! The paper's contribution: signed-ternary CiM arrays.
+//!
+//! - [`encoding`] — the W/I/O encodings and electrical truth tables.
+//! - [`storage`] — bit-packed ternary weight planes (shared substrate).
+//! - [`sitecim1`] — SiTe CiM I: cross-coupled cells, voltage sensing.
+//! - [`sitecim2`] — SiTe CiM II: cross-coupled sub-columns, current
+//!   sensing, block-strided row assertion.
+//! - [`near_memory`] — the row-by-row NM baseline with exact digital MAC.
+//! - [`mac`] — the saturating MAC semantics both flavors implement.
+//! - [`metrics`] — latency/energy models per (design, op) → Figs 9/11.
+//! - [`area`] — layout-area models → §V.1a/V.2a, Figs 8/10.
+//! - [`variation`] — V_TH variation Monte Carlo → error probability.
+
+pub mod area;
+pub mod encoding;
+pub mod mac;
+pub mod metrics;
+pub mod near_memory;
+pub mod sitecim1;
+pub mod sitecim2;
+pub mod storage;
+pub mod variation;
+
+pub use area::Design;
+pub use mac::Flavor;
+pub use near_memory::NearMemoryArray;
+pub use sitecim1::SiTeCim1Array;
+pub use sitecim2::SiTeCim2Array;
+pub use storage::TernaryStorage;

@@ -1,0 +1,117 @@
+//! Near-memory (NM) baseline array (paper §V preamble).
+//!
+//! A standard 512×256 binary array (= 256×256 ternary words, two bit-cells
+//! per ternary weight), voltage-sensed, read row-by-row. Dot products are
+//! computed *outside* the array in a near-memory compute (NMC) unit: for
+//! each of the 16 rows of a MAC window the row is read, multiplied by its
+//! input trit and accumulated — exact digital arithmetic, no ADC, no
+//! saturation. This is both the performance baseline and the accuracy
+//! reference.
+
+use super::encoding::Trit;
+use super::storage::TernaryStorage;
+use crate::device::{Tech, TechParams};
+
+#[derive(Clone, Debug)]
+pub struct NearMemoryArray {
+    storage: TernaryStorage,
+    pub params: TechParams,
+}
+
+impl NearMemoryArray {
+    pub fn new(tech: Tech) -> NearMemoryArray {
+        Self::with_dims(tech, 256, 256)
+    }
+
+    pub fn with_dims(tech: Tech, n_rows: usize, n_cols: usize) -> NearMemoryArray {
+        NearMemoryArray {
+            storage: TernaryStorage::new(n_rows, n_cols),
+            params: TechParams::new(tech),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.storage.n_rows()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.storage.n_cols()
+    }
+
+    pub fn storage(&self) -> &TernaryStorage {
+        &self.storage
+    }
+
+    pub fn write(&mut self, row: usize, col: usize, w: Trit) {
+        self.storage.write(row, col, w);
+    }
+
+    pub fn write_matrix(&mut self, weights: &[Trit]) {
+        self.storage.write_matrix(weights);
+    }
+
+    /// Memory read of one ternary row (both bit-cells sensed in parallel
+    /// on the doubled binary columns).
+    pub fn read_row(&self, row: usize) -> Vec<Trit> {
+        (0..self.n_cols()).map(|c| self.storage.read(row, c)).collect()
+    }
+
+    /// The NMC unit's dot product: sequential row reads, exact MAC.
+    /// Rows with input 0 are skipped (the NMC unit gates them — the same
+    /// sparsity the CiM designs exploit electrically).
+    pub fn dot(&self, inputs: &[Trit]) -> Vec<i64> {
+        assert_eq!(inputs.len(), self.n_rows());
+        let mut acc = vec![0i64; self.n_cols()];
+        for (row, &i) in inputs.iter().enumerate() {
+            if i == 0 {
+                continue;
+            }
+            for (c, a) in acc.iter_mut().enumerate() {
+                *a += i as i64 * self.storage.read(row, c) as i64;
+            }
+        }
+        acc
+    }
+
+    /// Number of row reads the NMC dot product performs (for metrics).
+    pub fn reads_for(&self, inputs: &[Trit]) -> usize {
+        inputs.iter().filter(|&&i| i != 0).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot_is_exact() {
+        let mut rng = Rng::new(5);
+        let mut a = NearMemoryArray::with_dims(Tech::Sram8T, 64, 16);
+        let w = rng.ternary_vec(64 * 16, 0.3);
+        a.write_matrix(&w);
+        let inputs = rng.ternary_vec(64, 0.3);
+        let out = a.dot(&inputs);
+        for c in 0..16 {
+            let expect: i64 = (0..64).map(|r| inputs[r] as i64 * w[r * 16 + c] as i64).sum();
+            assert_eq!(out[c], expect);
+        }
+    }
+
+    #[test]
+    fn zero_inputs_cost_no_reads() {
+        let a = NearMemoryArray::with_dims(Tech::Edram3T, 32, 8);
+        let mut inputs = vec![0i8; 32];
+        inputs[3] = 1;
+        inputs[17] = -1;
+        assert_eq!(a.reads_for(&inputs), 2);
+    }
+
+    #[test]
+    fn read_row_roundtrip() {
+        let mut a = NearMemoryArray::with_dims(Tech::Femfet3T, 16, 4);
+        a.write(2, 1, -1);
+        a.write(2, 3, 1);
+        assert_eq!(a.read_row(2), vec![0, -1, 0, 1]);
+    }
+}

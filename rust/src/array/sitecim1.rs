@@ -1,0 +1,203 @@
+//! SiTe CiM I: cross-coupled bit-cells, voltage sensing (paper §III).
+//!
+//! A 256×256 ternary array. Each ternary cell = two bit-cells (M1, M2)
+//! plus cross-coupling access transistors AX3/AX4 on a second read
+//! word-line. MAC cycles assert 16 rows; each column's two RBLs develop
+//! `a`·δ and `b`·δ discharges, two 3-bit flash ADCs digitize them and a
+//! digital subtractor produces the signed partial output.
+//!
+//! Two simulation fidelities:
+//! - `dot` / `mac_cycle`: digital-ideal (bit-packed fast path) — exactly
+//!   the saturating semantics of `mac::Flavor::Cim1`.
+//! - `mac_cycle_analog`: runs the calibrated bit-line discharge ladder +
+//!   (optionally varied) ADC references — the Monte-Carlo error path.
+
+use super::encoding::Trit;
+use super::mac::{self, Flavor, GROUP_ROWS};
+use super::storage::{pack_inputs16, TernaryStorage};
+use crate::circuit::adc::VoltageAdc;
+use crate::circuit::bitline::VoltageBitline;
+use crate::device::{Tech, TechParams};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SiTeCim1Array {
+    storage: TernaryStorage,
+    pub params: TechParams,
+    pub bitline: VoltageBitline,
+    adc: VoltageAdc,
+}
+
+impl SiTeCim1Array {
+    /// The paper's array: 256×256 ternary cells.
+    pub fn new(tech: Tech) -> SiTeCim1Array {
+        Self::with_dims(tech, 256, 256)
+    }
+
+    pub fn with_dims(tech: Tech, n_rows: usize, n_cols: usize) -> SiTeCim1Array {
+        let params = TechParams::new(tech);
+        let bitline = VoltageBitline::new(params.vdd);
+        let adc = VoltageAdc::ideal(&bitline);
+        SiTeCim1Array { storage: TernaryStorage::new(n_rows, n_cols), params, bitline, adc }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.storage.n_rows()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.storage.n_cols()
+    }
+
+    pub fn storage(&self) -> &TernaryStorage {
+        &self.storage
+    }
+
+    /// Program one ternary weight.
+    pub fn write(&mut self, row: usize, col: usize, w: Trit) {
+        self.storage.write(row, col, w);
+    }
+
+    /// Program the whole array (row-major, rows × cols).
+    pub fn write_matrix(&mut self, weights: &[Trit]) {
+        self.storage.write_matrix(weights);
+    }
+
+    /// Memory-mode read of one row: assert RWL1 only (I = +1 semantics),
+    /// sense both RBLs per column.
+    pub fn read_row(&self, row: usize) -> Vec<Trit> {
+        (0..self.n_cols()).map(|c| self.storage.read(row, c)).collect()
+    }
+
+    /// One MAC cycle over the 16-row group starting at `row_base`
+    /// (digital-ideal). `inputs` are the 16 trits for those rows.
+    pub fn mac_cycle(&self, row_base: usize, inputs: &[Trit]) -> Vec<i32> {
+        assert_eq!(inputs.len(), GROUP_ROWS);
+        assert!(row_base % GROUP_ROWS == 0);
+        let (ip, in_) = pack_inputs16(inputs);
+        (0..self.n_cols())
+            .map(|c| {
+                let (a, b) = self.storage.block_ab(row_base, c, ip, in_);
+                Flavor::Cim1.group_output(a, b)
+            })
+            .collect()
+    }
+
+    /// One MAC cycle through the analog models: RBL voltage ladder + ADC
+    /// (pass an ADC built with `VoltageAdc::with_variation` for MC runs).
+    pub fn mac_cycle_analog(
+        &self,
+        row_base: usize,
+        inputs: &[Trit],
+        adc: Option<&VoltageAdc>,
+    ) -> Vec<i32> {
+        assert_eq!(inputs.len(), GROUP_ROWS);
+        let adc = adc.unwrap_or(&self.adc);
+        let (ip, in_) = pack_inputs16(inputs);
+        (0..self.n_cols())
+            .map(|c| {
+                let (a, b) = self.storage.block_ab(row_base, c, ip, in_);
+                // Physical levels after a/b simultaneous discharges.
+                let v1 = self.bitline.v_after(a as usize);
+                let v2 = self.bitline.v_after(b as usize);
+                adc.quantize(v1) as i32 - adc.quantize(v2) as i32
+            })
+            .collect()
+    }
+
+    /// Full dot product of `inputs` (length = n_rows) against every
+    /// column: 16 MAC cycles of 16 consecutive rows, accumulated in the
+    /// digital periphery (PCUs at system level).
+    pub fn dot(&self, inputs: &[Trit]) -> Vec<i32> {
+        mac::dot_fast_cim1(&self.storage, inputs)
+    }
+
+    /// Analog-path full dot product with a per-cycle fresh-varied ADC —
+    /// the Monte-Carlo inference path (σ in volts on ADC references).
+    pub fn dot_analog_mc(&self, inputs: &[Trit], sigma_v: f64, rng: &mut Rng) -> Vec<i32> {
+        assert_eq!(inputs.len(), self.n_rows());
+        let mut out = vec![0i32; self.n_cols()];
+        for cycle in 0..self.n_rows() / GROUP_ROWS {
+            let base = cycle * GROUP_ROWS;
+            let adc = VoltageAdc::with_variation(&self.bitline, sigma_v, rng);
+            let part = self.mac_cycle_analog(base, &inputs[base..base + GROUP_ROWS], Some(&adc));
+            for (o, p) in out.iter_mut().zip(part) {
+                *o += p;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::mac::dot_ref;
+    use crate::util::rng::Rng;
+
+    fn loaded_array(seed: u64, sparsity: f64) -> (SiTeCim1Array, Vec<i8>) {
+        let mut rng = Rng::new(seed);
+        let mut a = SiTeCim1Array::with_dims(Tech::Sram8T, 64, 32);
+        a.write_matrix(&rng.ternary_vec(64 * 32, sparsity));
+        let inputs = rng.ternary_vec(64, sparsity);
+        (a, inputs)
+    }
+
+    #[test]
+    fn read_row_returns_weights() {
+        let mut rng = Rng::new(3);
+        let mut a = SiTeCim1Array::with_dims(Tech::Femfet3T, 32, 16);
+        let w = rng.ternary_vec(32 * 16, 0.3);
+        a.write_matrix(&w);
+        for r in 0..32 {
+            assert_eq!(a.read_row(r), w[r * 16..(r + 1) * 16]);
+        }
+    }
+
+    #[test]
+    fn dot_matches_reference_semantics() {
+        let (a, inputs) = loaded_array(21, 0.4);
+        assert_eq!(a.dot(&inputs), dot_ref(a.storage(), &inputs, Flavor::Cim1));
+    }
+
+    #[test]
+    fn analog_ideal_equals_digital() {
+        // With ideal ADC references the analog path must reproduce the
+        // digital saturating semantics bit-for-bit.
+        let (a, inputs) = loaded_array(22, 0.5);
+        for cycle in 0..4 {
+            let base = cycle * 16;
+            let dig = a.mac_cycle(base, &inputs[base..base + 16]);
+            let ana = a.mac_cycle_analog(base, &inputs[base..base + 16], None);
+            assert_eq!(dig, ana, "cycle {cycle}");
+        }
+    }
+
+    #[test]
+    fn mc_with_zero_sigma_is_exactly_ideal() {
+        let (a, inputs) = loaded_array(23, 0.4);
+        let mut rng = Rng::new(1);
+        assert_eq!(a.dot_analog_mc(&inputs, 0.0, &mut rng), a.dot(&inputs));
+    }
+
+    #[test]
+    fn mc_with_realistic_sigma_rarely_deviates() {
+        let (a, inputs) = loaded_array(24, 0.5);
+        let mut rng = Rng::new(2);
+        let ideal = a.dot(&inputs);
+        let mut deviations = 0usize;
+        for _ in 0..20 {
+            let mc = a.dot_analog_mc(&inputs, 0.008, &mut rng);
+            deviations += mc.iter().zip(&ideal).filter(|(m, i)| m != i).count();
+        }
+        // 8 mV σ against ≥40 mV margins: deviations should be rare (<2%).
+        assert!(deviations < 20 * 32 / 50, "deviations = {deviations}");
+    }
+
+    #[test]
+    fn zero_inputs_zero_output() {
+        let (a, _) = loaded_array(25, 0.2);
+        let out = a.dot(&vec![0i8; 64]);
+        assert!(out.iter().all(|&o| o == 0));
+    }
+}

@@ -1,0 +1,245 @@
+//! SiTe CiM II: cross-coupled sub-columns, current sensing (paper §IV).
+//!
+//! The array is organized as 16 blocks × 16 rows. Within a block, cells
+//! share local read bit-lines (LRBL1/2) and four block-level coupling
+//! transistors (AX_t1M1/M2 straight, AX_t2M1/M2 crossed) driven by
+//! RWL_t1/RWL_t2. One row *per block* is asserted per MAC cycle (distinct
+//! inputs within a block would fight over the shared RWL_t lines), so a
+//! full 256-row dot product again takes 16 cycles — but the 16
+//! simultaneous rows are strided across blocks.
+//!
+//! Sensing is current-mode: the comparator picks the sign, the analog
+//! subtractor forms |I_RBL1 − I_RBL2| and a single 3-bit current ADC
+//! digitizes it → O = sign·min(|a−b|, 8).
+
+use super::encoding::Trit;
+use super::mac::{Flavor, GROUP_ROWS};
+use super::storage::TernaryStorage;
+use crate::circuit::adc::CurrentAdc;
+use crate::circuit::sensing::{comparator_sign, i_hrs_effective, subtractor_magnitude_units, CurrentSense};
+use crate::device::{Tech, TechParams};
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct SiTeCim2Array {
+    storage: TernaryStorage,
+    pub params: TechParams,
+    pub sense: CurrentSense,
+    /// LRBL capacitance (16 cells + local wire) — sets the HRS-effective
+    /// charging current (§IV.1.ii).
+    pub c_lrbl: f64,
+    /// Current-sense window.
+    pub t_sense: f64,
+    adc: CurrentAdc,
+}
+
+impl SiTeCim2Array {
+    pub fn new(tech: Tech) -> SiTeCim2Array {
+        Self::with_dims(tech, 256, 256)
+    }
+
+    pub fn with_dims(tech: Tech, n_rows: usize, n_cols: usize) -> SiTeCim2Array {
+        let params = TechParams::new(tech);
+        let sense = CurrentSense::default_for(&params);
+        // 16 cells × 1 junction + 16 × 8F of local wire.
+        let c_lrbl = params.c_rbl(GROUP_ROWS, 1.0, 8.0);
+        // Sense window scales with the unit current (weaker cells resolve
+        // slower): C_sense·VDD / I_LRS with C_sense ≈ 25 fF.
+        let t_sense = 25e-15 * params.vdd / params.i_lrs;
+        SiTeCim2Array {
+            storage: TernaryStorage::new(n_rows, n_cols),
+            params,
+            sense,
+            c_lrbl,
+            t_sense,
+            adc: CurrentAdc::ideal(),
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.storage.n_rows()
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.storage.n_cols()
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.storage.n_rows() / GROUP_ROWS
+    }
+
+    pub fn storage(&self) -> &TernaryStorage {
+        &self.storage
+    }
+
+    pub fn write(&mut self, row: usize, col: usize, w: Trit) {
+        self.storage.write(row, col, w);
+    }
+
+    pub fn write_matrix(&mut self, weights: &[Trit]) {
+        self.storage.write_matrix(weights);
+    }
+
+    /// Memory-mode read of one row (assert RWL_i + RWL_t1, current sense).
+    pub fn read_row(&self, row: usize) -> Vec<Trit> {
+        (0..self.n_cols()).map(|c| self.storage.read(row, c)).collect()
+    }
+
+    /// The rows asserted in `cycle` (one per block).
+    pub fn cycle_rows(&self, cycle: usize) -> Vec<usize> {
+        Flavor::Cim2.group_rows(self.n_rows(), cycle)
+    }
+
+    /// One MAC cycle, digital-ideal semantics. `inputs[blk]` is the trit
+    /// applied to the asserted row of block `blk`.
+    pub fn mac_cycle(&self, cycle: usize, inputs: &[Trit]) -> Vec<i32> {
+        assert_eq!(inputs.len(), GROUP_ROWS);
+        let rows = self.cycle_rows(cycle);
+        (0..self.n_cols())
+            .map(|c| {
+                let (a, b) = self.count_ab(&rows, inputs, c);
+                Flavor::Cim2.group_output(a, b)
+            })
+            .collect()
+    }
+
+    fn count_ab(&self, rows: &[usize], inputs: &[Trit], col: usize) -> (u32, u32) {
+        let mut a = 0u32;
+        let mut b = 0u32;
+        for (&r, &i) in rows.iter().zip(inputs) {
+            let p = i as i32 * self.storage.read(r, col) as i32;
+            if p == 1 {
+                a += 1;
+            } else if p == -1 {
+                b += 1;
+            }
+        }
+        (a, b)
+    }
+
+    /// One MAC cycle through the current-sensing models: loaded RBL
+    /// currents → comparator → subtractor → (optionally varied) ADC.
+    pub fn mac_cycle_analog(&self, cycle: usize, inputs: &[Trit], adc: Option<&CurrentAdc>) -> Vec<i32> {
+        assert_eq!(inputs.len(), GROUP_ROWS);
+        let adc = adc.unwrap_or(&self.adc);
+        let rows = self.cycle_rows(cycle);
+        let p = &self.params;
+        let i_hrs_eff = i_hrs_effective(p, self.c_lrbl, self.t_sense);
+        let n_active = inputs.iter().filter(|&&i| i != 0).count();
+        (0..self.n_cols())
+            .map(|c| {
+                let (a, b) = self.count_ab(&rows, inputs, c);
+                // Active rows whose coupled cell is HRS park the LRBL
+                // charging current on that RBL.
+                let hrs1 = n_active - a as usize;
+                let hrs2 = n_active - b as usize;
+                let i1 = self.sense.loaded_current(p, a as usize, hrs1, i_hrs_eff);
+                let i2 = self.sense.loaded_current(p, b as usize, hrs2, i_hrs_eff);
+                let sign = comparator_sign(i1, i2);
+                let unit = p.i_lrs - i_hrs_eff;
+                let mag = subtractor_magnitude_units(i1, i2, unit);
+                sign * adc.quantize(mag) as i32
+            })
+            .collect()
+    }
+
+    /// Full dot product: 16 cycles, one row per block per cycle,
+    /// accumulated digitally.
+    pub fn dot(&self, inputs: &[Trit]) -> Vec<i32> {
+        assert_eq!(inputs.len(), self.n_rows());
+        let mut out = vec![0i32; self.n_cols()];
+        for cycle in 0..self.n_blocks().min(GROUP_ROWS) {
+            let rows = self.cycle_rows(cycle);
+            let cyc_inputs: Vec<Trit> = rows.iter().map(|&r| inputs[r]).collect();
+            for (o, p) in out.iter_mut().zip(self.mac_cycle(cycle, &cyc_inputs)) {
+                *o += p;
+            }
+        }
+        out
+    }
+
+    /// Monte-Carlo analog dot product (σ in ADC reference units).
+    pub fn dot_analog_mc(&self, inputs: &[Trit], sigma_units: f64, rng: &mut Rng) -> Vec<i32> {
+        assert_eq!(inputs.len(), self.n_rows());
+        let mut out = vec![0i32; self.n_cols()];
+        for cycle in 0..self.n_blocks().min(GROUP_ROWS) {
+            let rows = self.cycle_rows(cycle);
+            let cyc_inputs: Vec<Trit> = rows.iter().map(|&r| inputs[r]).collect();
+            let adc = CurrentAdc::with_variation(sigma_units, rng);
+            for (o, p) in out.iter_mut().zip(self.mac_cycle_analog(cycle, &cyc_inputs, Some(&adc))) {
+                *o += p;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::mac::dot_ref;
+    use crate::util::rng::Rng;
+
+    fn loaded(seed: u64, sparsity: f64) -> (SiTeCim2Array, Vec<i8>) {
+        let mut rng = Rng::new(seed);
+        let mut a = SiTeCim2Array::with_dims(Tech::Edram3T, 64, 32);
+        a.write_matrix(&rng.ternary_vec(64 * 32, sparsity));
+        let inputs = rng.ternary_vec(64, sparsity);
+        (a, inputs)
+    }
+
+    #[test]
+    fn dot_matches_reference_semantics() {
+        let (a, inputs) = loaded(31, 0.4);
+        assert_eq!(a.dot(&inputs), dot_ref(a.storage(), &inputs, Flavor::Cim2));
+    }
+
+    #[test]
+    fn analog_ideal_matches_digital_at_moderate_outputs() {
+        // With sparse inputs (outputs well inside the robust range) the
+        // loaded-current path must agree with the digital semantics.
+        let (a, inputs) = loaded(32, 0.6);
+        for cycle in 0..4 {
+            let rows = a.cycle_rows(cycle);
+            let ci: Vec<i8> = rows.iter().map(|&r| inputs[r]).collect();
+            let dig = a.mac_cycle(cycle, &ci);
+            let ana = a.mac_cycle_analog(cycle, &ci, None);
+            let agree = dig.iter().zip(&ana).filter(|(d, a)| d == a).count();
+            assert!(agree >= 31, "cycle {cycle}: only {agree}/32 agree");
+        }
+    }
+
+    #[test]
+    fn blocks_are_16_rows() {
+        let a = SiTeCim2Array::new(Tech::Sram8T);
+        assert_eq!(a.n_blocks(), 16);
+        let rows = a.cycle_rows(3);
+        assert_eq!(rows.len(), 16);
+        assert!(rows.windows(2).all(|w| w[1] - w[0] == 16));
+    }
+
+    #[test]
+    fn mc_zero_sigma_matches_analog_ideal() {
+        let (a, inputs) = loaded(33, 0.5);
+        let mut rng = Rng::new(4);
+        let mc = a.dot_analog_mc(&inputs, 0.0, &mut rng);
+        // σ=0 MC equals the plain analog path accumulated over cycles.
+        let mut expect = vec![0i32; 32];
+        for cycle in 0..4 {
+            let rows = a.cycle_rows(cycle);
+            let ci: Vec<i8> = rows.iter().map(|&r| inputs[r]).collect();
+            for (e, p) in expect.iter_mut().zip(a.mac_cycle_analog(cycle, &ci, None)) {
+                *e += p;
+            }
+        }
+        assert_eq!(mc, expect);
+    }
+
+    #[test]
+    fn sense_window_tracks_cell_strength() {
+        let sram = SiTeCim2Array::new(Tech::Sram8T);
+        let fem = SiTeCim2Array::new(Tech::Femfet3T);
+        // FEMFET's stronger LRS resolves faster.
+        assert!(fem.t_sense < sram.t_sense);
+    }
+}

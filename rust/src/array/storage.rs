@@ -1,0 +1,219 @@
+//! Bit-packed ternary weight storage shared by both array flavors.
+//!
+//! Each column stores two bit-planes (`wp` = "M1" = weight is +1,
+//! `wn` = "M2" = weight is −1) packed into u64 words, so a 16-row MAC
+//! group reduces to a handful of AND + POPCNT operations — this is the
+//! functional-simulation hot path behind the end-to-end example.
+//!
+//! Layout: plane[col * words_per_col + word], rows little-endian within a
+//! word. 16-row blocks never straddle a word (16 | 64).
+
+use super::encoding::{self, Trit};
+
+#[derive(Clone, Debug)]
+pub struct TernaryStorage {
+    n_rows: usize,
+    n_cols: usize,
+    words_per_col: usize,
+    wp: Vec<u64>,
+    wn: Vec<u64>,
+}
+
+impl TernaryStorage {
+    pub fn new(n_rows: usize, n_cols: usize) -> TernaryStorage {
+        assert!(n_rows % 16 == 0, "rows must be a multiple of the block size (16)");
+        let words_per_col = n_rows.div_ceil(64);
+        TernaryStorage {
+            n_rows,
+            n_cols,
+            words_per_col,
+            wp: vec![0; words_per_col * n_cols],
+            wn: vec![0; words_per_col * n_cols],
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    pub fn n_cols(&self) -> usize {
+        self.n_cols
+    }
+
+    #[inline]
+    fn idx(&self, row: usize, col: usize) -> (usize, u64) {
+        (col * self.words_per_col + row / 64, 1u64 << (row % 64))
+    }
+
+    /// Program one ternary weight (differential M1/M2 write).
+    pub fn write(&mut self, row: usize, col: usize, w: Trit) {
+        debug_assert!(encoding::is_trit(w));
+        let (i, m) = self.idx(row, col);
+        let (m1, m2) = encoding::encode_weight(w);
+        if m1 {
+            self.wp[i] |= m;
+        } else {
+            self.wp[i] &= !m;
+        }
+        if m2 {
+            self.wn[i] |= m;
+        } else {
+            self.wn[i] &= !m;
+        }
+    }
+
+    /// Read back one weight (digital view of the cell state).
+    pub fn read(&self, row: usize, col: usize) -> Trit {
+        let (i, m) = self.idx(row, col);
+        encoding::decode_weight(self.wp[i] & m != 0, self.wn[i] & m != 0)
+            .expect("storage never holds M1=M2=1")
+    }
+
+    /// Program a whole row from a slice of trits (length = n_cols).
+    pub fn write_row(&mut self, row: usize, weights: &[Trit]) {
+        assert_eq!(weights.len(), self.n_cols);
+        for (col, &w) in weights.iter().enumerate() {
+            self.write(row, col, w);
+        }
+    }
+
+    /// Program the full array from a row-major matrix (rows × cols).
+    pub fn write_matrix(&mut self, weights: &[Trit]) {
+        assert_eq!(weights.len(), self.n_rows * self.n_cols);
+        for r in 0..self.n_rows {
+            self.write_row(r, &weights[r * self.n_cols..(r + 1) * self.n_cols]);
+        }
+    }
+
+    /// The (M1-plane, M2-plane) 16-bit masks for a block of 16 rows
+    /// starting at `row_base` (must be 16-aligned) in one column.
+    #[inline]
+    pub fn block_masks(&self, row_base: usize, col: usize) -> (u16, u16) {
+        debug_assert!(row_base % 16 == 0);
+        let word = col * self.words_per_col + row_base / 64;
+        let shift = row_base % 64;
+        (((self.wp[word] >> shift) & 0xFFFF) as u16, ((self.wn[word] >> shift) & 0xFFFF) as u16)
+    }
+
+    /// Count of (+1-product, −1-product) pairs in one 16-row block given
+    /// the input masks (ip = rows with I=+1, in_ = rows with I=−1).
+    /// This is the digital equivalent of the two RBL discharge counts
+    /// ('a' and 'b' in §III.2).
+    #[inline]
+    pub fn block_ab(&self, row_base: usize, col: usize, ip: u16, in_: u16) -> (u32, u32) {
+        let (wp, wn) = self.block_masks(row_base, col);
+        let a = (ip & wp).count_ones() + (in_ & wn).count_ones();
+        let b = (ip & wn).count_ones() + (in_ & wp).count_ones();
+        (a, b)
+    }
+
+    /// Exact (unclamped) dot product of a full input vector with one
+    /// column — the arbitrary-precision reference.
+    pub fn column_dot_exact(&self, col: usize, inputs: &[Trit]) -> i64 {
+        assert_eq!(inputs.len(), self.n_rows);
+        let mut acc = 0i64;
+        for (row, &i) in inputs.iter().enumerate() {
+            if i != 0 {
+                acc += (i as i64) * (self.read(row, col) as i64);
+            }
+        }
+        acc
+    }
+}
+
+/// Pack a 16-trit input group into (positive-mask, negative-mask).
+pub fn pack_inputs16(inputs: &[Trit]) -> (u16, u16) {
+    debug_assert!(inputs.len() <= 16);
+    let mut ip = 0u16;
+    let mut in_ = 0u16;
+    for (k, &i) in inputs.iter().enumerate() {
+        match i {
+            1 => ip |= 1 << k,
+            -1 => in_ |= 1 << k,
+            _ => {}
+        }
+    }
+    (ip, in_)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut s = TernaryStorage::new(64, 8);
+        let mut rng = Rng::new(1);
+        let w: Vec<i8> = rng.ternary_vec(64 * 8, 0.3);
+        s.write_matrix(&w);
+        for r in 0..64 {
+            for c in 0..8 {
+                assert_eq!(s.read(r, c), w[r * 8 + c]);
+            }
+        }
+    }
+
+    #[test]
+    fn rewrite_clears_old_state() {
+        let mut s = TernaryStorage::new(16, 1);
+        s.write(3, 0, 1);
+        s.write(3, 0, -1);
+        assert_eq!(s.read(3, 0), -1);
+        s.write(3, 0, 0);
+        assert_eq!(s.read(3, 0), 0);
+    }
+
+    #[test]
+    fn block_ab_matches_naive_count() {
+        let mut rng = Rng::new(7);
+        let mut s = TernaryStorage::new(64, 4);
+        let w: Vec<i8> = rng.ternary_vec(64 * 4, 0.4);
+        s.write_matrix(&w);
+        for base in (0..64).step_by(16) {
+            let inputs: Vec<i8> = rng.ternary_vec(16, 0.4);
+            let (ip, in_) = pack_inputs16(&inputs);
+            for c in 0..4 {
+                let (a, b) = s.block_ab(base, c, ip, in_);
+                let mut na = 0;
+                let mut nb = 0;
+                for k in 0..16 {
+                    let p = inputs[k] as i32 * w[(base + k) * 4 + c] as i32;
+                    if p == 1 {
+                        na += 1;
+                    } else if p == -1 {
+                        nb += 1;
+                    }
+                }
+                assert_eq!((a, b), (na, nb), "base={base} col={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn column_dot_exact_matches_scalar() {
+        let mut rng = Rng::new(9);
+        let mut s = TernaryStorage::new(32, 2);
+        let w: Vec<i8> = rng.ternary_vec(32 * 2, 0.2);
+        s.write_matrix(&w);
+        let inputs: Vec<i8> = rng.ternary_vec(32, 0.2);
+        for c in 0..2 {
+            let expect: i64 =
+                (0..32).map(|r| inputs[r] as i64 * w[r * 2 + c] as i64).sum();
+            assert_eq!(s.column_dot_exact(c, &inputs), expect);
+        }
+    }
+
+    #[test]
+    fn pack_inputs_masks() {
+        let (ip, in_) = pack_inputs16(&[1, -1, 0, 1]);
+        assert_eq!(ip, 0b1001);
+        assert_eq!(in_, 0b0010);
+    }
+
+    #[test]
+    #[should_panic]
+    fn non_multiple_of_block_rejected() {
+        TernaryStorage::new(40, 4);
+    }
+}

@@ -1,0 +1,160 @@
+//! 3-bit flash ADC model (plus the extra sense amplifier for output 8).
+//!
+//! The paper digitizes each RBL with a 3-bit flash ADC whose references
+//! sit at the midpoints of the (non-linear) RBL voltage levels, and adds
+//! one extra SA so the value 8 is also detectable; outputs 9..16 saturate
+//! to 8 (§III.2, §IV.3). The same quantizer is reused in current mode for
+//! SiTe CiM II (references in units of ΔI instead of volts).
+//!
+//! Monte-Carlo variation: each comparator's reference can be offset by a
+//! Gaussian (σ_ref) to model V_TH variation in the sensing stack — this
+//! drives the error-probability analysis (repro ERR).
+
+use super::bitline::VoltageBitline;
+use crate::device::PeriphParams;
+use crate::util::rng::Rng;
+
+/// Saturating code range of the 3-bit converter + extra SA.
+pub const ADC_MAX: u32 = 8;
+
+/// Voltage-mode flash ADC bound to a calibrated bit-line model.
+#[derive(Clone, Debug)]
+pub struct VoltageAdc {
+    /// References between codes n-1 and n, for n = 1..=8 (descending V).
+    refs: Vec<f64>,
+}
+
+impl VoltageAdc {
+    /// Build from the bit-line model with ideal midpoint references.
+    pub fn ideal(bl: &VoltageBitline) -> VoltageAdc {
+        VoltageAdc { refs: (1..=ADC_MAX as usize).map(|n| bl.reference(n)).collect() }
+    }
+
+    /// Build with Gaussian reference offsets (σ volts) — one MC sample.
+    pub fn with_variation(bl: &VoltageBitline, sigma: f64, rng: &mut Rng) -> VoltageAdc {
+        VoltageAdc {
+            refs: (1..=ADC_MAX as usize)
+                .map(|n| bl.reference(n) + rng.normal_ms(0.0, sigma))
+                .collect(),
+        }
+    }
+
+    /// Quantize an RBL voltage to a code 0..=8 (thermometer search: the
+    /// number of references the voltage has fallen below).
+    pub fn quantize(&self, v_rbl: f64) -> u32 {
+        let mut code = 0u32;
+        for &r in &self.refs {
+            if v_rbl < r {
+                code += 1;
+            }
+        }
+        code
+    }
+}
+
+/// Current-mode quantizer for SiTe CiM II: input is |I_RBL1 − I_RBL2| in
+/// units of (I_LRS − I_HRS); references at half-integers.
+#[derive(Clone, Debug)]
+pub struct CurrentAdc {
+    refs: Vec<f64>,
+}
+
+impl CurrentAdc {
+    pub fn ideal() -> CurrentAdc {
+        CurrentAdc { refs: (1..=ADC_MAX as usize).map(|n| n as f64 - 0.5).collect() }
+    }
+
+    pub fn with_variation(sigma_units: f64, rng: &mut Rng) -> CurrentAdc {
+        CurrentAdc {
+            refs: (1..=ADC_MAX as usize)
+                .map(|n| n as f64 - 0.5 + rng.normal_ms(0.0, sigma_units))
+                .collect(),
+        }
+    }
+
+    /// Quantize a normalized magnitude to a code 0..=8.
+    pub fn quantize(&self, mag_units: f64) -> u32 {
+        let mut code = 0u32;
+        for &r in &self.refs {
+            if mag_units > r {
+                code += 1;
+            }
+        }
+        code
+    }
+}
+
+/// ADC cost accessors (shared 45 nm periphery).
+pub fn adc_energy(p: &PeriphParams) -> f64 {
+    p.e_adc + p.e_sa_extra
+}
+pub fn adc_time(p: &PeriphParams) -> f64 {
+    p.t_adc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ideal_voltage_adc_recovers_count() {
+        let bl = VoltageBitline::new(1.0);
+        let adc = VoltageAdc::ideal(&bl);
+        for n in 0..=8usize {
+            assert_eq!(adc.quantize(bl.v_after(n)), n as u32, "n={n}");
+        }
+    }
+
+    #[test]
+    fn voltage_adc_saturates_at_8() {
+        let bl = VoltageBitline::new(1.0);
+        let adc = VoltageAdc::ideal(&bl);
+        for n in 9..=16usize {
+            assert_eq!(adc.quantize(bl.v_after(n)), 8, "n={n}");
+        }
+    }
+
+    #[test]
+    fn ideal_current_adc_recovers_count() {
+        let adc = CurrentAdc::ideal();
+        for n in 0..=8u32 {
+            assert_eq!(adc.quantize(n as f64), n);
+        }
+        assert_eq!(adc.quantize(12.0), 8);
+    }
+
+    #[test]
+    fn small_variation_rarely_flips() {
+        let bl = VoltageBitline::new(1.0);
+        let mut rng = Rng::new(1);
+        let mut errors = 0;
+        let trials = 2000;
+        for _ in 0..trials {
+            let adc = VoltageAdc::with_variation(&bl, 0.005, &mut rng);
+            for n in 0..=8usize {
+                if adc.quantize(bl.v_after(n)) != n as u32 {
+                    errors += 1;
+                }
+            }
+        }
+        // σ = 5 mV against ≥40 mV margins: ~8σ, errors essentially zero.
+        assert!(errors < trials / 100, "errors={errors}");
+    }
+
+    #[test]
+    fn large_variation_does_flip() {
+        let bl = VoltageBitline::new(1.0);
+        let mut rng = Rng::new(2);
+        let mut errors = 0;
+        for _ in 0..500 {
+            let adc = VoltageAdc::with_variation(&bl, 0.04, &mut rng);
+            for n in 0..=8usize {
+                if adc.quantize(bl.v_after(n)) != n as u32 {
+                    errors += 1;
+                }
+            }
+        }
+        assert!(errors > 0);
+    }
+}

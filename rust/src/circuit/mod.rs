@@ -1,0 +1,13 @@
+//! Circuit layer: bit-line electrical models, sensing circuitry (voltage
+//! and current mode, comparator + analog subtractor), the 3-bit flash ADC
+//! with the extra output-8 sense amplifier, and the sense-margin analysis
+//! engines behind Fig 4(c) and Fig 7(c).
+
+pub mod adc;
+pub mod bitline;
+pub mod sense_margin;
+pub mod sensing;
+
+pub use adc::{CurrentAdc, VoltageAdc, ADC_MAX};
+pub use bitline::VoltageBitline;
+pub use sense_margin::{current_mode_margins, voltage_mode_margins, MarginPoint};

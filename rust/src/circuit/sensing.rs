@@ -1,0 +1,132 @@
+//! Sensing circuitry: voltage sense amps, the current-mode sense path of
+//! SiTe CiM II (comparator + analog current subtractor, Fig 6), and the
+//! loaded current-summation model used for its sense-margin analysis.
+//!
+//! Current-mode loading model (§IV.4): the sensing network presents an
+//! effective resistance R_sense on each RBL; the total RBL current causes
+//! a source-side droop V_drop = I_total·R_sense which reduces every
+//! LRS path's drive, I_eff = I_lrs·(1 − α·I_total·R_sense/VDD). This is
+//! why the worst-case (max-loading) and best-case (min-loading) examples
+//! of Fig 7(a,b) diverge, shrinking the margin at high outputs.
+
+use crate::device::TechParams;
+
+/// Effective capacitance charging current seen as "HRS current" in CiM II
+/// (§IV.1: "a small current that flows from RBL to charge the LRBL cap").
+/// Average over the sense window.
+pub fn i_hrs_effective(p: &TechParams, c_lrbl: f64, t_sense: f64) -> f64 {
+    // Q = C·VDD delivered over the sense window, plus the true off current.
+    c_lrbl * p.vdd / t_sense.max(1e-12) + p.i_hrs
+}
+
+/// Current-sensing load model.
+#[derive(Clone, Debug)]
+pub struct CurrentSense {
+    /// Effective sensing resistance per RBL (Ω).
+    pub r_sense: f64,
+    /// Drive-reduction coefficient (dimensionless, ≈1).
+    pub alpha: f64,
+    pub vdd: f64,
+}
+
+impl CurrentSense {
+    /// Calibrated default: α·I_LRS·R_sense/VDD ≈ 1.6% per active row, which
+    /// lands SM ≈ 0.5 units at O=1, ≈ 0.4 at O=8 and clearly below beyond
+    /// (mirroring Fig 7(c): "SM begins to diminish for O > 8").
+    pub fn default_for(p: &TechParams) -> CurrentSense {
+        let beta = 0.016; // per-row drive loss at I_LRS
+        CurrentSense { r_sense: beta * p.vdd / p.i_lrs, alpha: 1.0, vdd: p.vdd }
+    }
+
+    /// Solve the loaded RBL current for a column where `n_lrs` LRS paths
+    /// and `n_hrs` HRS paths conduct (fixed-point, 2 iterations suffice
+    /// because the droop is small).
+    pub fn loaded_current(&self, p: &TechParams, n_lrs: usize, n_hrs_eff: usize, i_hrs_eff: f64) -> f64 {
+        let ideal = n_lrs as f64 * p.i_lrs + n_hrs_eff as f64 * i_hrs_eff;
+        let mut total = ideal;
+        for _ in 0..3 {
+            let droop = (self.alpha * total * self.r_sense / self.vdd).min(0.9);
+            total = n_lrs as f64 * p.i_lrs * (1.0 - droop) + n_hrs_eff as f64 * i_hrs_eff;
+        }
+        total
+    }
+}
+
+/// The comparator of Fig 6(a): which RBL carries more current → sign.
+pub fn comparator_sign(i_rbl1: f64, i_rbl2: f64) -> i32 {
+    if i_rbl1 >= i_rbl2 {
+        1
+    } else {
+        -1
+    }
+}
+
+/// The analog current subtractor of Fig 6(b): |I1 − I2| normalized to the
+/// unit current (I_LRS − I_HRS); the ADC digitizes this magnitude.
+pub fn subtractor_magnitude_units(i_rbl1: f64, i_rbl2: f64, unit: f64) -> f64 {
+    (i_rbl1 - i_rbl2).abs() / unit.max(1e-18)
+}
+
+/// Voltage sense amplifier: resolves once the develop margin exceeds its
+/// offset; models as fixed resolve time + energy from `TechParams`.
+#[derive(Clone, Copy, Debug)]
+pub struct VoltageSenseAmp {
+    pub t_resolve: f64,
+    pub energy: f64,
+}
+
+impl VoltageSenseAmp {
+    pub fn from_tech(p: &TechParams) -> VoltageSenseAmp {
+        VoltageSenseAmp { t_resolve: p.t_sa_v, energy: p.e_sa_v }
+    }
+
+    /// Binary decision: discharged (stored '1') vs held (stored '0').
+    pub fn sense(&self, v_rbl: f64, vdd: f64, threshold_frac: f64) -> bool {
+        v_rbl < vdd * threshold_frac
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::{Tech, TechParams};
+
+    fn p() -> TechParams {
+        TechParams::new(Tech::Sram8T)
+    }
+
+    #[test]
+    fn hrs_effective_dominated_by_lrbl_charging() {
+        let p = p();
+        let i = i_hrs_effective(&p, 1e-15, 0.45e-9);
+        assert!(i > p.i_hrs * 10.0, "i_hrs_eff = {i}");
+        assert!(i < p.i_lrs / 5.0, "should stay well below LRS: {i}");
+    }
+
+    #[test]
+    fn loading_reduces_current_sublinearly() {
+        let p = p();
+        let cs = CurrentSense::default_for(&p);
+        let one = cs.loaded_current(&p, 1, 0, 0.0);
+        let sixteen = cs.loaded_current(&p, 16, 0, 0.0);
+        assert!(one <= p.i_lrs * 1.0 + 1e-12);
+        assert!(sixteen < 16.0 * one, "no loading effect visible");
+        assert!(sixteen > 12.0 * one, "loading too strong: {sixteen} vs {one}");
+    }
+
+    #[test]
+    fn comparator_and_subtractor() {
+        assert_eq!(comparator_sign(2e-6, 1e-6), 1);
+        assert_eq!(comparator_sign(1e-6, 2e-6), -1);
+        let m = subtractor_magnitude_units(5e-6, 2e-6, 1e-6);
+        assert!((m - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn voltage_sa_thresholds() {
+        let p = p();
+        let sa = VoltageSenseAmp::from_tech(&p);
+        assert!(sa.sense(0.85, 1.0, 0.95));
+        assert!(!sa.sense(0.99, 1.0, 0.95));
+    }
+}

@@ -1,0 +1,177 @@
+//! Command-line interface (hand-rolled; no clap offline).
+//!
+//! Subcommands:
+//!   figures  [--all|--fig4|--fig7|--fig9|--fig11|--fig12|--fig13|--area|--cmp|--err]
+//!   selftest             quick functional cross-check of both array flavors
+//!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
+//!   serve    [--artifacts DIR] [--requests N] [--workers W]
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::array::{mac, SiTeCim1Array, SiTeCim2Array};
+use crate::coordinator::{Server, ServerConfig};
+use crate::device::Tech;
+use crate::repro;
+use crate::runtime::{self, Manifest, ModelKind};
+use crate::util::cli::Args;
+use crate::util::rng::Rng;
+
+pub const USAGE: &str = "sitecim — SiTe CiM reproduction (signed ternary computing-in-memory)
+
+USAGE: sitecim <subcommand> [flags]
+
+  figures [--all | --fig4 --fig7 --fig9 --fig11 --fig12 --fig13 --area --cmp --err]
+          regenerate the paper's tables/figures (paper vs measured)
+  selftest [--seed S]
+          functional cross-check: CiM I/II arrays vs reference semantics
+  infer   [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
+          run the AOT-compiled ternary MLP on the held-out test set
+  serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B]
+          start the serving coordinator and push synthetic traffic
+  help    this message
+";
+
+/// Entry point used by main.rs. Returns the process exit code.
+pub fn run(args: Args) -> Result<i32> {
+    match args.subcommand() {
+        Some("figures") => cmd_figures(&args),
+        Some("selftest") => cmd_selftest(&args),
+        Some("infer") => cmd_infer(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("help") | None => {
+            print!("{USAGE}");
+            Ok(0)
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_figures(args: &Args) -> Result<i32> {
+    let all = args.has("all") || args.flags.is_empty();
+    let mut printed = false;
+    let mut emit = |flag: &str, f: &dyn Fn() -> String| {
+        if all || args.has(flag) {
+            print!("{}", f());
+            printed = true;
+        }
+    };
+    emit("fig4", &repro::fig4);
+    emit("fig7", &repro::fig7);
+    emit("area", &repro::area_table);
+    emit("fig9", &repro::fig9);
+    emit("fig11", &repro::fig11);
+    emit("cmp", &repro::cim1_vs_cim2);
+    emit("fig12", &repro::fig12);
+    emit("fig13", &repro::fig13);
+    emit("err", &repro::error_prob);
+    if !printed {
+        eprintln!("no figure selected\n{USAGE}");
+        return Ok(2);
+    }
+    Ok(0)
+}
+
+fn cmd_selftest(args: &Args) -> Result<i32> {
+    let seed = args.get_u64("seed", 42);
+    let mut rng = Rng::new(seed);
+    let mut failures = 0;
+    for tech in Tech::ALL {
+        let mut a1 = SiTeCim1Array::with_dims(tech, 256, 64);
+        let mut a2 = SiTeCim2Array::with_dims(tech, 256, 64);
+        let w = rng.ternary_vec(256 * 64, 0.5);
+        a1.write_matrix(&w);
+        a2.write_matrix(&w);
+        let inputs = rng.ternary_vec(256, 0.5);
+        let ok1 = a1.dot(&inputs) == mac::dot_ref(a1.storage(), &inputs, mac::Flavor::Cim1);
+        let ok2 = a2.dot(&inputs) == mac::dot_ref(a2.storage(), &inputs, mac::Flavor::Cim2);
+        println!(
+            "{:<10} CiM I functional: {}  CiM II functional: {}",
+            tech.name(),
+            if ok1 { "OK" } else { "FAIL" },
+            if ok2 { "OK" } else { "FAIL" }
+        );
+        failures += usize::from(!ok1) + usize::from(!ok2);
+    }
+    Ok(if failures == 0 { 0 } else { 1 })
+}
+
+fn cmd_infer(args: &Args) -> Result<i32> {
+    let dir = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(runtime::default_dir);
+    let kind = match args.get_or("model", "cim1").as_str() {
+        "cim2" => ModelKind::Cim2,
+        "exact" => ModelKind::Exact,
+        _ => ModelKind::Cim1,
+    };
+    let manifest = Manifest::load(&dir)?;
+    let client = runtime::cpu_client()?;
+    let exe = runtime::MlpExecutor::load(&client, &manifest, kind)?;
+    let (x, y) = manifest.load_test_set()?;
+    let n = args.get_usize("n", manifest.test_n).min(manifest.test_n);
+
+    let t0 = Instant::now();
+    let mut correct = 0usize;
+    for base in (0..n).step_by(exe.batch) {
+        let nb = exe.batch.min(n - base);
+        let preds = exe.classify(&x[base * manifest.in_dim..(base + nb) * manifest.in_dim], nb)?;
+        correct += preds
+            .iter()
+            .zip(&y[base..base + nb])
+            .filter(|(p, &l)| **p == l as usize)
+            .count();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "{kind:?}: {}/{} correct ({:.2}%), {:.1} inferences/s (PJRT CPU)",
+        correct,
+        n,
+        100.0 * correct as f64 / n as f64,
+        n as f64 / dt
+    );
+    Ok(0)
+}
+
+fn cmd_serve(args: &Args) -> Result<i32> {
+    let dir = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(runtime::default_dir);
+    let n_requests = args.get_usize("requests", 2048);
+    let mut cfg = ServerConfig::new(dir.clone());
+    cfg.n_workers = args.get_usize("workers", 2);
+    cfg.policy.max_batch = args.get_usize("batch", 32);
+    let manifest = Manifest::load(&dir)?;
+    let (x, y) = manifest.load_test_set()?;
+
+    let server = Server::start(cfg)?;
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let s = i % manifest.test_n;
+        let input = x[s * manifest.in_dim..(s + 1) * manifest.in_dim].to_vec();
+        pending.push((s, server.infer_async(input).map_err(anyhow::Error::msg)?));
+    }
+    let mut correct = 0usize;
+    for (s, rx) in pending {
+        let reply = rx.recv()?.map_err(anyhow::Error::msg)?;
+        if reply.pred == y[s] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n_requests} requests in {dt:.2}s ({:.0} req/s), accuracy {:.2}%",
+        n_requests as f64 / dt,
+        100.0 * correct as f64 / n_requests as f64
+    );
+    println!("{}", server.metrics.report());
+    server.shutdown();
+    Ok(0)
+}

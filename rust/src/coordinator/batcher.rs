@@ -1,0 +1,89 @@
+//! Dynamic batcher: greedily coalesces queued requests into PJRT-sized
+//! batches under a latency deadline — the standard serving trade-off
+//! (bigger batches amortize dispatch; the deadline bounds queueing delay).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Batching policy.
+#[derive(Clone, Debug)]
+pub struct BatchPolicy {
+    /// Hard cap — the compiled executable's batch dimension.
+    pub max_batch: usize,
+    /// Max time the first request in a batch may wait for company.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Collect the next batch from `rx`. Blocks for the first item; then
+/// drains up to `max_batch` items or until `max_wait` expires. Returns
+/// `None` when the channel is closed and empty (shutdown).
+pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    let first = rx.recv().ok()?;
+    let mut batch = vec![first];
+    let deadline = Instant::now() + policy.max_wait;
+    while batch.len() < policy.max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => batch.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Some(batch)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn drains_up_to_max_batch() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) };
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![0, 1, 2, 3]);
+        let b2 = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b2.len(), 4);
+    }
+
+    #[test]
+    fn deadline_caps_waiting() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let t0 = Instant::now();
+        let b = next_batch(&rx, &policy).unwrap();
+        assert_eq!(b, vec![1]);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_empty_channel_returns_none() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn shutdown_flushes_pending() {
+        let (tx, rx) = channel();
+        tx.send(7).unwrap();
+        drop(tx);
+        let b = next_batch(&rx, &BatchPolicy::default()).unwrap();
+        assert_eq!(b, vec![7]);
+        assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+}

@@ -1,0 +1,118 @@
+//! Service metrics: request/batch counters, wall-clock latency
+//! distribution, and the simulated-hardware accounting (what the SiTe
+//! CiM accelerator would have spent on the same work).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{summarize, Summary};
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub errors: AtomicU64,
+    /// Wall-clock end-to-end request latencies (seconds), capped window.
+    latencies: Mutex<Vec<f64>>,
+    /// Simulated accelerator energy (femtojoule-granularity, stored as
+    /// integer attojoules to stay atomic) and busy time (picoseconds).
+    sim_energy_aj: AtomicU64,
+    sim_time_ps: AtomicU64,
+}
+
+const LATENCY_WINDOW: usize = 100_000;
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_request(&self, latency_s: f64) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        let mut l = self.latencies.lock().unwrap();
+        if l.len() >= LATENCY_WINDOW {
+            l.clear(); // cheap rolling window
+        }
+        l.push(latency_s);
+    }
+
+    pub fn record_batch(&self, n: usize, sim_energy_j: f64, sim_time_s: f64) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+        self.sim_energy_aj
+            .fetch_add((sim_energy_j * 1e18) as u64, Ordering::Relaxed);
+        self.sim_time_ps.fetch_add((sim_time_s * 1e12) as u64, Ordering::Relaxed);
+    }
+
+    pub fn record_error(&self) {
+        self.errors.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        summarize(&self.latencies.lock().unwrap())
+    }
+
+    pub fn avg_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn sim_energy_j(&self) -> f64 {
+        self.sim_energy_aj.load(Ordering::Relaxed) as f64 * 1e-18
+    }
+
+    pub fn sim_time_s(&self) -> f64 {
+        self.sim_time_ps.load(Ordering::Relaxed) as f64 * 1e-12
+    }
+
+    pub fn report(&self) -> String {
+        let s = self.latency_summary();
+        format!(
+            "requests={} batches={} avg_batch={:.1} errors={} | wall p50={} p99={} | simulated: {} busy, {} ({}/inf)",
+            self.requests.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.avg_batch_size(),
+            self.errors.load(Ordering::Relaxed),
+            crate::util::units::fmt_time(s.p50),
+            crate::util::units::fmt_time(s.p99),
+            crate::util::units::fmt_time(self.sim_time_s()),
+            crate::util::units::fmt_energy(self.sim_energy_j()),
+            crate::util::units::fmt_energy(
+                self.sim_energy_j() / self.requests.load(Ordering::Relaxed).max(1) as f64
+            ),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.record_request(1e-3);
+        m.record_request(2e-3);
+        m.record_batch(2, 1e-9, 5e-6);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 2);
+        assert_eq!(m.avg_batch_size(), 2.0);
+        assert!((m.sim_energy_j() - 1e-9).abs() < 1e-12);
+        assert!((m.sim_time_s() - 5e-6).abs() < 1e-9);
+        let s = m.latency_summary();
+        assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    fn report_renders() {
+        let m = Metrics::new();
+        m.record_request(1e-3);
+        m.record_batch(1, 2e-9, 1e-6);
+        let r = m.report();
+        assert!(r.contains("requests=1"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Serving coordinator: a thread-based inference service over the PJRT
+//! runtime — bounded request queue, dynamic batcher, N worker threads
+//! (each owning its own PJRT client), request/latency metrics and
+//! simulated-accelerator accounting.
+
+pub mod batcher;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::BatchPolicy;
+pub use metrics::Metrics;
+pub use server::{InferReply, Server, ServerConfig};

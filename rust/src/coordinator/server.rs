@@ -1,0 +1,220 @@
+//! The inference service: a thread-based request loop over the PJRT
+//! executor, with dynamic batching, per-request latency tracking, and
+//! simulated-accelerator accounting (what the SiTe CiM hardware would
+//! spend on the same traffic).
+//!
+//! Topology: N worker threads share one request channel (work-stealing by
+//! contention); each worker owns its own PJRT client + compiled
+//! executable (PJRT handles are created in-thread, so no Send bounds are
+//! needed), pulls batches via the `batcher`, executes, and answers each
+//! request on its private response channel.
+
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::batcher::{next_batch, BatchPolicy};
+use super::metrics::Metrics;
+use crate::arch::{AccelConfig, Accelerator};
+use crate::array::area::Design;
+use crate::device::Tech;
+use crate::dnn::{Layer, Network};
+use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind};
+
+/// One inference request.
+pub struct Request {
+    pub input: Vec<i8>,
+    pub enqueued: Instant,
+    pub resp: SyncSender<Result<InferReply, String>>,
+}
+
+/// Reply: predicted class + raw logits.
+#[derive(Clone, Debug)]
+pub struct InferReply {
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    pub wall_latency_s: f64,
+}
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub artifacts: PathBuf,
+    pub kind: ModelKind,
+    pub n_workers: usize,
+    pub policy: BatchPolicy,
+    /// Which simulated hardware the accounting reflects.
+    pub sim_tech: Tech,
+    pub sim_design: Design,
+}
+
+impl ServerConfig {
+    pub fn new(artifacts: PathBuf) -> ServerConfig {
+        ServerConfig {
+            artifacts,
+            kind: ModelKind::Cim1,
+            n_workers: 2,
+            policy: BatchPolicy::default(),
+            sim_tech: Tech::Femfet3T,
+            sim_design: Design::Cim1,
+        }
+    }
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: Option<Sender<Request>>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<JoinHandle<()>>,
+    in_dim: usize,
+}
+
+impl Server {
+    /// Start worker threads. Fails fast if the artifacts are unloadable.
+    pub fn start(cfg: ServerConfig) -> Result<Server> {
+        let manifest = Manifest::load(&cfg.artifacts).context("loading artifacts")?;
+        let in_dim = *manifest.dims.first().unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = channel::<Request>();
+        let rx = Arc::new(Mutex::new(rx));
+
+        // Per-inference simulated cost on the chosen hardware, computed
+        // once from the network the artifacts describe.
+        let accel = Accelerator::new(AccelConfig::sitecim(cfg.sim_tech, cfg.sim_design));
+        let net = manifest_network(&manifest);
+        let per_inf = accel.run(&net);
+        let (sim_e, sim_t) = (per_inf.energy, per_inf.latency);
+
+        let mut workers = Vec::new();
+        for wid in 0..cfg.n_workers.max(1) {
+            let rx = Arc::clone(&rx);
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            let dir = cfg.artifacts.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("sitecim-worker-{wid}"))
+                    .spawn(move || worker_loop(wid, dir, cfg, rx, metrics, sim_e, sim_t))
+                    .context("spawning worker")?,
+            );
+        }
+        Ok(Server { tx: Some(tx), metrics, workers, in_dim })
+    }
+
+    /// Submit a request and wait for the reply.
+    pub fn infer(&self, input: Vec<i8>) -> Result<InferReply, String> {
+        let rx = self.infer_async(input)?;
+        rx.recv().map_err(|e| format!("server dropped request: {e}"))?
+    }
+
+    /// Submit a request; returns the reply channel immediately.
+    pub fn infer_async(
+        &self,
+        input: Vec<i8>,
+    ) -> Result<Receiver<Result<InferReply, String>>, String> {
+        if input.len() != self.in_dim {
+            return Err(format!("input len {} != {}", input.len(), self.in_dim));
+        }
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        let req = Request { input, enqueued: Instant::now(), resp: rtx };
+        self.tx
+            .as_ref()
+            .expect("server running")
+            .send(req)
+            .map_err(|_| "server shut down".to_string())?;
+        Ok(rrx)
+    }
+
+    /// Graceful shutdown: close the queue, join workers.
+    pub fn shutdown(mut self) {
+        drop(self.tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(
+    _wid: usize,
+    dir: PathBuf,
+    cfg: ServerConfig,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    sim_e_per_inf: f64,
+    sim_t_per_inf: f64,
+) {
+    // PJRT handles are created in-thread.
+    let manifest = match Manifest::load(&dir) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("worker: manifest load failed: {e:#}");
+            return;
+        }
+    };
+    let client = match cpu_client() {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("worker: PJRT client failed: {e:#}");
+            return;
+        }
+    };
+    let exe = match MlpExecutor::load(&client, &manifest, cfg.kind) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("worker: executable load failed: {e:#}");
+            return;
+        }
+    };
+
+    loop {
+        // Hold the queue lock only while assembling the batch.
+        let batch = {
+            let guard = rx.lock().unwrap();
+            let policy = BatchPolicy { max_batch: exe.batch.min(cfg.policy.max_batch), ..cfg.policy.clone() };
+            next_batch(&guard, &policy)
+        };
+        let Some(batch) = batch else { return }; // channel closed: shutdown
+
+        let n = batch.len();
+        let mut flat = Vec::with_capacity(n * exe.in_dim);
+        for r in &batch {
+            flat.extend_from_slice(&r.input);
+        }
+        match exe.run_batch(&flat, n) {
+            Ok(logits) => {
+                metrics.record_batch(n, sim_e_per_inf * n as f64, sim_t_per_inf * n as f64);
+                for (i, req) in batch.into_iter().enumerate() {
+                    let row = &logits[i * exe.out_dim..(i + 1) * exe.out_dim];
+                    let pred = crate::runtime::executor::argmax_rows(row, exe.out_dim)[0];
+                    let wall = req.enqueued.elapsed().as_secs_f64();
+                    metrics.record_request(wall);
+                    let _ = req.resp.send(Ok(InferReply {
+                        pred,
+                        logits: row.to_vec(),
+                        wall_latency_s: wall,
+                    }));
+                }
+            }
+            Err(e) => {
+                metrics.record_error();
+                let msg = format!("inference failed: {e:#}");
+                for req in batch {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
+        }
+    }
+}
+
+/// The network the artifacts' MLP corresponds to (for simulated costs).
+pub fn manifest_network(m: &Manifest) -> Network {
+    let mut layers = Vec::new();
+    for i in 0..m.dims.len() - 1 {
+        layers.push(Layer::linear(&format!("fc{i}"), 1, m.dims[i], m.dims[i + 1]));
+    }
+    Network { name: "artifact-mlp".into(), layers }
+}

@@ -1,0 +1,187 @@
+//! Behavioral bit-cell models for the three technologies.
+//!
+//! A `BitCell` stores one binary value and exposes the read-path current
+//! the cell injects onto its read bit-line when its read word-line is
+//! asserted. Write semantics differ per technology:
+//! - 8T-SRAM: direct BL/BLB drive, destructive of the old value, fast.
+//! - 3T-eDRAM: charge C_G through the PMOS WAX; volatile — a retention
+//!   clock ages the stored level and `needs_refresh` turns true.
+//! - 3T-FEMFET: global reset (−P) then selective set (+P) via the
+//!   `femfet::Femfet` polarization model; non-volatile.
+
+use super::femfet::{Femfet, V_RESET, V_SET};
+use super::tech::{Tech, TechParams};
+
+/// eDRAM retention time at 45 nm-class gain cells (conservative ~40 µs;
+/// [23] reports 10–100 µs class retention with boosting).
+pub const EDRAM_RETENTION_S: f64 = 40e-6;
+
+#[derive(Clone, Debug)]
+enum Storage {
+    Sram { q: bool },
+    Edram { level: f64, age_s: f64 },
+    Femfet { dev: Femfet },
+}
+
+/// One binary bit-cell.
+#[derive(Clone, Debug)]
+pub struct BitCell {
+    storage: Storage,
+    tech: Tech,
+}
+
+impl BitCell {
+    pub fn new(tech: Tech) -> BitCell {
+        let storage = match tech {
+            Tech::Sram8T => Storage::Sram { q: false },
+            Tech::Edram3T => Storage::Edram { level: 0.0, age_s: 0.0 },
+            Tech::Femfet3T => Storage::Femfet { dev: Femfet::new() },
+        };
+        BitCell { storage, tech }
+    }
+
+    pub fn tech(&self) -> Tech {
+        self.tech
+    }
+
+    /// Program the cell.
+    pub fn write(&mut self, bit: bool) {
+        match &mut self.storage {
+            Storage::Sram { q } => *q = bit,
+            Storage::Edram { level, age_s } => {
+                *level = if bit { 1.0 } else { 0.0 };
+                *age_s = 0.0;
+            }
+            Storage::Femfet { dev } => {
+                // Paper write protocol: global reset to −P, then selective
+                // set. At single-cell granularity this is reset-then-set.
+                dev.pulse(V_RESET, 5e-9);
+                if bit {
+                    dev.pulse(V_SET, 5e-9);
+                }
+                dev.release();
+            }
+        }
+    }
+
+    /// The stored bit as currently sensed.
+    pub fn bit(&self) -> bool {
+        match &self.storage {
+            Storage::Sram { q } => *q,
+            Storage::Edram { level, .. } => *level > 0.5,
+            Storage::Femfet { dev } => dev.bit(),
+        }
+    }
+
+    /// Advance time (retention ageing; only eDRAM cares).
+    pub fn tick(&mut self, dt_s: f64) {
+        if let Storage::Edram { level, age_s } = &mut self.storage {
+            *age_s += dt_s;
+            // Exponential droop of the stored '1' level toward 0. Time
+            // constant 3× the refresh deadline: at the deadline the level
+            // has fallen to ~0.72 — still safely sensed, which is the
+            // point of refreshing *before* data is lost.
+            if *level > 0.0 {
+                *level = (-*age_s / (EDRAM_RETENTION_S * 3.0)).exp();
+            }
+        }
+    }
+
+    /// True when a refresh is required to guarantee correct sensing.
+    pub fn needs_refresh(&self) -> bool {
+        match &self.storage {
+            Storage::Edram { age_s, .. } => *age_s >= EDRAM_RETENTION_S,
+            _ => false,
+        }
+    }
+
+    /// Refresh (rewrite the currently-sensed value).
+    pub fn refresh(&mut self) {
+        let b = self.bit();
+        self.write(b);
+    }
+
+    /// Read-path current injected on the RBL when RWL is asserted at
+    /// `vdd`, given the technology parameters (A).
+    pub fn read_current(&self, p: &TechParams) -> f64 {
+        let on = match &self.storage {
+            Storage::Sram { q } => *q,
+            Storage::Edram { level, .. } => *level > 0.5,
+            Storage::Femfet { dev } => dev.bit(),
+        };
+        if on {
+            // eDRAM read strength degrades with droop.
+            if let Storage::Edram { level, .. } = &self.storage {
+                return p.i_lrs * level.clamp(0.0, 1.0);
+            }
+            p.i_lrs
+        } else {
+            p.i_hrs
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn write_read_all_techs() {
+        for tech in Tech::ALL {
+            let mut c = BitCell::new(tech);
+            assert!(!c.bit(), "{:?} should initialize to 0", tech);
+            c.write(true);
+            assert!(c.bit(), "{:?} failed to store 1", tech);
+            c.write(false);
+            assert!(!c.bit(), "{:?} failed to store 0", tech);
+        }
+    }
+
+    #[test]
+    fn read_current_ratio() {
+        for tech in Tech::ALL {
+            let p = TechParams::new(tech);
+            let mut c = BitCell::new(tech);
+            c.write(true);
+            let i1 = c.read_current(&p);
+            c.write(false);
+            let i0 = c.read_current(&p);
+            assert!(i1 / i0.max(1e-18) > 100.0, "{:?}: {i1}/{i0}", tech);
+        }
+    }
+
+    #[test]
+    fn edram_needs_refresh_after_retention() {
+        let mut c = BitCell::new(Tech::Edram3T);
+        c.write(true);
+        assert!(!c.needs_refresh());
+        c.tick(EDRAM_RETENTION_S * 1.1);
+        assert!(c.needs_refresh());
+        c.refresh();
+        assert!(!c.needs_refresh());
+        assert!(c.bit());
+    }
+
+    #[test]
+    fn edram_droop_weakens_read_current() {
+        let p = TechParams::new(Tech::Edram3T);
+        let mut c = BitCell::new(Tech::Edram3T);
+        c.write(true);
+        let fresh = c.read_current(&p);
+        c.tick(EDRAM_RETENTION_S);
+        let aged = c.read_current(&p);
+        assert!(aged < fresh);
+        assert!(aged > 0.3 * fresh, "droop too aggressive before refresh deadline");
+    }
+
+    #[test]
+    fn sram_and_femfet_do_not_age() {
+        for tech in [Tech::Sram8T, Tech::Femfet3T] {
+            let mut c = BitCell::new(tech);
+            c.write(true);
+            c.tick(1.0);
+            assert!(!c.needs_refresh());
+            assert!(c.bit());
+        }
+    }
+}

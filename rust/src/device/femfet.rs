@@ -1,0 +1,190 @@
+//! Ferroelectric-metal-FET (FEMFET) device model.
+//!
+//! Reproduces the paper's modelling setup (§II.D): a Preisach-based
+//! Miller-equation ferroelectric coupled to the underlying 45 nm FET.
+//! Constants are the paper's calibration to the IEDM'17 HZO data:
+//! P_R = 27 µC/cm², P_S = 30 µC/cm², E_C = 2.3 MV/cm, switching time
+//! constant τ = 200 ps, T_FE = 15 nm. Write uses −5 V (global reset to −P)
+//! and +4.8 V (selective set to +P).
+//!
+//! The FE polarization shifts the effective threshold of the underlying
+//! metal-gate FET: +P (set, '1') → low-V_T → low-resistance read path
+//! (LRS); −P → high-V_T → HRS. We model the read-path distinguishability
+//! as an LRS/HRS current ratio derived from the V_T shift.
+
+use super::ptm::Fet;
+
+/// Paper constants (SI units).
+pub const P_R: f64 = 27.0e-6 * 1e4; // 27 µC/cm² -> C/m²
+pub const P_S: f64 = 30.0e-6 * 1e4; // 30 µC/cm² -> C/m²
+pub const E_C: f64 = 2.3e8; // 2.3 MV/cm -> V/m
+pub const TAU_SWITCH: f64 = 200e-12; // 200 ps
+pub const T_FE: f64 = 15e-9; // 15 nm
+pub const V_RESET: f64 = -5.0;
+pub const V_SET: f64 = 4.8;
+
+/// Miller saturation-curve slope parameter δ. Calibrated so the paper's
+/// set condition (+4.8 V across 15 nm) drives ≥97% of P_S — the paper's
+/// write protocol treats 4.8 V as a robust set, and remanence then relaxes
+/// to P_R (27 µC/cm²) at zero field. With this δ the descending branch at
+/// E = 0 sits essentially at P_S, so `release()` clamps to ±P_R.
+fn miller_delta() -> f64 {
+    let e_set = V_SET / T_FE;
+    (e_set - E_C) / (2.0 * 0.97f64.atanh())
+}
+
+/// Dynamic state of one FEMFET's ferroelectric.
+#[derive(Clone, Debug)]
+pub struct Femfet {
+    /// Current polarization (C/m²), negative = reset/HRS, positive = LRS.
+    pub p: f64,
+    /// Underlying transistor (metal-gate FET under the FE).
+    pub fet: Fet,
+    /// FE film area equals the FET gate area (paper: same cross-section,
+    /// allowing minimum-size underlying FET).
+    pub area: f64,
+}
+
+impl Femfet {
+    pub fn new() -> Femfet {
+        // Underlying metal-gate FET centred at V_T = 0.5 V so the FE's
+        // ±0.5 V shift puts LRS at V_T ≈ 0 and HRS fully sub-threshold —
+        // the "significantly larger distinguishability" the paper credits
+        // FEMFETs with (§II.C).
+        let mut fet = Fet::nfet_min();
+        fet.vth = 0.50;
+        let area = fet.width * fet.length;
+        Femfet { p: -P_R, fet, area }
+    }
+
+    /// Target (saturation-branch) polarization at applied field `e` (V/m).
+    pub fn p_target(e: f64) -> f64 {
+        let d = miller_delta();
+        if e >= 0.0 {
+            P_S * ((e - E_C) / (2.0 * d)).tanh()
+        } else {
+            P_S * ((e + E_C) / (2.0 * d)).tanh()
+        }
+    }
+
+    /// Apply a voltage pulse of the given duration across the FE
+    /// (first-order Miller dynamics: dP/dt = (P_tgt − P)/τ).
+    pub fn pulse(&mut self, v: f64, duration: f64) {
+        let e = v / T_FE;
+        let tgt = Self::p_target(e);
+        let frac = 1.0 - (-duration / TAU_SWITCH).exp();
+        self.p += (tgt - self.p) * frac;
+    }
+
+    /// Relax the applied field (remanence): polarization decays toward the
+    /// remanent value of its sign. We approximate retention as ideal over
+    /// inference timescales (non-volatile).
+    pub fn release(&mut self) {
+        self.p = self.p.clamp(-P_R, P_R);
+    }
+
+    /// Stored bit: +P = '1' (LRS), −P = '0' (HRS). Mid-range polarization
+    /// (partial switching) resolves by sign.
+    pub fn bit(&self) -> bool {
+        self.p > 0.0
+    }
+
+    /// Threshold shift of the underlying FET caused by polarization
+    /// (ΔV_T = P · T_FE / ε_FE, linearized; calibrated to give ~0.8 V
+    /// separation between states — typical of HZO FEMFET demonstrations).
+    pub fn vth_shift(&self) -> f64 {
+        // Normalize: full ±P_R swings V_T by ∓0.5 V around the base value.
+        -0.5 * (self.p / P_R)
+    }
+
+    /// Effective read-path transistor for the current state.
+    pub fn effective_fet(&self) -> Fet {
+        let mut f = self.fet.clone();
+        f.vth = (f.vth + self.vth_shift()).max(0.05);
+        f
+    }
+
+    /// Read current at the given RWL gate drive (A), LRS vs HRS.
+    pub fn read_current(&self, vdd: f64) -> f64 {
+        self.effective_fet().i_d(vdd, vdd / 2.0)
+    }
+
+    /// Time to switch polarization from fully-reset to ≥90% of +P_R at
+    /// the set voltage (used for write-latency modelling).
+    pub fn set_time() -> f64 {
+        // 1 - exp(-t/τ) on the gap to target; target at V_SET is ≈ P_S.
+        let mut f = Femfet::new();
+        let step = 50e-12;
+        let mut t = 0.0;
+        while f.p < 0.9 * P_R && t < 100e-9 {
+            f.pulse(V_SET, step);
+            t += step;
+        }
+        t
+    }
+}
+
+impl Default for Femfet {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remanence_matches_calibration() {
+        // After full positive saturation and release, P ≈ P_R.
+        let mut f = Femfet::new();
+        f.pulse(V_SET, 10e-9);
+        f.release();
+        assert!((f.p - P_R).abs() / P_R < 0.05, "p = {}", f.p);
+    }
+
+    #[test]
+    fn reset_then_set_flips_bit() {
+        let mut f = Femfet::new();
+        f.pulse(V_RESET, 5e-9);
+        assert!(!f.bit());
+        f.pulse(V_SET, 5e-9);
+        assert!(f.bit());
+    }
+
+    #[test]
+    fn subcoercive_pulse_does_not_switch() {
+        let mut f = Femfet::new(); // starts at -P_R
+        // 1 V across 15 nm = 0.67 MV/cm << E_C = 2.3 MV/cm.
+        f.pulse(1.0, 1e-9);
+        f.release();
+        assert!(!f.bit(), "read disturb switched the cell: p={}", f.p);
+    }
+
+    #[test]
+    fn lrs_hrs_ratio_large() {
+        let mut lrs = Femfet::new();
+        lrs.pulse(V_SET, 5e-9);
+        lrs.release();
+        let mut hrs = Femfet::new();
+        hrs.pulse(V_RESET, 5e-9);
+        hrs.release();
+        let ratio = lrs.read_current(1.0) / hrs.read_current(1.0).max(1e-18);
+        assert!(ratio > 50.0, "LRS/HRS = {ratio}");
+    }
+
+    #[test]
+    fn set_time_is_subnanosecond_scale() {
+        let t = Femfet::set_time();
+        // τ = 200 ps → ~a few hundred ps to 90%.
+        assert!(t > 50e-12 && t < 5e-9, "t_set = {t}");
+    }
+
+    #[test]
+    fn miller_curve_saturates() {
+        let p_hi = Femfet::p_target(5.0 / T_FE);
+        assert!(p_hi > 0.95 * P_S);
+        let p_lo = Femfet::p_target(-5.0 / T_FE);
+        assert!(p_lo < -0.95 * P_S);
+    }
+}

@@ -1,0 +1,13 @@
+//! Device layer: analytic transistor and ferroelectric models plus the
+//! per-technology parameter presets that calibrate the whole simulator.
+//!
+//! This replaces the paper's SPICE + 45 nm PTM + Preisach/Miller modelling
+//! flow (DESIGN.md §1, substitution table).
+
+pub mod bitcell;
+pub mod femfet;
+pub mod ptm;
+pub mod tech;
+
+pub use bitcell::BitCell;
+pub use tech::{PeriphParams, Tech, TechParams};

@@ -1,0 +1,200 @@
+//! Analytic 45 nm-class FET model (PTM-flavoured).
+//!
+//! The paper simulates cells in SPICE with 45 nm Predictive Technology
+//! Models. We replace SPICE with a first-order alpha-power-law model with
+//! velocity saturation — sufficient to capture what the array analysis
+//! depends on: on/off current ratio, read-path stacking, gate/junction
+//! capacitance, and RC discharge trends. Constants are 45 nm-class values
+//! (I_on ≈ 1 mA/µm, I_off ≈ nA/µm, C_gate ≈ 1 fF/µm).
+
+/// Transistor polarity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Polarity {
+    N,
+    P,
+}
+
+/// Alpha-power-law FET.
+#[derive(Clone, Debug)]
+pub struct Fet {
+    pub polarity: Polarity,
+    /// Channel width in metres.
+    pub width: f64,
+    /// Channel length in metres (the technology's drawn gate length).
+    pub length: f64,
+    /// Threshold voltage magnitude (V).
+    pub vth: f64,
+    /// Velocity-saturation exponent (α ≈ 1.3 at 45 nm).
+    pub alpha: f64,
+    /// Drive coefficient: saturation current per metre of width at
+    /// overdrive of 1 V (A/m).
+    pub k_sat: f64,
+    /// Off-state leakage per metre of width at Vgs = 0 (A/m).
+    pub i_off_per_m: f64,
+    /// Gate capacitance per metre of width (F/m).
+    pub c_gate_per_m: f64,
+    /// Source/drain junction capacitance per metre of width (F/m).
+    pub c_junction_per_m: f64,
+}
+
+/// 45 nm technology constants shared by both polarities.
+pub const L_45NM: f64 = 45e-9;
+/// Minimum drawn width used for high-density cells (2F).
+pub const W_MIN_45NM: f64 = 90e-9;
+
+impl Fet {
+    /// Minimum-size NFET at the 45 nm node.
+    pub fn nfet_min() -> Fet {
+        Fet {
+            polarity: Polarity::N,
+            width: W_MIN_45NM,
+            length: L_45NM,
+            vth: 0.40,
+            alpha: 1.3,
+            // Calibrated to I_on ≈ 1.1 mA/µm at Vgs=Vds=1.0 V:
+            // I_on = k_sat * W * (1.0 - 0.40)^1.3  ->  k_sat ≈ 2.15e3 A/m.
+            k_sat: 2.15e3,
+            i_off_per_m: 1.0e-4, // ~10 nA/µm (LSTP-flavoured; memory cells)
+            c_gate_per_m: 1.0e-9, // ≈1 fF/µm
+            c_junction_per_m: 0.9e-9, // ≈0.9 fF/µm (diffusion contact)
+        }
+    }
+
+    /// Minimum-size PFET (≈40% weaker drive).
+    pub fn pfet_min() -> Fet {
+        Fet {
+            polarity: Polarity::P,
+            vth: 0.42,
+            k_sat: 1.3e3,
+            ..Fet::nfet_min()
+        }
+    }
+
+    /// Same FET scaled to `w_mult` × minimum width.
+    pub fn scaled(&self, w_mult: f64) -> Fet {
+        Fet { width: self.width * w_mult, ..self.clone() }
+    }
+
+    /// Gate overdrive for the given |Vgs|.
+    fn overdrive(&self, vgs: f64) -> f64 {
+        (vgs - self.vth).max(0.0)
+    }
+
+    /// Saturation current at |Vgs| (A).
+    pub fn i_dsat(&self, vgs: f64) -> f64 {
+        let vov = self.overdrive(vgs);
+        if vov <= 0.0 {
+            return self.i_leak();
+        }
+        self.k_sat * self.width * vov.powf(self.alpha)
+    }
+
+    /// Drain current with a simple linear/saturation split:
+    /// Vdsat = Vov/2 (alpha-power approximation).
+    pub fn i_d(&self, vgs: f64, vds: f64) -> f64 {
+        let vov = self.overdrive(vgs);
+        if vov <= 0.0 {
+            return self.i_leak();
+        }
+        let vdsat = vov / 2.0;
+        let isat = self.i_dsat(vgs);
+        if vds >= vdsat {
+            isat
+        } else {
+            // Smooth triode: I = Isat * (2 - vds/vdsat) * (vds/vdsat)
+            let x = (vds / vdsat).clamp(0.0, 1.0);
+            isat * x * (2.0 - x)
+        }
+    }
+
+    /// Subthreshold leakage (A) at Vgs = 0.
+    pub fn i_leak(&self) -> f64 {
+        self.i_off_per_m * self.width
+    }
+
+    /// Effective on-resistance when used as a pass/pull-down device at
+    /// full gate drive `vdd`, evaluated at Vds = vdd/2 (mid-swing).
+    pub fn r_on(&self, vdd: f64) -> f64 {
+        let i = self.i_d(vdd, vdd / 2.0).max(1e-15);
+        (vdd / 2.0) / i
+    }
+
+    /// Total gate capacitance (F).
+    pub fn c_gate(&self) -> f64 {
+        self.c_gate_per_m * self.width
+    }
+
+    /// Single-side junction capacitance (F).
+    pub fn c_junction(&self) -> f64 {
+        self.c_junction_per_m * self.width
+    }
+}
+
+/// Series stack of two identical-drive devices — the classic read-port
+/// structure (storage FET + access FET). Effective drive is roughly half.
+pub fn stacked_current(top: &Fet, bottom: &Fet, vdd: f64) -> f64 {
+    // Solve crudely: both in saturation is impossible in a stack at low
+    // Vds; use series resistance approximation.
+    let r = top.r_on(vdd) + bottom.r_on(vdd);
+    (vdd / 2.0) / r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn on_current_is_45nm_class() {
+        let n = Fet::nfet_min();
+        let ion = n.i_dsat(1.0);
+        let per_um = ion / (n.width * 1e6);
+        // ~0.5–1.5 mA/µm is the 45nm HP ballpark.
+        assert!(per_um > 0.5e-3 && per_um < 2.0e-3, "I_on/µm = {per_um}");
+    }
+
+    #[test]
+    fn off_current_much_smaller() {
+        let n = Fet::nfet_min();
+        assert!(n.i_leak() < n.i_dsat(1.0) / 1e3);
+    }
+
+    #[test]
+    fn triode_monotonic_in_vds() {
+        let n = Fet::nfet_min();
+        let mut last = 0.0;
+        for i in 1..=20 {
+            let vds = i as f64 * 0.05;
+            let id = n.i_d(1.0, vds);
+            assert!(id >= last - 1e-18, "non-monotonic at vds={vds}");
+            last = id;
+        }
+    }
+
+    #[test]
+    fn zero_overdrive_leaks_only() {
+        let n = Fet::nfet_min();
+        assert_eq!(n.i_d(0.2, 0.5), n.i_leak());
+    }
+
+    #[test]
+    fn pfet_weaker_than_nfet() {
+        assert!(Fet::pfet_min().i_dsat(1.0) < Fet::nfet_min().i_dsat(1.0));
+    }
+
+    #[test]
+    fn stack_halves_drive_roughly() {
+        let n = Fet::nfet_min();
+        let single = n.i_d(1.0, 0.5);
+        let stack = stacked_current(&n, &n, 1.0);
+        assert!(stack < single);
+        assert!(stack > single / 4.0);
+    }
+
+    #[test]
+    fn wider_device_scales_linearly() {
+        let n = Fet::nfet_min();
+        let w2 = n.scaled(2.0);
+        let r = w2.i_dsat(1.0) / n.i_dsat(1.0);
+        assert!((r - 2.0).abs() < 1e-9);
+    }
+}

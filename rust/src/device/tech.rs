@@ -1,0 +1,339 @@
+//! Technology presets — the single calibration hub for the whole stack.
+//!
+//! Every electrical/geometric number the array- and system-level models
+//! consume lives here, per memory technology (8T-SRAM, 3T-eDRAM,
+//! 3T-FEMFET). Values are 45 nm-class first-principles numbers (derived
+//! from `ptm`/`femfet`) adjusted within plausible ranges so that the
+//! *ratios* the paper reports emerge from the model equations — see
+//! DESIGN.md §5 (calibration methodology). Nothing downstream hard-codes a
+//! paper result; change a number here and every figure moves consistently.
+
+use super::femfet::Femfet;
+use super::ptm::{stacked_current, Fet};
+
+/// The three memory technologies evaluated in the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Tech {
+    Sram8T,
+    Edram3T,
+    Femfet3T,
+}
+
+impl Tech {
+    pub const ALL: [Tech; 3] = [Tech::Sram8T, Tech::Edram3T, Tech::Femfet3T];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Tech::Sram8T => "8T-SRAM",
+            Tech::Edram3T => "3T-eDRAM",
+            Tech::Femfet3T => "3T-FEMFET",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Tech> {
+        match s.to_ascii_lowercase().as_str() {
+            "sram" | "8t-sram" | "sram8t" => Some(Tech::Sram8T),
+            "edram" | "3t-edram" | "edram3t" => Some(Tech::Edram3T),
+            "femfet" | "3t-femfet" | "femfet3t" => Some(Tech::Femfet3T),
+            _ => None,
+        }
+    }
+}
+
+/// Per-technology electrical + geometric parameters for one *binary*
+/// bit-cell (the ternary cell is built from two of these).
+#[derive(Clone, Debug)]
+pub struct TechParams {
+    pub tech: Tech,
+    /// Supply voltage for read/CiM (paper: 1 V for all).
+    pub vdd: f64,
+    /// Feature size (metres per F).
+    pub f_m: f64,
+
+    // ---- geometry of the NM-baseline binary cell (in F) ----
+    pub cell_w_f: f64,
+    pub cell_h_f: f64,
+
+    // ---- read path ----
+    /// Read current when the cell stores '1' (LRS path on), A.
+    pub i_lrs: f64,
+    /// Read-path current when the cell stores '0' (HRS/off), A.
+    pub i_hrs: f64,
+    /// Junction capacitance one read port adds to an RBL (F).
+    pub c_junct_port: f64,
+    /// Wire capacitance per F of bit-line length (F).
+    pub c_wire_per_f: f64,
+    /// Gate load one cell presents to its read word-line (F).
+    pub c_wl_gate: f64,
+
+    // ---- write path ----
+    pub v_write: f64,
+    /// Intrinsic cell write time (s) — storage-node settling (SRAM flip,
+    /// C_G charge, FE polarization switch).
+    pub t_write_cell: f64,
+    /// Intrinsic per-cell write energy (J).
+    pub e_write_cell: f64,
+
+    // ---- sensing ----
+    /// Voltage sense-amp resolve time (s) and energy (J).
+    pub t_sa_v: f64,
+    pub e_sa_v: f64,
+    /// Current sense resolve time (s) and energy (J) — slower/hungrier.
+    pub t_sa_i: f64,
+    pub e_sa_i: f64,
+}
+
+/// Peripheral (45 nm CMOS, technology-independent) parameters.
+#[derive(Clone, Debug)]
+pub struct PeriphParams {
+    /// 3-bit flash ADC: conversion time, energy, area (m²).
+    pub t_adc: f64,
+    pub e_adc: f64,
+    pub a_adc: f64,
+    /// Extra sense amplifier for the output-value-8 detection.
+    pub e_sa_extra: f64,
+    /// 3-bit digital subtractor (CiM I path).
+    pub t_sub_dig: f64,
+    pub e_sub_dig: f64,
+    /// Analog comparator + current subtractor (CiM II path, Fig 6).
+    pub t_cmp_sub: f64,
+    pub e_cmp_sub: f64,
+    /// Comparator + current-subtractor area per column (m²).
+    pub a_cmp_sub: f64,
+    /// Near-memory MAC unit: per ternary multiply-accumulate.
+    pub t_nm_mac: f64,
+    pub e_nm_mac: f64,
+    /// NM MAC unit area per column-slice (m²) and the SiTe control logic.
+    pub a_nm_mac_col: f64,
+    /// Row decoder / WL driver energy per activation.
+    pub e_wldrv: f64,
+    /// Precharge/WL-driver cycle overhead (s).
+    pub t_prech: f64,
+    pub t_wl: f64,
+    /// PCU (sample & hold + accumulator) per partial-sum op.
+    pub e_pcu: f64,
+    pub t_pcu: f64,
+}
+
+impl PeriphParams {
+    pub fn default_45nm() -> PeriphParams {
+        PeriphParams {
+            // 3-bit flash: 7 comparators + thermometer decode. Low-res
+            // flash at 45 nm: ~0.35 ns, ~0.1 pJ, ~20 µm² — small per
+            // converter, but one (or two) per column still dominates the
+            // column periphery (the paper's motivation for 3-bit).
+            t_adc: 0.35e-9,
+            e_adc: 0.10e-12,
+            a_adc: 20e-12,
+            e_sa_extra: 15e-15,
+            t_sub_dig: 0.10e-9,
+            e_sub_dig: 20e-15,
+            // Analog comparator + subtractor (Fig 6): current mirrors —
+            // slower and more energy than the digital path.
+            t_cmp_sub: 0.30e-9,
+            e_cmp_sub: 120e-15,
+            a_cmp_sub: 18e-12,
+            // Ternary MAC in the NM unit is a mux+increment: cheap, fast,
+            // fully pipelined behind the read.
+            t_nm_mac: 0.08e-9,
+            e_nm_mac: 20e-15,
+            a_nm_mac_col: 18e-12,
+            e_wldrv: 15e-15,
+            t_prech: 0.15e-9,
+            t_wl: 0.08e-9,
+            e_pcu: 40e-15,
+            t_pcu: 0.12e-9,
+        }
+    }
+}
+
+impl TechParams {
+    pub fn new(tech: Tech) -> TechParams {
+        let f_m = 45e-9;
+        let n = Fet::nfet_min();
+        match tech {
+            // 8T-SRAM (Fig 1(a)): cross-coupled inverters + 2 write access
+            // + 2-T read port. Read current = storage FET + RAX stack.
+            Tech::Sram8T => {
+                let i_lrs = stacked_current(&n, &n, 1.0);
+                TechParams {
+                    tech,
+                    vdd: 1.0,
+                    f_m,
+                    // 8T SRAM ≈ 200 F² (20F x 10F) at 45 nm.
+                    cell_w_f: 20.0,
+                    cell_h_f: 10.0,
+                    i_lrs,
+                    i_hrs: n.i_leak(),
+                    c_junct_port: n.c_junction(),
+                    c_wire_per_f: 0.010e-15,
+                    c_wl_gate: n.c_gate(),
+                    v_write: 1.0,
+                    t_write_cell: 0.15e-9, // latch flip
+                    e_write_cell: 4.0e-15, // BL/BLB swing share
+                    t_sa_v: 0.12e-9,
+                    e_sa_v: 15e-15,
+                    t_sa_i: 0.45e-9,
+                    e_sa_i: 180e-15,
+                }
+            }
+            // 3T-eDRAM (Fig 1(b)): storage-FET gate cap + PMOS WAX + NMOS
+            // RAX. Denser, slightly weaker read (storage gate at VDD−Vt
+            // boost assumed per [23]'s preferential boosting).
+            Tech::Edram3T => {
+                let i_lrs = 0.85 * stacked_current(&n, &n, 1.0);
+                TechParams {
+                    tech,
+                    vdd: 1.0,
+                    f_m,
+                    // 3T gain cell ≈ 80 F² (10F x 8F).
+                    cell_w_f: 10.0,
+                    cell_h_f: 8.0,
+                    i_lrs,
+                    i_hrs: n.i_leak(),
+                    c_junct_port: n.c_junction(),
+                    c_wire_per_f: 0.010e-15,
+                    c_wl_gate: n.c_gate(),
+                    v_write: 1.0,
+                    t_write_cell: 0.20e-9, // charge C_G through PMOS WAX
+                    e_write_cell: 1.5e-15, // small storage cap
+                    t_sa_v: 0.12e-9,
+                    e_sa_v: 15e-15,
+                    t_sa_i: 0.45e-9,
+                    e_sa_i: 180e-15,
+                }
+            }
+            // 3T-FEMFET (Fig 1(c)): FEMFET + read/write access NFETs.
+            // LRS drive comes from the FE-shifted threshold (V_T ≈ 0).
+            Tech::Femfet3T => {
+                let mut lrs_cell = Femfet::new();
+                lrs_cell.pulse(super::femfet::V_SET, 5e-9);
+                lrs_cell.release();
+                let lrs_fet = lrs_cell.effective_fet();
+                let i_lrs = stacked_current(&lrs_fet, &n, 1.0);
+                let mut hrs_cell = Femfet::new();
+                hrs_cell.pulse(super::femfet::V_RESET, 5e-9);
+                hrs_cell.release();
+                let i_hrs = hrs_cell.effective_fet().i_leak();
+                TechParams {
+                    tech,
+                    vdd: 1.0,
+                    f_m,
+                    // 3T + FE stack ≈ 80 F² (10F x 8F) — the ~3.3× density
+                    // win over the TiM-DNN SRAM cell [21].
+                    cell_w_f: 10.0,
+                    cell_h_f: 8.0,
+                    i_lrs,
+                    i_hrs,
+                    c_junct_port: n.c_junction(),
+                    c_wire_per_f: 0.010e-15,
+                    c_wl_gate: n.c_gate(),
+                    v_write: super::femfet::V_SET,
+                    // Polarization switching (τ=200 ps → ~0.5 ns to 90%)
+                    // plus the global-reset amortized per cell.
+                    t_write_cell: 0.6e-9,
+                    // FE displacement charge at ±5 V: Q·V ≈ 2·P_S·A·V.
+                    e_write_cell: 6.0e-15,
+                    t_sa_v: 0.12e-9,
+                    e_sa_v: 15e-15,
+                    t_sa_i: 0.45e-9,
+                    e_sa_i: 180e-15,
+                }
+            }
+        }
+    }
+
+    pub fn all() -> Vec<TechParams> {
+        Tech::ALL.iter().map(|&t| TechParams::new(t)).collect()
+    }
+
+    /// LRS/HRS read-current ratio (distinguishability).
+    pub fn on_off_ratio(&self) -> f64 {
+        self.i_lrs / self.i_hrs.max(1e-18)
+    }
+
+    /// RBL capacitance for `n_rows` cells each contributing
+    /// `ports_per_cell` read-port junctions, with wire length
+    /// `n_rows * cell_h_f` (F).
+    pub fn c_rbl(&self, n_rows: usize, ports_per_cell: f64, cell_h_f: f64) -> f64 {
+        let junction = n_rows as f64 * ports_per_cell * self.c_junct_port;
+        let wire = n_rows as f64 * cell_h_f * self.c_wire_per_f;
+        junction + wire
+    }
+
+    /// Word-line capacitance across `n_cols` ternary cells, each loading
+    /// the WL with `gates_per_cell` transistor gates plus wire.
+    pub fn c_wl(&self, n_cols: usize, gates_per_cell: f64, cell_w_f: f64) -> f64 {
+        let gates = n_cols as f64 * gates_per_cell * self.c_wl_gate;
+        let wire = n_cols as f64 * cell_w_f * self.c_wire_per_f;
+        gates + wire
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_three_technologies_exist() {
+        let all = TechParams::all();
+        assert_eq!(all.len(), 3);
+        assert_eq!(all[0].tech.name(), "8T-SRAM");
+    }
+
+    #[test]
+    fn read_currents_are_45nm_class() {
+        for p in TechParams::all() {
+            assert!(p.i_lrs > 10e-6 && p.i_lrs < 200e-6, "{}: i_lrs={}", p.tech.name(), p.i_lrs);
+            assert!(p.on_off_ratio() > 100.0, "{}: ratio={}", p.tech.name(), p.on_off_ratio());
+        }
+    }
+
+    #[test]
+    fn femfet_distinguishability_largest() {
+        let sram = TechParams::new(Tech::Sram8T);
+        let fem = TechParams::new(Tech::Femfet3T);
+        assert!(fem.on_off_ratio() > sram.on_off_ratio());
+    }
+
+    #[test]
+    fn edram_and_femfet_denser_than_sram() {
+        let sram = TechParams::new(Tech::Sram8T);
+        for t in [Tech::Edram3T, Tech::Femfet3T] {
+            let p = TechParams::new(t);
+            assert!(p.cell_w_f * p.cell_h_f < sram.cell_w_f * sram.cell_h_f);
+        }
+    }
+
+    #[test]
+    fn rbl_cap_tens_of_ff_for_256_rows() {
+        let p = TechParams::new(Tech::Sram8T);
+        let c = p.c_rbl(256, 1.0, p.cell_h_f);
+        assert!(c > 10e-15 && c < 100e-15, "c_rbl = {c}");
+    }
+
+    #[test]
+    fn wl_cap_scales_with_columns() {
+        let p = TechParams::new(Tech::Sram8T);
+        let c1 = p.c_wl(128, 2.0, 2.0 * p.cell_w_f);
+        let c2 = p.c_wl(256, 2.0, 2.0 * p.cell_w_f);
+        assert!((c2 / c1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tech_parse_roundtrip() {
+        for t in Tech::ALL {
+            assert_eq!(Tech::parse(t.name()), Some(t));
+        }
+        assert_eq!(Tech::parse("sram"), Some(Tech::Sram8T));
+        assert_eq!(Tech::parse("bogus"), None);
+    }
+
+    #[test]
+    fn femfet_write_slower_and_higher_voltage() {
+        let s = TechParams::new(Tech::Sram8T);
+        let f = TechParams::new(Tech::Femfet3T);
+        assert!(f.t_write_cell > s.t_write_cell);
+        assert!(f.v_write > s.v_write);
+    }
+}

@@ -1,0 +1,158 @@
+//! The paper's five DNN benchmarks (§VI: AlexNet, ResNet34, Inception,
+//! LSTM, GRU) as ternary GEMM workloads.
+//!
+//! Shapes are the standard published architectures (ImageNet-scale CNNs,
+//! Penn-Treebank-scale RNNs). Ternary sparsity assumptions follow the
+//! TWN/TiM-DNN line of work: ~50% of ternary weights are zero and ~45–55%
+//! of activations are zero after ternarization, varying slightly by layer
+//! type (first conv layers see denser activations).
+
+use super::layer::{Layer, Network};
+
+/// AlexNet (5 conv + 3 FC).
+pub fn alexnet() -> Network {
+    let layers = vec![
+        Layer::conv("conv1", 55, 3, 11, 96).with_sparsity(0.7, 0.5),
+        Layer::conv("conv2", 27, 96, 5, 256),
+        Layer::conv("conv3", 13, 256, 3, 384),
+        Layer::conv("conv4", 13, 384, 3, 384),
+        Layer::conv("conv5", 13, 384, 3, 256),
+        Layer::linear("fc6", 1, 9216, 4096),
+        Layer::linear("fc7", 1, 4096, 4096),
+        Layer::linear("fc8", 1, 4096, 1000),
+    ];
+    Network { name: "AlexNet".into(), layers }
+}
+
+/// ResNet-34 (grouped by stage; basic blocks = two 3×3 convs each).
+pub fn resnet34() -> Network {
+    let mut layers = vec![Layer::conv("conv1", 112, 3, 7, 64).with_sparsity(0.7, 0.5)];
+    // (stage output size, channels, #basic blocks)
+    let stages = [(56usize, 64usize, 3usize), (28, 128, 4), (14, 256, 6), (7, 512, 3)];
+    let mut cin = 64;
+    for (si, (hw, ch, blocks)) in stages.into_iter().enumerate() {
+        for b in 0..blocks {
+            let in_ch = if b == 0 { cin } else { ch };
+            layers.push(Layer::conv(&format!("s{}b{}_conv1", si + 2, b), hw, in_ch, 3, ch));
+            layers.push(Layer::conv(&format!("s{}b{}_conv2", si + 2, b), hw, ch, 3, ch));
+            if b == 0 && in_ch != ch {
+                layers.push(Layer::conv(&format!("s{}b{}_down", si + 2, b), hw, in_ch, 1, ch));
+            }
+        }
+        cin = ch;
+    }
+    layers.push(Layer::linear("fc", 1, 512, 1000));
+    Network { name: "ResNet34".into(), layers }
+}
+
+/// Inception (GoogLeNet-style): stem + representative inception blocks.
+pub fn inception() -> Network {
+    let mut layers = vec![
+        Layer::conv("stem_conv1", 112, 3, 7, 64).with_sparsity(0.7, 0.5),
+        Layer::conv("stem_conv2", 56, 64, 1, 64),
+        Layer::conv("stem_conv3", 56, 64, 3, 192),
+    ];
+    // Each inception block: 1×1, 3×3 (with reduce), 5×5 (with reduce),
+    // pool-proj. (hw, cin, [b1, b3r, b3, b5r, b5, pp])
+    let blocks: [(usize, usize, [usize; 6]); 9] = [
+        (28, 192, [64, 96, 128, 16, 32, 32]),
+        (28, 256, [128, 128, 192, 32, 96, 64]),
+        (14, 480, [192, 96, 208, 16, 48, 64]),
+        (14, 512, [160, 112, 224, 24, 64, 64]),
+        (14, 512, [128, 128, 256, 24, 64, 64]),
+        (14, 512, [112, 144, 288, 32, 64, 64]),
+        (14, 528, [256, 160, 320, 32, 128, 128]),
+        (7, 832, [256, 160, 320, 32, 128, 128]),
+        (7, 832, [384, 192, 384, 48, 128, 128]),
+    ];
+    for (i, (hw, cin, b)) in blocks.into_iter().enumerate() {
+        let tag = format!("inc{}", i + 3);
+        layers.push(Layer::conv(&format!("{tag}_1x1"), hw, cin, 1, b[0]));
+        layers.push(Layer::conv(&format!("{tag}_3x3r"), hw, cin, 1, b[1]));
+        layers.push(Layer::conv(&format!("{tag}_3x3"), hw, b[1], 3, b[2]));
+        layers.push(Layer::conv(&format!("{tag}_5x5r"), hw, cin, 1, b[3]));
+        layers.push(Layer::conv(&format!("{tag}_5x5"), hw, b[3], 5, b[4]));
+        layers.push(Layer::conv(&format!("{tag}_pp"), hw, cin, 1, b[5]));
+    }
+    layers.push(Layer::linear("fc", 1, 1024, 1000));
+    Network { name: "Inception".into(), layers }
+}
+
+/// 2-layer LSTM language model (PTB-scale: embed 650, hidden 650,
+/// 35-step unroll — Zaremba et al. medium config, the standard ternary-RNN
+/// benchmark).
+pub fn lstm() -> Network {
+    let layers = vec![
+        Layer::recurrent("lstm1", 35, 650, 650, 4),
+        Layer::recurrent("lstm2", 35, 650, 650, 4),
+        Layer::linear("proj", 35, 650, 10000).with_sparsity(0.5, 0.5),
+    ];
+    Network { name: "LSTM".into(), layers }
+}
+
+/// 2-layer GRU language model (same scale; 3 gates).
+pub fn gru() -> Network {
+    let layers = vec![
+        Layer::recurrent("gru1", 35, 650, 650, 3),
+        Layer::recurrent("gru2", 35, 650, 650, 3),
+        Layer::linear("proj", 35, 650, 10000).with_sparsity(0.5, 0.5),
+    ];
+    Network { name: "GRU".into(), layers }
+}
+
+/// The paper's benchmark suite, in its Figure 12/13 order.
+pub fn suite() -> Vec<Network> {
+    vec![alexnet(), resnet34(), inception(), lstm(), gru()]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_five_benchmarks() {
+        let s = suite();
+        assert_eq!(s.len(), 5);
+        let names: Vec<&str> = s.iter().map(|n| n.name.as_str()).collect();
+        assert_eq!(names, ["AlexNet", "ResNet34", "Inception", "LSTM", "GRU"]);
+    }
+
+    #[test]
+    fn alexnet_mac_count_is_canonical() {
+        // AlexNet ≈ 0.7–1.2 GMACs (ours has no grouping → upper range).
+        let m = alexnet().total_macs() as f64;
+        assert!(m > 0.6e9 && m < 1.5e9, "AlexNet MACs = {m:.3e}");
+    }
+
+    #[test]
+    fn resnet34_macs_in_range() {
+        // ResNet-34 ≈ 3.6 GMACs.
+        let m = resnet34().total_macs() as f64;
+        assert!(m > 2.5e9 && m < 4.5e9, "ResNet34 MACs = {m:.3e}");
+    }
+
+    #[test]
+    fn inception_macs_in_range() {
+        // GoogLeNet ≈ 1.5 GMACs.
+        let m = inception().total_macs() as f64;
+        assert!(m > 0.8e9 && m < 2.5e9, "Inception MACs = {m:.3e}");
+    }
+
+    #[test]
+    fn rnn_weight_reuse_across_steps() {
+        let l = lstm();
+        // Weights fit in a few M words even though MACs are ~0.8 G.
+        assert!(l.total_weight_words() < 15_000_000);
+        assert!(l.total_macs() > 0.3e9 as u64);
+    }
+
+    #[test]
+    fn all_sparsities_are_probabilities() {
+        for net in suite() {
+            for l in &net.layers {
+                assert!((0.0..=1.0).contains(&l.act_nz), "{}", l.name);
+                assert!((0.0..=1.0).contains(&l.w_nz), "{}", l.name);
+            }
+        }
+    }
+}

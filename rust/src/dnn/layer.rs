@@ -1,0 +1,147 @@
+//! DNN layer descriptors. Every layer the accelerator executes reduces to
+//! one or more ternary GEMMs (im2col for convolutions, per-gate matmuls
+//! for recurrent cells); the system-level analysis only needs the GEMM
+//! shapes, how often they run, and the operand sparsity.
+
+/// Layer kind (for reporting; the mapper only sees the GEMM view).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LayerKind {
+    Conv,
+    Linear,
+    Recurrent,
+}
+
+/// One GEMM workload: `m` input vectors (rows of activations), reduction
+/// dimension `k`, `n` output channels.
+#[derive(Clone, Debug)]
+pub struct Gemm {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl Gemm {
+    /// Multiply-accumulate operations.
+    pub fn macs(&self) -> u64 {
+        (self.m as u64) * (self.k as u64) * (self.n as u64)
+    }
+}
+
+/// A network layer as the accelerator sees it.
+#[derive(Clone, Debug)]
+pub struct Layer {
+    pub name: String,
+    pub kind: LayerKind,
+    pub gemm: Gemm,
+    /// How many times this GEMM executes per inference (e.g. recurrent
+    /// time steps share weights; conv is already folded into `m`).
+    pub repeats: usize,
+    /// Probability an activation is non-zero (ternary input sparsity).
+    pub act_nz: f64,
+    /// Probability a weight is non-zero (ternary weight sparsity).
+    pub w_nz: f64,
+}
+
+impl Layer {
+    pub fn conv(name: &str, out_hw: usize, cin: usize, ksize: usize, cout: usize) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Conv,
+            gemm: Gemm { m: out_hw * out_hw, k: cin * ksize * ksize, n: cout },
+            repeats: 1,
+            act_nz: 0.5,
+            w_nz: 0.5,
+        }
+    }
+
+    pub fn linear(name: &str, m: usize, k: usize, n: usize) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Linear,
+            gemm: Gemm { m, k, n },
+            repeats: 1,
+            act_nz: 0.5,
+            w_nz: 0.5,
+        }
+    }
+
+    /// A recurrent cell step: `gates`·hidden output columns, executed
+    /// `steps` times per inference.
+    pub fn recurrent(name: &str, steps: usize, input: usize, hidden: usize, gates: usize) -> Layer {
+        Layer {
+            name: name.to_string(),
+            kind: LayerKind::Recurrent,
+            gemm: Gemm { m: 1, k: input + hidden, n: gates * hidden },
+            repeats: steps,
+            act_nz: 0.5,
+            w_nz: 0.5,
+        }
+    }
+
+    /// Total MACs per inference.
+    pub fn macs(&self) -> u64 {
+        self.gemm.macs() * self.repeats as u64
+    }
+
+    /// Ternary weight words this layer stores.
+    pub fn weight_words(&self) -> u64 {
+        (self.gemm.k as u64) * (self.gemm.n as u64)
+    }
+
+    /// Builder-style sparsity override.
+    pub fn with_sparsity(mut self, act_nz: f64, w_nz: f64) -> Layer {
+        self.act_nz = act_nz;
+        self.w_nz = w_nz;
+        self
+    }
+}
+
+/// A benchmark network: an ordered set of layers.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Network {
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    pub fn total_weight_words(&self) -> u64 {
+        self.layers.iter().map(Layer::weight_words).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_folds_to_gemm() {
+        let l = Layer::conv("c", 55, 3, 11, 96);
+        assert_eq!(l.gemm.m, 3025);
+        assert_eq!(l.gemm.k, 363);
+        assert_eq!(l.gemm.n, 96);
+        assert_eq!(l.macs(), 3025 * 363 * 96);
+    }
+
+    #[test]
+    fn recurrent_repeats_share_weights() {
+        let l = Layer::recurrent("lstm", 25, 256, 512, 4);
+        assert_eq!(l.gemm.k, 768);
+        assert_eq!(l.gemm.n, 2048);
+        assert_eq!(l.macs(), 25 * 768 * 2048);
+        assert_eq!(l.weight_words(), 768 * 2048);
+    }
+
+    #[test]
+    fn network_totals() {
+        let net = Network {
+            name: "toy".into(),
+            layers: vec![Layer::linear("a", 1, 64, 64), Layer::linear("b", 1, 64, 10)],
+        };
+        assert_eq!(net.total_macs(), 64 * 64 + 64 * 10);
+        assert_eq!(net.total_weight_words(), 64 * 64 + 64 * 10);
+    }
+}

@@ -1,0 +1,8 @@
+//! DNN workload layer: layer/GEMM descriptors, the paper's five benchmark
+//! networks, and ternary quantization helpers.
+
+pub mod benchmarks;
+pub mod layer;
+pub mod ternary;
+
+pub use layer::{Gemm, Layer, LayerKind, Network};

@@ -1,0 +1,115 @@
+//! Ternary quantization helpers (TWN-style) used when loading real
+//! float weights into the simulated arrays, plus sparsity measurement.
+//!
+//! Quantization rule (Li et al., Ternary Weight Networks): threshold
+//! Δ = 0.7·E|w|; w → sign(w)·1[|w| > Δ]. The python training pipeline
+//! uses the same rule with a straight-through estimator; this module is
+//! the runtime-side equivalent for weights arriving as f32.
+
+use super::super::array::encoding::Trit;
+
+/// TWN threshold factor.
+pub const TWN_DELTA_FACTOR: f64 = 0.7;
+
+/// Ternarize a float tensor with the TWN rule.
+pub fn ternarize(w: &[f32]) -> Vec<Trit> {
+    if w.is_empty() {
+        return Vec::new();
+    }
+    let mean_abs = w.iter().map(|x| x.abs() as f64).sum::<f64>() / w.len() as f64;
+    let delta = (TWN_DELTA_FACTOR * mean_abs) as f32;
+    w.iter()
+        .map(|&x| {
+            if x > delta {
+                1
+            } else if x < -delta {
+                -1
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+/// Scaling factor α = E[|w| : |w| > Δ] that accompanies TWN ternarization
+/// (applied in the digital periphery after the CiM dot product).
+pub fn twn_scale(w: &[f32]) -> f32 {
+    if w.is_empty() {
+        return 1.0;
+    }
+    let mean_abs = w.iter().map(|x| x.abs() as f64).sum::<f64>() / w.len() as f64;
+    let delta = TWN_DELTA_FACTOR * mean_abs;
+    let over: Vec<f64> = w.iter().map(|x| x.abs() as f64).filter(|&a| a > delta).collect();
+    if over.is_empty() {
+        1.0
+    } else {
+        (over.iter().sum::<f64>() / over.len() as f64) as f32
+    }
+}
+
+/// Fraction of zeros in a trit tensor.
+pub fn sparsity(t: &[Trit]) -> f64 {
+    if t.is_empty() {
+        return 0.0;
+    }
+    t.iter().filter(|&&x| x == 0).count() as f64 / t.len() as f64
+}
+
+/// Ternarize activations with a fixed threshold (used for input
+/// ternarization at inference: x → sign(x)·1[|x| > θ]).
+pub fn ternarize_acts(x: &[f32], theta: f32) -> Vec<Trit> {
+    x.iter()
+        .map(|&v| {
+            if v > theta {
+                1
+            } else if v < -theta {
+                -1
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ternarize_thresholds_correctly() {
+        // mean|w| = 0.5, Δ = 0.35.
+        let w = [0.9f32, -0.9, 0.3, -0.3, 0.5, -0.1, 0.4, 0.6];
+        let t = ternarize(&w);
+        assert_eq!(t, vec![1, -1, 0, 0, 1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn scale_is_mean_of_survivors() {
+        let w = [1.0f32, -1.0, 0.0, 0.0];
+        // mean|w| = 0.5, Δ = 0.35; survivors = {1, 1} → α = 1.
+        assert!((twn_scale(&w) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn typical_gaussian_weights_are_half_sparse() {
+        // For Gaussian weights the TWN rule zeroes ~50% (|w| < 0.7·E|w|
+        // ⇔ |z| < 0.7·sqrt(2/π) ≈ 0.56 → P ≈ 0.43).
+        let mut rng = crate::util::rng::Rng::new(77);
+        let w: Vec<f32> = (0..50_000).map(|_| rng.normal() as f32).collect();
+        let s = sparsity(&ternarize(&w));
+        assert!((s - 0.43).abs() < 0.03, "sparsity = {s}");
+    }
+
+    #[test]
+    fn empty_inputs_are_fine() {
+        assert!(ternarize(&[]).is_empty());
+        assert_eq!(twn_scale(&[]), 1.0);
+        assert_eq!(sparsity(&[]), 0.0);
+    }
+
+    #[test]
+    fn act_ternarization_symmetric() {
+        let t = ternarize_acts(&[0.5, -0.5, 0.05, -0.05], 0.1);
+        assert_eq!(t, vec![1, -1, 0, 0]);
+    }
+}

@@ -1,0 +1,33 @@
+//! # SiTe CiM — signed ternary computing-in-memory for ultra-low-precision DNNs
+//!
+//! Full-system reproduction of *"SiTe CiM: Signed Ternary
+//! Computing-in-Memory for Ultra-Low Precision Deep Neural Networks"*
+//! (Thakuria et al., 2024). The crate layers:
+//!
+//! - [`device`] — analytic 45 nm FET + FEMFET models and the technology
+//!   presets (8T-SRAM / 3T-eDRAM / 3T-FEMFET) that calibrate everything.
+//! - [`circuit`] — bit-lines, sensing, ADCs and sense-margin analysis.
+//! - [`array`] — the paper's contribution: SiTe CiM I (cross-coupled
+//!   bit-cells, voltage sensing) and SiTe CiM II (cross-coupled
+//!   sub-columns, current sensing) functional + energy/latency/area
+//!   models, against near-memory baselines.
+//! - [`arch`] — the TiM-DNN-style accelerator (32 arrays, 32 PCUs) plus
+//!   iso-capacity / iso-area near-memory baseline systems.
+//! - [`dnn`] — the five benchmark workloads (AlexNet, ResNet34,
+//!   Inception, LSTM, GRU) as ternary GEMM workloads.
+//! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
+//!   artifacts (python never runs at inference time).
+//! - [`coordinator`] — a thread-based inference service over the
+//!   simulated accelerator + PJRT numerics.
+//! - [`repro`] — one entry point per paper figure/table.
+
+pub mod arch;
+pub mod array;
+pub mod circuit;
+pub mod cli;
+pub mod coordinator;
+pub mod device;
+pub mod dnn;
+pub mod repro;
+pub mod runtime;
+pub mod util;

@@ -1,0 +1,13 @@
+//! `sitecim` CLI — leader entrypoint for the SiTe CiM reproduction.
+//! See `sitecim help` (or cli::USAGE) for subcommands.
+
+fn main() {
+    let args = sitecim::util::cli::Args::from_env();
+    match sitecim::cli::run(args) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

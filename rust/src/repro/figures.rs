@@ -1,0 +1,228 @@
+//! Array-level reproductions: Fig 4(c), Fig 7(c), the area table
+//! (§V.1a/V.2a + Figs 8/10), Fig 9, Fig 11, the §V.3 comparison and the
+//! §III.2 error-probability analysis.
+
+use crate::array::area::{self, Design};
+use crate::array::metrics::{all_designs, ArrayGeom};
+use crate::array::variation;
+use crate::circuit::sense_margin::{
+    current_mode_margins, voltage_mode_margins, CurrentModeSetup,
+};
+use crate::device::{PeriphParams, Tech, TechParams};
+use crate::util::rng::Rng;
+use crate::util::table::Table;
+use crate::util::units::{fmt_energy, fmt_pct, fmt_time, fmt_x};
+
+/// Fig 4(c): RBL voltage + sense margin vs number of discharges (CiM I,
+/// voltage sensing). Paper anchors: SM(1) = 50 mV, SM(8) = 40 mV, lower
+/// beyond; 3-bit ADC + extra SA → assert 16 rows, saturate at 8.
+pub fn fig4() -> String {
+    let pts = voltage_mode_margins(1.0, 16);
+    let mut t = Table::new("Fig 4(c) — RBL voltage & sense margin vs #discharges (SiTe CiM I)")
+        .header(&["n", "V_RBL (V)", "SM (mV)", "paper"]);
+    for p in &pts {
+        let paper = match p.n {
+            1 => "50 mV",
+            8 => "40 mV",
+            n if n > 8 => "< 40 mV",
+            _ => "-",
+        };
+        t.row(&[
+            p.n.to_string(),
+            format!("{:.3}", p.level),
+            if p.margin.is_nan() { "-".into() } else { format!("{:.1}", p.margin * 1e3) },
+            paper.to_string(),
+        ]);
+    }
+    t.note("robust range ends at n = 8 → 3-bit ADC, outputs 9..16 ≈ 8 (§III.2)");
+    t.render()
+}
+
+/// Fig 7(c): current-mode sense margin under BC/WC loading, outputs 0..16
+/// (SiTe CiM II). Paper: SM diminishes for O > 8.
+pub fn fig7() -> String {
+    let p = TechParams::new(Tech::Femfet3T);
+    let setup = CurrentModeSetup { n_rows_block_total: 16, c_lrbl: 1.0e-15, t_sense: 0.45e-9 };
+    let pts = current_mode_margins(&p, &setup);
+    let mut t = Table::new("Fig 7(c) — sense margin vs expected output (SiTe CiM II, current sensing)")
+        .header(&["O", "BC level (units)", "SM (units)", "paper"]);
+    for pt in &pts {
+        let paper = if pt.n > 8 { "diminishing" } else { "> target" };
+        t.row(&[
+            pt.n.to_string(),
+            format!("{:.3}", pt.level),
+            if pt.margin.is_nan() { "-".into() } else { format!("{:.3}", pt.margin) },
+            paper.to_string(),
+        ]);
+    }
+    t.note("units = (I_LRS − I_HRS); BC/WC construction of Fig 7(a,b)");
+    t.render()
+}
+
+/// Area table: cell overheads (§V.1a/V.2a), TiM-DNN comparison, macro
+/// ratios with periphery.
+pub fn area_table() -> String {
+    let pp = PeriphParams::default_45nm();
+    let mut t = Table::new("Area — cell & macro overheads vs NM baselines (Figs 8/10, §V)")
+        .header(&["tech", "CiM I cell", "paper", "CiM II cell", "paper", "CiM I macro", "paper", "CiM II macro", "paper"]);
+    let paper_cell1 = [0.18, 0.34, 0.34];
+    for (i, tech) in Tech::ALL.iter().enumerate() {
+        let p = TechParams::new(*tech);
+        let c1 = area::cell_overhead(&p, Design::Cim1);
+        let c2 = area::cell_overhead(&p, Design::Cim2);
+        let m1 = area::macro_overhead_ratio(&p, &pp, Design::Cim1);
+        let m2 = area::macro_overhead_ratio(&p, &pp, Design::Cim2);
+        t.row(&[
+            tech.name().to_string(),
+            format!("+{}", fmt_pct(c1)),
+            format!("+{}", fmt_pct(paper_cell1[i])),
+            format!("+{}", fmt_pct(c2)),
+            "+6%".into(),
+            format!("{m1:.2}x"),
+            "1.3-1.53x".into(),
+            format!("{m2:.2}x"),
+            "1.21-1.33x".into(),
+        ]);
+    }
+    let sram = TechParams::new(Tech::Sram8T);
+    let ours = area::cell_geom(&sram, Design::Cim1).area_f2();
+    let red = 1.0 - ours / area::timdnn_cell_f2();
+    t.note(format!(
+        "SiTe CiM I SRAM cell vs TiM-DNN [20] cell: {} smaller (paper: 44%)",
+        fmt_pct(red)
+    ));
+    t.render()
+}
+
+fn array_fig(design: Design, title: &str, paper_mac_d: [&str; 3], paper_mac_e: [&str; 3]) -> String {
+    let pp = PeriphParams::default_45nm();
+    let g = ArrayGeom::default();
+    let mut t = Table::new(title).header(&[
+        "tech",
+        "CiM lat",
+        "vs NM",
+        "paper",
+        "CiM energy",
+        "vs NM",
+        "paper",
+        "read D/E over NM",
+        "write D over NM",
+    ]);
+    for (i, tech) in Tech::ALL.iter().enumerate() {
+        let p = TechParams::new(*tech);
+        let [nm, c1, c2] = all_designs(&p, &pp, g);
+        let m = if design == Design::Cim1 { c1 } else { c2 };
+        let dred = 1.0 - m.mac.latency / nm.mac.latency;
+        let esav = m.mac.energy_saving_vs(&nm.mac);
+        t.row(&[
+            tech.name().to_string(),
+            fmt_time(m.mac.latency),
+            format!("-{}", fmt_pct(dred)),
+            paper_mac_d[i].to_string(),
+            fmt_energy(m.mac.energy),
+            format!("-{}", fmt_pct(esav)),
+            paper_mac_e[i].to_string(),
+            format!(
+                "+{}/+{}",
+                fmt_pct(m.read.latency / nm.read.latency - 1.0),
+                fmt_pct(m.read.energy / nm.read.energy - 1.0)
+            ),
+            format!("+{}", fmt_pct(m.write.latency / nm.write.latency - 1.0)),
+        ]);
+    }
+    t.note("MAC op = one 16-row window over 256 ternary columns; NM = pipelined row-by-row + NMC unit");
+    t.render()
+}
+
+/// Fig 9: SiTe CiM I array-level analysis vs NM (3 technologies).
+pub fn fig9() -> String {
+    array_fig(
+        Design::Cim1,
+        "Fig 9 — SiTe CiM I array-level vs NM baseline",
+        ["-88%", "-88%", "-88%"],
+        ["-74%", "-78%", "-78%"],
+    )
+}
+
+/// Fig 11: SiTe CiM II array-level analysis vs NM.
+pub fn fig11() -> String {
+    array_fig(
+        Design::Cim2,
+        "Fig 11 — SiTe CiM II array-level vs NM baseline",
+        ["-80%", "-78%", "-84%"],
+        ["-61%", "-63%", "-62%"],
+    )
+}
+
+/// §V.3: SiTe CiM I vs II head-to-head.
+pub fn cim1_vs_cim2() -> String {
+    let pp = PeriphParams::default_45nm();
+    let g = ArrayGeom::default();
+    let paper = [("8T-SRAM", 1.5, 1.7, 0.10), ("3T-eDRAM", 1.7, 1.8, 0.21), ("3T-FEMFET", 1.7, 1.3, 0.21)];
+    let mut t = Table::new("§V.3 — SiTe CiM I vs SiTe CiM II")
+        .header(&["tech", "II/I energy", "paper", "II/I latency", "paper", "II cell saving", "paper"]);
+    for (i, tech) in Tech::ALL.iter().enumerate() {
+        let p = TechParams::new(*tech);
+        let [_, c1, c2] = all_designs(&p, &pp, g);
+        let a1 = area::cell_geom(&p, Design::Cim1).area_f2();
+        let a2 = area::cell_geom(&p, Design::Cim2).area_f2();
+        t.row(&[
+            tech.name().to_string(),
+            fmt_x(c2.mac.energy / c1.mac.energy),
+            fmt_x(paper[i].1),
+            fmt_x(c2.mac.latency / c1.mac.latency),
+            fmt_x(paper[i].2),
+            fmt_pct(1.0 - a2 / a1),
+            fmt_pct(paper[i].3),
+        ]);
+    }
+    t.render()
+}
+
+/// §III.2 error probability: analytic + Monte-Carlo, vs the paper's
+/// 3.10e-3, plus its sensitivity to workload sparsity.
+pub fn error_prob() -> String {
+    let mut rng = Rng::new(0xE44);
+    let sigma = variation::SIGMA_VTH_SENSE_V;
+    let mut t = Table::new("§III.2 — compute error probability (V_TH variation MC)")
+        .header(&["p_nz(in)·p_nz(w)", "analytic P(err)", "MC P(err)", "paper"]);
+    for (pi, pw) in [(0.5, 0.5), (0.3, 0.5), (0.7, 0.7)] {
+        let ana = variation::total_error_prob(sigma, pi, pw);
+        let mc = variation::mc_error_prob(sigma, pi, pw, 300_000, &mut rng);
+        let paper = if (pi, pw) == (0.5, 0.5) { "3.10e-3" } else { "-" };
+        t.row(&[
+            format!("{pi:.1}·{pw:.1}"),
+            format!("{ana:.2e}"),
+            format!("{mc:.2e}"),
+            paper.to_string(),
+        ]);
+    }
+    t.note(format!("σ_sense = {} mV; negligible accuracy impact shown by e2e_inference", sigma * 1e3));
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_figures_render_nonempty() {
+        for (name, s) in [
+            ("fig4", fig4()),
+            ("fig7", fig7()),
+            ("area", area_table()),
+            ("fig9", fig9()),
+            ("fig11", fig11()),
+            ("cmp", cim1_vs_cim2()),
+        ] {
+            assert!(s.len() > 200, "{name} too short");
+            assert!(s.contains("paper") || s.contains("Fig") || s.contains('%'), "{name}");
+        }
+    }
+
+    #[test]
+    fn fig4_has_17_rows() {
+        let s = fig4();
+        assert!(s.contains("| 16 |") || s.contains("16"));
+    }
+}

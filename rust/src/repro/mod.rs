@@ -1,0 +1,24 @@
+//! Reproduction harness: one entry point per paper figure/table, each
+//! printing the paper's reported values next to this model's measured
+//! values. See DESIGN.md §4 for the experiment index.
+
+pub mod figures;
+pub mod system;
+
+pub use figures::{area_table, cim1_vs_cim2, error_prob, fig11, fig4, fig7, fig9};
+pub use system::{fig12, fig13};
+
+/// Run every reproduction, returning the combined report.
+pub fn run_all() -> String {
+    let mut out = String::new();
+    out.push_str(&fig4());
+    out.push_str(&fig7());
+    out.push_str(&area_table());
+    out.push_str(&fig9());
+    out.push_str(&fig11());
+    out.push_str(&cim1_vs_cim2());
+    out.push_str(&fig12());
+    out.push_str(&fig13());
+    out.push_str(&error_prob());
+    out
+}

@@ -1,0 +1,141 @@
+//! System-level reproductions: Fig 12 (SiTe CiM I) and Fig 13 (SiTe CiM
+//! II) — normalized execution time and energy vs the iso-capacity and
+//! iso-area near-memory baselines over the five-benchmark suite.
+
+use crate::arch::{AccelConfig, Accelerator};
+use crate::array::area::Design;
+use crate::device::Tech;
+use crate::dnn::benchmarks;
+use crate::util::stats::mean;
+use crate::util::table::Table;
+use crate::util::units::fmt_x;
+
+/// Paper-reported average speedups/energy for annotation.
+struct PaperAvgs {
+    speed_isoc: [f64; 3],
+    speed_isoa: [f64; 3],
+    energy: [f64; 3],
+}
+
+fn system_fig(design: Design, title: &str, paper: &PaperAvgs) -> String {
+    let nets = benchmarks::suite();
+    let mut out = String::new();
+    for (ti, tech) in Tech::ALL.iter().enumerate() {
+        let cim = Accelerator::new(AccelConfig::sitecim(*tech, design));
+        let isoc = Accelerator::new(AccelConfig::iso_capacity_nm(*tech));
+        let isoa = Accelerator::new(AccelConfig::iso_area_nm(*tech, design));
+        let mut t = Table::new(format!("{title} — {}", tech.name()))
+            .header(&["benchmark", "speedup iso-cap", "speedup iso-area", "energy red."]);
+        let mut s_c = Vec::new();
+        let mut s_a = Vec::new();
+        let mut e_r = Vec::new();
+        for net in &nets {
+            let rc = cim.run(net);
+            let r_isoc = isoc.run(net);
+            let r_isoa = isoa.run(net);
+            let sc = rc.speedup_vs(&r_isoc);
+            let sa = rc.speedup_vs(&r_isoa);
+            let er = rc.energy_reduction_vs(&r_isoc);
+            s_c.push(sc);
+            s_a.push(sa);
+            e_r.push(er);
+            t.row(&[net.name.clone(), fmt_x(sc), fmt_x(sa), fmt_x(er)]);
+        }
+        t.row(&[
+            "AVG (paper)".into(),
+            format!("{} ({})", fmt_x(mean(&s_c)), fmt_x(paper.speed_isoc[ti])),
+            format!("{} ({})", fmt_x(mean(&s_a)), fmt_x(paper.speed_isoa[ti])),
+            format!("{} ({})", fmt_x(mean(&e_r)), fmt_x(paper.energy[ti])),
+        ]);
+        t.note(format!(
+            "iso-area baseline uses {} NM arrays (area-model derived)",
+            isoa.cfg.n_arrays
+        ));
+        out.push_str(&t.render());
+    }
+    out
+}
+
+/// Fig 12: SiTe CiM I system-level vs NM baselines.
+pub fn fig12() -> String {
+    system_fig(
+        Design::Cim1,
+        "Fig 12 — SiTe CiM I system level",
+        &PaperAvgs {
+            speed_isoc: [6.74, 6.59, 7.12],
+            speed_isoa: [5.41, 4.63, 5.00],
+            energy: [2.46, 2.52, 2.54],
+        },
+    )
+}
+
+/// Fig 13: SiTe CiM II system-level vs NM baselines.
+pub fn fig13() -> String {
+    system_fig(
+        Design::Cim2,
+        "Fig 13 — SiTe CiM II system level",
+        &PaperAvgs {
+            speed_isoc: [4.90, 4.78, 5.06],
+            speed_isoa: [4.21, 3.85, 3.99],
+            energy: [2.12, 2.14, 2.14],
+        },
+    )
+}
+
+/// Average speedups/energy-reductions for one design (used by tests and
+/// EXPERIMENTS.md generation).
+pub fn averages(design: Design, tech: Tech) -> (f64, f64, f64) {
+    let nets = benchmarks::suite();
+    let cim = Accelerator::new(AccelConfig::sitecim(tech, design));
+    let isoc = Accelerator::new(AccelConfig::iso_capacity_nm(tech));
+    let isoa = Accelerator::new(AccelConfig::iso_area_nm(tech, design));
+    let mut s_c = Vec::new();
+    let mut s_a = Vec::new();
+    let mut e_r = Vec::new();
+    for net in &nets {
+        let rc = cim.run(net);
+        s_c.push(rc.speedup_vs(&isoc.run(net)));
+        s_a.push(rc.speedup_vs(&isoa.run(net)));
+        e_r.push(rc.energy_reduction_vs(&isoc.run(net)));
+    }
+    (mean(&s_c), mean(&s_a), mean(&e_r))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig12_averages_near_paper() {
+        // Paper: 6.74/6.59/7.12 iso-cap speedup, 2.46-2.54X energy.
+        for (ti, tech) in Tech::ALL.iter().enumerate() {
+            let (sc, sa, er) = averages(Design::Cim1, *tech);
+            let paper_sc = [6.74, 6.59, 7.12][ti];
+            assert!(
+                (sc / paper_sc - 1.0).abs() < 0.35,
+                "{}: iso-cap speedup {sc:.2} vs paper {paper_sc}",
+                tech.name()
+            );
+            assert!(sa < sc, "{}: iso-area should be harder", tech.name());
+            assert!((1.8..=3.6).contains(&er), "{}: energy red {er:.2}", tech.name());
+        }
+    }
+
+    #[test]
+    fn fig13_lower_than_fig12() {
+        for tech in Tech::ALL {
+            let (sc1, _, er1) = averages(Design::Cim1, tech);
+            let (sc2, _, er2) = averages(Design::Cim2, tech);
+            assert!(sc2 < sc1, "{}", tech.name());
+            assert!(er2 < er1, "{}", tech.name());
+            // Paper: CiM II still ~4.8-5.1X faster.
+            assert!(sc2 > 2.5, "{}: {sc2}", tech.name());
+        }
+    }
+
+    #[test]
+    fn figures_render() {
+        assert!(fig12().contains("AlexNet"));
+        assert!(fig13().contains("GRU"));
+    }
+}

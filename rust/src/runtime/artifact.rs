@@ -1,0 +1,183 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the rust runtime. Python runs once (`make artifacts`); everything the
+//! inference path needs is read from `artifacts/` via this module.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// One weight tensor: row-major int8 trits.
+#[derive(Clone, Debug)]
+pub struct WeightSpec {
+    pub file: PathBuf,
+    pub shape: (usize, usize),
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub dims: Vec<usize>,
+    pub act_thresholds: Vec<f64>,
+    pub kernel_shape: (usize, usize, usize),
+    /// HLO files by logical name (mlp_cim1, mlp_cim2, mlp_exact, kernel).
+    pub hlo: std::collections::BTreeMap<String, PathBuf>,
+    pub weights: Vec<WeightSpec>,
+    pub scales: Vec<f64>,
+    pub test_x: PathBuf,
+    pub test_y: PathBuf,
+    pub test_n: usize,
+    pub in_dim: usize,
+    /// Accuracies recorded at AOT time (exact/cim1/cim2).
+    pub aot_accuracy: std::collections::BTreeMap<String, f64>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let usize_at = |p: &str| -> Result<usize> {
+            j.path(p).and_then(Json::as_usize).with_context(|| format!("manifest missing {p}"))
+        };
+
+        let mut hlo = std::collections::BTreeMap::new();
+        for (k, v) in j.get("files").and_then(Json::as_obj).context("files")? {
+            hlo.insert(k.clone(), dir.join(v.as_str().context("file name")?));
+        }
+
+        let mut weights = Vec::new();
+        for w in j.get("weights").and_then(Json::as_arr).context("weights")? {
+            let shape = w.get("shape").and_then(Json::as_arr).context("shape")?;
+            weights.push(WeightSpec {
+                file: dir.join(w.get("file").and_then(Json::as_str).context("file")?),
+                shape: (
+                    shape[0].as_usize().context("shape[0]")?,
+                    shape[1].as_usize().context("shape[1]")?,
+                ),
+            });
+        }
+
+        let ks = j.get("kernel_shape").and_then(Json::as_arr).context("kernel_shape")?;
+        let dims: Vec<usize> = j
+            .get("dims")
+            .and_then(Json::as_arr)
+            .context("dims")?
+            .iter()
+            .filter_map(Json::as_usize)
+            .collect();
+        let act_thresholds: Vec<f64> = j
+            .get("act_thresholds")
+            .and_then(Json::as_arr)
+            .context("act_thresholds")?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let scales: Vec<f64> = j
+            .get("scales")
+            .and_then(Json::as_arr)
+            .context("scales")?
+            .iter()
+            .filter_map(Json::as_f64)
+            .collect();
+        let mut aot_accuracy = std::collections::BTreeMap::new();
+        if let Some(acc) = j.get("accuracy").and_then(Json::as_obj) {
+            for (k, v) in acc {
+                if let Some(f) = v.as_f64() {
+                    aot_accuracy.insert(k.clone(), f);
+                }
+            }
+        }
+
+        Ok(Manifest {
+            batch: usize_at("batch")?,
+            dims,
+            act_thresholds,
+            kernel_shape: (
+                ks[0].as_usize().context("ks0")?,
+                ks[1].as_usize().context("ks1")?,
+                ks[2].as_usize().context("ks2")?,
+            ),
+            hlo,
+            weights,
+            scales,
+            test_x: dir.join(
+                j.path("test_set/x").and_then(Json::as_str).context("test_set.x")?,
+            ),
+            test_y: dir.join(
+                j.path("test_set/y").and_then(Json::as_str).context("test_set.y")?,
+            ),
+            test_n: j.path("test_set/n").and_then(Json::as_usize).context("test_set.n")?,
+            in_dim: j.path("test_set/in_dim").and_then(Json::as_usize).context("in_dim")?,
+            aot_accuracy,
+            dir,
+        })
+    }
+
+    /// Load a weight tensor as trits (row-major).
+    pub fn load_weight(&self, idx: usize) -> Result<(Vec<i8>, (usize, usize))> {
+        let spec = &self.weights[idx];
+        let bytes = std::fs::read(&spec.file)
+            .with_context(|| format!("reading {}", spec.file.display()))?;
+        if bytes.len() != spec.shape.0 * spec.shape.1 {
+            bail!(
+                "{}: {} bytes != shape {:?}",
+                spec.file.display(),
+                bytes.len(),
+                spec.shape
+            );
+        }
+        let trits: Vec<i8> = bytes.iter().map(|&b| b as i8).collect();
+        if let Some(bad) = trits.iter().find(|&&t| !(-1..=1).contains(&t)) {
+            bail!("{}: non-ternary weight {bad}", spec.file.display());
+        }
+        Ok((trits, spec.shape))
+    }
+
+    /// Load the held-out test set: (inputs (n × in_dim trits), labels).
+    pub fn load_test_set(&self) -> Result<(Vec<i8>, Vec<u8>)> {
+        let x = std::fs::read(&self.test_x)?.iter().map(|&b| b as i8).collect::<Vec<_>>();
+        let y = std::fs::read(&self.test_y)?;
+        if x.len() != self.test_n * self.in_dim || y.len() != self.test_n {
+            bail!("test set size mismatch");
+        }
+        Ok((x, y))
+    }
+}
+
+/// Default artifacts directory: `$SITECIM_ARTIFACTS` or `artifacts/`
+/// relative to the crate root (falling back to cwd).
+pub fn default_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("SITECIM_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    let manifest_dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if manifest_dir.exists() {
+        return manifest_dir;
+    }
+    PathBuf::from("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full manifest parsing is exercised by the `runtime_hlo` integration
+    // test (requires built artifacts); here we test the failure paths.
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent-path").unwrap_err();
+        assert!(err.to_string().contains("manifest.json"));
+    }
+
+    #[test]
+    fn default_dir_is_artifacts() {
+        assert!(default_dir().to_string_lossy().contains("artifacts"));
+    }
+}

@@ -1,0 +1,164 @@
+//! PJRT executor: loads the AOT HLO-text artifacts, compiles them on the
+//! CPU PJRT client and serves inference from the L3 hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::
+//! from_text_file` → `XlaComputation::from_proto` → `client.compile` →
+//! `execute`. Outputs are 1-tuples (lowered with `return_tuple=True`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::Manifest;
+
+/// Which exported model graph to run.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Cim1,
+    Cim2,
+    Exact,
+}
+
+impl ModelKind {
+    pub fn manifest_key(&self) -> &'static str {
+        match self {
+            ModelKind::Cim1 => "mlp_cim1",
+            ModelKind::Cim2 => "mlp_cim2",
+            ModelKind::Exact => "mlp_exact",
+        }
+    }
+}
+
+/// A compiled MLP inference executable (fixed batch). Weights cross the
+/// AOT boundary as f32 parameters (see aot.py) and are held here as
+/// ready-to-execute literals.
+pub struct MlpExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    weights: Vec<xla::Literal>,
+    pub batch: usize,
+    pub in_dim: usize,
+    pub out_dim: usize,
+}
+
+impl MlpExecutor {
+    /// Compile the given model graph from the artifacts.
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest, kind: ModelKind) -> Result<MlpExecutor> {
+        let path = manifest
+            .hlo
+            .get(kind.manifest_key())
+            .with_context(|| format!("manifest has no {}", kind.manifest_key()))?;
+        let exe = compile_hlo_file(client, path)?;
+        let mut weights = Vec::new();
+        for i in 0..manifest.weights.len() {
+            let (trits, (k, n)) = manifest.load_weight(i)?;
+            let wf: Vec<f32> = trits.iter().map(|&t| t as f32).collect();
+            weights.push(xla::Literal::vec1(&wf).reshape(&[k as i64, n as i64])?);
+        }
+        Ok(MlpExecutor {
+            exe,
+            weights,
+            batch: manifest.batch,
+            in_dim: *manifest.dims.first().unwrap_or(&64),
+            out_dim: *manifest.dims.last().unwrap_or(&10),
+        })
+    }
+
+    /// Run one padded batch of trit inputs; returns row-major logits for
+    /// the first `n_valid` rows.
+    pub fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>> {
+        if n_valid == 0 || n_valid > self.batch {
+            bail!("n_valid {} out of range 1..={}", n_valid, self.batch);
+        }
+        if trits.len() != n_valid * self.in_dim {
+            bail!("expected {} trits, got {}", n_valid * self.in_dim, trits.len());
+        }
+        // Pad to the fixed batch with zeros; trits cross as f32.
+        let mut buf = vec![0f32; self.batch * self.in_dim];
+        for (i, &t) in trits.iter().enumerate() {
+            buf[i] = t as f32;
+        }
+        let x = xla::Literal::vec1(&buf).reshape(&[self.batch as i64, self.in_dim as i64])?;
+        let mut args: Vec<&xla::Literal> = vec![&x];
+        args.extend(self.weights.iter());
+        let result = self.exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let logits = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(logits[..n_valid * self.out_dim].to_vec())
+    }
+
+    /// Classify a batch: argmax over logits.
+    pub fn classify(&self, trits: &[i8], n_valid: usize) -> Result<Vec<usize>> {
+        let logits = self.run_batch(trits, n_valid)?;
+        Ok(argmax_rows(&logits, self.out_dim))
+    }
+}
+
+/// The standalone CiM-matmul kernel executable (equivalence testing).
+pub struct KernelExecutor {
+    exe: xla::PjRtLoadedExecutable,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl KernelExecutor {
+    pub fn load(client: &xla::PjRtClient, manifest: &Manifest) -> Result<KernelExecutor> {
+        let path = manifest.hlo.get("kernel").context("manifest has no kernel")?;
+        let exe = compile_hlo_file(client, path)?;
+        let (m, k, n) = manifest.kernel_shape;
+        Ok(KernelExecutor { exe, m, k, n })
+    }
+
+    /// Run the kernel: x (m×k trits), w (k×n trits) → m×n i32 outputs.
+    pub fn run(&self, x: &[i8], w: &[i8]) -> Result<Vec<i32>> {
+        if x.len() != self.m * self.k || w.len() != self.k * self.n {
+            bail!("kernel operand size mismatch");
+        }
+        let xf: Vec<f32> = x.iter().map(|&t| t as f32).collect();
+        let wf: Vec<f32> = w.iter().map(|&t| t as f32).collect();
+        let xl = xla::Literal::vec1(&xf).reshape(&[self.m as i64, self.k as i64])?;
+        let wl = xla::Literal::vec1(&wf).reshape(&[self.k as i64, self.n as i64])?;
+        let result = self.exe.execute::<xla::Literal>(&[xl, wl])?[0][0].to_literal_sync()?;
+        let out = result.to_tuple1()?.to_vec::<f32>()?;
+        Ok(out.iter().map(|&f| f as i32).collect())
+    }
+}
+
+/// Compile an HLO-text file on the client.
+pub fn compile_hlo_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+    let proto = xla::HloModuleProto::from_text_file(path.to_str().context("path utf8")?)
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
+}
+
+/// New CPU PJRT client.
+pub fn cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu().context("creating PJRT CPU client")
+}
+
+/// Row-wise argmax helper.
+pub fn argmax_rows(flat: &[f32], width: usize) -> Vec<usize> {
+    flat.chunks(width)
+        .map(|row| {
+            row.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_rows_basic() {
+        let flat = [0.0, 2.0, 1.0, 5.0, 4.0, 3.0];
+        assert_eq!(argmax_rows(&flat, 3), vec![1, 0]);
+    }
+
+    // PJRT-dependent paths are covered by the `runtime_hlo` integration
+    // test (requires built artifacts + the CPU plugin).
+}

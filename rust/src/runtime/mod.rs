@@ -1,0 +1,9 @@
+//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text)
+//! and executes them on the CPU PJRT client. Python never runs here —
+//! the rust binary is self-contained once `make artifacts` has run.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{default_dir, Manifest};
+pub use executor::{cpu_client, KernelExecutor, MlpExecutor, ModelKind};

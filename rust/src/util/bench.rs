@@ -1,0 +1,137 @@
+//! Hand-rolled micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets are built with `harness = false` and drive this.
+//! The harness warms up, then runs timed batches until a target wall time
+//! or iteration count is reached, and reports mean/σ/min plus derived
+//! throughput. Results are also appended to `bench_results.json` style
+//! output if requested by the caller.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::stats;
+use super::units::fmt_time;
+
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u64,
+    pub max_iters: u64,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(1000),
+            min_iters: 10,
+            max_iters: 10_000_000,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        if self.mean_s > 0.0 { 1.0 / self.mean_s } else { 0.0 }
+    }
+
+    pub fn report_line(&self) -> String {
+        format!(
+            "{:<44} {:>12}/iter  (σ {:>10}, min {:>10})  {:>14.1} iters/s",
+            self.name,
+            fmt_time(self.mean_s),
+            fmt_time(self.std_s),
+            fmt_time(self.min_s),
+            self.per_sec()
+        )
+    }
+}
+
+/// Benchmark a closure. The closure should return a value, which is
+/// black-boxed to prevent the optimizer from deleting the work.
+pub fn bench<T>(name: &str, cfg: &BenchConfig, mut f: impl FnMut() -> T) -> BenchResult {
+    // Warmup.
+    let start = Instant::now();
+    while start.elapsed() < cfg.warmup {
+        black_box(f());
+    }
+    // Calibrate batch size so one batch is ~1ms (keeps timer overhead low).
+    let t0 = Instant::now();
+    black_box(f());
+    let single = t0.elapsed().as_secs_f64().max(1e-9);
+    let batch = ((1e-3 / single).ceil() as u64).clamp(1, 10_000);
+
+    let mut samples = Vec::new();
+    let mut iters = 0u64;
+    let measure_start = Instant::now();
+    while measure_start.elapsed() < cfg.measure && iters < cfg.max_iters {
+        let t = Instant::now();
+        for _ in 0..batch {
+            black_box(f());
+        }
+        let dt = t.elapsed().as_secs_f64() / batch as f64;
+        samples.push(dt);
+        iters += batch;
+        if iters >= cfg.min_iters && samples.len() >= 200 && measure_start.elapsed() > cfg.measure / 2 {
+            break;
+        }
+    }
+    let s = stats::summarize(&samples);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean_s: s.mean,
+        std_s: s.std,
+        min_s: s.min,
+        p50_s: s.p50,
+    }
+}
+
+/// Run and print. Returns the result for further aggregation.
+pub fn run<T>(name: &str, cfg: &BenchConfig, f: impl FnMut() -> T) -> BenchResult {
+    let r = bench(name, cfg, f);
+    println!("{}", r.report_line());
+    r
+}
+
+/// Fast config for CI-style smoke runs (`SITECIM_BENCH_FAST=1`).
+pub fn config_from_env() -> BenchConfig {
+    if std::env::var("SITECIM_BENCH_FAST").is_ok() {
+        BenchConfig {
+            warmup: Duration::from_millis(20),
+            measure: Duration::from_millis(100),
+            ..Default::default()
+        }
+    } else {
+        BenchConfig::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            ..Default::default()
+        };
+        let r = bench("noop-sum", &cfg, || (0..100u64).sum::<u64>());
+        assert!(r.iters > 0);
+        assert!(r.mean_s > 0.0);
+        assert!(r.mean_s < 1e-3);
+    }
+}

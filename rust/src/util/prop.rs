@@ -1,0 +1,118 @@
+//! Hand-rolled property-testing driver (no proptest offline).
+//!
+//! `check` runs a closure over `n` generated cases from a seeded RNG and,
+//! on failure, retries with a simple input-shrinking loop when the
+//! generator supports it (we shrink by re-generating with smaller size
+//! hints, which is what matters for vector-shaped inputs).
+
+use super::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint passed to the generator (e.g. vector length).
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 256, seed: 0xC1A0_5EED, max_size: 64 }
+    }
+}
+
+/// Outcome of a single case.
+pub type CaseResult = Result<(), String>;
+
+/// Run a property: `gen` builds an input of roughly the given size,
+/// `prop` checks it. Panics with a reproducible report on failure.
+pub fn check<T: std::fmt::Debug>(
+    cfg: &Config,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> CaseResult,
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        // Ramp sizes up so early failures are small.
+        let size = 1 + (cfg.max_size * case) / cfg.cases.max(1);
+        let input = gen(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // Shrink: try progressively smaller sizes from a derived stream.
+            let mut best: (usize, T, String) = (size, input, msg);
+            let mut srng = Rng::new(cfg.seed ^ 0xDEAD_BEEF);
+            let mut s = size;
+            while s > 1 {
+                s /= 2;
+                for _ in 0..16 {
+                    let cand = gen(&mut srng, s);
+                    if let Err(m) = prop(&cand) {
+                        best = (s, cand, m);
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {:#x}):\n  input (size {}): {:?}\n  error: {}",
+                cfg.seed, best.0, best.1, best.2
+            );
+        }
+    }
+}
+
+/// Convenience: assert two f64 are close.
+pub fn close(a: f64, b: f64, tol: f64) -> CaseResult {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{a} !~ {b} (tol {tol})"))
+    }
+}
+
+/// Convenience: assert equality with a message.
+pub fn eq<T: PartialEq + std::fmt::Debug>(a: T, b: T) -> CaseResult {
+    if a == b {
+        Ok(())
+    } else {
+        Err(format!("{a:?} != {b:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            &Config { cases: 50, ..Default::default() },
+            |r, size| r.ternary_vec(size, 0.3),
+            |v| {
+                count += 1;
+                if v.iter().all(|&x| (-1..=1).contains(&(x as i32))) {
+                    Ok(())
+                } else {
+                    Err("out of range".into())
+                }
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_report() {
+        check(
+            &Config { cases: 20, ..Default::default() },
+            |r, size| r.ternary_vec(size.max(4), 0.0),
+            |v| if v.len() < 3 { Ok(()) } else { Err("too long".into()) },
+        );
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(close(1.0, 1.0 + 1e-12, 1e-9).is_ok());
+        assert!(close(1.0, 2.0, 1e-9).is_err());
+    }
+}

@@ -1,0 +1,135 @@
+//! ASCII table renderer for the reproduction harness.
+//!
+//! Every figure/table reproduction prints through this so the output is
+//! uniform and easy to diff against EXPERIMENTS.md.
+
+/// A simple left-aligned-first-column table.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+    notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>) -> Self {
+        Self { title: title.into(), ..Default::default() }
+    }
+
+    pub fn header(mut self, cols: &[&str]) -> Self {
+        self.header = cols.iter().map(|s| s.to_string()).collect();
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        let owned: Vec<String> = cells.iter().map(|s| s.to_string()).collect();
+        self.row(&owned)
+    }
+
+    pub fn note(&mut self, n: impl Into<String>) -> &mut Self {
+        self.notes.push(n.into());
+        self
+    }
+
+    /// Render to a string.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        let sep: String = widths.iter().map(|w| format!("+{}", "-".repeat(w + 2))).collect::<String>() + "+\n";
+        out.push_str(&sep);
+        out.push('|');
+        for (i, h) in self.header.iter().enumerate() {
+            out.push_str(&format!(" {:<width$} |", h, width = widths[i]));
+        }
+        out.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push('|');
+            for i in 0..ncols {
+                let c = row.get(i).map(String::as_str).unwrap_or("");
+                let pad = widths[i].saturating_sub(c.chars().count());
+                if i == 0 {
+                    out.push_str(&format!(" {}{} |", c, " ".repeat(pad)));
+                } else {
+                    out.push_str(&format!(" {}{} |", " ".repeat(pad), c));
+                }
+            }
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        for n in &self.notes {
+            out.push_str(&format!("  note: {n}\n"));
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    pub fn n_rows(&self) -> usize {
+        self.rows.len()
+    }
+}
+
+/// Render a simple two-column "series" (x, y) block — used for figure-style
+/// outputs like Fig 4(c)'s RBL-voltage-vs-discharges curve.
+pub fn series(title: &str, xlabel: &str, ylabel: &str, pts: &[(f64, f64)]) -> String {
+    let mut t = Table::new(title).header(&[xlabel, ylabel]);
+    for &(x, y) in pts {
+        t.row(&[format!("{x}"), format!("{y:.4}")]);
+    }
+    t.render()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("T").header(&["name", "value"]);
+        t.row_strs(&["a", "1"]);
+        t.row_strs(&["longer", "23"]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        assert!(r.contains("| a      |"));
+        assert!(r.contains("| longer |"));
+        // right-aligned numeric column
+        assert!(r.contains("|     1 |"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = Table::new("T").header(&["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+
+    #[test]
+    fn series_block() {
+        let s = series("fig", "n", "v", &[(1.0, 0.95), (2.0, 0.9)]);
+        assert!(s.contains("fig"));
+        assert!(s.contains("0.9500"));
+    }
+}

@@ -1,0 +1,132 @@
+//! SI-unit formatting and the unit conventions used across the simulator.
+//!
+//! Internal convention (documented once, used everywhere):
+//! - time:     seconds (f64)
+//! - energy:   joules (f64)
+//! - power:    watts
+//! - voltage:  volts
+//! - current:  amperes
+//! - capacitance: farads
+//! - resistance:  ohms
+//! - area:     square metres (helpers exist for F² at a given node pitch)
+
+/// Format a value with an SI prefix, e.g. `1.3e-9 s` -> `"1.30 ns"`.
+pub fn si(value: f64, unit: &str) -> String {
+    if value == 0.0 {
+        return format!("0 {unit}");
+    }
+    let neg = value < 0.0;
+    let v = value.abs();
+    const PREFIXES: &[(f64, &str)] = &[
+        (1e12, "T"),
+        (1e9, "G"),
+        (1e6, "M"),
+        (1e3, "k"),
+        (1.0, ""),
+        (1e-3, "m"),
+        (1e-6, "µ"),
+        (1e-9, "n"),
+        (1e-12, "p"),
+        (1e-15, "f"),
+        (1e-18, "a"),
+    ];
+    for &(scale, prefix) in PREFIXES {
+        if v >= scale {
+            let x = v / scale;
+            let s = if x >= 100.0 {
+                format!("{x:.0}")
+            } else if x >= 10.0 {
+                format!("{x:.1}")
+            } else {
+                format!("{x:.2}")
+            };
+            return format!("{}{s} {prefix}{unit}", if neg { "-" } else { "" });
+        }
+    }
+    format!("{value:.3e} {unit}")
+}
+
+/// Convenience wrappers for the common quantities.
+pub fn fmt_time(seconds: f64) -> String {
+    si(seconds, "s")
+}
+pub fn fmt_energy(joules: f64) -> String {
+    si(joules, "J")
+}
+pub fn fmt_power(watts: f64) -> String {
+    si(watts, "W")
+}
+pub fn fmt_cap(farads: f64) -> String {
+    si(farads, "F")
+}
+pub fn fmt_volt(volts: f64) -> String {
+    si(volts, "V")
+}
+pub fn fmt_amp(amps: f64) -> String {
+    si(amps, "A")
+}
+
+/// Format a ratio like `6.74` as `"6.74X"`.
+pub fn fmt_x(r: f64) -> String {
+    format!("{r:.2}X")
+}
+
+/// Format a fraction like `0.88` as `"88%"`.
+pub fn fmt_pct(f: f64) -> String {
+    format!("{:.0}%", f * 100.0)
+}
+
+/// Area helpers: technology feature size `f_m` (metres per F). Cell areas
+/// in the layout model are computed in F² then converted.
+pub fn f2_to_m2(area_f2: f64, f_m: f64) -> f64 {
+    area_f2 * f_m * f_m
+}
+
+/// Bytes with binary prefixes (for VMEM footprint reporting).
+pub fn fmt_bytes(bytes: f64) -> String {
+    const P: &[(f64, &str)] = &[(1024.0 * 1024.0 * 1024.0, "GiB"), (1024.0 * 1024.0, "MiB"), (1024.0, "KiB")];
+    for &(s, p) in P {
+        if bytes >= s {
+            return format!("{:.2} {p}", bytes / s);
+        }
+    }
+    format!("{bytes:.0} B")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn si_picks_prefix() {
+        assert_eq!(si(1.3e-9, "s"), "1.30 ns");
+        assert_eq!(si(2.5e-12, "J"), "2.50 pJ");
+        assert_eq!(si(1e6, "Hz"), "1.00 MHz");
+        assert_eq!(si(0.04, "V"), "40.0 mV");
+    }
+
+    #[test]
+    fn si_zero_and_negative() {
+        assert_eq!(si(0.0, "s"), "0 s");
+        assert_eq!(si(-3.0e-3, "A"), "-3.00 mA");
+    }
+
+    #[test]
+    fn ratio_and_pct() {
+        assert_eq!(fmt_x(6.743), "6.74X");
+        assert_eq!(fmt_pct(0.88), "88%");
+    }
+
+    #[test]
+    fn f2_conversion() {
+        // 100 F² at 45 nm = 100 * (45e-9)^2
+        let a = f2_to_m2(100.0, 45e-9);
+        assert!((a - 100.0 * 45e-9 * 45e-9).abs() < 1e-24);
+    }
+
+    #[test]
+    fn bytes_format() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(4.0 * 1024.0 * 1024.0), "4.00 MiB");
+    }
+}

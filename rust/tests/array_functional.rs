@@ -1,0 +1,60 @@
+//! Integration: bit-level array functional simulation agrees with the
+//! saturating-MAC specification across flavors, techs and sparsities.
+use sitecim::array::mac::{dot_exact, dot_ref, Flavor};
+use sitecim::array::{NearMemoryArray, SiTeCim1Array, SiTeCim2Array};
+use sitecim::device::Tech;
+use sitecim::util::rng::Rng;
+
+#[test]
+fn full_256x256_arrays_match_reference() {
+    let mut rng = Rng::new(2);
+    for tech in Tech::ALL {
+        let w = rng.ternary_vec(256 * 256, 0.5);
+        let inputs = rng.ternary_vec(256, 0.5);
+        let mut a1 = SiTeCim1Array::new(tech);
+        a1.write_matrix(&w);
+        assert_eq!(a1.dot(&inputs), dot_ref(a1.storage(), &inputs, Flavor::Cim1));
+        let mut a2 = SiTeCim2Array::new(tech);
+        a2.write_matrix(&w);
+        assert_eq!(a2.dot(&inputs), dot_ref(a2.storage(), &inputs, Flavor::Cim2));
+    }
+}
+
+#[test]
+fn nm_baseline_is_exact_and_cim_is_close_at_sparsity() {
+    let mut rng = Rng::new(3);
+    let w = rng.ternary_vec(256 * 128, 0.55);
+    let inputs = rng.ternary_vec(256, 0.55);
+    let mut nm = NearMemoryArray::with_dims(Tech::Sram8T, 256, 128);
+    nm.write_matrix(&w);
+    let exact = nm.dot(&inputs);
+    let mut c1 = SiTeCim1Array::with_dims(Tech::Sram8T, 256, 128);
+    c1.write_matrix(&w);
+    let sat = c1.dot(&inputs);
+    assert_eq!(exact, dot_exact(c1.storage(), &inputs));
+    let close = sat.iter().zip(&exact).filter(|&(&s, &e)| (s as i64 - e).abs() <= 2).count();
+    assert!(close > 120, "only {close}/128 close");
+}
+
+#[test]
+fn analog_paths_match_digital_under_ideal_circuits() {
+    let mut rng = Rng::new(4);
+    let mut a1 = SiTeCim1Array::with_dims(Tech::Edram3T, 64, 64);
+    a1.write_matrix(&rng.ternary_vec(64 * 64, 0.4));
+    let inputs = rng.ternary_vec(64, 0.4);
+    let mut zrng = Rng::new(5);
+    assert_eq!(a1.dot_analog_mc(&inputs, 0.0, &mut zrng), a1.dot(&inputs));
+}
+
+#[test]
+fn read_after_cim_preserves_weights() {
+    // CiM cycles must not disturb stored state (non-destructive compute).
+    let mut rng = Rng::new(6);
+    let w = rng.ternary_vec(64 * 32, 0.3);
+    let mut a = SiTeCim1Array::with_dims(Tech::Femfet3T, 64, 32);
+    a.write_matrix(&w);
+    let _ = a.dot(&rng.ternary_vec(64, 0.3));
+    for r in 0..64 {
+        assert_eq!(a.read_row(r), w[r * 32..(r + 1) * 32]);
+    }
+}

@@ -1,0 +1,45 @@
+//! Integration: the array-level metric models reproduce the paper's
+//! Fig 9 / Fig 11 / §V.3 headline ratios (bands per DESIGN.md §5).
+use sitecim::array::area::{cell_overhead, macro_overhead_ratio, Design};
+use sitecim::array::metrics::{all_designs, ArrayGeom};
+use sitecim::device::{PeriphParams, Tech, TechParams};
+
+#[test]
+fn headline_array_ratios_reproduced() {
+    let pp = PeriphParams::default_45nm();
+    for tech in Tech::ALL {
+        let p = TechParams::new(tech);
+        let [nm, c1, c2] = all_designs(&p, &pp, ArrayGeom::default());
+        // "up to 88% lower CiM latency and 78% CiM energy savings"
+        let lat_red1 = 1.0 - c1.mac.latency / nm.mac.latency;
+        let e_sav1 = 1.0 - c1.mac.energy / nm.mac.energy;
+        assert!(lat_red1 > 0.8, "{}: {lat_red1}", tech.name());
+        assert!(e_sav1 > 0.6, "{}: {e_sav1}", tech.name());
+        // CiM II in between.
+        assert!(c2.mac.latency > c1.mac.latency && c2.mac.latency < nm.mac.latency);
+    }
+}
+
+#[test]
+fn area_ratios_reproduced() {
+    let pp = PeriphParams::default_45nm();
+    let expect = [(Tech::Sram8T, 0.18), (Tech::Edram3T, 0.34), (Tech::Femfet3T, 0.34)];
+    for (tech, c1) in expect {
+        let p = TechParams::new(tech);
+        assert!((cell_overhead(&p, Design::Cim1) - c1).abs() < 0.04, "{}", tech.name());
+        assert!((cell_overhead(&p, Design::Cim2) - 0.0625).abs() < 0.01);
+        assert!(macro_overhead_ratio(&p, &pp, Design::Cim1) > macro_overhead_ratio(&p, &pp, Design::Cim2));
+    }
+}
+
+#[test]
+fn geometry_scaling_is_monotone() {
+    // Bigger arrays cost more per op, smaller cost less — sanity of the
+    // parameterized geometry (ablation support).
+    let pp = PeriphParams::default_45nm();
+    let p = TechParams::new(Tech::Sram8T);
+    let small = all_designs(&p, &pp, ArrayGeom { n_rows: 128, n_cols: 128, n_active: 16 })[1];
+    let big = all_designs(&p, &pp, ArrayGeom { n_rows: 256, n_cols: 256, n_active: 16 })[1];
+    assert!(big.mac.energy > small.mac.energy);
+    assert!(big.read.latency > small.read.latency);
+}

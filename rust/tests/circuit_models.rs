@@ -1,0 +1,38 @@
+//! Integration: circuit-layer models hold their paper anchors together.
+use sitecim::circuit::bitline::VoltageBitline;
+use sitecim::circuit::sense_margin::{current_mode_margins, voltage_mode_margins, CurrentModeSetup};
+use sitecim::circuit::{CurrentAdc, VoltageAdc};
+use sitecim::device::{Tech, TechParams};
+
+#[test]
+fn voltage_ladder_and_adc_consistent_end_to_end() {
+    let bl = VoltageBitline::new(1.0);
+    let adc = VoltageAdc::ideal(&bl);
+    for n in 0..=16usize {
+        assert_eq!(adc.quantize(bl.v_after(n)), n.min(8) as u32, "n={n}");
+    }
+}
+
+#[test]
+fn margins_anchor_both_flavors_at_8() {
+    let v = voltage_mode_margins(1.0, 16);
+    assert!(v[8].margin >= 0.0399 && v[9].margin < 0.040);
+    for tech in Tech::ALL {
+        let p = TechParams::new(tech);
+        let setup = CurrentModeSetup { n_rows_block_total: 16, c_lrbl: 1e-15, t_sense: 0.45e-9 };
+        let c = current_mode_margins(&p, &setup);
+        assert!(c[1].margin > c[16].margin, "{}", tech.name());
+    }
+}
+
+#[test]
+fn current_adc_and_comparator_pipeline() {
+    use sitecim::circuit::sensing::{comparator_sign, subtractor_magnitude_units};
+    let adc = CurrentAdc::ideal();
+    let p = TechParams::new(Tech::Femfet3T);
+    let unit = p.i_lrs;
+    // 5 LRS on RBL1, 2 on RBL2.
+    let (i1, i2) = (5.0 * unit, 2.0 * unit);
+    let o = comparator_sign(i1, i2) * adc.quantize(subtractor_magnitude_units(i1, i2, unit)) as i32;
+    assert_eq!(o, 3);
+}

@@ -1,0 +1,48 @@
+//! Integration: serving coordinator over the PJRT runtime.
+//! Skips gracefully if artifacts are missing.
+use sitecim::coordinator::{BatchPolicy, Server, ServerConfig};
+use sitecim::runtime::{default_dir, Manifest};
+
+fn artifacts_available() -> bool {
+    Manifest::load(default_dir()).is_ok()
+}
+
+#[test]
+fn serves_requests_with_batching() {
+    if !artifacts_available() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(default_dir()).unwrap();
+    let (x, y) = manifest.load_test_set().unwrap();
+    let mut cfg = ServerConfig::new(default_dir());
+    cfg.n_workers = 2;
+    cfg.policy = BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(1) };
+    let server = Server::start(cfg).unwrap();
+
+    let n = 256;
+    let mut pending = Vec::new();
+    for i in 0..n {
+        let input = x[i * manifest.in_dim..(i + 1) * manifest.in_dim].to_vec();
+        pending.push((i, server.infer_async(input).unwrap()));
+    }
+    let mut correct = 0;
+    for (i, rx) in pending {
+        let r = rx.recv().unwrap().unwrap();
+        correct += usize::from(r.pred == y[i] as usize);
+    }
+    assert!(correct as f64 / n as f64 > 0.95, "accuracy {correct}/{n}");
+    assert!(server.metrics.avg_batch_size() > 2.0, "batching ineffective");
+    assert!(server.metrics.sim_energy_j() > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn rejects_malformed_input() {
+    if !artifacts_available() {
+        return;
+    }
+    let server = Server::start(ServerConfig::new(default_dir())).unwrap();
+    assert!(server.infer(vec![0i8; 3]).is_err());
+    server.shutdown();
+}

@@ -1,0 +1,27 @@
+//! Integration: benchmark workloads and ternary quantization.
+use sitecim::dnn::{benchmarks, ternary};
+use sitecim::util::rng::Rng;
+
+#[test]
+fn suite_matches_paper_lineup() {
+    let names: Vec<String> = benchmarks::suite().into_iter().map(|n| n.name).collect();
+    assert_eq!(names, ["AlexNet", "ResNet34", "Inception", "LSTM", "GRU"]);
+}
+
+#[test]
+fn all_benchmarks_exceed_onchip_capacity() {
+    // The paper's suite streams weights (> 2M ternary words).
+    for net in benchmarks::suite() {
+        assert!(net.total_weight_words() > 2 * 1024 * 1024, "{}", net.name);
+    }
+}
+
+#[test]
+fn twn_quantization_roundtrip_statistics() {
+    let mut rng = Rng::new(11);
+    let w: Vec<f32> = (0..20_000).map(|_| rng.normal() as f32).collect();
+    let t = ternary::ternarize(&w);
+    let s = ternary::sparsity(&t);
+    assert!((0.3..0.6).contains(&s), "sparsity {s}");
+    assert!(ternary::twn_scale(&w) > 0.5);
+}

@@ -1,0 +1,130 @@
+//! Property tests (hand-rolled driver, util::prop) on the core
+//! invariants of the SiTe CiM semantics.
+use sitecim::array::encoding::{decode_output, rbl_current_cim2, rbl_pulldown_cim1};
+use sitecim::array::mac::{dot_exact, dot_ref, Flavor, GROUP_ROWS, SAT};
+use sitecim::array::TernaryStorage;
+use sitecim::util::prop::{check, Config};
+use sitecim::util::rng::Rng;
+
+fn storage_and_inputs(rng: &mut Rng, groups: usize, cols: usize, pz: f64) -> (TernaryStorage, Vec<i8>) {
+    let rows = groups.max(1) * GROUP_ROWS;
+    let mut s = TernaryStorage::new(rows, cols);
+    s.write_matrix(&rng.ternary_vec(rows * cols, pz));
+    let inputs = rng.ternary_vec(rows, pz);
+    (s, inputs)
+}
+
+#[test]
+fn prop_group_outputs_bounded_by_sat() {
+    check(
+        &Config { cases: 128, ..Default::default() },
+        |rng, size| { let pz = rng.f64(); storage_and_inputs(rng, 1 + size % 4, 8, pz) },
+        |(s, inputs)| {
+            for flavor in [Flavor::Cim1, Flavor::Cim2] {
+                let groups = (s.n_rows() / GROUP_ROWS) as i32;
+                for &o in &dot_ref(s, inputs, flavor) {
+                    if o.abs() > groups * SAT as i32 {
+                        return Err(format!("output {o} exceeds {}", groups * SAT as i32));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_saturating_never_overshoots_exact() {
+    // |saturated| <= |exact| is NOT generally true (sign mixes), but the
+    // saturated result must never move further from zero than exact when
+    // exact is within ±8 per group — i.e. when nothing clamps, equality.
+    check(
+        &Config { cases: 96, ..Default::default() },
+        |rng, size| storage_and_inputs(rng, 1 + size % 3, 6, 0.75),
+        |(s, inputs)| {
+            // Sparse enough that counts stay < 8 per group → exact match.
+            let sat = dot_ref(s, inputs, Flavor::Cim1);
+            let exact = dot_exact(s, inputs);
+            let mut max_ab = 0;
+            for cycle in 0..s.n_rows() / GROUP_ROWS {
+                for col in 0..s.n_cols() {
+                    let rows = Flavor::Cim1.group_rows(s.n_rows(), cycle);
+                    let (mut a, mut b) = (0, 0);
+                    for &r in &rows {
+                        match inputs[r] as i32 * s.read(r, col) as i32 {
+                            1 => a += 1,
+                            -1 => b += 1,
+                            _ => {}
+                        }
+                    }
+                    max_ab = max_ab.max(a.max(b));
+                }
+            }
+            if max_ab <= 8 {
+                for (o, e) in sat.iter().zip(&exact) {
+                    if *o as i64 != *e {
+                        return Err(format!("unclamped case diverged: {o} vs {e}"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_linearity_in_input_negation() {
+    // O(-I, W) = -O(I, W) for both flavors (the cross-coupling symmetry).
+    check(
+        &Config { cases: 96, ..Default::default() },
+        |rng, size| storage_and_inputs(rng, 1 + size % 3, 8, 0.5),
+        |(s, inputs)| {
+            let neg: Vec<i8> = inputs.iter().map(|&i| -i).collect();
+            for flavor in [Flavor::Cim1, Flavor::Cim2] {
+                let a = dot_ref(s, inputs, flavor);
+                let b = dot_ref(s, &neg, flavor);
+                if a.iter().zip(&b).any(|(x, y)| *x != -*y) {
+                    return Err(format!("{flavor:?} not odd in I"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_cell_truth_tables_exhaustive() {
+    for i in [-1i8, 0, 1] {
+        for w in [-1i8, 0, 1] {
+            let (r1, r2) = rbl_pulldown_cim1(i, w);
+            assert_eq!(decode_output(r1, r2), i * w);
+            let (c1, c2) = rbl_current_cim2(i, w);
+            assert_eq!(decode_output(c1, c2), i * w);
+        }
+    }
+}
+
+#[test]
+fn prop_storage_roundtrip_random() {
+    check(
+        &Config { cases: 64, ..Default::default() },
+        |rng, size| {
+            let cols = 1 + size % 16;
+            let rows = 16 * (1 + size % 4);
+            let w = rng.ternary_vec(rows * cols, 0.4);
+            (rows, cols, w)
+        },
+        |(rows, cols, w)| {
+            let mut s = TernaryStorage::new(*rows, *cols);
+            s.write_matrix(w);
+            for r in 0..*rows {
+                for c in 0..*cols {
+                    if s.read(r, c) != w[r * cols + c] {
+                        return Err(format!("roundtrip failed at ({r},{c})"));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,0 +1,37 @@
+//! Integration: every figure/table renderer produces paper-comparable
+//! output (smoke + key-content checks).
+use sitecim::repro;
+
+#[test]
+fn fig4_and_fig7_render_margin_tables() {
+    let f4 = repro::fig4();
+    assert!(f4.contains("Fig 4(c)"));
+    assert!(f4.contains("50"));
+    let f7 = repro::fig7();
+    assert!(f7.contains("Fig 7(c)"));
+    assert!(f7.contains("diminishing"));
+}
+
+#[test]
+fn array_figures_have_all_techs() {
+    for s in [repro::fig9(), repro::fig11(), repro::area_table(), repro::cim1_vs_cim2()] {
+        for tech in ["8T-SRAM", "3T-eDRAM", "3T-FEMFET"] {
+            assert!(s.contains(tech), "missing {tech}");
+        }
+    }
+}
+
+#[test]
+fn system_figures_have_all_benchmarks() {
+    let s = repro::fig12();
+    for b in ["AlexNet", "ResNet34", "Inception", "LSTM", "GRU", "AVG (paper)"] {
+        assert!(s.contains(b), "missing {b}");
+    }
+    assert!(repro::fig13().contains("SiTe CiM II"));
+}
+
+#[test]
+fn error_prob_table_cites_paper_value() {
+    let s = repro::error_prob();
+    assert!(s.contains("3.10e-3"));
+}

@@ -1,0 +1,76 @@
+//! Integration: the AOT HLO artifacts execute correctly on PJRT and are
+//! numerically equivalent to the rust functional array simulation —
+//! the three-layer contract. Skips gracefully without artifacts.
+use sitecim::array::mac::{dot_ref, Flavor};
+use sitecim::array::TernaryStorage;
+use sitecim::runtime::{cpu_client, default_dir, KernelExecutor, Manifest, MlpExecutor, ModelKind};
+use sitecim::util::rng::Rng;
+
+fn manifest() -> Option<Manifest> {
+    Manifest::load(default_dir()).ok()
+}
+
+#[test]
+fn kernel_hlo_equals_rust_functional_sim() {
+    let Some(m) = manifest() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let client = cpu_client().unwrap();
+    let k = KernelExecutor::load(&client, &m).unwrap();
+    let mut rng = Rng::new(31);
+    for trial in 0..5 {
+        let x = rng.ternary_vec(k.m * k.k, 0.4);
+        let w = rng.ternary_vec(k.k * k.n, 0.4);
+        let hlo = k.run(&x, &w).unwrap();
+        // Rust reference: weights into storage, dot per input row.
+        let mut st = TernaryStorage::new(k.k, k.n);
+        st.write_matrix(&w);
+        for row in 0..k.m {
+            let inputs = &x[row * k.k..(row + 1) * k.k];
+            let want = dot_ref(&st, inputs, Flavor::Cim1);
+            let got: Vec<i32> = hlo[row * k.n..(row + 1) * k.n].to_vec();
+            assert_eq!(got, want, "trial {trial} row {row}");
+        }
+    }
+}
+
+#[test]
+fn mlp_hlo_accuracy_matches_aot_recording() {
+    let Some(m) = manifest() else {
+        return;
+    };
+    let client = cpu_client().unwrap();
+    let (x, y) = m.load_test_set().unwrap();
+    for (kind, key) in [
+        (ModelKind::Exact, "exact"),
+        (ModelKind::Cim1, "cim1"),
+        (ModelKind::Cim2, "cim2"),
+    ] {
+        let exe = MlpExecutor::load(&client, &m, kind).unwrap();
+        let n = m.test_n;
+        let mut correct = 0usize;
+        for base in (0..n).step_by(exe.batch) {
+            let nb = exe.batch.min(n - base);
+            let preds = exe.classify(&x[base * m.in_dim..(base + nb) * m.in_dim], nb).unwrap();
+            correct += preds.iter().zip(&y[base..base + nb]).filter(|(p, &l)| **p == l as usize).count();
+        }
+        let acc = correct as f64 / n as f64;
+        let aot = m.aot_accuracy[key];
+        assert!((acc - aot).abs() < 0.01, "{key}: rust {acc} vs aot {aot}");
+    }
+}
+
+#[test]
+fn batch_padding_is_neutral() {
+    let Some(m) = manifest() else {
+        return;
+    };
+    let client = cpu_client().unwrap();
+    let exe = MlpExecutor::load(&client, &m, ModelKind::Cim1).unwrap();
+    let (x, _) = m.load_test_set().unwrap();
+    // Same sample alone vs in a full batch must classify identically.
+    let one = exe.classify(&x[..m.in_dim], 1).unwrap();
+    let full = exe.classify(&x[..exe.batch * m.in_dim], exe.batch).unwrap();
+    assert_eq!(one[0], full[0]);
+}

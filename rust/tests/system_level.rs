@@ -1,0 +1,27 @@
+//! Integration: system-level reproduction (Figs 12/13 headline claims).
+use sitecim::array::area::Design;
+use sitecim::device::Tech;
+use sitecim::repro::system::averages;
+
+#[test]
+fn headline_claims_hold() {
+    // "up to 7X throughput boost and up to 2.5X energy reduction"
+    let mut best_speed: f64 = 0.0;
+    let mut best_energy: f64 = 0.0;
+    for tech in Tech::ALL {
+        let (sc, _, er) = averages(Design::Cim1, tech);
+        best_speed = best_speed.max(sc);
+        best_energy = best_energy.max(er);
+    }
+    assert!(best_speed > 6.0 && best_speed < 10.0, "max speedup {best_speed:.2}");
+    assert!(best_energy > 2.0, "max energy reduction {best_energy:.2}");
+}
+
+#[test]
+fn cim2_system_trails_cim1_but_beats_nm() {
+    for tech in Tech::ALL {
+        let (s1, _, _) = averages(Design::Cim1, tech);
+        let (s2, _, _) = averages(Design::Cim2, tech);
+        assert!(s2 > 1.0 && s2 < s1, "{}: {s2} vs {s1}", tech.name());
+    }
+}
