@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use sitecim::arch::{AccelConfig, Accelerator};
 use sitecim::array::variation::SIGMA_VTH_SENSE_V;
-use sitecim::array::{SiTeCim1Array, TernaryStorage};
+use sitecim::array::{CimArray, SiTeCim1Array, TernaryStorage};
 use sitecim::coordinator::server::manifest_network;
 use sitecim::device::Tech;
 use sitecim::array::area::Design;
@@ -51,19 +51,7 @@ fn array_forward(
             arr.dot(&padded)
         };
         if li + 1 < arrays.len() {
-            let theta = thresholds[li];
-            h = out
-                .iter()
-                .map(|&z| {
-                    if (z as f64) > theta {
-                        1
-                    } else if (z as f64) < -theta {
-                        -1
-                    } else {
-                        0
-                    }
-                })
-                .collect();
+            h = sitecim::dnn::ternary::ternarize_acts_i32(&out, thresholds[li]);
         } else {
             // Final layer: argmax.
             return out

@@ -5,7 +5,7 @@
 //! Run: cargo run --release --example quickstart
 
 use sitecim::array::metrics::{all_designs, ArrayGeom};
-use sitecim::array::SiTeCim1Array;
+use sitecim::array::{CimArray, SiTeCim1Array};
 use sitecim::device::{PeriphParams, Tech, TechParams};
 use sitecim::util::rng::Rng;
 use sitecim::util::units::{fmt_energy, fmt_time};

@@ -1,10 +1,24 @@
 //! L3 hot-path micro-benchmarks: the functional array MAC (bit-packed
-//! fast path vs scalar reference vs analog model). §Perf L3(a).
-use sitecim::array::mac::{dot_fast_cim1, dot_ref, Flavor};
-use sitecim::array::{SiTeCim1Array, TernaryStorage};
+//! fast paths vs scalar reference vs analog model) and the tiled GEMM
+//! engine (single- vs multi-threaded, all three backends). §Perf L3(a).
+//!
+//! Emits `BENCH_engine.json` next to the working directory so future PRs
+//! can track the engine's perf trajectory.
+//!
+//! `SITECIM_BENCH_FAST=1` shrinks the GEMM to a smoke size for CI.
+use sitecim::array::mac::{dot_fast, dot_fast_cim1, dot_ref, Flavor};
+use sitecim::array::{CimArray, Design, SiTeCim1Array, TernaryStorage};
 use sitecim::device::Tech;
-use sitecim::util::bench::{config_from_env, run};
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::util::bench::{config_from_env, run, BenchResult};
 use sitecim::util::rng::Rng;
+
+struct EngineEntry {
+    design: Design,
+    threads: usize,
+    result: BenchResult,
+    gmacs_per_s: f64,
+}
 
 fn main() {
     let cfg = config_from_env();
@@ -14,7 +28,8 @@ fn main() {
     let inputs = rng.ternary_vec(256, 0.5);
 
     println!("== array_bench (256x256 ternary array, full dot product) ==");
-    let fast = run("dot_fast_cim1 (bit-packed)", &cfg, || dot_fast_cim1(&storage, &inputs));
+    let fast = run("dot_fast cim1 (bit-packed)", &cfg, || dot_fast_cim1(&storage, &inputs));
+    run("dot_fast cim2 (stride-masked)", &cfg, || dot_fast(&storage, &inputs, Flavor::Cim2));
     let slow = run("dot_ref cim1 (scalar spec)", &cfg, || dot_ref(&storage, &inputs, Flavor::Cim1));
     run("dot_ref cim2 (strided)", &cfg, || dot_ref(&storage, &inputs, Flavor::Cim2));
 
@@ -35,4 +50,61 @@ fn main() {
         "functional sim rate: {:.1} M dot-products/s/array (hardware would do ~80 M/s)",
         1.0 / fast.mean_s / 1e6
     );
+
+    // ---- batched GEMM over the tiled engine ----
+    let fast_mode = std::env::var("SITECIM_BENCH_FAST").is_ok();
+    let (m, k, n) = if fast_mode { (32, 256, 256) } else { (1024, 1024, 1024) };
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    println!("\n== engine_bench (ternary GEMM {m}x{k}x{n}, pool of 32 256x256 arrays) ==");
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    let macs = (m * k * n) as f64;
+
+    let mut entries: Vec<EngineEntry> = Vec::new();
+    for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+        for t in [1usize, threads] {
+            let engine =
+                TernaryGemmEngine::new(EngineConfig::new(design, Tech::Femfet3T).with_threads(t));
+            let name = format!("engine {:<11} {t:>2} thread(s)", format!("{design:?}"));
+            let result = run(&name, &cfg, || engine.gemm(&x, &w, m, k, n));
+            let gmacs_per_s = macs / result.mean_s / 1e9;
+            entries.push(EngineEntry { design, threads: t, result, gmacs_per_s });
+        }
+    }
+
+    println!();
+    for pair in entries.chunks(2) {
+        let (single, multi) = (&pair[0], &pair[1]);
+        let speedup = single.result.mean_s / multi.result.mean_s;
+        println!(
+            "{:?}: {:.2} GMAC/s single → {:.2} GMAC/s on {} threads ({speedup:.2}x){}",
+            single.design,
+            single.gmacs_per_s,
+            multi.gmacs_per_s,
+            multi.threads,
+            if speedup > 1.0 { "" } else { "  ** multi-thread NOT faster **" }
+        );
+    }
+
+    // ---- perf-trajectory record ----
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"engine_gemm\",\n  \"m\": {m},\n  \"k\": {k},\n  \"n\": {n},\n  \"fast_mode\": {fast_mode},\n  \"results\": [\n"
+    ));
+    for (i, e) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"design\": \"{:?}\", \"threads\": {}, \"mean_s\": {:.6}, \"min_s\": {:.6}, \"gmacs_per_s\": {:.3}}}{}\n",
+            e.design,
+            e.threads,
+            e.result.mean_s,
+            e.result.min_s,
+            e.gmacs_per_s,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_engine.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_engine.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_engine.json: {e}"),
+    }
 }

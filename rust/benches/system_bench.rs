@@ -1,6 +1,9 @@
 //! System-simulator benchmarks: full benchmark-suite evaluation cost —
-//! this is what `figures --fig12/--fig13` pays. §Perf L3(b).
-use sitecim::arch::{AccelConfig, Accelerator};
+//! this is what `figures --fig12/--fig13` pays — plus the functional
+//! co-simulation path (analytic accounting vs executed engine). §Perf L3(b).
+use std::time::Instant;
+
+use sitecim::arch::{AccelConfig, Accelerator, CosimConfig};
 use sitecim::array::area::Design;
 use sitecim::device::Tech;
 use sitecim::dnn::benchmarks;
@@ -20,4 +23,17 @@ fn main() {
     run("accel.run full suite (prebuilt accel)", &cfg, || {
         nets.iter().map(|n| accel.run(n).latency).sum::<f64>()
     });
+
+    // Functional co-simulation: one timed pass (the engine executes real
+    // tile work, so the bench harness's repeated runs would dominate).
+    let ccfg = CosimConfig { max_vectors: 1, max_layers: 5, ..Default::default() };
+    let t0 = Instant::now();
+    let r = accel.run_cosim(&nets[0], &ccfg);
+    println!(
+        "cosim AlexNet[..5] CiM I: {:.2}s, {} outputs checked, {} mismatches, {} windows executed",
+        t0.elapsed().as_secs_f64(),
+        r.total_outputs(),
+        r.total_mismatches(),
+        r.engine.windows
+    );
 }

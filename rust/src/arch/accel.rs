@@ -13,6 +13,9 @@ use crate::array::area::Design;
 use crate::array::metrics::{all_designs, DesignMetrics};
 use crate::device::{PeriphParams, TechParams};
 use crate::dnn::Network;
+use crate::engine::tiling::reference_gemm;
+use crate::engine::{EngineConfig, EngineStatsSnapshot, TernaryGemmEngine};
+use crate::util::rng::Rng;
 
 /// Per-output quantize + activation energy in the digital periphery (J).
 const E_ACT_OUT: f64 = 60e-15;
@@ -145,6 +148,119 @@ impl Accelerator {
     pub fn params(&self) -> &TechParams {
         &self.params
     }
+
+    /// The functional GEMM engine matching this accelerator's shape:
+    /// same design, tech, array geometry and array count.
+    pub fn engine(&self, n_threads: usize) -> TernaryGemmEngine {
+        TernaryGemmEngine::new(
+            EngineConfig {
+                design: self.cfg.design,
+                tech: self.cfg.tech,
+                array_rows: self.cfg.geom.n_rows,
+                array_cols: self.cfg.geom.n_cols,
+                n_arrays: self.cfg.n_arrays,
+                n_threads: 0, // overwritten below
+            }
+            .with_threads(n_threads),
+        )
+    }
+
+    /// Functional co-simulation: actually *execute* (a bounded slice of)
+    /// the network's layers on the tiled GEMM engine with random ternary
+    /// operands at each layer's recorded sparsity, cross-checking every
+    /// output element against the `dot_ref` tile composition. The
+    /// analytic `run` path accounts for this work; this path proves the
+    /// functional fabric computes it correctly.
+    pub fn run_cosim(&self, net: &Network, ccfg: &CosimConfig) -> CosimReport {
+        let flavor = self.cfg.design.flavor();
+        let engine = self.engine(ccfg.n_threads);
+        let mut rng = Rng::new(ccfg.seed);
+        let mut layers = Vec::new();
+        for layer in net.layers.iter().take(ccfg.max_layers) {
+            let g = &layer.gemm;
+            let m = g.m.min(ccfg.max_vectors).max(1);
+            let x = rng.ternary_vec(m * g.k, 1.0 - layer.act_nz);
+            let w = rng.ternary_vec(g.k * g.n, 1.0 - layer.w_nz);
+            let got = engine.gemm(&x, &w, m, g.k, g.n);
+            let want = reference_gemm(&x, &w, m, &engine.grid(g.k, g.n), flavor);
+            let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count() as u64;
+            layers.push(CosimLayerReport {
+                name: layer.name.clone(),
+                m,
+                k: g.k,
+                n: g.n,
+                outputs: (m * g.n) as u64,
+                mismatches,
+            });
+        }
+        CosimReport {
+            config: self.cfg.name.clone(),
+            network: net.name.clone(),
+            layers,
+            engine: engine.stats(),
+        }
+    }
+}
+
+/// Bounds for the functional co-simulation (full benchmark layers are
+/// billions of MACs; a few vectors per layer already exercise every tile
+/// of every weight matrix).
+#[derive(Clone, Debug)]
+pub struct CosimConfig {
+    /// Input vectors (M rows) to run per layer.
+    pub max_vectors: usize,
+    /// Layers to co-simulate (front of the network first).
+    pub max_layers: usize,
+    pub seed: u64,
+    /// Engine worker threads.
+    pub n_threads: usize,
+}
+
+impl Default for CosimConfig {
+    fn default() -> CosimConfig {
+        CosimConfig {
+            max_vectors: 2,
+            max_layers: usize::MAX,
+            seed: 0x517E_C1A0,
+            n_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+        }
+    }
+}
+
+/// Per-layer co-simulation outcome.
+#[derive(Clone, Debug)]
+pub struct CosimLayerReport {
+    pub name: String,
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+    pub outputs: u64,
+    pub mismatches: u64,
+}
+
+/// Co-simulation report: engine outputs vs the tiled `dot_ref`
+/// specification, layer by layer.
+#[derive(Clone, Debug)]
+pub struct CosimReport {
+    pub config: String,
+    pub network: String,
+    pub layers: Vec<CosimLayerReport>,
+    pub engine: EngineStatsSnapshot,
+}
+
+impl CosimReport {
+    pub fn total_outputs(&self) -> u64 {
+        self.layers.iter().map(|l| l.outputs).sum()
+    }
+
+    pub fn total_mismatches(&self) -> u64 {
+        self.layers.iter().map(|l| l.mismatches).sum()
+    }
+
+    /// True when the engine reproduced the reference bit-for-bit.
+    pub fn all_match(&self) -> bool {
+        self.total_mismatches() == 0
+    }
 }
 
 #[cfg(test)]
@@ -225,6 +341,26 @@ mod tests {
                 < 1e-9 * r.energy.max(1.0)
         );
         assert!(r.total_windows > 0);
+    }
+
+    #[test]
+    fn cosim_engine_matches_reference_on_benchmark_layers() {
+        // Functional co-simulation of the front of AlexNet on all three
+        // designs: the engine must reproduce the tiled dot_ref spec
+        // bit-for-bit.
+        let net = benchmarks::alexnet();
+        let ccfg = CosimConfig { max_vectors: 1, max_layers: 3, seed: 7, n_threads: 2 };
+        for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+            let accel = match design {
+                Design::NearMemory => Accelerator::new(AccelConfig::iso_capacity_nm(Tech::Sram8T)),
+                d => Accelerator::new(AccelConfig::sitecim(Tech::Sram8T, d)),
+            };
+            let r = accel.run_cosim(&net, &ccfg);
+            assert_eq!(r.layers.len(), 3);
+            assert!(r.total_outputs() > 0);
+            assert!(r.all_match(), "{design:?}: {} mismatches", r.total_mismatches());
+            assert!(r.engine.tiles > 0 && r.engine.macs > 0);
+        }
     }
 
     #[test]

@@ -1,11 +1,13 @@
 //! Accelerator architecture layer: the TiM-DNN-style SiTe CiM system
 //! (32 arrays × 256×256, 32 PCUs) plus iso-capacity / iso-area
 //! near-memory baselines, a weight-stationary layer mapper and the
-//! system-level latency/energy simulator behind Figs 12/13.
+//! system-level latency/energy simulator behind Figs 12/13 — now with a
+//! functional co-simulation mode that executes benchmark layers on the
+//! `engine::TernaryGemmEngine` and cross-checks against `mac::dot_ref`.
 
 pub mod accel;
 pub mod config;
 pub mod mapper;
 
-pub use accel::{Accelerator, SystemReport};
+pub use accel::{Accelerator, CosimConfig, CosimReport, SystemReport};
 pub use config::AccelConfig;

@@ -36,6 +36,17 @@ impl Design {
             Design::Cim2 => "SiTe CiM II",
         }
     }
+
+    /// The design's saturating-MAC flavor (`None` for the exact
+    /// near-memory baseline) — the single source for the design↔flavor
+    /// mapping used by the trait layer, the engine and the references.
+    pub fn flavor(&self) -> Option<super::mac::Flavor> {
+        match self {
+            Design::NearMemory => None,
+            Design::Cim1 => Some(super::mac::Flavor::Cim1),
+            Design::Cim2 => Some(super::mac::Flavor::Cim2),
+        }
+    }
 }
 
 /// Ternary-cell layout box (width × height in F) for a design point.

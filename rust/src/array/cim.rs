@@ -1,0 +1,245 @@
+//! The `CimArray` trait: one polymorphic surface over the three array
+//! backends (SiTe CiM I, SiTe CiM II, near-memory baseline).
+//!
+//! # Contract
+//!
+//! Every backend wraps a [`TernaryStorage`] of `n_rows × n_cols` ternary
+//! weights, with `n_rows` a multiple of [`GROUP_ROWS`] (16 — the number
+//! of word-lines asserted per MAC cycle; [`TernaryStorage::new`] enforces
+//! this, and partial final groups must be padded with zero rows, which
+//! are electrically inert).
+//!
+//! - **Grouping**: a full dot product takes `n_rows / 16` MAC cycles.
+//!   Which rows a cycle asserts is the backend's [`Flavor`]'s business:
+//!   CiM I asserts 16 *consecutive* rows, CiM II one row per 16-row
+//!   block (strided — the coupling transistors are shared per block,
+//!   §IV.3). The near-memory baseline has no flavor ([`flavor`] returns
+//!   `None`) and reads row by row.
+//! - **Saturation**: CiM backends digitize each cycle's (a, b) discharge
+//!   counts through their flavor's ADC path, clamping at ±[`SAT`]
+//!   (= ±8) per group — `O = min(a,8) − min(b,8)` for CiM I,
+//!   `O = sign(a−b)·min(|a−b|,8)` for CiM II; the two differ whenever a
+//!   single count exceeds 8 (see `mac.rs` §III.2/§IV.3). The NM baseline
+//!   computes the exact digital MAC, no saturation.
+//! - **Non-destructive compute**: MAC cycles never disturb the stored
+//!   weights; `read_row` after any number of `dot` calls returns what
+//!   was written.
+//!
+//! The default methods implement the whole digital surface on top of the
+//! two storage accessors, so backends only provide storage plumbing,
+//! identity hooks, and their analog (circuit-model) paths.
+
+use super::area::Design;
+use super::encoding::Trit;
+use super::mac::{self, Flavor, GROUP_ROWS, SAT};
+use super::storage::TernaryStorage;
+use crate::array::metrics::ArrayGeom;
+
+/// Polymorphic interface over the functional ternary array backends.
+pub trait CimArray: Send {
+    /// Which design point this backend models (metrics/area hook).
+    fn design(&self) -> Design;
+
+    /// The saturating-MAC flavor, or `None` for the exact NM baseline.
+    fn flavor(&self) -> Option<Flavor> {
+        self.design().flavor()
+    }
+
+    /// The shared bit-packed weight substrate.
+    fn storage(&self) -> &TernaryStorage;
+
+    /// Mutable access for the write path.
+    fn storage_mut(&mut self) -> &mut TernaryStorage;
+
+    // ---- storage plumbing (shared by every backend) ----
+
+    fn n_rows(&self) -> usize {
+        self.storage().n_rows()
+    }
+
+    fn n_cols(&self) -> usize {
+        self.storage().n_cols()
+    }
+
+    /// Array geometry for the metrics models.
+    fn geom(&self) -> ArrayGeom {
+        ArrayGeom { n_rows: self.n_rows(), n_cols: self.n_cols(), n_active: GROUP_ROWS }
+    }
+
+    /// Program one ternary weight (differential M1/M2 write).
+    fn write(&mut self, row: usize, col: usize, w: Trit) {
+        self.storage_mut().write(row, col, w);
+    }
+
+    /// Program the whole array from a row-major `rows × cols` matrix.
+    fn write_matrix(&mut self, weights: &[Trit]) {
+        self.storage_mut().write_matrix(weights);
+    }
+
+    /// Memory-mode read of one row.
+    fn read_row(&self, row: usize) -> Vec<Trit> {
+        (0..self.n_cols()).map(|c| self.storage().read(row, c)).collect()
+    }
+
+    // ---- digital-ideal MAC surface ----
+
+    /// One MAC cycle, digital-ideal semantics. `inputs` are the 16 trits
+    /// applied to the cycle's asserted rows *in assertion order* (for
+    /// CiM II, `inputs[blk]` drives the selected row of block `blk`).
+    /// The NM baseline computes the exact partial sum over the 16
+    /// consecutive rows of window `cycle`.
+    fn mac_cycle(&self, cycle: usize, inputs: &[Trit]) -> Vec<i32> {
+        assert_eq!(inputs.len(), GROUP_ROWS);
+        let s = self.storage();
+        match self.flavor() {
+            Some(f) => {
+                let rows = f.group_rows(s.n_rows(), cycle);
+                (0..s.n_cols())
+                    .map(|c| {
+                        let mut a = 0u32;
+                        let mut b = 0u32;
+                        for (&r, &i) in rows.iter().zip(inputs) {
+                            let p = i as i32 * s.read(r, c) as i32;
+                            if p == 1 {
+                                a += 1;
+                            } else if p == -1 {
+                                b += 1;
+                            }
+                        }
+                        f.group_output(a, b)
+                    })
+                    .collect()
+            }
+            None => {
+                let base = cycle * GROUP_ROWS;
+                (0..s.n_cols())
+                    .map(|c| {
+                        (0..GROUP_ROWS)
+                            .map(|k| inputs[k] as i32 * s.read(base + k, c) as i32)
+                            .sum::<i32>()
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Full dot product of `inputs` (length = `n_rows`) against every
+    /// column, accumulated in the digital periphery. Saturating per the
+    /// backend's flavor; exact for the NM baseline. Outputs are bounded
+    /// by `±(n_rows/16)·SAT` (CiM) or `±n_rows` (NM), so `i32` is exact.
+    fn dot(&self, inputs: &[Trit]) -> Vec<i32> {
+        match self.flavor() {
+            Some(f) => mac::dot_fast(self.storage(), inputs, f),
+            None => mac::dot_exact(self.storage(), inputs)
+                .into_iter()
+                .map(|x| x as i32)
+                .collect(),
+        }
+    }
+
+    /// Batched dot products: `m` row-major input vectors → row-major
+    /// `m × n_cols` outputs. The engine's hot path; backends share the
+    /// bit-packed batch kernel, the NM baseline loops the exact MAC.
+    fn dot_batch(&self, inputs: &[Trit], m: usize) -> Vec<i32> {
+        let n_rows = self.n_rows();
+        assert_eq!(inputs.len(), m * n_rows, "batch of {m} vectors × {n_rows} rows");
+        match self.flavor() {
+            Some(f) => mac::dot_fast_batch(self.storage(), inputs, m, f),
+            None => {
+                let mut out = Vec::with_capacity(m * self.n_cols());
+                for r in 0..m {
+                    out.extend(
+                        mac::dot_exact(self.storage(), &inputs[r * n_rows..(r + 1) * n_rows])
+                            .into_iter()
+                            .map(|x| x as i32),
+                    );
+                }
+                out
+            }
+        }
+    }
+
+    /// Upper bound on `|dot|` per output — `SAT` per group for the
+    /// saturating flavors, the full row count for the exact baseline.
+    fn dot_bound(&self) -> i32 {
+        match self.flavor() {
+            Some(_) => (self.n_rows() / GROUP_ROWS) as i32 * SAT as i32,
+            None => self.n_rows() as i32,
+        }
+    }
+}
+
+/// Construct a boxed backend of the given design — the engine's array
+/// pool factory.
+pub fn make_array(
+    design: Design,
+    tech: crate::device::Tech,
+    n_rows: usize,
+    n_cols: usize,
+) -> Box<dyn CimArray> {
+    match design {
+        Design::Cim1 => Box::new(super::SiTeCim1Array::with_dims(tech, n_rows, n_cols)),
+        Design::Cim2 => Box::new(super::SiTeCim2Array::with_dims(tech, n_rows, n_cols)),
+        Design::NearMemory => Box::new(super::NearMemoryArray::with_dims(tech, n_rows, n_cols)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::Tech;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn factory_builds_every_design() {
+        for design in Design::ALL {
+            let a = make_array(design, Tech::Sram8T, 64, 8);
+            assert_eq!(a.design(), design);
+            assert_eq!((a.n_rows(), a.n_cols()), (64, 8));
+            assert_eq!(a.flavor().is_none(), design == Design::NearMemory);
+        }
+    }
+
+    #[test]
+    fn trait_dot_matches_backend_semantics() {
+        let mut rng = Rng::new(17);
+        let w = rng.ternary_vec(64 * 12, 0.4);
+        let inputs = rng.ternary_vec(64, 0.4);
+        for design in Design::ALL {
+            let mut a = make_array(design, Tech::Femfet3T, 64, 12);
+            a.write_matrix(&w);
+            let got = a.dot(&inputs);
+            let want: Vec<i32> = match a.flavor() {
+                Some(f) => mac::dot_ref(a.storage(), &inputs, f),
+                None => mac::dot_exact(a.storage(), &inputs)
+                    .into_iter()
+                    .map(|x| x as i32)
+                    .collect(),
+            };
+            assert_eq!(got, want, "{design:?}");
+            assert!(got.iter().all(|&o| o.abs() <= a.dot_bound()), "{design:?}");
+        }
+    }
+
+    #[test]
+    fn mac_cycles_accumulate_to_dot() {
+        let mut rng = Rng::new(18);
+        let w = rng.ternary_vec(64 * 8, 0.5);
+        let inputs = rng.ternary_vec(64, 0.5);
+        for design in Design::ALL {
+            let mut a = make_array(design, Tech::Edram3T, 64, 8);
+            a.write_matrix(&w);
+            let mut acc = vec![0i32; 8];
+            for cycle in 0..4 {
+                let cyc_inputs: Vec<i8> = match a.flavor() {
+                    Some(f) => f.group_rows(64, cycle).iter().map(|&r| inputs[r]).collect(),
+                    None => inputs[cycle * 16..(cycle + 1) * 16].to_vec(),
+                };
+                for (o, p) in acc.iter_mut().zip(a.mac_cycle(cycle, &cyc_inputs)) {
+                    *o += p;
+                }
+            }
+            assert_eq!(acc, a.dot(&inputs), "{design:?}");
+        }
+    }
+}

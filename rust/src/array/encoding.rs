@@ -45,9 +45,16 @@ pub fn decode_weight(m1: bool, m2: bool) -> Result<Trit, IllegalCellState> {
     }
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, thiserror::Error)]
-#[error("illegal ternary cell state M1=M2=1")]
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct IllegalCellState;
+
+impl std::fmt::Display for IllegalCellState {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "illegal ternary cell state M1=M2=1")
+    }
+}
+
+impl std::error::Error for IllegalCellState {}
 
 /// SiTe CiM I input → (RWL1, RWL2) levels (Fig 3(b)).
 pub fn encode_input_cim1(i: Trit) -> (bool, bool) {

@@ -11,7 +11,7 @@
 //! simultaneously large (e.g. a=10, b=9 → CiM I: 0, CiM II: +1).
 
 use super::encoding::Trit;
-use super::storage::{pack_inputs16, TernaryStorage};
+use super::storage::{pack_inputs16, pack_inputs_words, TernaryStorage};
 
 /// Rows asserted per MAC cycle (N_A in the paper).
 pub const GROUP_ROWS: usize = 16;
@@ -42,14 +42,37 @@ impl Flavor {
     /// *consecutive* rows per cycle; SiTe CiM II asserts one row from each
     /// of the 16 blocks (strided), because the cross-coupling transistors
     /// are shared per block (§IV.3).
+    ///
+    /// Like every MAC entry point, this rejects row counts that are not a
+    /// multiple of [`GROUP_ROWS`]: a partial group has no hardware
+    /// equivalent (16 word-lines assert per cycle), so callers must pad
+    /// the final group with zero rows instead (zero weights/inputs are
+    /// electrically inert and leave every group output unchanged).
     pub fn group_rows(&self, n_rows: usize, cycle: usize) -> Vec<usize> {
-        let n_groups = n_rows / GROUP_ROWS;
-        debug_assert!(cycle < n_groups);
+        let n_groups = check_grouping(n_rows);
+        assert!(
+            cycle < n_groups,
+            "cycle {cycle} out of range: {n_rows} rows form {n_groups} MAC groups"
+        );
         match self {
             Flavor::Cim1 => (cycle * GROUP_ROWS..(cycle + 1) * GROUP_ROWS).collect(),
             Flavor::Cim2 => (0..GROUP_ROWS).map(|blk| blk * n_groups + cycle).collect(),
         }
     }
+}
+
+/// Validate a row count against the 16-row grouping and return the number
+/// of MAC cycles. Every dot-product path funnels through this so partial
+/// final groups are rejected with the same clear error everywhere rather
+/// than silently truncated (`n_rows / 16` used to drop tail rows).
+#[inline]
+pub fn check_grouping(n_rows: usize) -> usize {
+    assert!(
+        n_rows % GROUP_ROWS == 0,
+        "n_rows = {n_rows} is not a multiple of GROUP_ROWS = {GROUP_ROWS}; \
+         pad the final MAC group with zero rows (zero weights are inert)"
+    );
+    n_rows / GROUP_ROWS
 }
 
 /// Reference dot product of a full input vector against every column,
@@ -58,7 +81,7 @@ impl Flavor {
 /// packed fast path and the Pallas kernel must all agree with.
 pub fn dot_ref(storage: &TernaryStorage, inputs: &[Trit], flavor: Flavor) -> Vec<i32> {
     assert_eq!(inputs.len(), storage.n_rows());
-    let n_cycles = storage.n_rows() / GROUP_ROWS;
+    let n_cycles = check_grouping(storage.n_rows());
     let mut out = vec![0i32; storage.n_cols()];
     for cycle in 0..n_cycles {
         let rows = flavor.group_rows(storage.n_rows(), cycle);
@@ -79,12 +102,20 @@ pub fn dot_ref(storage: &TernaryStorage, inputs: &[Trit], flavor: Flavor) -> Vec
     out
 }
 
+/// Fast bit-packed equivalent of `dot_ref` for either flavor — the hot
+/// path of functional inference and the engine; see benches/array_bench.
+pub fn dot_fast(storage: &TernaryStorage, inputs: &[Trit], flavor: Flavor) -> Vec<i32> {
+    match flavor {
+        Flavor::Cim1 => dot_fast_cim1(storage, inputs),
+        Flavor::Cim2 => dot_fast_cim2(storage, inputs),
+    }
+}
+
 /// Fast bit-packed equivalent of `dot_ref` for `Flavor::Cim1` (consecutive
-/// groups align with the packed blocks). The hot path of functional
-/// inference; see benches/array_bench.
+/// groups align with the packed blocks).
 pub fn dot_fast_cim1(storage: &TernaryStorage, inputs: &[Trit]) -> Vec<i32> {
     assert_eq!(inputs.len(), storage.n_rows());
-    let n_cycles = storage.n_rows() / GROUP_ROWS;
+    let n_cycles = check_grouping(storage.n_rows());
     let mut out = vec![0i32; storage.n_cols()];
     for cycle in 0..n_cycles {
         let base = cycle * GROUP_ROWS;
@@ -95,6 +126,90 @@ pub fn dot_fast_cim1(storage: &TernaryStorage, inputs: &[Trit]) -> Vec<i32> {
         for (col, o) in out.iter_mut().enumerate() {
             let (a, b) = storage.block_ab(base, col, ip, in_);
             *o += Flavor::Cim1.group_output(a, b);
+        }
+    }
+    out
+}
+
+/// The cycle-selection bit masks for `Flavor::Cim2`'s strided grouping:
+/// `masks[cycle]` has a bit set for every row asserted in that cycle
+/// (rows ≡ cycle mod n_groups), in the packed-word layout. These depend
+/// only on the row count, so batched GEMMs compute them once.
+pub fn cim2_cycle_masks(n_rows: usize) -> Vec<Vec<u64>> {
+    let n_groups = check_grouping(n_rows);
+    let words = n_rows.div_ceil(64);
+    let mut masks = vec![vec![0u64; words]; n_groups];
+    for r in 0..n_rows {
+        masks[r % n_groups][r / 64] |= 1u64 << (r % 64);
+    }
+    masks
+}
+
+/// Fast bit-packed equivalent of `dot_ref` for `Flavor::Cim2`. The
+/// strided groups don't align with 16-bit blocks, so instead of per-block
+/// masks we form each column's ±1-product bit-planes once and select each
+/// cycle's rows with a precomputed stride mask (see [`cim2_cycle_masks`]).
+pub fn dot_fast_cim2(storage: &TernaryStorage, inputs: &[Trit]) -> Vec<i32> {
+    let masks = cim2_cycle_masks(storage.n_rows());
+    dot_fast_cim2_with_masks(storage, inputs, &masks)
+}
+
+/// [`dot_fast_cim2`] with caller-provided cycle masks (batched hot path).
+pub fn dot_fast_cim2_with_masks(
+    storage: &TernaryStorage,
+    inputs: &[Trit],
+    masks: &[Vec<u64>],
+) -> Vec<i32> {
+    assert_eq!(inputs.len(), storage.n_rows());
+    let n_cycles = check_grouping(storage.n_rows());
+    assert_eq!(masks.len(), n_cycles);
+    let wpc = storage.words_per_col();
+    let (ip, in_) = pack_inputs_words(inputs);
+    let mut out = vec![0i32; storage.n_cols()];
+    // Per-column ±1-product planes, reused across cycles.
+    let mut plus = vec![0u64; wpc];
+    let mut minus = vec![0u64; wpc];
+    for (col, o) in out.iter_mut().enumerate() {
+        let (wp, wn) = storage.col_words(col);
+        for w in 0..wpc {
+            plus[w] = (ip[w] & wp[w]) | (in_[w] & wn[w]);
+            minus[w] = (ip[w] & wn[w]) | (in_[w] & wp[w]);
+        }
+        for mask in masks {
+            let mut a = 0u32;
+            let mut b = 0u32;
+            for w in 0..wpc {
+                a += (plus[w] & mask[w]).count_ones();
+                b += (minus[w] & mask[w]).count_ones();
+            }
+            *o += Flavor::Cim2.group_output(a, b);
+        }
+    }
+    out
+}
+
+/// Batched fast path: `m` input vectors (row-major, each `n_rows` long)
+/// against every column → row-major `m × n_cols` outputs. Amortizes the
+/// CiM II stride-mask construction across the batch.
+pub fn dot_fast_batch(storage: &TernaryStorage, inputs: &[Trit], m: usize, flavor: Flavor) -> Vec<i32> {
+    let n_rows = storage.n_rows();
+    assert_eq!(inputs.len(), m * n_rows, "batch of {m} vectors × {n_rows} rows");
+    let mut out = Vec::with_capacity(m * storage.n_cols());
+    match flavor {
+        Flavor::Cim1 => {
+            for r in 0..m {
+                out.extend(dot_fast_cim1(storage, &inputs[r * n_rows..(r + 1) * n_rows]));
+            }
+        }
+        Flavor::Cim2 => {
+            let masks = cim2_cycle_masks(n_rows);
+            for r in 0..m {
+                out.extend(dot_fast_cim2_with_masks(
+                    storage,
+                    &inputs[r * n_rows..(r + 1) * n_rows],
+                    &masks,
+                ));
+            }
         }
     }
     out
@@ -155,6 +270,55 @@ mod tests {
     fn fast_path_matches_reference() {
         let (s, inputs) = random_setup(42, 256, 64, 0.45);
         assert_eq!(dot_fast_cim1(&s, &inputs), dot_ref(&s, &inputs, Flavor::Cim1));
+    }
+
+    #[test]
+    fn fast_path_matches_reference_both_flavors_varied_shapes() {
+        for (seed, rows, cols, pz) in
+            [(1u64, 16usize, 8usize, 0.5), (2, 64, 32, 0.3), (3, 256, 256, 0.5), (4, 320, 17, 0.7)]
+        {
+            let (s, inputs) = random_setup(seed, rows, cols, pz);
+            for flavor in [Flavor::Cim1, Flavor::Cim2] {
+                assert_eq!(
+                    dot_fast(&s, &inputs, flavor),
+                    dot_ref(&s, &inputs, flavor),
+                    "{flavor:?} {rows}x{cols}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_fast_path_matches_per_row() {
+        let mut rng = Rng::new(9);
+        let mut s = TernaryStorage::new(128, 48);
+        s.write_matrix(&rng.ternary_vec(128 * 48, 0.5));
+        let m = 5;
+        let batch = rng.ternary_vec(m * 128, 0.5);
+        for flavor in [Flavor::Cim1, Flavor::Cim2] {
+            let got = dot_fast_batch(&s, &batch, m, flavor);
+            for r in 0..m {
+                assert_eq!(
+                    &got[r * 48..(r + 1) * 48],
+                    dot_ref(&s, &batch[r * 128..(r + 1) * 128], flavor).as_slice(),
+                    "{flavor:?} row {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "multiple of GROUP_ROWS")]
+    fn partial_groups_rejected_not_truncated() {
+        // 40 inputs against a notional 40-row grouping must be rejected
+        // loudly (the old code silently computed 2 of 2.5 groups).
+        Flavor::Cim1.group_rows(40, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn out_of_range_cycle_rejected() {
+        Flavor::Cim2.group_rows(64, 4);
     }
 
     #[test]

@@ -2,16 +2,21 @@
 //!
 //! - [`encoding`] — the W/I/O encodings and electrical truth tables.
 //! - [`storage`] — bit-packed ternary weight planes (shared substrate).
+//! - [`cim`] — the [`CimArray`] trait: one polymorphic surface over the
+//!   three backends (storage plumbing, `mac_cycle`, `dot`, `dot_batch`),
+//!   plus the boxed-backend factory the engine pools.
 //! - [`sitecim1`] — SiTe CiM I: cross-coupled cells, voltage sensing.
 //! - [`sitecim2`] — SiTe CiM II: cross-coupled sub-columns, current
 //!   sensing, block-strided row assertion.
 //! - [`near_memory`] — the row-by-row NM baseline with exact digital MAC.
-//! - [`mac`] — the saturating MAC semantics both flavors implement.
+//! - [`mac`] — the saturating MAC semantics both flavors implement, with
+//!   bit-packed single and batched fast paths for both flavors.
 //! - [`metrics`] — latency/energy models per (design, op) → Figs 9/11.
 //! - [`area`] — layout-area models → §V.1a/V.2a, Figs 8/10.
 //! - [`variation`] — V_TH variation Monte Carlo → error probability.
 
 pub mod area;
+pub mod cim;
 pub mod encoding;
 pub mod mac;
 pub mod metrics;
@@ -22,6 +27,7 @@ pub mod storage;
 pub mod variation;
 
 pub use area::Design;
+pub use cim::{make_array, CimArray};
 pub use mac::Flavor;
 pub use near_memory::NearMemoryArray;
 pub use sitecim1::SiTeCim1Array;

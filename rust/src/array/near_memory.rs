@@ -7,7 +7,13 @@
 //! input trit and accumulated — exact digital arithmetic, no ADC, no
 //! saturation. This is both the performance baseline and the accuracy
 //! reference.
+//!
+//! As a [`CimArray`] backend it reports no [`super::mac::Flavor`]: the trait's `dot`
+//! surface computes the exact MAC (`dot_exact` keeps the wide `i64`
+//! inherent form for accuracy references).
 
+use super::area::Design;
+use super::cim::CimArray;
 use super::encoding::Trit;
 use super::storage::TernaryStorage;
 use crate::device::{Tech, TechParams};
@@ -30,38 +36,13 @@ impl NearMemoryArray {
         }
     }
 
-    pub fn n_rows(&self) -> usize {
-        self.storage.n_rows()
-    }
-
-    pub fn n_cols(&self) -> usize {
-        self.storage.n_cols()
-    }
-
-    pub fn storage(&self) -> &TernaryStorage {
-        &self.storage
-    }
-
-    pub fn write(&mut self, row: usize, col: usize, w: Trit) {
-        self.storage.write(row, col, w);
-    }
-
-    pub fn write_matrix(&mut self, weights: &[Trit]) {
-        self.storage.write_matrix(weights);
-    }
-
-    /// Memory read of one ternary row (both bit-cells sensed in parallel
-    /// on the doubled binary columns).
-    pub fn read_row(&self, row: usize) -> Vec<Trit> {
-        (0..self.n_cols()).map(|c| self.storage.read(row, c)).collect()
-    }
-
-    /// The NMC unit's dot product: sequential row reads, exact MAC.
-    /// Rows with input 0 are skipped (the NMC unit gates them — the same
-    /// sparsity the CiM designs exploit electrically).
-    pub fn dot(&self, inputs: &[Trit]) -> Vec<i64> {
-        assert_eq!(inputs.len(), self.n_rows());
-        let mut acc = vec![0i64; self.n_cols()];
+    /// The NMC unit's dot product at full precision: sequential row
+    /// reads, exact MAC, `i64` accumulators. Rows with input 0 are
+    /// skipped (the NMC unit gates them — the same sparsity the CiM
+    /// designs exploit electrically).
+    pub fn dot_exact(&self, inputs: &[Trit]) -> Vec<i64> {
+        assert_eq!(inputs.len(), self.storage.n_rows());
+        let mut acc = vec![0i64; self.storage.n_cols()];
         for (row, &i) in inputs.iter().enumerate() {
             if i == 0 {
                 continue;
@@ -79,6 +60,20 @@ impl NearMemoryArray {
     }
 }
 
+impl CimArray for NearMemoryArray {
+    fn design(&self) -> Design {
+        Design::NearMemory
+    }
+
+    fn storage(&self) -> &TernaryStorage {
+        &self.storage
+    }
+
+    fn storage_mut(&mut self) -> &mut TernaryStorage {
+        &mut self.storage
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,11 +86,14 @@ mod tests {
         let w = rng.ternary_vec(64 * 16, 0.3);
         a.write_matrix(&w);
         let inputs = rng.ternary_vec(64, 0.3);
-        let out = a.dot(&inputs);
+        let out = a.dot_exact(&inputs);
         for c in 0..16 {
             let expect: i64 = (0..64).map(|r| inputs[r] as i64 * w[r * 16 + c] as i64).sum();
             assert_eq!(out[c], expect);
         }
+        // The trait surface agrees (everything here fits i32).
+        let trait_out: Vec<i64> = a.dot(&inputs).into_iter().map(|x| x as i64).collect();
+        assert_eq!(trait_out, out);
     }
 
     #[test]

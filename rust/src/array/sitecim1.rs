@@ -7,13 +7,16 @@
 //! digital subtractor produces the signed partial output.
 //!
 //! Two simulation fidelities:
-//! - `dot` / `mac_cycle`: digital-ideal (bit-packed fast path) — exactly
-//!   the saturating semantics of `mac::Flavor::Cim1`.
+//! - the [`CimArray`] digital-ideal surface (`dot` / `mac_cycle`, bit-
+//!   packed fast path) — exactly the saturating semantics of
+//!   `mac::Flavor::Cim1`;
 //! - `mac_cycle_analog`: runs the calibrated bit-line discharge ladder +
 //!   (optionally varied) ADC references — the Monte-Carlo error path.
 
+use super::area::Design;
+use super::cim::CimArray;
 use super::encoding::Trit;
-use super::mac::{self, Flavor, GROUP_ROWS};
+use super::mac::GROUP_ROWS;
 use super::storage::{pack_inputs16, TernaryStorage};
 use crate::circuit::adc::VoltageAdc;
 use crate::circuit::bitline::VoltageBitline;
@@ -41,50 +44,9 @@ impl SiTeCim1Array {
         SiTeCim1Array { storage: TernaryStorage::new(n_rows, n_cols), params, bitline, adc }
     }
 
-    pub fn n_rows(&self) -> usize {
-        self.storage.n_rows()
-    }
-
-    pub fn n_cols(&self) -> usize {
-        self.storage.n_cols()
-    }
-
-    pub fn storage(&self) -> &TernaryStorage {
-        &self.storage
-    }
-
-    /// Program one ternary weight.
-    pub fn write(&mut self, row: usize, col: usize, w: Trit) {
-        self.storage.write(row, col, w);
-    }
-
-    /// Program the whole array (row-major, rows × cols).
-    pub fn write_matrix(&mut self, weights: &[Trit]) {
-        self.storage.write_matrix(weights);
-    }
-
-    /// Memory-mode read of one row: assert RWL1 only (I = +1 semantics),
-    /// sense both RBLs per column.
-    pub fn read_row(&self, row: usize) -> Vec<Trit> {
-        (0..self.n_cols()).map(|c| self.storage.read(row, c)).collect()
-    }
-
-    /// One MAC cycle over the 16-row group starting at `row_base`
-    /// (digital-ideal). `inputs` are the 16 trits for those rows.
-    pub fn mac_cycle(&self, row_base: usize, inputs: &[Trit]) -> Vec<i32> {
-        assert_eq!(inputs.len(), GROUP_ROWS);
-        assert!(row_base % GROUP_ROWS == 0);
-        let (ip, in_) = pack_inputs16(inputs);
-        (0..self.n_cols())
-            .map(|c| {
-                let (a, b) = self.storage.block_ab(row_base, c, ip, in_);
-                Flavor::Cim1.group_output(a, b)
-            })
-            .collect()
-    }
-
     /// One MAC cycle through the analog models: RBL voltage ladder + ADC
     /// (pass an ADC built with `VoltageAdc::with_variation` for MC runs).
+    /// `row_base` is the first row of the 16-row consecutive group.
     pub fn mac_cycle_analog(
         &self,
         row_base: usize,
@@ -92,9 +54,10 @@ impl SiTeCim1Array {
         adc: Option<&VoltageAdc>,
     ) -> Vec<i32> {
         assert_eq!(inputs.len(), GROUP_ROWS);
+        assert!(row_base % GROUP_ROWS == 0);
         let adc = adc.unwrap_or(&self.adc);
         let (ip, in_) = pack_inputs16(inputs);
-        (0..self.n_cols())
+        (0..self.storage.n_cols())
             .map(|c| {
                 let (a, b) = self.storage.block_ab(row_base, c, ip, in_);
                 // Physical levels after a/b simultaneous discharges.
@@ -105,19 +68,12 @@ impl SiTeCim1Array {
             .collect()
     }
 
-    /// Full dot product of `inputs` (length = n_rows) against every
-    /// column: 16 MAC cycles of 16 consecutive rows, accumulated in the
-    /// digital periphery (PCUs at system level).
-    pub fn dot(&self, inputs: &[Trit]) -> Vec<i32> {
-        mac::dot_fast_cim1(&self.storage, inputs)
-    }
-
     /// Analog-path full dot product with a per-cycle fresh-varied ADC —
     /// the Monte-Carlo inference path (σ in volts on ADC references).
     pub fn dot_analog_mc(&self, inputs: &[Trit], sigma_v: f64, rng: &mut Rng) -> Vec<i32> {
-        assert_eq!(inputs.len(), self.n_rows());
-        let mut out = vec![0i32; self.n_cols()];
-        for cycle in 0..self.n_rows() / GROUP_ROWS {
+        assert_eq!(inputs.len(), self.storage.n_rows());
+        let mut out = vec![0i32; self.storage.n_cols()];
+        for cycle in 0..self.storage.n_rows() / GROUP_ROWS {
             let base = cycle * GROUP_ROWS;
             let adc = VoltageAdc::with_variation(&self.bitline, sigma_v, rng);
             let part = self.mac_cycle_analog(base, &inputs[base..base + GROUP_ROWS], Some(&adc));
@@ -129,10 +85,24 @@ impl SiTeCim1Array {
     }
 }
 
+impl CimArray for SiTeCim1Array {
+    fn design(&self) -> Design {
+        Design::Cim1
+    }
+
+    fn storage(&self) -> &TernaryStorage {
+        &self.storage
+    }
+
+    fn storage_mut(&mut self) -> &mut TernaryStorage {
+        &mut self.storage
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::array::mac::dot_ref;
+    use crate::array::mac::{dot_ref, Flavor};
     use crate::util::rng::Rng;
 
     fn loaded_array(seed: u64, sparsity: f64) -> (SiTeCim1Array, Vec<i8>) {
@@ -167,7 +137,7 @@ mod tests {
         let (a, inputs) = loaded_array(22, 0.5);
         for cycle in 0..4 {
             let base = cycle * 16;
-            let dig = a.mac_cycle(base, &inputs[base..base + 16]);
+            let dig = a.mac_cycle(cycle, &inputs[base..base + 16]);
             let ana = a.mac_cycle_analog(base, &inputs[base..base + 16], None);
             assert_eq!(dig, ana, "cycle {cycle}");
         }

@@ -11,7 +11,13 @@
 //! Sensing is current-mode: the comparator picks the sign, the analog
 //! subtractor forms |I_RBL1 − I_RBL2| and a single 3-bit current ADC
 //! digitizes it → O = sign·min(|a−b|, 8).
+//!
+//! The digital-ideal surface (`dot` / `mac_cycle`) comes from the
+//! [`CimArray`] trait with `Flavor::Cim2` semantics; this module adds the
+//! current-sensing analog path.
 
+use super::area::Design;
+use super::cim::CimArray;
 use super::encoding::Trit;
 use super::mac::{Flavor, GROUP_ROWS};
 use super::storage::TernaryStorage;
@@ -56,51 +62,13 @@ impl SiTeCim2Array {
         }
     }
 
-    pub fn n_rows(&self) -> usize {
-        self.storage.n_rows()
-    }
-
-    pub fn n_cols(&self) -> usize {
-        self.storage.n_cols()
-    }
-
     pub fn n_blocks(&self) -> usize {
         self.storage.n_rows() / GROUP_ROWS
     }
 
-    pub fn storage(&self) -> &TernaryStorage {
-        &self.storage
-    }
-
-    pub fn write(&mut self, row: usize, col: usize, w: Trit) {
-        self.storage.write(row, col, w);
-    }
-
-    pub fn write_matrix(&mut self, weights: &[Trit]) {
-        self.storage.write_matrix(weights);
-    }
-
-    /// Memory-mode read of one row (assert RWL_i + RWL_t1, current sense).
-    pub fn read_row(&self, row: usize) -> Vec<Trit> {
-        (0..self.n_cols()).map(|c| self.storage.read(row, c)).collect()
-    }
-
     /// The rows asserted in `cycle` (one per block).
     pub fn cycle_rows(&self, cycle: usize) -> Vec<usize> {
-        Flavor::Cim2.group_rows(self.n_rows(), cycle)
-    }
-
-    /// One MAC cycle, digital-ideal semantics. `inputs[blk]` is the trit
-    /// applied to the asserted row of block `blk`.
-    pub fn mac_cycle(&self, cycle: usize, inputs: &[Trit]) -> Vec<i32> {
-        assert_eq!(inputs.len(), GROUP_ROWS);
-        let rows = self.cycle_rows(cycle);
-        (0..self.n_cols())
-            .map(|c| {
-                let (a, b) = self.count_ab(&rows, inputs, c);
-                Flavor::Cim2.group_output(a, b)
-            })
-            .collect()
+        Flavor::Cim2.group_rows(self.storage.n_rows(), cycle)
     }
 
     fn count_ab(&self, rows: &[usize], inputs: &[Trit], col: usize) -> (u32, u32) {
@@ -126,7 +94,7 @@ impl SiTeCim2Array {
         let p = &self.params;
         let i_hrs_eff = i_hrs_effective(p, self.c_lrbl, self.t_sense);
         let n_active = inputs.iter().filter(|&&i| i != 0).count();
-        (0..self.n_cols())
+        (0..self.storage.n_cols())
             .map(|c| {
                 let (a, b) = self.count_ab(&rows, inputs, c);
                 // Active rows whose coupled cell is HRS park the LRBL
@@ -143,26 +111,11 @@ impl SiTeCim2Array {
             .collect()
     }
 
-    /// Full dot product: 16 cycles, one row per block per cycle,
-    /// accumulated digitally.
-    pub fn dot(&self, inputs: &[Trit]) -> Vec<i32> {
-        assert_eq!(inputs.len(), self.n_rows());
-        let mut out = vec![0i32; self.n_cols()];
-        for cycle in 0..self.n_blocks().min(GROUP_ROWS) {
-            let rows = self.cycle_rows(cycle);
-            let cyc_inputs: Vec<Trit> = rows.iter().map(|&r| inputs[r]).collect();
-            for (o, p) in out.iter_mut().zip(self.mac_cycle(cycle, &cyc_inputs)) {
-                *o += p;
-            }
-        }
-        out
-    }
-
     /// Monte-Carlo analog dot product (σ in ADC reference units).
     pub fn dot_analog_mc(&self, inputs: &[Trit], sigma_units: f64, rng: &mut Rng) -> Vec<i32> {
-        assert_eq!(inputs.len(), self.n_rows());
-        let mut out = vec![0i32; self.n_cols()];
-        for cycle in 0..self.n_blocks().min(GROUP_ROWS) {
+        assert_eq!(inputs.len(), self.storage.n_rows());
+        let mut out = vec![0i32; self.storage.n_cols()];
+        for cycle in 0..self.n_blocks() {
             let rows = self.cycle_rows(cycle);
             let cyc_inputs: Vec<Trit> = rows.iter().map(|&r| inputs[r]).collect();
             let adc = CurrentAdc::with_variation(sigma_units, rng);
@@ -171,6 +124,20 @@ impl SiTeCim2Array {
             }
         }
         out
+    }
+}
+
+impl CimArray for SiTeCim2Array {
+    fn design(&self) -> Design {
+        Design::Cim2
+    }
+
+    fn storage(&self) -> &TernaryStorage {
+        &self.storage
+    }
+
+    fn storage_mut(&mut self) -> &mut TernaryStorage {
+        &mut self.storage
     }
 }
 
@@ -233,6 +200,28 @@ mod tests {
             }
         }
         assert_eq!(mc, expect);
+    }
+
+    #[test]
+    fn mc_covers_all_cycles_of_tall_arrays() {
+        // Regression: arrays taller than 256 rows have more than 16 MAC
+        // cycles; the MC path used to cap at 16 and silently drop rows.
+        let mut rng = Rng::new(35);
+        let mut a = SiTeCim2Array::with_dims(Tech::Sram8T, 512, 8);
+        a.write_matrix(&rng.ternary_vec(512 * 8, 0.5));
+        let inputs = rng.ternary_vec(512, 0.5);
+        let mut zrng = Rng::new(6);
+        let mc = a.dot_analog_mc(&inputs, 0.0, &mut zrng);
+        let mut expect = vec![0i32; 8];
+        for cycle in 0..a.n_blocks() {
+            let rows = a.cycle_rows(cycle);
+            let ci: Vec<i8> = rows.iter().map(|&r| inputs[r]).collect();
+            for (e, p) in expect.iter_mut().zip(a.mac_cycle_analog(cycle, &ci, None)) {
+                *e += p;
+            }
+        }
+        assert_eq!(mc, expect);
+        assert_eq!(a.n_blocks(), 32); // all 32 cycles, not min(32, 16)
     }
 
     #[test]

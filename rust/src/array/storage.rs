@@ -40,6 +40,21 @@ impl TernaryStorage {
         self.n_cols
     }
 
+    /// Packed words per column (rows / 64, rounded up).
+    pub fn words_per_col(&self) -> usize {
+        self.words_per_col
+    }
+
+    /// The (M1-plane, M2-plane) packed words of one column, rows
+    /// little-endian within each word — the raw substrate behind the
+    /// strided (CiM II) fast path.
+    #[inline]
+    pub fn col_words(&self, col: usize) -> (&[u64], &[u64]) {
+        let lo = col * self.words_per_col;
+        let hi = lo + self.words_per_col;
+        (&self.wp[lo..hi], &self.wn[lo..hi])
+    }
+
     #[inline]
     fn idx(&self, row: usize, col: usize) -> (usize, u64) {
         (col * self.words_per_col + row / 64, 1u64 << (row % 64))
@@ -119,6 +134,22 @@ impl TernaryStorage {
         }
         acc
     }
+}
+
+/// Pack a full input vector into (positive, negative) bit-planes with the
+/// same word layout as the storage columns (rows little-endian per u64).
+pub fn pack_inputs_words(inputs: &[Trit]) -> (Vec<u64>, Vec<u64>) {
+    let words = inputs.len().div_ceil(64);
+    let mut ip = vec![0u64; words];
+    let mut in_ = vec![0u64; words];
+    for (r, &i) in inputs.iter().enumerate() {
+        match i {
+            1 => ip[r / 64] |= 1u64 << (r % 64),
+            -1 => in_[r / 64] |= 1u64 << (r % 64),
+            _ => {}
+        }
+    }
+    (ip, in_)
 }
 
 /// Pack a 16-trit input group into (positive-mask, negative-mask).
@@ -201,6 +232,34 @@ mod tests {
             let expect: i64 =
                 (0..32).map(|r| inputs[r] as i64 * w[r * 2 + c] as i64).sum();
             assert_eq!(s.column_dot_exact(c, &inputs), expect);
+        }
+    }
+
+    #[test]
+    fn pack_inputs_words_matches_storage_layout() {
+        let mut rng = Rng::new(11);
+        let inputs: Vec<i8> = rng.ternary_vec(80, 0.4);
+        let (ip, in_) = pack_inputs_words(&inputs);
+        assert_eq!(ip.len(), 2);
+        for (r, &i) in inputs.iter().enumerate() {
+            assert_eq!((ip[r / 64] >> (r % 64)) & 1 == 1, i == 1, "row {r}");
+            assert_eq!((in_[r / 64] >> (r % 64)) & 1 == 1, i == -1, "row {r}");
+        }
+    }
+
+    #[test]
+    fn col_words_expose_block_masks() {
+        let mut rng = Rng::new(12);
+        let mut s = TernaryStorage::new(128, 3);
+        s.write_matrix(&rng.ternary_vec(128 * 3, 0.4));
+        for col in 0..3 {
+            let (wp, wn) = s.col_words(col);
+            assert_eq!(wp.len(), s.words_per_col());
+            for base in (0..128).step_by(16) {
+                let (bp, bn) = s.block_masks(base, col);
+                assert_eq!(((wp[base / 64] >> (base % 64)) & 0xFFFF) as u16, bp);
+                assert_eq!(((wn[base / 64] >> (base % 64)) & 0xFFFF) as u16, bn);
+            }
         }
     }
 

@@ -1,18 +1,22 @@
 //! Command-line interface (hand-rolled; no clap offline).
 //!
 //! Subcommands:
-//!   figures  [--all|--fig4|--fig7|--fig9|--fig11|--fig12|--fig13|--area|--cmp|--err]
+//!   figures  [--all|--fig4|--fig7|--fig9|--fig11|--fig12|--fig13|--area|--cmp|--err|--cosim]
 //!   selftest             quick functional cross-check of both array flavors
+//!   engine   [--m M --k K --n N] [--design cim1|cim2|nm] [--threads T]
 //!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
-//!   serve    [--artifacts DIR] [--requests N] [--workers W]
+//!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine]
 
 use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::array::{mac, SiTeCim1Array, SiTeCim2Array};
-use crate::coordinator::{Server, ServerConfig};
+use crate::array::area::Design;
+use crate::array::{mac, CimArray, SiTeCim1Array, SiTeCim2Array};
+use crate::coordinator::{BackendKind, Server, ServerConfig};
 use crate::device::Tech;
+use crate::engine::tiling::reference_gemm;
+use crate::engine::{EngineConfig, TernaryGemmEngine};
 use crate::repro;
 use crate::runtime::{self, Manifest, ModelKind};
 use crate::util::cli::Args;
@@ -22,13 +26,16 @@ pub const USAGE: &str = "sitecim — SiTe CiM reproduction (signed ternary compu
 
 USAGE: sitecim <subcommand> [flags]
 
-  figures [--all | --fig4 --fig7 --fig9 --fig11 --fig12 --fig13 --area --cmp --err]
+  figures [--all | --fig4 --fig7 --fig9 --fig11 --fig12 --fig13 --area --cmp --err --cosim]
           regenerate the paper's tables/figures (paper vs measured)
   selftest [--seed S]
           functional cross-check: CiM I/II arrays vs reference semantics
+  engine  [--m M] [--k K] [--n N] [--design cim1|cim2|nm] [--threads T] [--seed S]
+          run a ternary GEMM through the tiled array engine, verify it
+          against the dot_ref tile composition, and report throughput
   infer   [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
           run the AOT-compiled ternary MLP on the held-out test set
-  serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B]
+  serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B] [--backend pjrt|engine]
           start the serving coordinator and push synthetic traffic
   help    this message
 ";
@@ -38,6 +45,7 @@ pub fn run(args: Args) -> Result<i32> {
     match args.subcommand() {
         Some("figures") => cmd_figures(&args),
         Some("selftest") => cmd_selftest(&args),
+        Some("engine") => cmd_engine(&args),
         Some("infer") => cmd_infer(&args),
         Some("serve") => cmd_serve(&args),
         Some("help") | None => {
@@ -69,6 +77,7 @@ fn cmd_figures(args: &Args) -> Result<i32> {
     emit("fig12", &repro::fig12);
     emit("fig13", &repro::fig13);
     emit("err", &repro::error_prob);
+    emit("cosim", &repro::engine_cosim);
     if !printed {
         eprintln!("no figure selected\n{USAGE}");
         return Ok(2);
@@ -98,6 +107,55 @@ fn cmd_selftest(args: &Args) -> Result<i32> {
         failures += usize::from(!ok1) + usize::from(!ok2);
     }
     Ok(if failures == 0 { 0 } else { 1 })
+}
+
+fn cmd_engine(args: &Args) -> Result<i32> {
+    let m = args.get_usize("m", 8);
+    let k = args.get_usize("k", 1024);
+    let n = args.get_usize("n", 1024);
+    let threads = args.get_usize("threads", 0);
+    let seed = args.get_u64("seed", 42);
+    let design = match args.get_or("design", "cim1").as_str() {
+        "cim1" => Design::Cim1,
+        "cim2" => Design::Cim2,
+        "nm" => Design::NearMemory,
+        other => {
+            eprintln!("unknown --design '{other}' (expected cim1|cim2|nm)");
+            return Ok(2);
+        }
+    };
+    let mut cfg = EngineConfig::new(design, Tech::Femfet3T);
+    if threads > 0 {
+        cfg = cfg.with_threads(threads);
+    }
+    let engine = TernaryGemmEngine::new(cfg);
+    let mut rng = Rng::new(seed);
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+
+    let t0 = Instant::now();
+    let got = engine.gemm(&x, &w, m, k, n);
+    let dt = t0.elapsed().as_secs_f64();
+
+    let want = reference_gemm(&x, &w, m, &engine.grid(k, n), design.flavor());
+    let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+    let s = engine.stats();
+    println!(
+        "{:?} GEMM {m}x{k}x{n} on {} threads: {:.3}s, {:.2} GMAC/s ({} tiles, {} windows)",
+        design,
+        engine.cfg().n_threads,
+        dt,
+        (m * k * n) as f64 / dt / 1e9,
+        s.tiles,
+        s.windows
+    );
+    if mismatches == 0 {
+        println!("verified: bit-identical to dot_ref composed over tiles");
+        Ok(0)
+    } else {
+        eprintln!("FAIL: {mismatches}/{} outputs diverge from the reference", got.len());
+        Ok(1)
+    }
 }
 
 fn cmd_infer(args: &Args) -> Result<i32> {
@@ -147,6 +205,14 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let mut cfg = ServerConfig::new(dir.clone());
     cfg.n_workers = args.get_usize("workers", 2);
     cfg.policy.max_batch = args.get_usize("batch", 32);
+    cfg.backend = match args.get_or("backend", "pjrt").as_str() {
+        "pjrt" => BackendKind::Pjrt,
+        "engine" => BackendKind::Engine,
+        other => {
+            eprintln!("unknown --backend '{other}' (expected pjrt|engine)");
+            return Ok(2);
+        }
+    };
     let manifest = Manifest::load(&dir)?;
     let (x, y) = manifest.load_test_set()?;
 

@@ -1,0 +1,169 @@
+//! Servable inference backends.
+//!
+//! The coordinator can execute requests through either of two engines:
+//!
+//! - [`PjrtBackend`] — the AOT-compiled HLO graphs on the PJRT CPU
+//!   client (numerics identical to the JAX/Pallas reference; requires
+//!   artifacts + the `pjrt` feature).
+//! - [`EngineBackend`] — the functional [`TernaryGemmEngine`]: the
+//!   manifest's ternary weights run on simulated SiTe CiM arrays, layer
+//!   by layer, with the AOT-recorded activation thresholds between
+//!   layers (the same forward semantics the e2e_inference example
+//!   validates against the HLO path).
+//!
+//! Both present the same padded-batch trits → logits surface, so the
+//! server's worker loop is backend-agnostic.
+
+use anyhow::{bail, Context, Result};
+
+use crate::array::area::Design;
+use crate::device::Tech;
+use crate::dnn::ternary;
+use crate::engine::{EngineConfig, TernaryGemmEngine};
+use crate::runtime::executor::PjrtClient;
+use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind};
+
+/// Which execution backend serves inference.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    /// AOT HLO on the PJRT CPU client.
+    Pjrt,
+    /// Functional ternary GEMM engine over simulated CiM arrays.
+    Engine,
+}
+
+/// A loaded, servable model: a batch of trit inputs in, logits out.
+pub trait InferenceBackend {
+    /// Maximum batch rows per `run_batch` call.
+    fn batch(&self) -> usize;
+    fn in_dim(&self) -> usize;
+    fn out_dim(&self) -> usize;
+    /// Run `n_valid` row-major input rows; returns `n_valid × out_dim`
+    /// row-major logits.
+    fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>>;
+}
+
+/// The PJRT path: compiled executable + held client.
+pub struct PjrtBackend {
+    // The executable's buffers live on the client; keep it alive.
+    _client: PjrtClient,
+    exe: MlpExecutor,
+}
+
+impl PjrtBackend {
+    pub fn load(manifest: &Manifest, kind: ModelKind) -> Result<PjrtBackend> {
+        let client = cpu_client()?;
+        let exe = MlpExecutor::load(&client, manifest, kind).context("loading executable")?;
+        Ok(PjrtBackend { _client: client, exe })
+    }
+}
+
+impl InferenceBackend for PjrtBackend {
+    fn batch(&self) -> usize {
+        self.exe.batch
+    }
+
+    fn in_dim(&self) -> usize {
+        self.exe.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.exe.out_dim
+    }
+
+    fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>> {
+        self.exe.run_batch(trits, n_valid)
+    }
+}
+
+/// The functional path: manifest weights on the tiled GEMM engine.
+pub struct EngineBackend {
+    engine: TernaryGemmEngine,
+    /// (row-major k×n ternary weights, k, n) per layer.
+    layers: Vec<(Vec<i8>, usize, usize)>,
+    /// Activation thresholds between layers (AOT-recorded).
+    thresholds: Vec<f64>,
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl EngineBackend {
+    pub fn load(
+        manifest: &Manifest,
+        design: Design,
+        tech: Tech,
+        n_threads: usize,
+    ) -> Result<EngineBackend> {
+        let mut layers = Vec::new();
+        for i in 0..manifest.weights.len() {
+            let (w, (k, n)) = manifest.load_weight(i)?;
+            layers.push((w, k, n));
+        }
+        if layers.is_empty() {
+            bail!("manifest describes no weight layers");
+        }
+        for pair in layers.windows(2) {
+            if pair[0].2 != pair[1].1 {
+                bail!("layer shapes do not chain: {}×{} then {}×{}", pair[0].1, pair[0].2, pair[1].1, pair[1].2);
+            }
+        }
+        if manifest.act_thresholds.len() + 1 < layers.len() {
+            bail!(
+                "manifest has {} activation thresholds for {} layers (need {})",
+                manifest.act_thresholds.len(),
+                layers.len(),
+                layers.len() - 1
+            );
+        }
+        let in_dim = layers[0].1;
+        let out_dim = layers.last().unwrap().2;
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(design, tech).with_pool(8).with_threads(n_threads),
+        );
+        Ok(EngineBackend {
+            engine,
+            layers,
+            thresholds: manifest.act_thresholds.clone(),
+            batch: manifest.batch,
+            in_dim,
+            out_dim,
+        })
+    }
+}
+
+impl InferenceBackend for EngineBackend {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>> {
+        if n_valid == 0 || n_valid > self.batch {
+            bail!("n_valid {} out of range 1..={}", n_valid, self.batch);
+        }
+        if trits.len() != n_valid * self.in_dim {
+            bail!("expected {} trits, got {}", n_valid * self.in_dim, trits.len());
+        }
+        let m = n_valid;
+        let mut h: Vec<i8> = trits.to_vec();
+        for (li, (w, k, n)) in self.layers.iter().enumerate() {
+            let y = self.engine.gemm(&h, w, m, *k, *n);
+            if li + 1 < self.layers.len() {
+                // Ternarize hidden activations at the recorded threshold
+                // (length validated at load).
+                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]);
+            } else {
+                return Ok(y.iter().map(|&v| v as f32).collect());
+            }
+        }
+        unreachable!("layers is non-empty; the final layer returns")
+    }
+}

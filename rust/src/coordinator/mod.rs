@@ -1,12 +1,15 @@
-//! Serving coordinator: a thread-based inference service over the PJRT
-//! runtime — bounded request queue, dynamic batcher, N worker threads
-//! (each owning its own PJRT client), request/latency metrics and
-//! simulated-accelerator accounting.
+//! Serving coordinator: a thread-based inference service with pluggable
+//! execution backends — the PJRT runtime or the functional ternary GEMM
+//! engine — behind a bounded request queue, dynamic batcher, N worker
+//! threads (each owning its own backend instance), request/latency
+//! metrics and simulated-accelerator accounting.
 
+pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod server;
 
+pub use backend::{BackendKind, EngineBackend, InferenceBackend, PjrtBackend};
 pub use batcher::BatchPolicy;
 pub use metrics::Metrics;
 pub use server::{InferReply, Server, ServerConfig};

@@ -1,13 +1,14 @@
-//! The inference service: a thread-based request loop over the PJRT
-//! executor, with dynamic batching, per-request latency tracking, and
-//! simulated-accelerator accounting (what the SiTe CiM hardware would
-//! spend on the same traffic).
+//! The inference service: a thread-based request loop over a pluggable
+//! inference backend (PJRT numerics or the functional GEMM engine — see
+//! `coordinator::backend`), with dynamic batching, per-request latency
+//! tracking, and simulated-accelerator accounting (what the SiTe CiM
+//! hardware would spend on the same traffic).
 //!
 //! Topology: N worker threads share one request channel (work-stealing by
-//! contention); each worker owns its own PJRT client + compiled
-//! executable (PJRT handles are created in-thread, so no Send bounds are
-//! needed), pulls batches via the `batcher`, executes, and answers each
-//! request on its private response channel.
+//! contention); each worker owns its own backend instance (PJRT handles
+//! are created in-thread, so no Send bounds are needed), pulls batches
+//! via the `batcher`, executes, and answers each request on its private
+//! response channel.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
@@ -17,13 +18,14 @@ use std::time::Instant;
 
 use anyhow::{Context, Result};
 
+use super::backend::{BackendKind, EngineBackend, InferenceBackend, PjrtBackend};
 use super::batcher::{next_batch, BatchPolicy};
 use super::metrics::Metrics;
 use crate::arch::{AccelConfig, Accelerator};
 use crate::array::area::Design;
 use crate::device::Tech;
 use crate::dnn::{Layer, Network};
-use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind};
+use crate::runtime::{Manifest, ModelKind};
 
 /// One inference request.
 pub struct Request {
@@ -45,9 +47,12 @@ pub struct InferReply {
 pub struct ServerConfig {
     pub artifacts: PathBuf,
     pub kind: ModelKind,
+    /// Which execution backend serves requests.
+    pub backend: BackendKind,
     pub n_workers: usize,
     pub policy: BatchPolicy,
-    /// Which simulated hardware the accounting reflects.
+    /// Which simulated hardware the accounting reflects (and, for the
+    /// engine backend, which functional arrays execute the GEMMs).
     pub sim_tech: Tech,
     pub sim_design: Design,
 }
@@ -57,11 +62,18 @@ impl ServerConfig {
         ServerConfig {
             artifacts,
             kind: ModelKind::Cim1,
+            backend: BackendKind::Pjrt,
             n_workers: 2,
             policy: BatchPolicy::default(),
             sim_tech: Tech::Femfet3T,
             sim_design: Design::Cim1,
         }
+    }
+
+    /// Serve through the functional GEMM engine instead of PJRT.
+    pub fn with_engine_backend(mut self) -> ServerConfig {
+        self.backend = BackendKind::Engine;
+        self
     }
 }
 
@@ -147,7 +159,7 @@ fn worker_loop(
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
-    // PJRT handles are created in-thread.
+    // Backend handles (PJRT client / engine pool) are created in-thread.
     let manifest = match Manifest::load(&dir) {
         Ok(m) => m,
         Err(e) => {
@@ -155,41 +167,47 @@ fn worker_loop(
             return;
         }
     };
-    let client = match cpu_client() {
-        Ok(c) => c,
-        Err(e) => {
-            eprintln!("worker: PJRT client failed: {e:#}");
-            return;
-        }
-    };
-    let exe = match MlpExecutor::load(&client, &manifest, cfg.kind) {
-        Ok(e) => e,
-        Err(e) => {
-            eprintln!("worker: executable load failed: {e:#}");
-            return;
-        }
+    let backend: Box<dyn InferenceBackend> = match cfg.backend {
+        BackendKind::Pjrt => match PjrtBackend::load(&manifest, cfg.kind) {
+            Ok(b) => Box::new(b),
+            Err(e) => {
+                eprintln!("worker: PJRT backend load failed: {e:#}");
+                return;
+            }
+        },
+        // One engine thread per worker: the server already parallelizes
+        // across workers.
+        BackendKind::Engine => match EngineBackend::load(&manifest, cfg.sim_design, cfg.sim_tech, 1) {
+            Ok(b) => Box::new(b),
+            Err(e) => {
+                eprintln!("worker: engine backend load failed: {e:#}");
+                return;
+            }
+        },
     };
 
     loop {
         // Hold the queue lock only while assembling the batch.
         let batch = {
             let guard = rx.lock().unwrap();
-            let policy = BatchPolicy { max_batch: exe.batch.min(cfg.policy.max_batch), ..cfg.policy.clone() };
+            let policy =
+                BatchPolicy { max_batch: backend.batch().min(cfg.policy.max_batch), ..cfg.policy.clone() };
             next_batch(&guard, &policy)
         };
         let Some(batch) = batch else { return }; // channel closed: shutdown
 
         let n = batch.len();
-        let mut flat = Vec::with_capacity(n * exe.in_dim);
+        let mut flat = Vec::with_capacity(n * backend.in_dim());
         for r in &batch {
             flat.extend_from_slice(&r.input);
         }
-        match exe.run_batch(&flat, n) {
+        match backend.run_batch(&flat, n) {
             Ok(logits) => {
                 metrics.record_batch(n, sim_e_per_inf * n as f64, sim_t_per_inf * n as f64);
+                let out_dim = backend.out_dim();
                 for (i, req) in batch.into_iter().enumerate() {
-                    let row = &logits[i * exe.out_dim..(i + 1) * exe.out_dim];
-                    let pred = crate::runtime::executor::argmax_rows(row, exe.out_dim)[0];
+                    let row = &logits[i * out_dim..(i + 1) * out_dim];
+                    let pred = crate::runtime::executor::argmax_rows(row, out_dim)[0];
                     let wall = req.enqueued.elapsed().as_secs_f64();
                     metrics.record_request(wall);
                     let _ = req.resp.send(Ok(InferReply {

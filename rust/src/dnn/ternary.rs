@@ -71,6 +71,24 @@ pub fn ternarize_acts(x: &[f32], theta: f32) -> Vec<Trit> {
         .collect()
 }
 
+/// The same rule for integer pre-activations — the hidden-layer step of
+/// the functional MLP forward pass (engine serving backend and the
+/// e2e_inference example share this).
+pub fn ternarize_acts_i32(y: &[i32], theta: f64) -> Vec<Trit> {
+    y.iter()
+        .map(|&v| {
+            let v = v as f64;
+            if v > theta {
+                1
+            } else if v < -theta {
+                -1
+            } else {
+                0
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -1,0 +1,278 @@
+//! The ternary GEMM execution engine: tiles arbitrary M×K×N ternary
+//! GEMMs across a pool of functional [`CimArray`] backends and runs the
+//! tiles on worker threads — the functional counterpart of the analytic
+//! `arch::Accelerator` (which only *accounts* for this work).
+//!
+//! Mapping (same weight-stationary scheme as `arch::mapper::map_layer`):
+//! K → array rows, N → array columns, one tile = one array-full of
+//! weights, zero-padded at the edges (inert — see [`tiling`]). Each tile
+//! job programs its worker's array once and streams all M input vectors
+//! through the backend's batched bit-packed fast path; partial products
+//! accumulate into the shared output under a mutex (i32 addition is
+//! order-independent, so single- and multi-threaded runs are
+//! bit-identical).
+//!
+//! The specification is [`tiling::reference_gemm`] — `mac::dot_ref`
+//! composed over tiles — and `gemm` matches it bit-for-bit for all three
+//! backends (see tests/cim_conformance.rs).
+
+pub mod tiling;
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+use crate::array::area::Design;
+use crate::array::encoding::Trit;
+use crate::array::mac::GROUP_ROWS;
+use crate::array::{make_array, CimArray};
+use crate::device::Tech;
+use self::tiling::TileGrid;
+
+/// Engine shape: which backend design/tech, the array geometry, the pool
+/// size and the worker-thread count.
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    pub design: Design,
+    pub tech: Tech,
+    /// Rows per array (K capacity per tile); multiple of 16.
+    pub array_rows: usize,
+    /// Columns per array (N capacity per tile).
+    pub array_cols: usize,
+    /// Arrays in the pool (the paper's system has 32).
+    pub n_arrays: usize,
+    /// Worker threads (clamped to the pool size; 1 = single-threaded).
+    pub n_threads: usize,
+}
+
+impl EngineConfig {
+    /// The paper's system shape: 32 arrays of 256×256, one worker per
+    /// available core.
+    pub fn new(design: Design, tech: Tech) -> EngineConfig {
+        let threads = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4);
+        EngineConfig {
+            design,
+            tech,
+            array_rows: 256,
+            array_cols: 256,
+            n_arrays: 32,
+            n_threads: threads.min(32),
+        }
+    }
+
+    pub fn with_threads(mut self, n_threads: usize) -> EngineConfig {
+        self.n_threads = n_threads.max(1);
+        self
+    }
+
+    pub fn with_pool(mut self, n_arrays: usize) -> EngineConfig {
+        self.n_arrays = n_arrays.max(1);
+        self
+    }
+
+    pub fn with_array_dims(mut self, rows: usize, cols: usize) -> EngineConfig {
+        self.array_rows = rows;
+        self.array_cols = cols;
+        self
+    }
+}
+
+/// Cumulative work counters (functional-simulation accounting, feeding
+/// the co-simulation cross-checks and the benches).
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    gemms: AtomicU64,
+    tiles: AtomicU64,
+    windows: AtomicU64,
+    macs: AtomicU64,
+}
+
+/// Point-in-time copy of [`EngineStats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStatsSnapshot {
+    pub gemms: u64,
+    /// Weight tiles programmed (array-fulls streamed in).
+    pub tiles: u64,
+    /// 16-row MAC windows executed across all tiles and input vectors.
+    pub windows: u64,
+    /// Useful multiply-accumulates covered (excludes padding).
+    pub macs: u64,
+}
+
+/// Functional tiled ternary GEMM over a pool of [`CimArray`] backends.
+pub struct TernaryGemmEngine {
+    cfg: EngineConfig,
+    pool: Vec<Mutex<Box<dyn CimArray>>>,
+    stats: EngineStats,
+}
+
+impl TernaryGemmEngine {
+    pub fn new(cfg: EngineConfig) -> TernaryGemmEngine {
+        assert!(cfg.array_rows > 0 && cfg.array_rows % GROUP_ROWS == 0,
+            "array_rows must be a positive multiple of {GROUP_ROWS}");
+        assert!(cfg.array_cols > 0 && cfg.n_arrays > 0);
+        let pool = (0..cfg.n_arrays)
+            .map(|_| Mutex::new(make_array(cfg.design, cfg.tech, cfg.array_rows, cfg.array_cols)))
+            .collect();
+        TernaryGemmEngine { cfg, pool, stats: EngineStats::default() }
+    }
+
+    pub fn cfg(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    pub fn stats(&self) -> EngineStatsSnapshot {
+        EngineStatsSnapshot {
+            gemms: self.stats.gemms.load(Ordering::Relaxed),
+            tiles: self.stats.tiles.load(Ordering::Relaxed),
+            windows: self.stats.windows.load(Ordering::Relaxed),
+            macs: self.stats.macs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The tile grid a GEMM of this shape maps to on this engine.
+    pub fn grid(&self, k: usize, n: usize) -> TileGrid {
+        TileGrid::new(k, n, self.cfg.array_rows, self.cfg.array_cols)
+    }
+
+    /// Execute a ternary GEMM: `x` (row-major M×K trits) × `w` (row-major
+    /// K×N trits) → row-major M×N i32 outputs, under the backend's MAC
+    /// semantics (saturating per 16-row group for the CiM flavors, exact
+    /// for near-memory). Deterministic: bit-identical to
+    /// [`tiling::reference_gemm`] regardless of thread count.
+    pub fn gemm(&self, x: &[Trit], w: &[Trit], m: usize, k: usize, n: usize) -> Vec<i32> {
+        assert!(m > 0, "empty batch");
+        assert_eq!(x.len(), m * k, "x must be m×k = {m}×{k}");
+        assert_eq!(w.len(), k * n, "w must be k×n = {k}×{n}");
+        let grid = self.grid(k, n);
+        let tiles = grid.tiles();
+        let out = Mutex::new(vec![0i32; m * n]);
+        let next = AtomicUsize::new(0);
+        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(tiles.len());
+        std::thread::scope(|s| {
+            for wid in 0..workers {
+                let (tiles, out, next, grid) = (&tiles, &out, &next, &grid);
+                s.spawn(move || self.run_tiles(wid, x, w, m, grid, tiles, next, out));
+            }
+        });
+        self.stats.gemms.fetch_add(1, Ordering::Relaxed);
+        out.into_inner().unwrap()
+    }
+
+    /// Worker loop: claim tiles off the shared counter, program this
+    /// worker's array, stream the batch through it, merge partials.
+    #[allow(clippy::too_many_arguments)]
+    fn run_tiles(
+        &self,
+        wid: usize,
+        x: &[Trit],
+        w: &[Trit],
+        m: usize,
+        grid: &TileGrid,
+        tiles: &[tiling::Tile],
+        next: &AtomicUsize,
+        out: &Mutex<Vec<i32>>,
+    ) {
+        let (rows, cols) = (self.cfg.array_rows, self.cfg.array_cols);
+        let mut arr = self.pool[wid].lock().unwrap();
+        let mut wbuf = vec![0i8; rows * cols];
+        let mut xbuf = vec![0i8; m * rows];
+        loop {
+            let ti = next.fetch_add(1, Ordering::Relaxed);
+            let Some(tile) = tiles.get(ti) else { break };
+            // Stream the tile's weights in (once per tile, weight-
+            // stationary across the whole batch).
+            tiling::extract_tile_weights(w, grid.k, grid.n, tile, rows, cols, &mut wbuf);
+            arr.write_matrix(&wbuf);
+            for r in 0..m {
+                tiling::extract_tile_inputs(
+                    &x[r * grid.k..(r + 1) * grid.k],
+                    tile,
+                    rows,
+                    &mut xbuf[r * rows..(r + 1) * rows],
+                );
+            }
+            let partial = arr.dot_batch(&xbuf, m);
+            {
+                let mut o = out.lock().unwrap();
+                for r in 0..m {
+                    let src = &partial[r * cols..r * cols + tile.n_len];
+                    let base = r * grid.n + tile.n0;
+                    for (d, s) in o[base..base + tile.n_len].iter_mut().zip(src) {
+                        *d += s;
+                    }
+                }
+            }
+            self.stats.tiles.fetch_add(1, Ordering::Relaxed);
+            self.stats.windows.fetch_add((m * (rows / GROUP_ROWS)) as u64, Ordering::Relaxed);
+            self.stats.macs.fetch_add((m * tile.k_len * tile.n_len) as u64, Ordering::Relaxed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::array::mac::Flavor;
+    use crate::util::rng::Rng;
+
+    fn small_engine(design: Design, threads: usize) -> TernaryGemmEngine {
+        TernaryGemmEngine::new(
+            EngineConfig::new(design, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_pool(4)
+                .with_threads(threads),
+        )
+    }
+
+    #[test]
+    fn gemm_matches_tiled_reference_all_designs() {
+        let mut rng = Rng::new(41);
+        let (m, k, n) = (3usize, 150usize, 50usize);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        for design in Design::ALL {
+            let eng = small_engine(design, 2);
+            let got = eng.gemm(&x, &w, m, k, n);
+            let want = tiling::reference_gemm(&x, &w, m, &eng.grid(k, n), design.flavor());
+            assert_eq!(got, want, "{design:?}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        let mut rng = Rng::new(42);
+        let (m, k, n) = (2usize, 200usize, 90usize);
+        let x = rng.ternary_vec(m * k, 0.4);
+        let w = rng.ternary_vec(k * n, 0.4);
+        let single = small_engine(Design::Cim1, 1).gemm(&x, &w, m, k, n);
+        let multi = small_engine(Design::Cim1, 4).gemm(&x, &w, m, k, n);
+        assert_eq!(single, multi);
+    }
+
+    #[test]
+    fn stats_account_tiles_and_macs() {
+        let mut rng = Rng::new(43);
+        let (m, k, n) = (2usize, 100usize, 40usize);
+        let eng = small_engine(Design::Cim2, 2);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let _ = eng.gemm(&x, &w, m, k, n);
+        let s = eng.stats();
+        assert_eq!(s.gemms, 1);
+        assert_eq!(s.tiles, eng.grid(k, n).n_tiles_total() as u64);
+        assert_eq!(s.macs, (m * k * n) as u64);
+        assert_eq!(s.windows, s.tiles * (m * (64 / 16)) as u64);
+    }
+
+    #[test]
+    fn single_tile_gemm_equals_plain_dot() {
+        let mut rng = Rng::new(44);
+        let eng = small_engine(Design::Cim1, 1);
+        let x = rng.ternary_vec(64, 0.5);
+        let w = rng.ternary_vec(64 * 32, 0.5);
+        let got = eng.gemm(&x, &w, 1, 64, 32);
+        let mut storage = crate::array::TernaryStorage::new(64, 32);
+        storage.write_matrix(&w);
+        assert_eq!(got, crate::array::mac::dot_ref(&storage, &x, Flavor::Cim1));
+    }
+}

@@ -1,0 +1,212 @@
+//! K×N tile decomposition for the GEMM engine.
+//!
+//! Weight-stationary mapping, mirroring `arch::mapper`: a GEMM's K
+//! (reduction) dimension maps to array rows, N (output channels) to
+//! columns; one tile is one array-full of weights. Partial edge tiles are
+//! zero-padded to the full array shape — zero weights and zero inputs are
+//! electrically inert, so padding never changes a group output, and the
+//! row grouping of a padded tile is identical for every tile in a grid
+//! (this is what makes the per-tile reference composition exact).
+
+use crate::array::encoding::Trit;
+use crate::array::mac::{dot_exact, dot_ref, Flavor};
+use crate::array::TernaryStorage;
+
+/// The K×N tile grid of one GEMM on one array shape.
+#[derive(Clone, Copy, Debug)]
+pub struct TileGrid {
+    pub k: usize,
+    pub n: usize,
+    /// Array rows (K capacity per tile); multiple of 16.
+    pub rows: usize,
+    /// Array columns (N capacity per tile).
+    pub cols: usize,
+    pub k_tiles: usize,
+    pub n_tiles: usize,
+}
+
+/// One weight tile: rows `k0..k0+k_len` × columns `n0..n0+n_len` of the
+/// full K×N weight matrix, padded to `rows × cols` on the array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub kt: usize,
+    pub nt: usize,
+    pub k0: usize,
+    pub k_len: usize,
+    pub n0: usize,
+    pub n_len: usize,
+}
+
+impl TileGrid {
+    pub fn new(k: usize, n: usize, rows: usize, cols: usize) -> TileGrid {
+        assert!(k > 0 && n > 0, "empty GEMM ({k}×{n})");
+        assert!(rows > 0 && rows % 16 == 0, "array rows must be a positive multiple of 16");
+        assert!(cols > 0, "array must have columns");
+        TileGrid { k, n, rows, cols, k_tiles: k.div_ceil(rows), n_tiles: n.div_ceil(cols) }
+    }
+
+    pub fn n_tiles_total(&self) -> usize {
+        self.k_tiles * self.n_tiles
+    }
+
+    /// All tiles, k-major (every k-tile of an n-stripe is adjacent so a
+    /// worker sweeping consecutive tiles reuses its output stripe).
+    pub fn tiles(&self) -> Vec<Tile> {
+        let mut out = Vec::with_capacity(self.n_tiles_total());
+        for nt in 0..self.n_tiles {
+            let n0 = nt * self.cols;
+            let n_len = self.cols.min(self.n - n0);
+            for kt in 0..self.k_tiles {
+                let k0 = kt * self.rows;
+                let k_len = self.rows.min(self.k - k0);
+                out.push(Tile { kt, nt, k0, k_len, n0, n_len });
+            }
+        }
+        out
+    }
+}
+
+/// Copy one tile of the row-major K×N weight matrix into a zero-padded
+/// `rows × cols` array image.
+pub fn extract_tile_weights(
+    w: &[Trit],
+    k: usize,
+    n: usize,
+    tile: &Tile,
+    rows: usize,
+    cols: usize,
+    buf: &mut [Trit],
+) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(buf.len(), rows * cols);
+    buf.fill(0);
+    for r in 0..tile.k_len {
+        let src = (tile.k0 + r) * n + tile.n0;
+        buf[r * cols..r * cols + tile.n_len].copy_from_slice(&w[src..src + tile.n_len]);
+    }
+}
+
+/// Copy the k-slice of one input vector into a zero-padded `rows`-long
+/// array input.
+pub fn extract_tile_inputs(x_row: &[Trit], tile: &Tile, rows: usize, buf: &mut [Trit]) {
+    assert_eq!(buf.len(), rows);
+    buf.fill(0);
+    buf[..tile.k_len].copy_from_slice(&x_row[tile.k0..tile.k0 + tile.k_len]);
+}
+
+/// The engine's specification: `dot_ref` (or the exact MAC when `flavor`
+/// is `None`) composed over the tiles of `grid` — pure integer math, no
+/// engine, no threads. `TernaryGemmEngine::gemm` must match this
+/// bit-for-bit; the conformance tests and the accelerator co-simulation
+/// both check against it.
+pub fn reference_gemm(
+    x: &[Trit],
+    w: &[Trit],
+    m: usize,
+    grid: &TileGrid,
+    flavor: Option<Flavor>,
+) -> Vec<i32> {
+    assert_eq!(x.len(), m * grid.k);
+    assert_eq!(w.len(), grid.k * grid.n);
+    let (rows, cols) = (grid.rows, grid.cols);
+    let mut out = vec![0i32; m * grid.n];
+    let mut wbuf = vec![0i8; rows * cols];
+    let mut xbuf = vec![0i8; rows];
+    for tile in grid.tiles() {
+        extract_tile_weights(w, grid.k, grid.n, &tile, rows, cols, &mut wbuf);
+        let mut storage = TernaryStorage::new(rows, cols);
+        storage.write_matrix(&wbuf);
+        for r in 0..m {
+            extract_tile_inputs(&x[r * grid.k..(r + 1) * grid.k], &tile, rows, &mut xbuf);
+            let partial: Vec<i32> = match flavor {
+                Some(f) => dot_ref(&storage, &xbuf, f),
+                None => dot_exact(&storage, &xbuf).into_iter().map(|v| v as i32).collect(),
+            };
+            let dst = &mut out[r * grid.n + tile.n0..r * grid.n + tile.n0 + tile.n_len];
+            for (d, s) in dst.iter_mut().zip(&partial[..tile.n_len]) {
+                *d += s;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grid_covers_ragged_dims() {
+        let g = TileGrid::new(300, 70, 64, 32);
+        assert_eq!((g.k_tiles, g.n_tiles), (5, 3));
+        let tiles = g.tiles();
+        assert_eq!(tiles.len(), 15);
+        // Every (k, n) element is covered exactly once.
+        let mut cover = vec![0u8; 300 * 70];
+        for t in &tiles {
+            for r in t.k0..t.k0 + t.k_len {
+                for c in t.n0..t.n0 + t.n_len {
+                    cover[r * 70 + c] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1));
+        // Edge tiles are short.
+        let last = tiles.last().unwrap();
+        assert_eq!((last.k_len, last.n_len), (300 - 4 * 64, 70 - 2 * 32));
+    }
+
+    #[test]
+    fn extraction_pads_with_zeros() {
+        let mut rng = Rng::new(1);
+        let (k, n) = (20usize, 10usize);
+        let w = rng.ternary_vec(k * n, 0.3);
+        let g = TileGrid::new(k, n, 16, 8);
+        let t = g.tiles()[3]; // kt=1, nt=1: 4×2 corner
+        assert_eq!((t.k_len, t.n_len), (4, 2));
+        let mut buf = vec![9i8; 16 * 8];
+        extract_tile_weights(&w, k, n, &t, 16, 8, &mut buf);
+        for r in 0..16 {
+            for c in 0..8 {
+                let want = if r < t.k_len && c < t.n_len { w[(t.k0 + r) * n + t.n0 + c] } else { 0 };
+                assert_eq!(buf[r * 8 + c], want, "r={r} c={c}");
+            }
+        }
+        let x = rng.ternary_vec(k, 0.3);
+        let mut xb = vec![9i8; 16];
+        extract_tile_inputs(&x, &t, 16, &mut xb);
+        assert_eq!(&xb[..4], &x[16..20]);
+        assert!(xb[4..].iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn reference_gemm_exact_flavor_is_plain_matmul() {
+        let mut rng = Rng::new(2);
+        let (m, k, n) = (3usize, 40usize, 21usize);
+        let x = rng.ternary_vec(m * k, 0.4);
+        let w = rng.ternary_vec(k * n, 0.4);
+        let g = TileGrid::new(k, n, 16, 8);
+        let got = reference_gemm(&x, &w, m, &g, None);
+        for r in 0..m {
+            for c in 0..n {
+                let want: i32 =
+                    (0..k).map(|i| x[r * k + i] as i32 * w[i * n + c] as i32).sum();
+                assert_eq!(got[r * n + c], want, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn reference_gemm_tiling_independent_for_exact() {
+        // The exact (unsaturated) composition must not depend on the
+        // array shape; the saturating flavors legitimately do.
+        let mut rng = Rng::new(3);
+        let (m, k, n) = (2usize, 100usize, 30usize);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let a = reference_gemm(&x, &w, m, &TileGrid::new(k, n, 32, 16), None);
+        let b = reference_gemm(&x, &w, m, &TileGrid::new(k, n, 64, 30), None);
+        assert_eq!(a, b);
+    }
+}

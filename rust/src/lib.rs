@@ -10,15 +10,26 @@
 //! - [`array`] — the paper's contribution: SiTe CiM I (cross-coupled
 //!   bit-cells, voltage sensing) and SiTe CiM II (cross-coupled
 //!   sub-columns, current sensing) functional + energy/latency/area
-//!   models, against near-memory baselines.
+//!   models, against near-memory baselines — all behind the
+//!   [`array::CimArray`] trait (see its docs for the grouping /
+//!   saturation / flavor contract).
+//! - [`engine`] — the tiled ternary GEMM execution engine: maps
+//!   arbitrary M×K×N GEMMs onto a pool of `CimArray` backends
+//!   (K×N weight-stationary tiling, batched bit-packed MAC fast path,
+//!   multi-threaded tile execution) with a `dot_ref`-composed reference
+//!   specification.
 //! - [`arch`] — the TiM-DNN-style accelerator (32 arrays, 32 PCUs) plus
-//!   iso-capacity / iso-area near-memory baseline systems.
+//!   iso-capacity / iso-area near-memory baseline systems, and the
+//!   functional co-simulation mode that cross-checks the analytic model
+//!   against the engine.
 //! - [`dnn`] — the five benchmark workloads (AlexNet, ResNet34,
 //!   Inception, LSTM, GRU) as ternary GEMM workloads.
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
-//!   artifacts (python never runs at inference time).
-//! - [`coordinator`] — a thread-based inference service over the
-//!   simulated accelerator + PJRT numerics.
+//!   artifacts (python never runs at inference time). Gated behind the
+//!   `pjrt` feature; the default build stubs it.
+//! - [`coordinator`] — a thread-based inference service with two
+//!   servable backends: the PJRT numerics path and the functional
+//!   GEMM-engine path.
 //! - [`repro`] — one entry point per paper figure/table.
 
 pub mod arch;
@@ -28,6 +39,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod device;
 pub mod dnn;
+pub mod engine;
 pub mod repro;
 pub mod runtime;
 pub mod util;

@@ -6,7 +6,7 @@ pub mod figures;
 pub mod system;
 
 pub use figures::{area_table, cim1_vs_cim2, error_prob, fig11, fig4, fig7, fig9};
-pub use system::{fig12, fig13};
+pub use system::{engine_cosim, fig12, fig13};
 
 /// Run every reproduction, returning the combined report.
 pub fn run_all() -> String {
@@ -20,5 +20,6 @@ pub fn run_all() -> String {
     out.push_str(&fig12());
     out.push_str(&fig13());
     out.push_str(&error_prob());
+    out.push_str(&engine_cosim());
     out
 }

@@ -1,8 +1,9 @@
 //! System-level reproductions: Fig 12 (SiTe CiM I) and Fig 13 (SiTe CiM
 //! II) — normalized execution time and energy vs the iso-capacity and
-//! iso-area near-memory baselines over the five-benchmark suite.
+//! iso-area near-memory baselines over the five-benchmark suite — plus
+//! the functional engine co-simulation cross-check.
 
-use crate::arch::{AccelConfig, Accelerator};
+use crate::arch::{AccelConfig, Accelerator, CosimConfig};
 use crate::array::area::Design;
 use crate::device::Tech;
 use crate::dnn::benchmarks;
@@ -82,6 +83,35 @@ pub fn fig13() -> String {
     )
 }
 
+/// Functional co-simulation: the tiled GEMM engine executes the front of
+/// AlexNet on every design's array fabric and the outputs are compared
+/// element-for-element against the `mac::dot_ref` tile composition. No
+/// paper figure corresponds — this validates that the system the
+/// analytic model *accounts for* actually computes correctly.
+pub fn engine_cosim() -> String {
+    let net = benchmarks::alexnet();
+    let ccfg = CosimConfig { max_vectors: 1, max_layers: 5, n_threads: 4, ..Default::default() };
+    let mut t = Table::new("Engine co-simulation — AlexNet conv layers, 1 vector/layer")
+        .header(&["design", "layers", "outputs checked", "mismatches", "tiles", "MAC windows"]);
+    for design in Design::ALL {
+        let accel = match design {
+            Design::NearMemory => Accelerator::new(AccelConfig::iso_capacity_nm(Tech::Femfet3T)),
+            d => Accelerator::new(AccelConfig::sitecim(Tech::Femfet3T, d)),
+        };
+        let r = accel.run_cosim(&net, &ccfg);
+        t.row(&[
+            design.name().to_string(),
+            r.layers.len().to_string(),
+            r.total_outputs().to_string(),
+            r.total_mismatches().to_string(),
+            r.engine.tiles.to_string(),
+            r.engine.windows.to_string(),
+        ]);
+    }
+    t.note("engine outputs must be bit-identical to dot_ref composed over tiles (0 mismatches)");
+    t.render()
+}
+
 /// Average speedups/energy-reductions for one design (used by tests and
 /// EXPERIMENTS.md generation).
 pub fn averages(design: Design, tech: Tech) -> (f64, f64, f64) {
@@ -137,5 +167,16 @@ mod tests {
     fn figures_render() {
         assert!(fig12().contains("AlexNet"));
         assert!(fig13().contains("GRU"));
+    }
+
+    #[test]
+    fn cosim_table_renders_all_designs() {
+        // Bit-level agreement itself is asserted by the arch::accel cosim
+        // test; here we check the repro surface renders every design.
+        let s = engine_cosim();
+        assert!(s.contains("SiTe CiM I"));
+        assert!(s.contains("SiTe CiM II"));
+        assert!(s.contains("NM baseline"));
+        assert!(s.contains("dot_ref"));
     }
 }

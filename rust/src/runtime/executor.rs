@@ -11,6 +11,11 @@ use anyhow::{bail, Context, Result};
 
 use super::artifact::Manifest;
 
+// Without the `pjrt` feature the real `xla` bindings are not linked;
+// alias the stub (same API surface, errors at call time) in their place.
+#[cfg(not(feature = "pjrt"))]
+use super::pjrt_stub as xla;
+
 /// Which exported model graph to run.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ModelKind {
@@ -130,6 +135,10 @@ pub fn compile_hlo_file(client: &xla::PjRtClient, path: &Path) -> Result<xla::Pj
     let comp = xla::XlaComputation::from_proto(&proto);
     client.compile(&comp).with_context(|| format!("compiling {}", path.display()))
 }
+
+/// The PJRT client type (real bindings or the stub, per the `pjrt`
+/// feature) — nameable by other modules without repeating the cfg gate.
+pub type PjrtClient = xla::PjRtClient;
 
 /// New CPU PJRT client.
 pub fn cpu_client() -> Result<xla::PjRtClient> {

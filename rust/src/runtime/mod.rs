@@ -1,9 +1,16 @@
 //! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts (HLO text)
 //! and executes them on the CPU PJRT client. Python never runs here —
 //! the rust binary is self-contained once `make artifacts` has run.
+//!
+//! The PJRT bindings (`xla` crate) are only linked when the `pjrt`
+//! feature is enabled; the default build substitutes [`pjrt_stub`] so
+//! the crate builds offline, and every PJRT entry point errors at call
+//! time instead (callers already skip gracefully).
 
 pub mod artifact;
 pub mod executor;
+#[cfg(not(feature = "pjrt"))]
+pub mod pjrt_stub;
 
 pub use artifact::{default_dir, Manifest};
 pub use executor::{cpu_client, KernelExecutor, MlpExecutor, ModelKind};

@@ -1,7 +1,7 @@
 //! Integration: bit-level array functional simulation agrees with the
 //! saturating-MAC specification across flavors, techs and sparsities.
 use sitecim::array::mac::{dot_exact, dot_ref, Flavor};
-use sitecim::array::{NearMemoryArray, SiTeCim1Array, SiTeCim2Array};
+use sitecim::array::{CimArray, NearMemoryArray, SiTeCim1Array, SiTeCim2Array};
 use sitecim::device::Tech;
 use sitecim::util::rng::Rng;
 
@@ -27,7 +27,7 @@ fn nm_baseline_is_exact_and_cim_is_close_at_sparsity() {
     let inputs = rng.ternary_vec(256, 0.55);
     let mut nm = NearMemoryArray::with_dims(Tech::Sram8T, 256, 128);
     nm.write_matrix(&w);
-    let exact = nm.dot(&inputs);
+    let exact = nm.dot_exact(&inputs);
     let mut c1 = SiTeCim1Array::with_dims(Tech::Sram8T, 256, 128);
     c1.write_matrix(&w);
     let sat = c1.dot(&inputs);

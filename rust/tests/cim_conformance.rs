@@ -1,0 +1,170 @@
+//! Conformance suite for the `CimArray` trait layer: one generic battery
+//! run against all three backends, plus engine-vs-reference GEMM
+//! equivalence on random shapes.
+
+use sitecim::array::mac::{dot_exact, dot_ref, GROUP_ROWS, SAT};
+use sitecim::array::{make_array, CimArray, Design};
+use sitecim::device::Tech;
+use sitecim::engine::tiling::reference_gemm;
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::util::rng::Rng;
+
+fn all_backends(rows: usize, cols: usize) -> Vec<Box<dyn CimArray>> {
+    Design::ALL
+        .iter()
+        .zip(Tech::ALL)
+        .map(|(&design, tech)| make_array(design, tech, rows, cols))
+        .collect()
+}
+
+#[test]
+fn write_read_roundtrip_all_backends() {
+    let mut rng = Rng::new(101);
+    for arr in &mut all_backends(64, 24) {
+        let w = rng.ternary_vec(64 * 24, 0.4);
+        arr.write_matrix(&w);
+        for r in 0..64 {
+            assert_eq!(arr.read_row(r), w[r * 24..(r + 1) * 24], "{:?} row {r}", arr.design());
+        }
+        // Point rewrites clear old state through the trait surface too.
+        arr.write(5, 3, 1);
+        arr.write(5, 3, -1);
+        assert_eq!(arr.storage().read(5, 3), -1, "{:?}", arr.design());
+    }
+}
+
+#[test]
+fn dot_agrees_with_specification_all_backends() {
+    let mut rng = Rng::new(102);
+    for sparsity in [0.3, 0.5, 0.8] {
+        for arr in &mut all_backends(128, 40) {
+            let w = rng.ternary_vec(128 * 40, sparsity);
+            arr.write_matrix(&w);
+            let inputs = rng.ternary_vec(128, sparsity);
+            let got = arr.dot(&inputs);
+            let want: Vec<i32> = match arr.design().flavor() {
+                Some(f) => dot_ref(arr.storage(), &inputs, f),
+                None => dot_exact(arr.storage(), &inputs).into_iter().map(|x| x as i32).collect(),
+            };
+            assert_eq!(got, want, "{:?} at sparsity {sparsity}", arr.design());
+        }
+    }
+}
+
+#[test]
+fn dot_batch_equals_per_row_dot_all_backends() {
+    let mut rng = Rng::new(103);
+    let m = 4;
+    for arr in &mut all_backends(64, 16) {
+        arr.write_matrix(&rng.ternary_vec(64 * 16, 0.5));
+        let xs = rng.ternary_vec(m * 64, 0.5);
+        let batched = arr.dot_batch(&xs, m);
+        for r in 0..m {
+            assert_eq!(
+                &batched[r * 16..(r + 1) * 16],
+                arr.dot(&xs[r * 64..(r + 1) * 64]).as_slice(),
+                "{:?} row {r}",
+                arr.design()
+            );
+        }
+    }
+}
+
+#[test]
+fn mac_cycles_partition_and_sum_to_dot() {
+    let mut rng = Rng::new(104);
+    for arr in &mut all_backends(96, 10) {
+        arr.write_matrix(&rng.ternary_vec(96 * 10, 0.5));
+        let inputs = rng.ternary_vec(96, 0.5);
+        let n_cycles = 96 / GROUP_ROWS;
+        let mut acc = vec![0i32; 10];
+        for cycle in 0..n_cycles {
+            let cyc_inputs: Vec<i8> = match arr.design().flavor() {
+                Some(f) => f.group_rows(96, cycle).iter().map(|&r| inputs[r]).collect(),
+                None => inputs[cycle * GROUP_ROWS..(cycle + 1) * GROUP_ROWS].to_vec(),
+            };
+            let part = arr.mac_cycle(cycle, &cyc_inputs);
+            for (a, p) in acc.iter_mut().zip(part) {
+                *a += p;
+            }
+        }
+        assert_eq!(acc, arr.dot(&inputs), "{:?}", arr.design());
+    }
+}
+
+/// The §III.2/§IV.3 divergence: within one 16-row group with a = 10
+/// +1-products and b = 2 −1-products, CiM I digitizes the counts
+/// separately (min(10,8) − min(2,8) = 6) while CiM II subtracts first
+/// (sign(8)·min(8,8) = 8). The NM baseline is exact (10 − 2 = 8).
+#[test]
+fn cim1_vs_cim2_diverge_on_large_counts() {
+    // Single 16-row group, one column: 12 rows hold +1 weights.
+    let weights: Vec<i8> = (0..16).map(|r| i8::from(r < 12)).collect();
+    // Inputs: +1 on rows 0..10 (products +1), −1 on rows 10..12
+    // (products −1), 0 elsewhere → (a, b) = (10, 2).
+    let inputs: Vec<i8> = (0..16)
+        .map(|r| {
+            if r < 10 {
+                1
+            } else if r < 12 {
+                -1
+            } else {
+                0
+            }
+        })
+        .collect();
+    let mut results = Vec::new();
+    for design in Design::ALL {
+        let mut arr = make_array(design, Tech::Sram8T, 16, 1);
+        arr.write_matrix(&weights);
+        results.push((design, arr.dot(&inputs)[0]));
+    }
+    assert_eq!(results[0], (Design::NearMemory, 8), "exact MAC");
+    assert_eq!(results[1], (Design::Cim1, 6), "two-ADC path clamps a at 8 first");
+    assert_eq!(results[2], (Design::Cim2, 8), "subtract-then-digitize path");
+    // And both flavors obey the per-group bound.
+    assert!(results.iter().all(|&(_, o)| o.abs() <= SAT as i32));
+}
+
+#[test]
+fn engine_matches_tiled_reference_on_random_shapes() {
+    let mut rng = Rng::new(105);
+    // (m, k, n) shapes chosen to hit exact fits, ragged edges, single
+    // tiles and K/N both larger than one array.
+    let shapes = [(1usize, 64usize, 32usize), (3, 100, 70), (2, 256, 40), (5, 300, 90), (1, 48, 130)];
+    for design in Design::ALL {
+        for &(m, k, n) in &shapes {
+            let engine = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_pool(4)
+                    .with_threads(3),
+            );
+            let x = rng.ternary_vec(m * k, 0.5);
+            let w = rng.ternary_vec(k * n, 0.5);
+            let got = engine.gemm(&x, &w, m, k, n);
+            let want = reference_gemm(&x, &w, m, &engine.grid(k, n), design.flavor());
+            assert_eq!(got, want, "{design:?} {m}x{k}x{n}");
+        }
+    }
+}
+
+#[test]
+fn engine_single_and_multi_thread_are_bit_identical() {
+    let mut rng = Rng::new(106);
+    let (m, k, n) = (4usize, 500usize, 120usize);
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    for design in Design::ALL {
+        let mk = |threads| {
+            TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Sram8T)
+                    .with_array_dims(128, 64)
+                    .with_pool(6)
+                    .with_threads(threads),
+            )
+            .gemm(&x, &w, m, k, n)
+        };
+        assert_eq!(mk(1), mk(6), "{design:?}");
+    }
+}

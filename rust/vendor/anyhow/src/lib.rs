@@ -1,0 +1,252 @@
+//! Minimal offline stand-in for the `anyhow` crate.
+//!
+//! The offline crate registry only carries the `xla` dependency tree, so
+//! this vendored path dependency implements the small surface the
+//! workspace actually uses:
+//!
+//! - [`Error`]: a context-chained error value (message chain, no
+//!   backtraces). `{e}` prints the outermost context, `{e:#}` the whole
+//!   chain separated by `: `, matching upstream `anyhow` semantics.
+//! - [`Result<T>`] with the `E = Error` default parameter.
+//! - [`Context`]: `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! - [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//!
+//! Anything an upstream `anyhow` consumer would notice (downcasting,
+//! backtrace capture) is intentionally out of scope.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+/// A context-chained error. Stored innermost (root cause) first.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+/// `anyhow::Result<T>`: `std::result::Result` with a defaulted error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M>(message: M) -> Error
+    where
+        M: fmt::Display + fmt::Debug + Send + Sync + 'static,
+    {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    fn push_context(mut self, context: String) -> Error {
+        self.chain.push(context);
+        self
+    }
+
+    /// The messages from outermost context to root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().rev().map(String::as_str)
+    }
+
+    /// The innermost (root) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.first().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{e:#}`: the whole chain, outermost first.
+            for (i, msg) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{msg}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.chain.last().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut msgs = self.chain();
+        write!(f, "{}", msgs.next().unwrap_or(""))?;
+        let causes: Vec<&str> = msgs.collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: StdError + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        msgs.reverse(); // innermost first
+        Error { chain: msgs }
+    }
+}
+
+mod private {
+    use super::{Error, StdError};
+
+    /// Sealed conversion used by [`super::Context`]. The blanket impl
+    /// covers std errors; the direct impl lets `.context(..)` chain onto
+    /// an existing `anyhow::Error` (which deliberately does NOT
+    /// implement `std::error::Error`, mirroring upstream).
+    pub trait IntoError {
+        fn into_error(self) -> Error;
+    }
+
+    impl<E> IntoError for E
+    where
+        E: StdError + Send + Sync + 'static,
+    {
+        fn into_error(self) -> Error {
+            Error::from(self)
+        }
+    }
+
+    impl IntoError for Error {
+        fn into_error(self) -> Error {
+            self
+        }
+    }
+}
+
+/// Attach context to errors, like upstream `anyhow::Context`.
+pub trait Context<T, E> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: private::IntoError,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().push_context(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().push_context(f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => { $crate::Error::msg(::std::format!($msg)) };
+    ($err:expr $(,)?) => { $crate::Error::msg(::std::format!("{}", $err)) };
+    ($fmt:expr, $($arg:tt)*) => { $crate::Error::msg(::std::format!($fmt, $($arg)*)) };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => { return ::std::result::Result::Err($crate::anyhow!($($arg)*)) };
+}
+
+/// Return early with an [`Error`] if the condition fails.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Result::<(), _>::Err(io_err()).context("loading config").unwrap_err();
+        assert_eq!(e.to_string(), "loading config");
+        assert_eq!(format!("{e:#}"), "loading config: file missing");
+    }
+
+    #[test]
+    fn with_context_chains_onto_anyhow_errors() {
+        let base: Result<()> = Err(anyhow!("root {}", 7));
+        let e = base.with_context(|| format!("step {}", 2)).unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 2: root 7");
+        assert_eq!(e.root_cause(), "root 7");
+    }
+
+    #[test]
+    fn option_context_creates_error() {
+        let e = None::<u32>.context("missing key").unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn f(x: i32) -> Result<i32> {
+            ensure!(x >= 0, "negative input {x}");
+            if x > 10 {
+                bail!("too big: {}", x);
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(11).unwrap_err().to_string(), "too big: 11");
+    }
+
+    #[test]
+    fn debug_renders_cause_chain() {
+        let e: Error = Result::<(), _>::Err(io_err()).context("outer").unwrap_err();
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+    }
+}
