@@ -1,11 +1,14 @@
 //! L3 hot-path micro-benchmarks: the functional array MAC (bit-packed
 //! fast paths vs scalar reference vs analog model) and the tiled GEMM
-//! engine (single- vs multi-threaded, all three backends). §Perf L3(a).
+//! engine — single- vs multi-threaded, all three backends, and the
+//! streaming path vs the resident-tile cache at a serving-shaped
+//! repeated GEMM. §Perf L3(a).
 //!
 //! Emits `BENCH_engine.json` next to the working directory so future PRs
-//! can track the engine's perf trajectory.
+//! can track the engine's perf trajectory (every entry carries a `mode`
+//! of `streaming` or `resident`, plus the per-design resident speedups).
 //!
-//! `SITECIM_BENCH_FAST=1` shrinks the GEMM to a smoke size for CI.
+//! `SITECIM_BENCH_FAST=1` shrinks the GEMMs to smoke sizes for CI.
 use sitecim::array::mac::{dot_fast, dot_fast_cim1, dot_ref, Flavor};
 use sitecim::array::{CimArray, Design, SiTeCim1Array, TernaryStorage};
 use sitecim::device::Tech;
@@ -15,7 +18,11 @@ use sitecim::util::rng::Rng;
 
 struct EngineEntry {
     design: Design,
+    mode: &'static str,
     threads: usize,
+    m: usize,
+    k: usize,
+    n: usize,
     result: BenchResult,
     gmacs_per_s: f64,
 }
@@ -51,24 +58,34 @@ fn main() {
         1.0 / fast.mean_s / 1e6
     );
 
-    // ---- batched GEMM over the tiled engine ----
     let fast_mode = std::env::var("SITECIM_BENCH_FAST").is_ok();
-    let (m, k, n) = if fast_mode { (32, 256, 256) } else { (1024, 1024, 1024) };
     let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(4);
+    let mut entries: Vec<EngineEntry> = Vec::new();
+
+    // ---- batched GEMM over the tiled engine (streaming path) ----
+    let (m, k, n) = if fast_mode { (32, 256, 256) } else { (1024, 1024, 1024) };
     println!("\n== engine_bench (ternary GEMM {m}x{k}x{n}, pool of 32 256x256 arrays) ==");
     let x = rng.ternary_vec(m * k, 0.5);
     let w = rng.ternary_vec(k * n, 0.5);
     let macs = (m * k * n) as f64;
 
-    let mut entries: Vec<EngineEntry> = Vec::new();
     for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
         for t in [1usize, threads] {
             let engine =
                 TernaryGemmEngine::new(EngineConfig::new(design, Tech::Femfet3T).with_threads(t));
             let name = format!("engine {:<11} {t:>2} thread(s)", format!("{design:?}"));
-            let result = run(&name, &cfg, || engine.gemm(&x, &w, m, k, n));
+            let result = run(&name, &cfg, || engine.gemm(&x, &w, m, k, n).unwrap());
             let gmacs_per_s = macs / result.mean_s / 1e9;
-            entries.push(EngineEntry { design, threads: t, result, gmacs_per_s });
+            entries.push(EngineEntry {
+                design,
+                mode: "streaming",
+                threads: t,
+                m,
+                k,
+                n,
+                result,
+                gmacs_per_s,
+            });
         }
     }
 
@@ -86,23 +103,93 @@ fn main() {
         );
     }
 
+    // ---- streaming vs resident at a serving-shaped repeated GEMM ----
+    // Small batches over a fixed weight: the serving regime where the
+    // resident-tile cache amortizes tile programming away. The working
+    // set fits the pool exactly (one array per tile), so after the warm
+    // pass every placement hits.
+    let (sm, sk, sn) = if fast_mode { (4, 256, 256) } else { (8, 1024, 1024) };
+    println!("\n== engine_bench serving shape ({sm}x{sk}x{sn}, fully-resident working set) ==");
+    let sx = rng.ternary_vec(sm * sk, 0.5);
+    let sw = rng.ternary_vec(sk * sn, 0.5);
+    let smacs = (sm * sk * sn) as f64;
+    let mut speedups: Vec<(Design, f64)> = Vec::new();
+    for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+        let base = EngineConfig::new(design, Tech::Femfet3T).with_threads(threads);
+        let tiles = base.tiles_for(sk, sn);
+
+        let streaming = TernaryGemmEngine::new(base.clone().with_pool(tiles.max(1)));
+        let name = format!("engine {:<11} streaming rep", format!("{design:?}"));
+        let rs = run(&name, &cfg, || streaming.gemm(&sx, &sw, sm, sk, sn).unwrap());
+        entries.push(EngineEntry {
+            design,
+            mode: "streaming",
+            threads,
+            m: sm,
+            k: sk,
+            n: sn,
+            result: rs.clone(),
+            gmacs_per_s: smacs / rs.mean_s / 1e9,
+        });
+
+        let resident = TernaryGemmEngine::new(base.with_pool(tiles.max(1)));
+        let id = resident.register_weight(&sw, sk, sn).unwrap();
+        let name = format!("engine {:<11} resident rep", format!("{design:?}"));
+        let rr = run(&name, &cfg, || resident.gemm_resident(id, &sx, sm).unwrap());
+        entries.push(EngineEntry {
+            design,
+            mode: "resident",
+            threads,
+            m: sm,
+            k: sk,
+            n: sn,
+            result: rr.clone(),
+            gmacs_per_s: smacs / rr.mean_s / 1e9,
+        });
+
+        let speedup = rs.mean_s / rr.mean_s;
+        let s = resident.stats();
+        println!(
+            "{:?}: resident {:.2}x streaming ({:.2} → {:.2} GMAC/s; cache {} hits / {} misses){}",
+            design,
+            speedup,
+            smacs / rs.mean_s / 1e9,
+            smacs / rr.mean_s / 1e9,
+            s.hits,
+            s.misses,
+            if speedup >= 3.0 { "" } else { "  ** resident < 3x **" }
+        );
+        speedups.push((design, speedup));
+    }
+
     // ---- perf-trajectory record ----
     let mut json = String::from("{\n");
     json.push_str(&format!(
-        "  \"bench\": \"engine_gemm\",\n  \"m\": {m},\n  \"k\": {k},\n  \"n\": {n},\n  \"fast_mode\": {fast_mode},\n  \"results\": [\n"
+        "  \"bench\": \"engine_gemm\",\n  \"fast_mode\": {fast_mode},\n  \"results\": [\n"
     ));
     for (i, e) in entries.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"design\": \"{:?}\", \"threads\": {}, \"mean_s\": {:.6}, \"min_s\": {:.6}, \"gmacs_per_s\": {:.3}}}{}\n",
+            "    {{\"design\": \"{:?}\", \"mode\": \"{}\", \"threads\": {}, \"m\": {}, \"k\": {}, \"n\": {}, \"mean_s\": {:.6}, \"min_s\": {:.6}, \"gmacs_per_s\": {:.3}}}{}\n",
             e.design,
+            e.mode,
             e.threads,
+            e.m,
+            e.k,
+            e.n,
             e.result.mean_s,
             e.result.min_s,
             e.gmacs_per_s,
             if i + 1 < entries.len() { "," } else { "" }
         ));
     }
-    json.push_str("  ]\n}\n");
+    json.push_str("  ],\n  \"resident_speedup\": {\n");
+    for (i, (design, s)) in speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{design:?}\": {s:.3}{}\n",
+            if i + 1 < speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  }\n}\n");
     match std::fs::write("BENCH_engine.json", &json) {
         Ok(()) => println!("\nwrote BENCH_engine.json"),
         Err(e) => eprintln!("\ncould not write BENCH_engine.json: {e}"),

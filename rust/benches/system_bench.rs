@@ -1,9 +1,10 @@
 //! System-simulator benchmarks: full benchmark-suite evaluation cost —
 //! this is what `figures --fig12/--fig13` pays — plus the functional
-//! co-simulation path (analytic accounting vs executed engine). §Perf L3(b).
+//! co-simulation path (analytic accounting vs executed engine) in both
+//! weight-residency modes. §Perf L3(b).
 use std::time::Instant;
 
-use sitecim::arch::{AccelConfig, Accelerator, CosimConfig};
+use sitecim::arch::{AccelConfig, Accelerator, CosimConfig, Residency};
 use sitecim::array::area::Design;
 use sitecim::device::Tech;
 use sitecim::dnn::benchmarks;
@@ -24,16 +25,50 @@ fn main() {
         nets.iter().map(|n| accel.run(n).latency).sum::<f64>()
     });
 
-    // Functional co-simulation: one timed pass (the engine executes real
-    // tile work, so the bench harness's repeated runs would dominate).
+    // Streaming vs resident analytic accounting: what steady-state
+    // serving saves once weights stay programmed in the arrays.
+    let streaming = accel.run_with_residency(&nets[0], Residency::Streaming);
+    let resident = accel.run_with_residency(&nets[0], Residency::Resident { inferences: 0 });
+    println!(
+        "AlexNet CiM I per-inference latency: {:.3e}s streaming → {:.3e}s resident ({:.2}x; write share {:.1}%)",
+        streaming.latency,
+        resident.latency,
+        streaming.latency / resident.latency,
+        100.0 * streaming.write_latency / streaming.latency
+    );
+
+    // Functional co-simulation: one timed pass per mode (the engine
+    // executes real tile work, so the bench harness's repeated runs
+    // would dominate).
     let ccfg = CosimConfig { max_vectors: 1, max_layers: 5, ..Default::default() };
     let t0 = Instant::now();
     let r = accel.run_cosim(&nets[0], &ccfg);
     println!(
-        "cosim AlexNet[..5] CiM I: {:.2}s, {} outputs checked, {} mismatches, {} windows executed",
+        "cosim AlexNet[..5] CiM I streaming: {:.2}s, {} outputs checked, {} mismatches, {} windows executed, accounting {}",
         t0.elapsed().as_secs_f64(),
         r.total_outputs(),
         r.total_mismatches(),
-        r.engine.windows
+        r.engine.windows,
+        if r.accounting_matches() { "OK" } else { "MISMATCH" }
+    );
+
+    let ccfg = CosimConfig {
+        max_vectors: 1,
+        max_layers: 5,
+        resident: true,
+        repeats: 3,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = accel.run_cosim(&nets[0], &ccfg);
+    println!(
+        "cosim AlexNet[..5] CiM I resident ×3: {:.2}s, {} outputs checked, {} mismatches, cache {}h/{}m/{}e, accounting {}",
+        t0.elapsed().as_secs_f64(),
+        r.total_outputs(),
+        r.total_mismatches(),
+        r.engine.hits,
+        r.engine.misses,
+        r.engine.evictions,
+        if r.accounting_matches() { "OK" } else { "MISMATCH" }
     );
 }

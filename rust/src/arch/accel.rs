@@ -6,19 +6,41 @@
 //! serialize over the available arrays; PCU accumulation and the
 //! quantize+activation stage are pipelined behind compute (they add
 //! energy, not latency — checked against the PCU drain-rate constraint).
+//!
+//! Weight accounting has two modes ([`Residency`]): **streaming** — every
+//! tile programmed once per inference, the paper's batch-1 accounting —
+//! and **resident** — weights programmed once and amortized over the
+//! inferences served, the weight-stationary serving regime the functional
+//! engine's resident-tile cache implements. [`Accelerator::run_cosim`]
+//! executes both modes on the functional engine and cross-checks the
+//! engine's tile/window/write-row counters against [`map_layer`] exactly.
 
 use super::config::AccelConfig;
 use super::mapper::{map_layer, LayerWork};
 use crate::array::area::Design;
 use crate::array::metrics::{all_designs, DesignMetrics};
 use crate::device::{PeriphParams, TechParams};
-use crate::dnn::Network;
+use crate::dnn::{Layer, Network};
 use crate::engine::tiling::reference_gemm;
 use crate::engine::{EngineConfig, EngineStatsSnapshot, TernaryGemmEngine};
 use crate::util::rng::Rng;
 
 /// Per-output quantize + activation energy in the digital periphery (J).
 const E_ACT_OUT: f64 = 60e-15;
+
+/// How weight programming is charged.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Residency {
+    /// Weights streamed in on every inference (paper batch-1 accounting).
+    Streaming,
+    /// Weights stay resident in the arrays; the one-time programming is
+    /// amortized over `inferences` served. `0` = steady state (fully
+    /// amortized to zero); `1` charges the whole programming cost to a
+    /// single inference (write *energy* equals the streaming charge;
+    /// write latency uses the amortized fractional share, without the
+    /// streaming path's per-inference ceil).
+    Resident { inferences: u64 },
+}
 
 /// Execution report for one network on one config.
 #[derive(Clone, Debug)]
@@ -76,11 +98,8 @@ impl Accelerator {
         Accelerator { cfg, metrics, params, periph }
     }
 
-    /// Execute one layer's work accounting. `resident` = the whole
-    /// network fits on-chip, so weights are programmed once and amortize
-    /// to zero in steady-state serving (batch-streaming only applies to
-    /// nets larger than the 2 M-word capacity, like the paper suite).
-    fn layer_cost(&self, w: &LayerWork, resident: bool) -> (f64, f64, f64, f64, f64) {
+    /// Execute one layer's work accounting under the given residency.
+    fn layer_cost(&self, w: &LayerWork, residency: Residency) -> (f64, f64, f64, f64, f64) {
         let n_arrays = self.cfg.n_arrays as f64;
         let m = &self.metrics;
 
@@ -98,12 +117,20 @@ impl Accelerator {
             (serial_windows * m.mac.latency, w.windows as f64 * m.mac.energy)
         };
 
-        // Weight streaming (same write path family for all designs).
-        let (write_latency, write_energy) = if resident {
-            (0.0, 0.0)
-        } else {
-            let serial_writes = (w.write_rows as f64 / n_arrays).ceil();
-            (serial_writes * m.write.latency, w.write_rows as f64 * m.write.energy)
+        // Weight programming (same write path family for all designs):
+        // full charge when streaming, amortized per-inference share when
+        // resident.
+        let (write_latency, write_energy) = match residency {
+            Residency::Streaming => {
+                let serial_writes = (w.write_rows as f64 / n_arrays).ceil();
+                (serial_writes * m.write.latency, w.write_rows as f64 * m.write.energy)
+            }
+            Residency::Resident { inferences } => {
+                let rows = w.write_rows_amortized(inferences);
+                // Amortized fractional share: no ceil on a steady-state
+                // average.
+                (rows / n_arrays * m.write.latency, rows * m.write.energy)
+            }
         };
 
         // Periphery: PCU sample/hold+accumulate per window per column, and
@@ -113,8 +140,20 @@ impl Accelerator {
         (compute_latency, write_latency, compute_energy, write_energy, pcu + act)
     }
 
-    /// Run a full network.
+    /// Run a full network with automatic residency: networks that fit the
+    /// on-chip capacity are charged as resident in steady state (weights
+    /// programmed once, amortized to zero), larger ones stream.
     pub fn run(&self, net: &Network) -> SystemReport {
+        let residency = if net.total_weight_words() <= self.cfg.capacity_words() {
+            Residency::Resident { inferences: 0 }
+        } else {
+            Residency::Streaming
+        };
+        self.run_with_residency(net, residency)
+    }
+
+    /// Run a full network under an explicit weight-residency mode.
+    pub fn run_with_residency(&self, net: &Network, residency: Residency) -> SystemReport {
         let mut r = SystemReport {
             config: self.cfg.name.clone(),
             network: net.name.clone(),
@@ -128,10 +167,9 @@ impl Accelerator {
             total_windows: 0,
             total_write_rows: 0,
         };
-        let resident = net.total_weight_words() <= self.cfg.capacity_words();
         for layer in &net.layers {
             let w = map_layer(&self.cfg, layer);
-            let (cl, wl, ce, we, pe) = self.layer_cost(&w, resident);
+            let (cl, wl, ce, we, pe) = self.layer_cost(&w, residency);
             r.compute_latency += cl;
             r.write_latency += wl;
             r.compute_energy += ce;
@@ -152,14 +190,21 @@ impl Accelerator {
     /// The functional GEMM engine matching this accelerator's shape:
     /// same design, tech, array geometry and array count.
     pub fn engine(&self, n_threads: usize) -> TernaryGemmEngine {
+        self.engine_sized(n_threads, self.cfg.n_arrays)
+    }
+
+    /// Same, with an explicit pool size (the resident co-simulation sizes
+    /// the pool to hold the whole working set so the accounting
+    /// cross-check is exact).
+    pub fn engine_sized(&self, n_threads: usize, n_arrays: usize) -> TernaryGemmEngine {
         TernaryGemmEngine::new(
             EngineConfig {
                 design: self.cfg.design,
                 tech: self.cfg.tech,
                 array_rows: self.cfg.geom.n_rows,
                 array_cols: self.cfg.geom.n_cols,
-                n_arrays: self.cfg.n_arrays,
-                n_threads: 0, // overwritten below
+                n_arrays: n_arrays.max(1),
+                n_threads: 1, // overwritten below
             }
             .with_threads(n_threads),
         )
@@ -168,36 +213,85 @@ impl Accelerator {
     /// Functional co-simulation: actually *execute* (a bounded slice of)
     /// the network's layers on the tiled GEMM engine with random ternary
     /// operands at each layer's recorded sparsity, cross-checking every
-    /// output element against the `dot_ref` tile composition. The
-    /// analytic `run` path accounts for this work; this path proves the
-    /// functional fabric computes it correctly.
+    /// output element against the `dot_ref` tile composition, and the
+    /// engine's tile/window/write-row counters against [`map_layer`]
+    /// exactly. In resident mode the weights are registered once, the
+    /// pool is sized to the working set, and repeated passes must hit the
+    /// tile cache instead of re-programming.
     pub fn run_cosim(&self, net: &Network, ccfg: &CosimConfig) -> CosimReport {
         let flavor = self.cfg.design.flavor();
-        let engine = self.engine(ccfg.n_threads);
+        let repeats = ccfg.repeats.max(1);
+        let slice: Vec<&Layer> = net.layers.iter().take(ccfg.max_layers).collect();
+
+        // Pool sizing: resident mode must hold every tile of the slice at
+        // once so the expected accounting is exact (no evictions).
+        let (rows, cols) = (self.cfg.geom.n_rows, self.cfg.geom.n_cols);
+        let total_tiles: usize = slice
+            .iter()
+            .map(|l| l.gemm.k.div_ceil(rows) * l.gemm.n.div_ceil(cols))
+            .sum();
+        let n_arrays = if ccfg.resident { total_tiles.max(1) } else { self.cfg.n_arrays };
+        let engine = self.engine_sized(ccfg.n_threads, n_arrays);
+
         let mut rng = Rng::new(ccfg.seed);
         let mut layers = Vec::new();
-        for layer in net.layers.iter().take(ccfg.max_layers) {
+        let mut expected = EngineStatsSnapshot::default();
+        for layer in &slice {
             let g = &layer.gemm;
             let m = g.m.min(ccfg.max_vectors).max(1);
             let x = rng.ternary_vec(m * g.k, 1.0 - layer.act_nz);
             let w = rng.ternary_vec(g.k * g.n, 1.0 - layer.w_nz);
-            let got = engine.gemm(&x, &w, m, g.k, g.n);
             let want = reference_gemm(&x, &w, m, &engine.grid(g.k, g.n), flavor);
-            let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count() as u64;
+
+            // Mapper accounting for exactly the work this cosim runs.
+            let mut probe = (*layer).clone();
+            probe.gemm.m = m;
+            probe.repeats = 1;
+            let lw = map_layer(&self.cfg, &probe);
+            expected.gemms += repeats as u64;
+            expected.windows += repeats as u64 * lw.windows;
+            expected.macs += repeats as u64 * (m * g.k * g.n) as u64;
+            if ccfg.resident {
+                // Programmed once, hit on every later pass, never evicted.
+                expected.tiles += lw.tiles;
+                expected.write_rows += lw.write_rows;
+                expected.misses += lw.tiles;
+                expected.hits += (repeats as u64 - 1) * lw.tiles;
+            } else {
+                expected.tiles += repeats as u64 * lw.tiles;
+                expected.write_rows += repeats as u64 * lw.write_rows;
+            }
+
+            let mut mismatches = 0u64;
+            if ccfg.resident {
+                let id = engine.register_weight(&w, g.k, g.n).expect("cosim weight is valid");
+                for _ in 0..repeats {
+                    let got = engine.gemm_resident(id, &x, m).expect("cosim shapes are valid");
+                    mismatches += got.iter().zip(&want).filter(|(a, b)| a != b).count() as u64;
+                }
+            } else {
+                for _ in 0..repeats {
+                    let got = engine.gemm(&x, &w, m, g.k, g.n).expect("cosim shapes are valid");
+                    mismatches += got.iter().zip(&want).filter(|(a, b)| a != b).count() as u64;
+                }
+            }
             layers.push(CosimLayerReport {
                 name: layer.name.clone(),
                 m,
                 k: g.k,
                 n: g.n,
-                outputs: (m * g.n) as u64,
+                outputs: (m * g.n * repeats) as u64,
                 mismatches,
             });
         }
         CosimReport {
             config: self.cfg.name.clone(),
             network: net.name.clone(),
+            resident: ccfg.resident,
+            repeats,
             layers,
             engine: engine.stats(),
+            expected,
         }
     }
 }
@@ -214,6 +308,12 @@ pub struct CosimConfig {
     pub seed: u64,
     /// Engine worker threads.
     pub n_threads: usize,
+    /// Use the resident-tile path (register weights once, pool sized to
+    /// the working set) instead of streaming every tile every call.
+    pub resident: bool,
+    /// Passes over the layer slice (>1 exercises the steady-state cache
+    /// hit path in resident mode).
+    pub repeats: usize,
 }
 
 impl Default for CosimConfig {
@@ -223,6 +323,8 @@ impl Default for CosimConfig {
             max_layers: usize::MAX,
             seed: 0x517E_C1A0,
             n_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
+            resident: false,
+            repeats: 1,
         }
     }
 }
@@ -239,13 +341,19 @@ pub struct CosimLayerReport {
 }
 
 /// Co-simulation report: engine outputs vs the tiled `dot_ref`
-/// specification, layer by layer.
+/// specification (layer by layer), plus engine counters vs the mapper's
+/// analytic accounting.
 #[derive(Clone, Debug)]
 pub struct CosimReport {
     pub config: String,
     pub network: String,
+    pub resident: bool,
+    pub repeats: usize,
     pub layers: Vec<CosimLayerReport>,
+    /// What the engine actually counted.
     pub engine: EngineStatsSnapshot,
+    /// What `arch::mapper` accounting predicts for the same work.
+    pub expected: EngineStatsSnapshot,
 }
 
 impl CosimReport {
@@ -261,6 +369,13 @@ impl CosimReport {
     pub fn all_match(&self) -> bool {
         self.total_mismatches() == 0
     }
+
+    /// True when the engine's work counters equal the mapper accounting
+    /// exactly (tiles programmed, MAC windows, write rows, and — in
+    /// resident mode — cache hit/miss/evict counts).
+    pub fn accounting_matches(&self) -> bool {
+        self.engine == self.expected
+    }
 }
 
 #[cfg(test)]
@@ -275,6 +390,13 @@ mod tests {
             d => AccelConfig::sitecim(tech, d),
         };
         Accelerator::new(cfg).run(net)
+    }
+
+    fn accel_for(design: Design, tech: Tech) -> Accelerator {
+        match design {
+            Design::NearMemory => Accelerator::new(AccelConfig::iso_capacity_nm(tech)),
+            d => Accelerator::new(AccelConfig::sitecim(tech, d)),
+        }
     }
 
     #[test]
@@ -344,22 +466,80 @@ mod tests {
     }
 
     #[test]
+    fn resident_accounting_interpolates_between_free_and_streaming() {
+        let net = benchmarks::alexnet();
+        let accel = Accelerator::new(AccelConfig::sitecim(Tech::Femfet3T, Design::Cim1));
+        let streaming = accel.run_with_residency(&net, Residency::Streaming);
+        let one = accel.run_with_residency(&net, Residency::Resident { inferences: 1 });
+        let many = accel.run_with_residency(&net, Residency::Resident { inferences: 1000 });
+        let steady = accel.run_with_residency(&net, Residency::Resident { inferences: 0 });
+        // Amortizing over one inference charges the full write energy.
+        assert!((one.write_energy - streaming.write_energy).abs() < 1e-9 * streaming.write_energy);
+        assert!((many.write_energy - streaming.write_energy / 1000.0).abs()
+            < 1e-9 * streaming.write_energy);
+        assert_eq!(steady.write_energy, 0.0);
+        assert_eq!(steady.write_latency, 0.0);
+        assert!(steady.latency < streaming.latency);
+        // Compute is residency-independent.
+        assert_eq!(steady.compute_latency, streaming.compute_latency);
+    }
+
+    #[test]
     fn cosim_engine_matches_reference_on_benchmark_layers() {
         // Functional co-simulation of the front of AlexNet on all three
         // designs: the engine must reproduce the tiled dot_ref spec
-        // bit-for-bit.
+        // bit-for-bit, and its work counters must equal the mapper
+        // accounting exactly.
         let net = benchmarks::alexnet();
-        let ccfg = CosimConfig { max_vectors: 1, max_layers: 3, seed: 7, n_threads: 2 };
+        let ccfg = CosimConfig {
+            max_vectors: 1,
+            max_layers: 3,
+            seed: 7,
+            n_threads: 2,
+            ..Default::default()
+        };
         for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
-            let accel = match design {
-                Design::NearMemory => Accelerator::new(AccelConfig::iso_capacity_nm(Tech::Sram8T)),
-                d => Accelerator::new(AccelConfig::sitecim(Tech::Sram8T, d)),
-            };
+            let accel = accel_for(design, Tech::Sram8T);
             let r = accel.run_cosim(&net, &ccfg);
             assert_eq!(r.layers.len(), 3);
             assert!(r.total_outputs() > 0);
             assert!(r.all_match(), "{design:?}: {} mismatches", r.total_mismatches());
             assert!(r.engine.tiles > 0 && r.engine.macs > 0);
+            assert!(
+                r.accounting_matches(),
+                "{design:?}: engine {:?} != mapper {:?}",
+                r.engine,
+                r.expected
+            );
+        }
+    }
+
+    #[test]
+    fn cosim_resident_mode_hits_cache_and_accounts_exactly() {
+        let net = benchmarks::alexnet();
+        let ccfg = CosimConfig {
+            max_vectors: 1,
+            max_layers: 2,
+            seed: 11,
+            n_threads: 2,
+            resident: true,
+            repeats: 3,
+        };
+        for design in [Design::Cim1, Design::NearMemory] {
+            let accel = accel_for(design, Tech::Femfet3T);
+            let r = accel.run_cosim(&net, &ccfg);
+            assert!(r.all_match(), "{design:?}: {} mismatches", r.total_mismatches());
+            assert!(
+                r.accounting_matches(),
+                "{design:?}: engine {:?} != mapper {:?}",
+                r.engine,
+                r.expected
+            );
+            // Steady state: tiles programmed once, hit twice per tile.
+            assert!(r.engine.misses > 0);
+            assert_eq!(r.engine.hits, 2 * r.engine.misses);
+            assert_eq!(r.engine.evictions, 0);
+            assert_eq!(r.engine.tiles, r.engine.misses);
         }
     }
 

@@ -32,7 +32,29 @@ pub struct LayerWork {
     pub act_nz: f64,
 }
 
+impl LayerWork {
+    /// Write rows charged *per inference* when the layer's weights stay
+    /// resident in the arrays and the one-time programming is amortized
+    /// over `inferences` served. `0` means steady state (infinite
+    /// horizon): programming fully amortizes to zero, the weight-
+    /// stationary ideal. `1` charges the full write count to a single
+    /// inference (same energy as streaming).
+    pub fn write_rows_amortized(&self, inferences: u64) -> f64 {
+        if inferences == 0 {
+            0.0
+        } else {
+            self.write_rows as f64 / inferences as f64
+        }
+    }
+}
+
 /// Map one layer onto a config.
+///
+/// Window accounting is the reference the functional engine must match:
+/// ⌈K/16⌉ MAC windows per input vector per N-tile — i.e. partial final
+/// k-tiles only count their occupied windows, ⌈k_len/16⌉, not a full
+/// array's worth (`EngineStats.windows` agrees tile-by-tile; the cosim
+/// cross-check in `arch::Accelerator::run_cosim` asserts equality).
 pub fn map_layer(cfg: &AccelConfig, layer: &Layer) -> LayerWork {
     let g = &layer.gemm;
     let rows = cfg.geom.n_rows;
@@ -108,6 +130,15 @@ mod tests {
         assert_eq!(w.nm_reads, 8 * 256);
         // Windows still accounted (16-read groups) for cross-checks.
         assert_eq!(w.windows, 8 * 16);
+    }
+
+    #[test]
+    fn amortized_write_rows_scale_with_horizon() {
+        let l = Layer::linear("fc", 1, 512, 512);
+        let w = map_layer(&cim_cfg(), &l);
+        assert_eq!(w.write_rows_amortized(1), w.write_rows as f64);
+        assert_eq!(w.write_rows_amortized(4), w.write_rows as f64 / 4.0);
+        assert_eq!(w.write_rows_amortized(0), 0.0, "steady state amortizes to zero");
     }
 
     #[test]

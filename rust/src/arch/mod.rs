@@ -1,13 +1,16 @@
 //! Accelerator architecture layer: the TiM-DNN-style SiTe CiM system
 //! (32 arrays × 256×256, 32 PCUs) plus iso-capacity / iso-area
 //! near-memory baselines, a weight-stationary layer mapper and the
-//! system-level latency/energy simulator behind Figs 12/13 — now with a
+//! system-level latency/energy simulator behind Figs 12/13 — with a
 //! functional co-simulation mode that executes benchmark layers on the
-//! `engine::TernaryGemmEngine` and cross-checks against `mac::dot_ref`.
+//! `engine::TernaryGemmEngine` (streaming or resident-tile path) and
+//! cross-checks outputs against `mac::dot_ref` and work counters against
+//! the mapper accounting, plus an explicit weight-[`Residency`] mode for
+//! streaming-vs-resident serving cost.
 
 pub mod accel;
 pub mod config;
 pub mod mapper;
 
-pub use accel::{Accelerator, CosimConfig, CosimReport, SystemReport};
+pub use accel::{Accelerator, CosimConfig, CosimReport, Residency, SystemReport};
 pub use config::AccelConfig;

@@ -3,9 +3,9 @@
 //! Subcommands:
 //!   figures  [--all|--fig4|--fig7|--fig9|--fig11|--fig12|--fig13|--area|--cmp|--err|--cosim]
 //!   selftest             quick functional cross-check of both array flavors
-//!   engine   [--m M --k K --n N] [--design cim1|cim2|nm] [--threads T]
+//!   engine   [--m M --k K --n N] [--design cim1|cim2|nm] [--threads T] [--resident] [--reps R]
 //!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
-//!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine]
+//!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine] [--threads T]
 
 use std::time::Instant;
 
@@ -31,12 +31,18 @@ USAGE: sitecim <subcommand> [flags]
   selftest [--seed S]
           functional cross-check: CiM I/II arrays vs reference semantics
   engine  [--m M] [--k K] [--n N] [--design cim1|cim2|nm] [--threads T] [--seed S]
+          [--resident] [--reps R]
           run a ternary GEMM through the tiled array engine, verify it
-          against the dot_ref tile composition, and report throughput
+          against the dot_ref tile composition, and report throughput;
+          --resident registers the weights once and repeats the GEMM
+          through the resident-tile cache, reporting streaming-vs-
+          resident throughput and cache hit/miss/evict counters
   infer   [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
           run the AOT-compiled ternary MLP on the held-out test set
   serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B] [--backend pjrt|engine]
-          start the serving coordinator and push synthetic traffic
+          [--threads T]
+          start the serving coordinator and push synthetic traffic (the
+          engine backend shares one resident-weight model across workers)
   help    this message
 ";
 
@@ -115,6 +121,8 @@ fn cmd_engine(args: &Args) -> Result<i32> {
     let n = args.get_usize("n", 1024);
     let threads = args.get_usize("threads", 0);
     let seed = args.get_u64("seed", 42);
+    let resident = args.has("resident");
+    let reps = args.get_usize("reps", if resident { 8 } else { 1 }).max(1);
     let design = match args.get_or("design", "cim1").as_str() {
         "cim1" => Design::Cim1,
         "cim2" => Design::Cim2,
@@ -128,27 +136,71 @@ fn cmd_engine(args: &Args) -> Result<i32> {
     if threads > 0 {
         cfg = cfg.with_threads(threads);
     }
+    if resident {
+        // Size the pool to the working set so repeated GEMMs are fully
+        // resident (one array per tile).
+        let tiles = cfg.tiles_for(k, n);
+        cfg = cfg.with_pool(tiles.max(1));
+    }
     let engine = TernaryGemmEngine::new(cfg);
     let mut rng = Rng::new(seed);
     let x = rng.ternary_vec(m * k, 0.5);
     let w = rng.ternary_vec(k * n, 0.5);
+    let macs = (reps * m * k * n) as f64;
 
+    // Streaming: every rep re-programs every tile.
     let t0 = Instant::now();
-    let got = engine.gemm(&x, &w, m, k, n);
-    let dt = t0.elapsed().as_secs_f64();
+    let mut got = engine.gemm(&x, &w, m, k, n)?;
+    for _ in 1..reps {
+        got = engine.gemm(&x, &w, m, k, n)?;
+    }
+    let dt_stream = t0.elapsed().as_secs_f64();
 
     let want = reference_gemm(&x, &w, m, &engine.grid(k, n), design.flavor());
-    let mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count();
-    let s = engine.stats();
+    let mut mismatches = got.iter().zip(&want).filter(|(a, b)| a != b).count();
+
     println!(
-        "{:?} GEMM {m}x{k}x{n} on {} threads: {:.3}s, {:.2} GMAC/s ({} tiles, {} windows)",
+        "{:?} GEMM {m}x{k}x{n} ×{reps} on {} threads (streaming): {:.3}s, {:.2} GMAC/s",
         design,
         engine.cfg().n_threads,
-        dt,
-        (m * k * n) as f64 / dt / 1e9,
-        s.tiles,
-        s.windows
+        dt_stream,
+        macs / dt_stream / 1e9,
     );
+
+    if resident {
+        // Resident: tiles are programmed on first touch, then every rep
+        // hits the placement cache.
+        let id = engine.register_weight(&w, k, n)?;
+        let before = engine.stats();
+        let t1 = Instant::now();
+        let mut rgot = engine.gemm_resident(id, &x, m)?;
+        for _ in 1..reps {
+            rgot = engine.gemm_resident(id, &x, m)?;
+        }
+        let dt_res = t1.elapsed().as_secs_f64();
+        let s = engine.stats();
+        mismatches += rgot.iter().zip(&want).filter(|(a, b)| a != b).count();
+        println!(
+            "{:?} GEMM {m}x{k}x{n} ×{reps} on {} threads (resident):  {:.3}s, {:.2} GMAC/s ({:.2}x vs streaming)",
+            design,
+            engine.cfg().n_threads,
+            dt_res,
+            macs / dt_res / 1e9,
+            dt_stream / dt_res,
+        );
+        println!(
+            "tile cache: {} hits, {} misses, {} evictions, {} tiles programmed ({} resident)",
+            s.hits - before.hits,
+            s.misses - before.misses,
+            s.evictions - before.evictions,
+            s.tiles - before.tiles,
+            engine.resident_tiles(),
+        );
+    } else {
+        let s = engine.stats();
+        println!("{} tiles programmed, {} MAC windows", s.tiles, s.windows);
+    }
+
     if mismatches == 0 {
         println!("verified: bit-identical to dot_ref composed over tiles");
         Ok(0)
@@ -205,6 +257,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let mut cfg = ServerConfig::new(dir.clone());
     cfg.n_workers = args.get_usize("workers", 2);
     cfg.policy.max_batch = args.get_usize("batch", 32);
+    cfg.engine_threads = args.get_usize("threads", 2);
     cfg.backend = match args.get_or("backend", "pjrt").as_str() {
         "pjrt" => BackendKind::Pjrt,
         "engine" => BackendKind::Engine,
@@ -238,6 +291,13 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         100.0 * correct as f64 / n_requests as f64
     );
     println!("{}", server.metrics.report());
+    if let Some(model) = server.engine_model() {
+        let s = model.engine_stats();
+        println!(
+            "engine tile cache: {} hits, {} misses, {} evictions, {} tiles programmed",
+            s.hits, s.misses, s.evictions, s.tiles
+        );
+    }
     server.shutdown();
     Ok(0)
 }

@@ -4,22 +4,29 @@
 //!
 //! - [`PjrtBackend`] — the AOT-compiled HLO graphs on the PJRT CPU
 //!   client (numerics identical to the JAX/Pallas reference; requires
-//!   artifacts + the `pjrt` feature).
-//! - [`EngineBackend`] — the functional [`TernaryGemmEngine`]: the
-//!   manifest's ternary weights run on simulated SiTe CiM arrays, layer
-//!   by layer, with the AOT-recorded activation thresholds between
-//!   layers (the same forward semantics the e2e_inference example
-//!   validates against the HLO path).
+//!   artifacts + the `pjrt` feature). PJRT handles are not `Send`, so
+//!   each worker thread builds its own instance in-thread.
+//! - [`EngineBackend`] — the functional [`TernaryGemmEngine`] in
+//!   *resident* mode: the manifest's ternary weights are registered with
+//!   the engine once, their tiles live in one shared array pool, and
+//!   inference routes input batches to the already-programmed arrays
+//!   (`gemm_resident`), layer by layer, with the AOT-recorded activation
+//!   thresholds between layers. The backend is `Sync`: the server wraps
+//!   one instance in an `Arc` and every worker serves through it — one
+//!   weight copy, one pool, instead of a private pool per worker.
 //!
 //! Both present the same padded-batch trits → logits surface, so the
 //! server's worker loop is backend-agnostic.
+
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use crate::array::area::Design;
 use crate::device::Tech;
 use crate::dnn::ternary;
-use crate::engine::{EngineConfig, TernaryGemmEngine};
+use crate::engine::resident::WeightId;
+use crate::engine::{EngineConfig, EngineStatsSnapshot, TernaryGemmEngine};
 use crate::runtime::executor::PjrtClient;
 use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind};
 
@@ -41,6 +48,25 @@ pub trait InferenceBackend {
     /// Run `n_valid` row-major input rows; returns `n_valid × out_dim`
     /// row-major logits.
     fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>>;
+}
+
+/// Shared backends serve through an `Arc` without a wrapper type.
+impl<T: InferenceBackend> InferenceBackend for Arc<T> {
+    fn batch(&self) -> usize {
+        (**self).batch()
+    }
+
+    fn in_dim(&self) -> usize {
+        (**self).in_dim()
+    }
+
+    fn out_dim(&self) -> usize {
+        (**self).out_dim()
+    }
+
+    fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>> {
+        (**self).run_batch(trits, n_valid)
+    }
 }
 
 /// The PJRT path: compiled executable + held client.
@@ -76,11 +102,12 @@ impl InferenceBackend for PjrtBackend {
     }
 }
 
-/// The functional path: manifest weights on the tiled GEMM engine.
+/// The functional path: manifest weights resident on one shared tiled
+/// GEMM engine.
 pub struct EngineBackend {
     engine: TernaryGemmEngine,
-    /// (row-major k×n ternary weights, k, n) per layer.
-    layers: Vec<(Vec<i8>, usize, usize)>,
+    /// (registered weight handle, k, n) per layer.
+    layers: Vec<(WeightId, usize, usize)>,
     /// Activation thresholds between layers (AOT-recorded).
     thresholds: Vec<f64>,
     batch: usize,
@@ -89,38 +116,58 @@ pub struct EngineBackend {
 }
 
 impl EngineBackend {
+    /// Load the manifest's layers and register their weights with a
+    /// fresh engine whose pool is sized to hold the whole network — the
+    /// weights are programmed lazily on first use and then stay
+    /// resident, so steady-state serving never re-programs a tile.
     pub fn load(
         manifest: &Manifest,
         design: Design,
         tech: Tech,
         n_threads: usize,
     ) -> Result<EngineBackend> {
-        let mut layers = Vec::new();
+        let mut weights = Vec::new();
         for i in 0..manifest.weights.len() {
             let (w, (k, n)) = manifest.load_weight(i)?;
-            layers.push((w, k, n));
+            weights.push((w, k, n));
         }
-        if layers.is_empty() {
+        if weights.is_empty() {
             bail!("manifest describes no weight layers");
         }
-        for pair in layers.windows(2) {
+        for pair in weights.windows(2) {
             if pair[0].2 != pair[1].1 {
-                bail!("layer shapes do not chain: {}×{} then {}×{}", pair[0].1, pair[0].2, pair[1].1, pair[1].2);
+                bail!(
+                    "layer shapes do not chain: {}×{} then {}×{}",
+                    pair[0].1,
+                    pair[0].2,
+                    pair[1].1,
+                    pair[1].2
+                );
             }
         }
-        if manifest.act_thresholds.len() + 1 < layers.len() {
+        if manifest.act_thresholds.len() + 1 < weights.len() {
             bail!(
                 "manifest has {} activation thresholds for {} layers (need {})",
                 manifest.act_thresholds.len(),
-                layers.len(),
-                layers.len() - 1
+                weights.len(),
+                weights.len() - 1
             );
         }
-        let in_dim = layers[0].1;
-        let out_dim = layers.last().unwrap().2;
-        let engine = TernaryGemmEngine::new(
-            EngineConfig::new(design, tech).with_pool(8).with_threads(n_threads),
-        );
+        let in_dim = weights[0].1;
+        let out_dim = weights.last().unwrap().2;
+
+        // One array per tile of the whole network: fully resident.
+        let cfg = EngineConfig::new(design, tech).with_threads(n_threads);
+        let total_tiles: usize = weights.iter().map(|(_, k, n)| cfg.tiles_for(*k, *n)).sum();
+        let engine = TernaryGemmEngine::new(cfg.with_pool(total_tiles.max(1)));
+
+        let mut layers = Vec::new();
+        for (w, k, n) in &weights {
+            let id = engine
+                .register_weight(w, *k, *n)
+                .with_context(|| format!("registering {k}×{n} layer weights"))?;
+            layers.push((id, *k, *n));
+        }
         Ok(EngineBackend {
             engine,
             layers,
@@ -129,6 +176,11 @@ impl EngineBackend {
             in_dim,
             out_dim,
         })
+    }
+
+    /// Engine work/cache counters (tile hits, misses, programming).
+    pub fn engine_stats(&self) -> EngineStatsSnapshot {
+        self.engine.stats()
     }
 }
 
@@ -154,8 +206,11 @@ impl InferenceBackend for EngineBackend {
         }
         let m = n_valid;
         let mut h: Vec<i8> = trits.to_vec();
-        for (li, (w, k, n)) in self.layers.iter().enumerate() {
-            let y = self.engine.gemm(&h, w, m, *k, *n);
+        for (li, (id, _k, _n)) in self.layers.iter().enumerate() {
+            let y = self
+                .engine
+                .gemm_resident(*id, &h, m)
+                .with_context(|| format!("layer {li} resident GEMM"))?;
             if li + 1 < self.layers.len() {
                 // Ternarize hidden activations at the recorded threshold
                 // (length validated at load).
@@ -165,5 +220,18 @@ impl InferenceBackend for EngineBackend {
             }
         }
         unreachable!("layers is non-empty; the final layer returns")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The server shares one EngineBackend across worker threads.
+    #[test]
+    fn engine_backend_is_sync_and_send() {
+        fn assert_sync_send<T: Sync + Send>() {}
+        assert_sync_send::<EngineBackend>();
+        assert_sync_send::<Arc<EngineBackend>>();
     }
 }

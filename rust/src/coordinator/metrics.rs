@@ -7,34 +7,83 @@ use std::sync::Mutex;
 
 use crate::util::stats::{summarize, Summary};
 
-#[derive(Debug, Default)]
+/// Retained latency samples (most recent N; see [`LatencyRing`]).
+const LATENCY_WINDOW: usize = 100_000;
+
+/// Fixed-size ring of the most recent latency samples. A plain `Vec`
+/// that gets cleared at capacity would make every p95/p99 summary right
+/// after the reset reflect only a handful of samples; the ring always
+/// holds the last `cap` observations.
+#[derive(Debug)]
+struct LatencyRing {
+    buf: Vec<f64>,
+    cap: usize,
+    /// Next slot to overwrite once the ring is full.
+    head: usize,
+}
+
+impl LatencyRing {
+    fn new(cap: usize) -> LatencyRing {
+        LatencyRing { buf: Vec::new(), cap: cap.max(1), head: 0 }
+    }
+
+    fn push(&mut self, x: f64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            self.buf[self.head] = x;
+            self.head = (self.head + 1) % self.cap;
+        }
+    }
+
+    /// The retained samples (order is irrelevant to the summaries).
+    fn samples(&self) -> &[f64] {
+        &self.buf
+    }
+}
+
+#[derive(Debug)]
 pub struct Metrics {
     pub requests: AtomicU64,
     pub batches: AtomicU64,
     pub batched_items: AtomicU64,
     pub errors: AtomicU64,
-    /// Wall-clock end-to-end request latencies (seconds), capped window.
-    latencies: Mutex<Vec<f64>>,
+    /// Wall-clock end-to-end request latencies (seconds), rolling window.
+    latencies: Mutex<LatencyRing>,
     /// Simulated accelerator energy (femtojoule-granularity, stored as
     /// integer attojoules to stay atomic) and busy time (picoseconds).
     sim_energy_aj: AtomicU64,
     sim_time_ps: AtomicU64,
 }
 
-const LATENCY_WINDOW: usize = 100_000;
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::with_window(LATENCY_WINDOW)
+    }
+}
 
 impl Metrics {
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// A metrics sink retaining the last `window` latency samples
+    /// (tests use small windows to exercise the rollover).
+    pub fn with_window(window: usize) -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyRing::new(window)),
+            sim_energy_aj: AtomicU64::new(0),
+            sim_time_ps: AtomicU64::new(0),
+        }
+    }
+
     pub fn record_request(&self, latency_s: f64) {
         self.requests.fetch_add(1, Ordering::Relaxed);
-        let mut l = self.latencies.lock().unwrap();
-        if l.len() >= LATENCY_WINDOW {
-            l.clear(); // cheap rolling window
-        }
-        l.push(latency_s);
+        self.latencies.lock().unwrap().push(latency_s);
     }
 
     pub fn record_batch(&self, n: usize, sim_energy_j: f64, sim_time_s: f64) {
@@ -50,7 +99,7 @@ impl Metrics {
     }
 
     pub fn latency_summary(&self) -> Summary {
-        summarize(&self.latencies.lock().unwrap())
+        summarize(self.latencies.lock().unwrap().samples())
     }
 
     pub fn avg_batch_size(&self) -> f64 {
@@ -105,6 +154,28 @@ mod tests {
         assert!((m.sim_time_s() - 5e-6).abs() < 1e-9);
         let s = m.latency_summary();
         assert_eq!(s.n, 2);
+    }
+
+    #[test]
+    fn latency_window_rolls_over_without_losing_history() {
+        let m = Metrics::with_window(4);
+        for i in 1..=10 {
+            m.record_request(i as f64);
+        }
+        let s = m.latency_summary();
+        // The summary always spans the full window — never a freshly
+        // cleared vector of one or two samples.
+        assert_eq!(s.n, 4);
+        assert_eq!(s.min, 7.0);
+        assert_eq!(s.max, 10.0);
+        assert_eq!(m.requests.load(Ordering::Relaxed), 10);
+        // Exactly at the wrap boundary the oldest sample is replaced.
+        let m2 = Metrics::with_window(3);
+        for i in 1..=4 {
+            m2.record_request(i as f64);
+        }
+        let s2 = m2.latency_summary();
+        assert_eq!((s2.n, s2.min, s2.max), (3, 2.0, 4.0));
     }
 
     #[test]

@@ -1,8 +1,11 @@
 //! Serving coordinator: a thread-based inference service with pluggable
-//! execution backends — the PJRT runtime or the functional ternary GEMM
-//! engine — behind a bounded request queue, dynamic batcher, N worker
-//! threads (each owning its own backend instance), request/latency
-//! metrics and simulated-accelerator accounting.
+//! execution backends — the PJRT runtime (per-worker instances; PJRT
+//! handles are not `Send`) or the functional ternary GEMM engine (one
+//! `Arc`-shared resident model: one weight copy, one array pool, tiles
+//! programmed once and reused across all workers) — behind a bounded
+//! request queue, dynamic batcher, N panic-isolated worker threads,
+//! request/latency metrics (rolling ring-buffer window) and
+//! simulated-accelerator accounting.
 
 pub mod backend;
 pub mod batcher;

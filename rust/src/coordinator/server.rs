@@ -5,10 +5,17 @@
 //! hardware would spend on the same traffic).
 //!
 //! Topology: N worker threads share one request channel (work-stealing by
-//! contention); each worker owns its own backend instance (PJRT handles
-//! are created in-thread, so no Send bounds are needed), pulls batches
-//! via the `batcher`, executes, and answers each request on its private
-//! response channel.
+//! contention); each worker pulls batches via the `batcher`, executes,
+//! and answers each request on its private response channel. The engine
+//! backend is loaded **once** and shared by every worker through an
+//! `Arc` — one copy of the weights, one resident array pool; workers
+//! parallelize across concurrent batches while the engine's tile workers
+//! parallelize each GEMM across its N-stripes. (PJRT handles are not
+//! `Send`, so that backend is still created per-worker, in-thread.)
+//!
+//! A worker never dies on a bad batch: backend errors (and even panics)
+//! are caught, counted in the metrics, and reported to the affected
+//! requests; the worker keeps serving.
 
 use std::path::PathBuf;
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
@@ -16,7 +23,7 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use super::backend::{BackendKind, EngineBackend, InferenceBackend, PjrtBackend};
 use super::batcher::{next_batch, BatchPolicy};
@@ -55,6 +62,9 @@ pub struct ServerConfig {
     /// engine backend, which functional arrays execute the GEMMs).
     pub sim_tech: Tech,
     pub sim_design: Design,
+    /// Tile-worker threads inside each engine-backend GEMM call (the
+    /// server already parallelizes across workers/batches).
+    pub engine_threads: usize,
 }
 
 impl ServerConfig {
@@ -67,6 +77,7 @@ impl ServerConfig {
             policy: BatchPolicy::default(),
             sim_tech: Tech::Femfet3T,
             sim_design: Design::Cim1,
+            engine_threads: 2,
         }
     }
 
@@ -83,13 +94,24 @@ pub struct Server {
     pub metrics: Arc<Metrics>,
     workers: Vec<JoinHandle<()>>,
     in_dim: usize,
+    /// The shared engine model (engine backend only; exposes cache stats).
+    engine_model: Option<Arc<EngineBackend>>,
 }
 
 impl Server {
-    /// Start worker threads. Fails fast if the artifacts are unloadable.
+    /// Start worker threads. Fails fast if the artifacts are unloadable
+    /// or describe no usable model.
     pub fn start(cfg: ServerConfig) -> Result<Server> {
         let manifest = Manifest::load(&cfg.artifacts).context("loading artifacts")?;
-        let in_dim = *manifest.dims.first().unwrap();
+        if manifest.dims.len() < 2 {
+            bail!(
+                "manifest at {} describes no usable model: `dims` must list at least \
+                 an input and an output dimension (got {:?})",
+                cfg.artifacts.display(),
+                manifest.dims
+            );
+        }
+        let in_dim = manifest.dims[0];
         let metrics = Arc::new(Metrics::new());
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
@@ -101,20 +123,37 @@ impl Server {
         let per_inf = accel.run(&net);
         let (sim_e, sim_t) = (per_inf.energy, per_inf.latency);
 
+        // The engine model is loaded once, up front, and shared: one
+        // weight copy, one resident array pool for all workers. Loading
+        // here (not in the worker) also turns a broken manifest into a
+        // start-time error instead of silently dead workers.
+        let engine_model = match cfg.backend {
+            BackendKind::Engine => Some(Arc::new(
+                EngineBackend::load(&manifest, cfg.sim_design, cfg.sim_tech, cfg.engine_threads)
+                    .context("loading engine backend")?,
+            )),
+            BackendKind::Pjrt => None,
+        };
+
         let mut workers = Vec::new();
         for wid in 0..cfg.n_workers.max(1) {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
-            let dir = cfg.artifacts.clone();
+            let shared = engine_model.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sitecim-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, dir, cfg, rx, metrics, sim_e, sim_t))
+                    .spawn(move || worker_loop(wid, cfg, shared, rx, metrics, sim_e, sim_t))
                     .context("spawning worker")?,
             );
         }
-        Ok(Server { tx: Some(tx), metrics, workers, in_dim })
+        Ok(Server { tx: Some(tx), metrics, workers, in_dim, engine_model })
+    }
+
+    /// The shared engine model, when serving through the engine backend.
+    pub fn engine_model(&self) -> Option<&Arc<EngineBackend>> {
+        self.engine_model.as_ref()
     }
 
     /// Submit a request and wait for the reply.
@@ -141,7 +180,9 @@ impl Server {
         Ok(rrx)
     }
 
-    /// Graceful shutdown: close the queue, join workers.
+    /// Graceful shutdown: close the queue, join workers (every queued
+    /// request is still answered — the batcher drains the channel before
+    /// the workers exit).
     pub fn shutdown(mut self) {
         drop(self.tx.take());
         for w in self.workers.drain(..) {
@@ -152,46 +193,43 @@ impl Server {
 
 fn worker_loop(
     _wid: usize,
-    dir: PathBuf,
     cfg: ServerConfig,
+    shared: Option<Arc<EngineBackend>>,
     rx: Arc<Mutex<Receiver<Request>>>,
     metrics: Arc<Metrics>,
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
-    // Backend handles (PJRT client / engine pool) are created in-thread.
-    let manifest = match Manifest::load(&dir) {
-        Ok(m) => m,
-        Err(e) => {
-            eprintln!("worker: manifest load failed: {e:#}");
-            return;
+    // Engine backend: serve through the shared model. PJRT: handles are
+    // created in-thread (they are not Send).
+    let backend: Box<dyn InferenceBackend> = match shared {
+        Some(model) => Box::new(model),
+        None => {
+            let manifest = match Manifest::load(&cfg.artifacts) {
+                Ok(m) => m,
+                Err(e) => {
+                    eprintln!("worker: manifest load failed: {e:#}");
+                    return;
+                }
+            };
+            match PjrtBackend::load(&manifest, cfg.kind) {
+                Ok(b) => Box::new(b),
+                Err(e) => {
+                    eprintln!("worker: PJRT backend load failed: {e:#}");
+                    return;
+                }
+            }
         }
-    };
-    let backend: Box<dyn InferenceBackend> = match cfg.backend {
-        BackendKind::Pjrt => match PjrtBackend::load(&manifest, cfg.kind) {
-            Ok(b) => Box::new(b),
-            Err(e) => {
-                eprintln!("worker: PJRT backend load failed: {e:#}");
-                return;
-            }
-        },
-        // One engine thread per worker: the server already parallelizes
-        // across workers.
-        BackendKind::Engine => match EngineBackend::load(&manifest, cfg.sim_design, cfg.sim_tech, 1) {
-            Ok(b) => Box::new(b),
-            Err(e) => {
-                eprintln!("worker: engine backend load failed: {e:#}");
-                return;
-            }
-        },
     };
 
     loop {
         // Hold the queue lock only while assembling the batch.
         let batch = {
             let guard = rx.lock().unwrap();
-            let policy =
-                BatchPolicy { max_batch: backend.batch().min(cfg.policy.max_batch), ..cfg.policy.clone() };
+            let policy = BatchPolicy {
+                max_batch: backend.batch().min(cfg.policy.max_batch),
+                ..cfg.policy.clone()
+            };
             next_batch(&guard, &policy)
         };
         let Some(batch) = batch else { return }; // channel closed: shutdown
@@ -201,8 +239,14 @@ fn worker_loop(
         for r in &batch {
             flat.extend_from_slice(&r.input);
         }
-        match backend.run_batch(&flat, n) {
-            Ok(logits) => {
+        // A panicking backend must not kill the worker: that would
+        // strand the in-flight batch and permanently shrink serving
+        // capacity. Catch it, answer the batch with an error, continue.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            backend.run_batch(&flat, n)
+        }));
+        match result {
+            Ok(Ok(logits)) => {
                 metrics.record_batch(n, sim_e_per_inf * n as f64, sim_t_per_inf * n as f64);
                 let out_dim = backend.out_dim();
                 for (i, req) in batch.into_iter().enumerate() {
@@ -217,9 +261,16 @@ fn worker_loop(
                     }));
                 }
             }
-            Err(e) => {
+            Ok(Err(e)) => {
                 metrics.record_error();
                 let msg = format!("inference failed: {e:#}");
+                for req in batch {
+                    let _ = req.resp.send(Err(msg.clone()));
+                }
+            }
+            Err(_) => {
+                metrics.record_error();
+                let msg = "inference worker caught a backend panic".to_string();
                 for req in batch {
                     let _ = req.resp.send(Err(msg.clone()));
                 }
@@ -231,7 +282,7 @@ fn worker_loop(
 /// The network the artifacts' MLP corresponds to (for simulated costs).
 pub fn manifest_network(m: &Manifest) -> Network {
     let mut layers = Vec::new();
-    for i in 0..m.dims.len() - 1 {
+    for i in 0..m.dims.len().saturating_sub(1) {
         layers.push(Layer::linear(&format!("fc{i}"), 1, m.dims[i], m.dims[i + 1]));
     }
     Network { name: "artifact-mlp".into(), layers }

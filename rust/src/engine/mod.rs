@@ -5,27 +5,43 @@
 //!
 //! Mapping (same weight-stationary scheme as `arch::mapper::map_layer`):
 //! K → array rows, N → array columns, one tile = one array-full of
-//! weights, zero-padded at the edges (inert — see [`tiling`]). Each tile
-//! job programs its worker's array once and streams all M input vectors
-//! through the backend's batched bit-packed fast path; partial products
-//! accumulate into the shared output under a mutex (i32 addition is
-//! order-independent, so single- and multi-threaded runs are
+//! weights, zero-padded at the edges (inert — see [`tiling`]). Partial
+//! products accumulate into the shared output under a mutex (i32
+//! addition is order-independent, so single- and multi-threaded runs are
 //! bit-identical).
 //!
-//! The specification is [`tiling::reference_gemm`] — `mac::dot_ref`
-//! composed over tiles — and `gemm` matches it bit-for-bit for all three
-//! backends (see tests/cim_conformance.rs).
+//! Two execution paths share the pool:
+//!
+//! - **Streaming** ([`TernaryGemmEngine::gemm`]): every worker programs
+//!   its own array once per claimed tile and streams the batch through —
+//!   the paper's batch-1 accounting, where weights are re-programmed on
+//!   every call.
+//! - **Resident** ([`TernaryGemmEngine::register_weight`] +
+//!   [`TernaryGemmEngine::gemm_resident`]): weights are registered once;
+//!   an LRU [`resident::TileCache`] places their tiles across the pool
+//!   and a tile is only (re)programmed on a cache miss, so steady-state
+//!   serving pays zero weight-programming — the paper's actual
+//!   weight-stationary premise. Cache hit/miss/evict counters land in
+//!   [`EngineStats`].
+//!
+//! The specification for both paths is [`tiling::reference_gemm`] —
+//! `mac::dot_ref` composed over tiles — and both match it bit-for-bit
+//! for all three backends and any thread count (tests/cim_conformance.rs).
 
+pub mod resident;
 pub mod tiling;
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
+
+use anyhow::{ensure, Result};
 
 use crate::array::area::Design;
 use crate::array::encoding::Trit;
 use crate::array::mac::GROUP_ROWS;
 use crate::array::{make_array, CimArray};
 use crate::device::Tech;
+use self::resident::{RegisteredWeight, TileCache, TileKey, WeightId};
 use self::tiling::TileGrid;
 
 /// Engine shape: which backend design/tech, the array geometry, the pool
@@ -38,7 +54,8 @@ pub struct EngineConfig {
     pub array_rows: usize,
     /// Columns per array (N capacity per tile).
     pub array_cols: usize,
-    /// Arrays in the pool (the paper's system has 32).
+    /// Arrays in the pool (the paper's system has 32). This is also the
+    /// resident tile capacity: one placed tile per array.
     pub n_arrays: usize,
     /// Worker threads (clamped to the pool size; 1 = single-threaded).
     pub n_threads: usize,
@@ -74,35 +91,77 @@ impl EngineConfig {
         self.array_cols = cols;
         self
     }
+
+    /// Tiles a K×N weight matrix occupies on this array geometry — the
+    /// pool size needed to keep it fully resident (one array per tile).
+    pub fn tiles_for(&self, k: usize, n: usize) -> usize {
+        k.div_ceil(self.array_rows) * n.div_ceil(self.array_cols)
+    }
 }
 
 /// Cumulative work counters (functional-simulation accounting, feeding
 /// the co-simulation cross-checks and the benches).
+///
+/// `tiles`/`write_rows` count *actual array programming* (content
+/// level); `hits`/`misses`/`evictions` count resident-cache placement
+/// lookups. The two can drift under adversarial interleavings (e.g. a
+/// streaming call trashing a placed tile makes the next resident access
+/// a placement hit that still re-programs), which is exactly what the
+/// split is meant to surface.
 #[derive(Debug, Default)]
 pub struct EngineStats {
     gemms: AtomicU64,
     tiles: AtomicU64,
     windows: AtomicU64,
     macs: AtomicU64,
+    write_rows: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
 }
 
 /// Point-in-time copy of [`EngineStats`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EngineStatsSnapshot {
     pub gemms: u64,
-    /// Weight tiles programmed (array-fulls streamed in).
+    /// Weight tiles actually programmed (array-fulls streamed in).
     pub tiles: u64,
     /// 16-row MAC windows executed across all tiles and input vectors.
+    /// Partial k-tiles only count their occupied windows (⌈k_len/16⌉),
+    /// matching `arch::mapper::map_layer`.
     pub windows: u64,
     /// Useful multiply-accumulates covered (excludes padding).
     pub macs: u64,
+    /// Occupied weight rows programmed (matches mapper `write_rows`).
+    pub write_rows: u64,
+    /// Resident-cache placement hits (tile already routed to an array).
+    pub hits: u64,
+    /// Resident-cache placement misses (tile had to be placed).
+    pub misses: u64,
+    /// Placements that displaced another resident tile (LRU victim).
+    pub evictions: u64,
+}
+
+/// One pool slot: the functional array plus the identity of the resident
+/// tile its cells currently hold (`None` after the streaming path
+/// borrowed it). The tag is authoritative for array *content*; the
+/// placement cache is only routing. A resident worker re-programs
+/// whenever tag ≠ its tile key, which keeps every interleaving of
+/// streaming/resident/concurrent callers bit-exact.
+struct PoolSlot {
+    arr: Box<dyn CimArray>,
+    programmed: Option<TileKey>,
 }
 
 /// Functional tiled ternary GEMM over a pool of [`CimArray`] backends.
 pub struct TernaryGemmEngine {
     cfg: EngineConfig,
-    pool: Vec<Mutex<Box<dyn CimArray>>>,
+    pool: Vec<Mutex<PoolSlot>>,
     stats: EngineStats,
+    /// LRU placement of registered tiles onto pool slots.
+    cache: Mutex<TileCache>,
+    /// Registered weights by id (ids are never reused).
+    registry: RwLock<Vec<Arc<RegisteredWeight>>>,
 }
 
 impl TernaryGemmEngine {
@@ -111,13 +170,50 @@ impl TernaryGemmEngine {
             "array_rows must be a positive multiple of {GROUP_ROWS}");
         assert!(cfg.array_cols > 0 && cfg.n_arrays > 0);
         let pool = (0..cfg.n_arrays)
-            .map(|_| Mutex::new(make_array(cfg.design, cfg.tech, cfg.array_rows, cfg.array_cols)))
+            .map(|_| {
+                Mutex::new(PoolSlot {
+                    arr: make_array(cfg.design, cfg.tech, cfg.array_rows, cfg.array_cols),
+                    programmed: None,
+                })
+            })
             .collect();
-        TernaryGemmEngine { cfg, pool, stats: EngineStats::default() }
+        TernaryGemmEngine {
+            cache: Mutex::new(TileCache::new(cfg.n_arrays)),
+            registry: RwLock::new(Vec::new()),
+            cfg,
+            pool,
+            stats: EngineStats::default(),
+        }
     }
 
     pub fn cfg(&self) -> &EngineConfig {
         &self.cfg
+    }
+
+    /// Lock a pool slot, recovering from poisoning. The engine is shared
+    /// across serving workers that catch panics and keep going; a panic
+    /// mid-programming must not brick every later request. Recovery is
+    /// safe because the `programmed` tag is cleared *before* any write
+    /// and only set after it completes — an interrupted write leaves the
+    /// slot tagged `None`, so the next user re-programs it.
+    fn lock_slot(&self, slot: usize) -> std::sync::MutexGuard<'_, PoolSlot> {
+        self.pool[slot].lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Lock the placement cache, recovering from poisoning (the cache is
+    /// routing only — stale routing at worst costs a re-program).
+    fn lock_cache(&self) -> std::sync::MutexGuard<'_, TileCache> {
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Resident tile capacity: one placed tile per pool array.
+    pub fn capacity_tiles(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Tiles currently placed in the pool.
+    pub fn resident_tiles(&self) -> usize {
+        self.lock_cache().resident_tiles()
     }
 
     pub fn stats(&self) -> EngineStatsSnapshot {
@@ -126,6 +222,10 @@ impl TernaryGemmEngine {
             tiles: self.stats.tiles.load(Ordering::Relaxed),
             windows: self.stats.windows.load(Ordering::Relaxed),
             macs: self.stats.macs.load(Ordering::Relaxed),
+            write_rows: self.stats.write_rows.load(Ordering::Relaxed),
+            hits: self.stats.hits.load(Ordering::Relaxed),
+            misses: self.stats.misses.load(Ordering::Relaxed),
+            evictions: self.stats.evictions.load(Ordering::Relaxed),
         }
     }
 
@@ -134,15 +234,48 @@ impl TernaryGemmEngine {
         TileGrid::new(k, n, self.cfg.array_rows, self.cfg.array_cols)
     }
 
-    /// Execute a ternary GEMM: `x` (row-major M×K trits) × `w` (row-major
-    /// K×N trits) → row-major M×N i32 outputs, under the backend's MAC
-    /// semantics (saturating per 16-row group for the CiM flavors, exact
-    /// for near-memory). Deterministic: bit-identical to
+    /// Register a row-major K×N ternary weight matrix for resident
+    /// execution. The engine keeps the single weight copy (callers can
+    /// drop theirs); its tiles are placed lazily by [`Self::gemm_resident`]
+    /// and stay programmed until evicted or trashed by a streaming call.
+    pub fn register_weight(&self, w: &[Trit], k: usize, n: usize) -> Result<WeightId> {
+        ensure!(k > 0 && n > 0, "empty weight matrix ({k}×{n})");
+        ensure!(w.len() == k * n, "weights must be k×n = {k}×{n}, got {} trits", w.len());
+        let grid = self.grid(k, n);
+        let mut reg =
+            self.registry.write().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let id = reg.len();
+        reg.push(Arc::new(RegisteredWeight {
+            id,
+            k,
+            n,
+            grid,
+            tiles: grid.tiles(),
+            w: w.to_vec(),
+        }));
+        Ok(WeightId(id))
+    }
+
+    /// Shape (k, n) of a registered weight.
+    pub fn registered_shape(&self, id: WeightId) -> Option<(usize, usize)> {
+        self.registry
+            .read()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .get(id.0)
+            .map(|r| (r.k, r.n))
+    }
+
+    /// Execute a ternary GEMM in streaming mode: `x` (row-major M×K
+    /// trits) × `w` (row-major K×N trits) → row-major M×N i32 outputs,
+    /// under the backend's MAC semantics (saturating per 16-row group for
+    /// the CiM flavors, exact for near-memory). Every tile is programmed
+    /// on every call. Deterministic: bit-identical to
     /// [`tiling::reference_gemm`] regardless of thread count.
-    pub fn gemm(&self, x: &[Trit], w: &[Trit], m: usize, k: usize, n: usize) -> Vec<i32> {
-        assert!(m > 0, "empty batch");
-        assert_eq!(x.len(), m * k, "x must be m×k = {m}×{k}");
-        assert_eq!(w.len(), k * n, "w must be k×n = {k}×{n}");
+    pub fn gemm(&self, x: &[Trit], w: &[Trit], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
+        ensure!(m > 0, "empty batch (m = 0)");
+        ensure!(k > 0 && n > 0, "empty GEMM ({k}×{n})");
+        ensure!(x.len() == m * k, "x must be m×k = {m}×{k}, got {} trits", x.len());
+        ensure!(w.len() == k * n, "w must be k×n = {k}×{n}, got {} trits", w.len());
         let grid = self.grid(k, n);
         let tiles = grid.tiles();
         let out = Mutex::new(vec![0i32; m * n]);
@@ -155,11 +288,46 @@ impl TernaryGemmEngine {
             }
         });
         self.stats.gemms.fetch_add(1, Ordering::Relaxed);
-        out.into_inner().unwrap()
+        Ok(out.into_inner().unwrap())
     }
 
-    /// Worker loop: claim tiles off the shared counter, program this
-    /// worker's array, stream the batch through it, merge partials.
+    /// Execute a ternary GEMM against a registered weight in resident
+    /// mode: tiles already placed in the pool are reused as-is
+    /// (placement hit → no programming), missing tiles are placed via
+    /// LRU eviction and programmed once. Bit-identical to the streaming
+    /// path and to [`tiling::reference_gemm`] for any thread count and
+    /// any cache state.
+    pub fn gemm_resident(&self, id: WeightId, x: &[Trit], m: usize) -> Result<Vec<i32>> {
+        let reg = {
+            let registry =
+                self.registry.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+            match registry.get(id.0) {
+                Some(r) => Arc::clone(r),
+                None => anyhow::bail!("unknown weight id {} (register_weight first)", id.0),
+            }
+        };
+        ensure!(m > 0, "empty batch (m = 0)");
+        ensure!(
+            x.len() == m * reg.k,
+            "x must be m×k = {m}×{}, got {} trits",
+            reg.k,
+            x.len()
+        );
+        let out = Mutex::new(vec![0i32; m * reg.n]);
+        let next = AtomicUsize::new(0);
+        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(reg.tiles.len());
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                let (reg, out, next) = (&reg, &out, &next);
+                s.spawn(move || self.run_tiles_resident(reg, x, m, next, out));
+            }
+        });
+        self.stats.gemms.fetch_add(1, Ordering::Relaxed);
+        Ok(out.into_inner().unwrap())
+    }
+
+    /// Streaming worker loop: claim tiles off the shared counter, program
+    /// this worker's own array, stream the batch, merge partials.
     #[allow(clippy::too_many_arguments)]
     fn run_tiles(
         &self,
@@ -173,7 +341,10 @@ impl TernaryGemmEngine {
         out: &Mutex<Vec<i32>>,
     ) {
         let (rows, cols) = (self.cfg.array_rows, self.cfg.array_cols);
-        let mut arr = self.pool[wid].lock().unwrap();
+        // This worker is about to overwrite its array: drop any resident
+        // placement routed to it (lock order is always cache → pool).
+        self.lock_cache().invalidate_slot(wid);
+        let mut slot = self.lock_slot(wid);
         let mut wbuf = vec![0i8; rows * cols];
         let mut xbuf = vec![0i8; m * rows];
         loop {
@@ -182,7 +353,8 @@ impl TernaryGemmEngine {
             // Stream the tile's weights in (once per tile, weight-
             // stationary across the whole batch).
             tiling::extract_tile_weights(w, grid.k, grid.n, tile, rows, cols, &mut wbuf);
-            arr.write_matrix(&wbuf);
+            slot.programmed = None;
+            slot.arr.write_matrix(&wbuf);
             for r in 0..m {
                 tiling::extract_tile_inputs(
                     &x[r * grid.k..(r + 1) * grid.k],
@@ -191,20 +363,98 @@ impl TernaryGemmEngine {
                     &mut xbuf[r * rows..(r + 1) * rows],
                 );
             }
-            let partial = arr.dot_batch(&xbuf, m);
-            {
-                let mut o = out.lock().unwrap();
-                for r in 0..m {
-                    let src = &partial[r * cols..r * cols + tile.n_len];
-                    let base = r * grid.n + tile.n0;
-                    for (d, s) in o[base..base + tile.n_len].iter_mut().zip(src) {
-                        *d += s;
-                    }
+            let partial = slot.arr.dot_batch(&xbuf, m);
+            self.merge_partial(out, &partial, tile, grid.n, m, cols);
+            self.stats.tiles.fetch_add(1, Ordering::Relaxed);
+            self.stats.write_rows.fetch_add(tile.k_len as u64, Ordering::Relaxed);
+            self.stats
+                .windows
+                .fetch_add((m * tile.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
+            self.stats.macs.fetch_add((m * tile.k_len * tile.n_len) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Resident worker loop: claim tiles, route each through the
+    /// placement cache, program only when the slot's content tag does
+    /// not already hold the tile, stream the batch, merge partials.
+    fn run_tiles_resident(
+        &self,
+        reg: &RegisteredWeight,
+        x: &[Trit],
+        m: usize,
+        next: &AtomicUsize,
+        out: &Mutex<Vec<i32>>,
+    ) {
+        let (rows, cols) = (self.cfg.array_rows, self.cfg.array_cols);
+        // Weight buffer is only needed on a miss; the steady-state
+        // all-hit serving path never allocates it.
+        let mut wbuf: Vec<i8> = Vec::new();
+        let mut xbuf = vec![0i8; m * rows];
+        loop {
+            let ti = next.fetch_add(1, Ordering::Relaxed);
+            let Some(tile) = reg.tiles.get(ti) else { break };
+            let key: TileKey = (reg.id, ti);
+            let placement = self.lock_cache().place(key);
+            if placement.hit {
+                self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                if placement.evicted {
+                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
                 }
             }
-            self.stats.tiles.fetch_add(1, Ordering::Relaxed);
-            self.stats.windows.fetch_add((m * (rows / GROUP_ROWS)) as u64, Ordering::Relaxed);
+            let mut slot = self.lock_slot(placement.slot);
+            if slot.programmed != Some(key) {
+                if wbuf.is_empty() {
+                    wbuf = vec![0i8; rows * cols];
+                }
+                tiling::extract_tile_weights(
+                    &reg.w, reg.grid.k, reg.grid.n, tile, rows, cols, &mut wbuf,
+                );
+                // Tag is cleared across the write so an interrupted
+                // programming pass can never masquerade as a valid tile.
+                slot.programmed = None;
+                slot.arr.write_matrix(&wbuf);
+                slot.programmed = Some(key);
+                self.stats.tiles.fetch_add(1, Ordering::Relaxed);
+                self.stats.write_rows.fetch_add(tile.k_len as u64, Ordering::Relaxed);
+            }
+            for r in 0..m {
+                tiling::extract_tile_inputs(
+                    &x[r * reg.grid.k..(r + 1) * reg.grid.k],
+                    tile,
+                    rows,
+                    &mut xbuf[r * rows..(r + 1) * rows],
+                );
+            }
+            let partial = slot.arr.dot_batch(&xbuf, m);
+            drop(slot);
+            self.merge_partial(out, &partial, tile, reg.grid.n, m, cols);
+            self.stats
+                .windows
+                .fetch_add((m * tile.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
             self.stats.macs.fetch_add((m * tile.k_len * tile.n_len) as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Accumulate one tile's batch of partial products into the shared
+    /// output (i32 addition commutes, so merge order never matters).
+    fn merge_partial(
+        &self,
+        out: &Mutex<Vec<i32>>,
+        partial: &[i32],
+        tile: &tiling::Tile,
+        n: usize,
+        m: usize,
+        cols: usize,
+    ) {
+        let mut o = out.lock().unwrap();
+        for r in 0..m {
+            let src = &partial[r * cols..r * cols + tile.n_len];
+            let base = r * n + tile.n0;
+            for (d, s) in o[base..base + tile.n_len].iter_mut().zip(src) {
+                *d += s;
+            }
         }
     }
 }
@@ -232,7 +482,7 @@ mod tests {
         let w = rng.ternary_vec(k * n, 0.5);
         for design in Design::ALL {
             let eng = small_engine(design, 2);
-            let got = eng.gemm(&x, &w, m, k, n);
+            let got = eng.gemm(&x, &w, m, k, n).unwrap();
             let want = tiling::reference_gemm(&x, &w, m, &eng.grid(k, n), design.flavor());
             assert_eq!(got, want, "{design:?}");
         }
@@ -244,24 +494,49 @@ mod tests {
         let (m, k, n) = (2usize, 200usize, 90usize);
         let x = rng.ternary_vec(m * k, 0.4);
         let w = rng.ternary_vec(k * n, 0.4);
-        let single = small_engine(Design::Cim1, 1).gemm(&x, &w, m, k, n);
-        let multi = small_engine(Design::Cim1, 4).gemm(&x, &w, m, k, n);
+        let single = small_engine(Design::Cim1, 1).gemm(&x, &w, m, k, n).unwrap();
+        let multi = small_engine(Design::Cim1, 4).gemm(&x, &w, m, k, n).unwrap();
         assert_eq!(single, multi);
     }
 
     #[test]
-    fn stats_account_tiles_and_macs() {
+    fn stats_account_tiles_windows_and_macs() {
         let mut rng = Rng::new(43);
+        // k = 100 on 64-row arrays: the second k-tile holds 36 rows, so
+        // its windows must count ⌈36/16⌉ = 3, not 64/16 = 4 (the ragged
+        // partial-tile accounting bug this pins down).
         let (m, k, n) = (2usize, 100usize, 40usize);
         let eng = small_engine(Design::Cim2, 2);
         let x = rng.ternary_vec(m * k, 0.5);
         let w = rng.ternary_vec(k * n, 0.5);
-        let _ = eng.gemm(&x, &w, m, k, n);
+        let _ = eng.gemm(&x, &w, m, k, n).unwrap();
         let s = eng.stats();
+        let grid = eng.grid(k, n);
         assert_eq!(s.gemms, 1);
-        assert_eq!(s.tiles, eng.grid(k, n).n_tiles_total() as u64);
+        assert_eq!(s.tiles, grid.n_tiles_total() as u64);
         assert_eq!(s.macs, (m * k * n) as u64);
-        assert_eq!(s.windows, s.tiles * (m * (64 / 16)) as u64);
+        // ⌈100/16⌉ = 7 windows per vector per n-stripe, 2 n-stripes.
+        assert_eq!(s.windows, (m * k.div_ceil(GROUP_ROWS) * grid.n_tiles) as u64);
+        assert_eq!(s.windows, 28);
+        // Occupied rows only: K rows per n-stripe.
+        assert_eq!(s.write_rows, (k * grid.n_tiles) as u64);
+    }
+
+    #[test]
+    fn gemm_shape_violations_are_errors_not_panics() {
+        let eng = small_engine(Design::Cim1, 1);
+        let x_short = vec![0i8; 10];
+        let x_full = vec![0i8; 64];
+        let w = vec![0i8; 64 * 32];
+        assert!(eng.gemm(&x_short, &w, 0, 64, 32).is_err(), "m = 0");
+        assert!(eng.gemm(&x_short, &w, 1, 64, 32).is_err(), "bad x len");
+        assert!(eng.gemm(&x_full, &w, 1, 64, 31).is_err(), "bad w len");
+        assert!(eng.gemm(&x_full, &w, 1, 0, 32).is_err(), "k = 0");
+        // The engine still works after rejecting bad shapes.
+        let mut rng = Rng::new(7);
+        let x = rng.ternary_vec(64, 0.5);
+        let w = rng.ternary_vec(64 * 32, 0.5);
+        assert!(eng.gemm(&x, &w, 1, 64, 32).is_ok());
     }
 
     #[test]
@@ -270,9 +545,53 @@ mod tests {
         let eng = small_engine(Design::Cim1, 1);
         let x = rng.ternary_vec(64, 0.5);
         let w = rng.ternary_vec(64 * 32, 0.5);
-        let got = eng.gemm(&x, &w, 1, 64, 32);
+        let got = eng.gemm(&x, &w, 1, 64, 32).unwrap();
         let mut storage = crate::array::TernaryStorage::new(64, 32);
         storage.write_matrix(&w);
         assert_eq!(got, crate::array::mac::dot_ref(&storage, &x, Flavor::Cim1));
+    }
+
+    #[test]
+    fn resident_matches_streaming_and_counts_hits() {
+        let mut rng = Rng::new(45);
+        let (m, k, n) = (2usize, 150usize, 60usize);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        for design in Design::ALL {
+            // Pool of 6 ≥ the 3×2 = 6 tiles: fully resident.
+            let eng = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_pool(6)
+                    .with_threads(2),
+            );
+            let id = eng.register_weight(&w, k, n).unwrap();
+            let n_tiles = eng.grid(k, n).n_tiles_total() as u64;
+            let streaming = eng.gemm(&x, &w, m, k, n).unwrap();
+            let r1 = eng.gemm_resident(id, &x, m).unwrap();
+            let r2 = eng.gemm_resident(id, &x, m).unwrap();
+            assert_eq!(r1, streaming, "{design:?} resident vs streaming");
+            assert_eq!(r2, streaming, "{design:?} warm resident vs streaming");
+            let s = eng.stats();
+            assert_eq!(s.misses, n_tiles, "{design:?} cold pass places every tile");
+            assert_eq!(s.hits, n_tiles, "{design:?} warm pass hits every tile");
+            assert_eq!(s.evictions, 0, "{design:?} fully-resident set never evicts");
+        }
+    }
+
+    #[test]
+    fn resident_rejects_bad_inputs() {
+        let eng = small_engine(Design::Cim1, 1);
+        let mut rng = Rng::new(46);
+        let w = rng.ternary_vec(64 * 32, 0.5);
+        assert!(eng.register_weight(&w, 64, 31).is_err(), "len mismatch");
+        assert!(eng.register_weight(&w, 0, 32).is_err(), "k = 0");
+        let id = eng.register_weight(&w, 64, 32).unwrap();
+        assert_eq!(eng.registered_shape(id), Some((64, 32)));
+        let x = rng.ternary_vec(64, 0.5);
+        assert!(eng.gemm_resident(id, &x, 0).is_err(), "m = 0");
+        assert!(eng.gemm_resident(id, &x[..10], 1).is_err(), "bad x len");
+        assert!(eng.gemm_resident(WeightId(99), &x, 1).is_err(), "unknown id");
+        assert!(eng.gemm_resident(id, &x, 1).is_ok());
     }
 }

@@ -1,0 +1,177 @@
+//! Resident-tile placement: the cache that keeps registered weight tiles
+//! programmed in the array pool across GEMM calls.
+//!
+//! The paper's premise is weight-stationary CiM — weights sit in the
+//! arrays and only inputs stream — so re-programming every tile on every
+//! call (the streaming `gemm` path) throws away the architecture's main
+//! win. The resident path splits placement from execution:
+//!
+//! - [`WeightId`] — handle returned by `TernaryGemmEngine::register_weight`;
+//!   the engine keeps the (single) ternary weight copy for cache refills.
+//! - [`TileCache`] — an LRU map from [`TileKey`] (weight, tile index) to
+//!   pool slots. `place` returns the slot plus whether the placement was
+//!   already cached; a miss evicts the least-recently-used slot.
+//!
+//! The cache only decides *routing*. Whether the slot's array actually
+//! holds the tile is tracked by the pool slot's `programmed` tag under
+//! the array mutex (see `engine::PoolSlot`): the streaming path clears
+//! the tag when it borrows an array, and a resident worker re-programs
+//! whenever tag ≠ key. That split keeps results bit-exact under any
+//! interleaving of streaming calls, resident calls and concurrent
+//! callers — stale placements only cost an extra programming pass.
+
+use std::collections::HashMap;
+
+use crate::array::encoding::Trit;
+
+use super::tiling::{Tile, TileGrid};
+
+/// Handle to a weight matrix registered with the engine for resident
+/// execution.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WeightId(pub(crate) usize);
+
+/// Identity of one placed tile: (registered weight id, tile index in its
+/// k-major grid order).
+pub(crate) type TileKey = (usize, usize);
+
+/// A weight matrix registered for resident execution: the engine's own
+/// copy of the trits (used to (re)program tiles on cache misses) plus its
+/// precomputed tile decomposition.
+pub(crate) struct RegisteredWeight {
+    pub id: usize,
+    pub k: usize,
+    pub n: usize,
+    pub grid: TileGrid,
+    pub tiles: Vec<Tile>,
+    pub w: Vec<Trit>,
+}
+
+/// Outcome of one placement lookup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct Placement {
+    /// Pool slot (array index) the tile is routed to.
+    pub slot: usize,
+    /// The key was already mapped (steady-state serving path).
+    pub hit: bool,
+    /// A different key was displaced to make room.
+    pub evicted: bool,
+}
+
+/// LRU placement of tile keys onto array-pool slots. Purely bookkeeping —
+/// no array access happens here; callers hold the engine's cache mutex.
+#[derive(Debug)]
+pub(crate) struct TileCache {
+    /// Per-slot reverse mapping + recency stamp (0 = never used / freed).
+    keys: Vec<Option<TileKey>>,
+    stamps: Vec<u64>,
+    map: HashMap<TileKey, usize>,
+    clock: u64,
+}
+
+impl TileCache {
+    pub fn new(n_slots: usize) -> TileCache {
+        assert!(n_slots > 0, "cache needs at least one slot");
+        TileCache {
+            keys: vec![None; n_slots],
+            stamps: vec![0; n_slots],
+            map: HashMap::new(),
+            clock: 0,
+        }
+    }
+
+    /// Number of currently mapped tiles.
+    pub fn resident_tiles(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Route `key` to a slot: reuse its mapping on a hit, otherwise claim
+    /// the least-recently-used slot (evicting whatever it held).
+    pub fn place(&mut self, key: TileKey) -> Placement {
+        self.clock += 1;
+        if let Some(&slot) = self.map.get(&key) {
+            self.stamps[slot] = self.clock;
+            return Placement { slot, hit: true, evicted: false };
+        }
+        let slot = (0..self.stamps.len())
+            .min_by_key(|&s| self.stamps[s])
+            .expect("cache has at least one slot");
+        let evicted = match self.keys[slot].take() {
+            Some(old) => {
+                self.map.remove(&old);
+                true
+            }
+            None => false,
+        };
+        self.keys[slot] = Some(key);
+        self.stamps[slot] = self.clock;
+        self.map.insert(key, slot);
+        Placement { slot, hit: false, evicted }
+    }
+
+    /// Forget whatever is placed on `slot` (the streaming path borrowed
+    /// the array, so its contents no longer match the placement). The
+    /// slot becomes the preferred LRU victim.
+    pub fn invalidate_slot(&mut self, slot: usize) {
+        if let Some(old) = self.keys[slot].take() {
+            self.map.remove(&old);
+        }
+        self.stamps[slot] = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hits_after_first_placement() {
+        let mut c = TileCache::new(2);
+        let p0 = c.place((0, 0));
+        assert!(!p0.hit && !p0.evicted);
+        let p1 = c.place((0, 0));
+        assert!(p1.hit);
+        assert_eq!(p1.slot, p0.slot);
+        assert_eq!(c.resident_tiles(), 1);
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let mut c = TileCache::new(2);
+        let a = c.place((0, 0)).slot;
+        let b = c.place((0, 1)).slot;
+        assert_ne!(a, b);
+        // Touch (0,0) so (0,1) is the LRU victim.
+        assert!(c.place((0, 0)).hit);
+        let p = c.place((0, 2));
+        assert!(!p.hit && p.evicted);
+        assert_eq!(p.slot, b);
+        // (0,1) was displaced; (0,0) survived.
+        assert!(c.place((0, 0)).hit);
+        assert!(!c.place((0, 1)).hit);
+    }
+
+    #[test]
+    fn sequential_sweep_larger_than_cache_never_hits() {
+        // The classic LRU pathology the counters must make visible.
+        let mut c = TileCache::new(3);
+        for pass in 0..2 {
+            for t in 0..4 {
+                assert!(!c.place((0, t)).hit, "pass {pass} tile {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn invalidate_slot_frees_mapping_and_prefers_slot() {
+        let mut c = TileCache::new(3);
+        let s = c.place((7, 0)).slot;
+        c.place((7, 1));
+        c.invalidate_slot(s);
+        assert_eq!(c.resident_tiles(), 1);
+        // The freed slot is reused before any eviction happens.
+        let p = c.place((7, 2));
+        assert_eq!(p.slot, s);
+        assert!(!p.evicted);
+    }
+}

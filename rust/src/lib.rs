@@ -17,19 +17,25 @@
 //!   arbitrary M×K×N GEMMs onto a pool of `CimArray` backends
 //!   (K×N weight-stationary tiling, batched bit-packed MAC fast path,
 //!   multi-threaded tile execution) with a `dot_ref`-composed reference
-//!   specification.
+//!   specification. Two paths: streaming (tiles re-programmed every
+//!   call) and resident (`register_weight` + `gemm_resident` — tiles
+//!   placed once via the LRU `engine::resident` cache and reused, with
+//!   hit/miss/evict counters), bit-identical to each other.
 //! - [`arch`] — the TiM-DNN-style accelerator (32 arrays, 32 PCUs) plus
-//!   iso-capacity / iso-area near-memory baseline systems, and the
-//!   functional co-simulation mode that cross-checks the analytic model
-//!   against the engine.
+//!   iso-capacity / iso-area near-memory baseline systems, explicit
+//!   streaming-vs-resident weight accounting (`arch::Residency`), and
+//!   the functional co-simulation mode that cross-checks the analytic
+//!   model against the engine in both modes (outputs *and* work
+//!   counters).
 //! - [`dnn`] — the five benchmark workloads (AlexNet, ResNet34,
 //!   Inception, LSTM, GRU) as ternary GEMM workloads.
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
 //!   artifacts (python never runs at inference time). Gated behind the
 //!   `pjrt` feature; the default build stubs it.
 //! - [`coordinator`] — a thread-based inference service with two
-//!   servable backends: the PJRT numerics path and the functional
-//!   GEMM-engine path.
+//!   servable backends: per-worker PJRT numerics, or one `Arc`-shared
+//!   engine model whose weights stay resident in a single array pool
+//!   across all workers.
 //! - [`repro`] — one entry point per paper figure/table.
 
 pub mod arch;

@@ -142,7 +142,7 @@ fn engine_matches_tiled_reference_on_random_shapes() {
             );
             let x = rng.ternary_vec(m * k, 0.5);
             let w = rng.ternary_vec(k * n, 0.5);
-            let got = engine.gemm(&x, &w, m, k, n);
+            let got = engine.gemm(&x, &w, m, k, n).unwrap();
             let want = reference_gemm(&x, &w, m, &engine.grid(k, n), design.flavor());
             assert_eq!(got, want, "{design:?} {m}x{k}x{n}");
         }
@@ -164,7 +164,146 @@ fn engine_single_and_multi_thread_are_bit_identical() {
                     .with_threads(threads),
             )
             .gemm(&x, &w, m, k, n)
+            .unwrap()
         };
         assert_eq!(mk(1), mk(6), "{design:?}");
     }
+}
+
+#[test]
+fn resident_gemm_matches_streaming_and_reference_on_random_shapes() {
+    let mut rng = Rng::new(107);
+    // The 4-array pool is smaller than several of these grids, so the
+    // resident path also exercises LRU eviction mid-GEMM.
+    let shapes = [(1usize, 64usize, 32usize), (3, 100, 70), (2, 256, 40), (5, 300, 90), (1, 48, 130)];
+    for design in Design::ALL {
+        for &(m, k, n) in &shapes {
+            let engine = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_pool(4)
+                    .with_threads(3),
+            );
+            let x = rng.ternary_vec(m * k, 0.5);
+            let w = rng.ternary_vec(k * n, 0.5);
+            let want = reference_gemm(&x, &w, m, &engine.grid(k, n), design.flavor());
+            let streaming = engine.gemm(&x, &w, m, k, n).unwrap();
+            let id = engine.register_weight(&w, k, n).unwrap();
+            let first = engine.gemm_resident(id, &x, m).unwrap();
+            let second = engine.gemm_resident(id, &x, m).unwrap();
+            assert_eq!(streaming, want, "{design:?} {m}x{k}x{n} streaming");
+            assert_eq!(first, want, "{design:?} {m}x{k}x{n} resident cold");
+            assert_eq!(second, want, "{design:?} {m}x{k}x{n} resident warm");
+        }
+    }
+}
+
+#[test]
+fn resident_gemm_thread_count_is_bit_identical() {
+    let mut rng = Rng::new(108);
+    let (m, k, n) = (4usize, 500usize, 120usize);
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    for design in Design::ALL {
+        let mk = |threads| {
+            let engine = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Sram8T)
+                    .with_array_dims(128, 64)
+                    .with_pool(6)
+                    .with_threads(threads),
+            );
+            let id = engine.register_weight(&w, k, n).unwrap();
+            // Two calls: cold (placing) and warm (hitting) must agree.
+            let a = engine.gemm_resident(id, &x, m).unwrap();
+            let b = engine.gemm_resident(id, &x, m).unwrap();
+            assert_eq!(a, b, "{design:?} {threads} threads cold vs warm");
+            a
+        };
+        assert_eq!(mk(1), mk(6), "{design:?}");
+    }
+}
+
+#[test]
+fn resident_cache_counts_hits_misses_and_evictions() {
+    let mut rng = Rng::new(109);
+    // 5 k-tiles × 1 n-stripe = 5 tiles on a 2-array pool, single thread:
+    // the sequential LRU sweep never hits.
+    let (m, k, n) = (2usize, 300usize, 32usize);
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+            .with_array_dims(64, 32)
+            .with_pool(2)
+            .with_threads(1),
+    );
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    let want = reference_gemm(&x, &w, m, &engine.grid(k, n), Design::Cim1.flavor());
+    let id = engine.register_weight(&w, k, n).unwrap();
+
+    let first = engine.gemm_resident(id, &x, m).unwrap();
+    let s1 = engine.stats();
+    assert_eq!(first, want, "over-subscribed cache still bit-exact");
+    assert_eq!((s1.hits, s1.misses), (0, 5));
+    // Tiles 3, 4, 5 displaced earlier placements (2 slots filled first).
+    assert_eq!(s1.evictions, 3);
+    assert_eq!(s1.tiles, 5);
+
+    let second = engine.gemm_resident(id, &x, m).unwrap();
+    let s2 = engine.stats();
+    assert_eq!(second, want, "eviction-then-reuse stays bit-exact");
+    // LRU sweep pathology: every tile missed and re-programmed again.
+    assert_eq!((s2.hits, s2.misses), (0, 10));
+    assert_eq!(s2.evictions, 8);
+    assert_eq!(s2.tiles, 10);
+
+    // Now a pool that fits the working set: steady state is all hits.
+    let roomy = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+            .with_array_dims(64, 32)
+            .with_pool(5)
+            .with_threads(2),
+    );
+    let id = roomy.register_weight(&w, k, n).unwrap();
+    assert_eq!(roomy.gemm_resident(id, &x, m).unwrap(), want);
+    assert_eq!(roomy.gemm_resident(id, &x, m).unwrap(), want);
+    let s = roomy.stats();
+    assert_eq!((s.hits, s.misses, s.evictions), (5, 5, 0));
+    assert_eq!(s.tiles, 5, "fully-resident set is programmed exactly once");
+    assert_eq!(roomy.resident_tiles(), 5);
+}
+
+#[test]
+fn streaming_gemm_invalidates_resident_tiles_but_stays_correct() {
+    let mut rng = Rng::new(110);
+    let (m, k, n) = (2usize, 150usize, 60usize); // 3×2 = 6 tiles
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim2, Tech::Sram8T)
+            .with_array_dims(64, 32)
+            .with_pool(6)
+            .with_threads(1),
+    );
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    let want = reference_gemm(&x, &w, m, &engine.grid(k, n), Design::Cim2.flavor());
+    let id = engine.register_weight(&w, k, n).unwrap();
+    assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want);
+    let before = engine.stats();
+    assert_eq!(before.tiles, 6);
+
+    // A streaming GEMM borrows pool arrays and overwrites them.
+    let w2 = rng.ternary_vec(k * n, 0.5);
+    let want2 = reference_gemm(&x, &w2, m, &engine.grid(k, n), Design::Cim2.flavor());
+    assert_eq!(engine.gemm(&x, &w2, m, k, n).unwrap(), want2);
+
+    // The resident path must notice the trashed array and re-program it
+    // rather than serve stale weights.
+    assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "stale tile re-programmed");
+    let after = engine.stats();
+    assert!(
+        after.tiles > before.tiles + 6,
+        "streaming programmed 6 tiles and at least one resident tile was re-programmed \
+         (before {} after {})",
+        before.tiles,
+        after.tiles
+    );
 }

@@ -1,11 +1,193 @@
-//! Integration: serving coordinator over the PJRT runtime.
-//! Skips gracefully if artifacts are missing.
-use sitecim::coordinator::{BatchPolicy, Server, ServerConfig};
+//! Integration: the serving coordinator.
+//!
+//! The engine backend needs no compiled artifacts — these tests write a
+//! small synthetic manifest (ternary weights + thresholds) into a temp
+//! dir and serve through the functional GEMM engine, so the multi-worker
+//! paths run in every environment. The PJRT tests still skip gracefully
+//! when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use sitecim::array::mac::Flavor;
+use sitecim::array::Design;
+use sitecim::coordinator::{
+    BatchPolicy, EngineBackend, InferenceBackend, Server, ServerConfig,
+};
+use sitecim::device::Tech;
+use sitecim::dnn::ternary::ternarize_acts_i32;
+use sitecim::engine::tiling::{reference_gemm, TileGrid};
 use sitecim::runtime::{default_dir, Manifest};
+use sitecim::util::rng::Rng;
 
 fn artifacts_available() -> bool {
     Manifest::load(default_dir()).is_ok()
 }
+
+/// A unique temp artifacts dir per test (tests run in parallel in one
+/// process, so the tag must differ per call site).
+fn synth_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sitecim-coord-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn trit_bytes(trits: &[i8]) -> Vec<u8> {
+    trits.iter().map(|&t| t as u8).collect()
+}
+
+/// Write a servable synthetic MLP: random ternary weights for each
+/// `dims` transition, activation thresholds between layers, and a tiny
+/// test set.
+fn write_synth_artifacts(dir: &Path, dims: &[usize], batch: usize, seed: u64) {
+    assert!(dims.len() >= 2);
+    let mut rng = Rng::new(seed);
+    let mut weights_json = String::new();
+    for i in 0..dims.len() - 1 {
+        let (k, n) = (dims[i], dims[i + 1]);
+        let w = rng.ternary_vec(k * n, 0.5);
+        std::fs::write(dir.join(format!("w{i}.bin")), trit_bytes(&w)).unwrap();
+        if i > 0 {
+            weights_json.push_str(", ");
+        }
+        weights_json.push_str(&format!("{{\"file\": \"w{i}.bin\", \"shape\": [{k}, {n}]}}"));
+    }
+    let in_dim = dims[0];
+    let test_n = 4usize;
+    let x = rng.ternary_vec(test_n * in_dim, 0.5);
+    std::fs::write(dir.join("test_x.bin"), trit_bytes(&x)).unwrap();
+    std::fs::write(dir.join("test_y.bin"), vec![0u8; test_n]).unwrap();
+    let thresholds = vec!["0.5"; dims.len() - 2].join(", ");
+    let dims_json =
+        dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+    let manifest = format!(
+        "{{\n  \"batch\": {batch},\n  \"dims\": [{dims_json}],\n  \"act_thresholds\": [{thresholds}],\n  \"kernel_shape\": [8, 16, 16],\n  \"files\": {{}},\n  \"weights\": [{weights_json}],\n  \"scales\": [1.0],\n  \"test_set\": {{\"x\": \"test_x.bin\", \"y\": \"test_y.bin\", \"n\": {test_n}, \"in_dim\": {in_dim}}},\n  \"accuracy\": {{}}\n}}\n"
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+}
+
+fn engine_server_config(dir: PathBuf, workers: usize) -> ServerConfig {
+    let mut cfg = ServerConfig::new(dir).with_engine_backend();
+    cfg.n_workers = workers;
+    cfg.engine_threads = 2;
+    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    cfg
+}
+
+/// The reference forward pass the engine backend must reproduce exactly:
+/// `reference_gemm` over 256×256 tiles + the recorded thresholds.
+fn reference_forward(manifest: &Manifest, input: &[i8]) -> Vec<f32> {
+    let mut h = input.to_vec();
+    for i in 0..manifest.weights.len() {
+        let (w, (k, n)) = manifest.load_weight(i).unwrap();
+        let y = reference_gemm(&h, &w, 1, &TileGrid::new(k, n, 256, 256), Some(Flavor::Cim1));
+        if i + 1 < manifest.weights.len() {
+            h = ternarize_acts_i32(&y, manifest.act_thresholds[i]);
+        } else {
+            return y.iter().map(|&v| v as f32).collect();
+        }
+    }
+    unreachable!()
+}
+
+#[test]
+fn engine_server_serves_concurrent_requests_with_shared_resident_model() {
+    let dir = synth_dir("concurrent");
+    write_synth_artifacts(&dir, &[32, 16, 8], 8, 1);
+    let server = Server::start(engine_server_config(dir.clone(), 3)).unwrap();
+
+    let mut rng = Rng::new(9);
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut pending = Vec::new();
+    for _ in 0..48 {
+        let input = rng.ternary_vec(32, 0.5);
+        let want = reference_forward(&manifest, &input);
+        pending.push((want, server.infer_async(input).unwrap()));
+    }
+    for (want, rx) in pending {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.logits.len(), 8);
+        assert_eq!(reply.logits, want, "engine backend must match the reference forward");
+    }
+    assert_eq!(server.metrics.requests.load(Ordering::Relaxed), 48);
+    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+
+    // The tentpole property: one shared model, tiles programmed exactly
+    // once (2 single-tile layers), every later GEMM hits the cache.
+    let stats = server.engine_model().unwrap().engine_stats();
+    assert_eq!(stats.tiles, 2, "weights stay resident across all workers/batches");
+    assert!(stats.hits > 0, "steady-state serving must hit the tile cache");
+    assert_eq!(stats.evictions, 0);
+    server.shutdown();
+}
+
+#[test]
+fn engine_server_rejects_malformed_input_and_keeps_serving() {
+    let dir = synth_dir("malformed");
+    write_synth_artifacts(&dir, &[32, 16, 8], 8, 2);
+    let server = Server::start(engine_server_config(dir.clone(), 2)).unwrap();
+
+    // Wrong input length is rejected up-front…
+    assert!(server.infer(vec![0i8; 3]).is_err());
+    // …and the workers are unaffected: valid traffic still flows.
+    let mut rng = Rng::new(10);
+    for _ in 0..8 {
+        let reply = server.infer(rng.ternary_vec(32, 0.5)).unwrap();
+        assert_eq!(reply.logits.len(), 8);
+    }
+    assert_eq!(server.metrics.requests.load(Ordering::Relaxed), 8);
+    server.shutdown();
+}
+
+#[test]
+fn engine_server_shutdown_drains_all_pending_replies() {
+    let dir = synth_dir("drain");
+    write_synth_artifacts(&dir, &[32, 16, 8], 8, 3);
+    let server = Server::start(engine_server_config(dir, 2)).unwrap();
+    let mut rng = Rng::new(11);
+    let mut pending = Vec::new();
+    for _ in 0..24 {
+        pending.push(server.infer_async(rng.ternary_vec(32, 0.5)).unwrap());
+    }
+    // Close the queue immediately: every already-submitted request must
+    // still be answered before the workers exit.
+    server.shutdown();
+    for rx in pending {
+        let reply = rx.recv().expect("reply delivered before shutdown completed");
+        assert!(reply.is_ok());
+    }
+}
+
+#[test]
+fn empty_dims_manifest_is_a_startup_error_not_a_panic() {
+    let dir = synth_dir("emptydims");
+    let manifest = "{\n  \"batch\": 8,\n  \"dims\": [],\n  \"act_thresholds\": [],\n  \"kernel_shape\": [8, 16, 16],\n  \"files\": {},\n  \"weights\": [],\n  \"scales\": [],\n  \"test_set\": {\"x\": \"test_x.bin\", \"y\": \"test_y.bin\", \"n\": 0, \"in_dim\": 0},\n  \"accuracy\": {}\n}\n";
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+    std::fs::write(dir.join("test_x.bin"), Vec::<u8>::new()).unwrap();
+    std::fs::write(dir.join("test_y.bin"), Vec::<u8>::new()).unwrap();
+    let err = Server::start(ServerConfig::new(dir)).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("dims"), "error should explain the bad manifest: {msg}");
+}
+
+#[test]
+fn engine_backend_rejects_bad_batches_as_errors() {
+    let dir = synth_dir("badbatch");
+    write_synth_artifacts(&dir, &[32, 16, 8], 4, 4);
+    let manifest = Manifest::load(&dir).unwrap();
+    let b = EngineBackend::load(&manifest, Design::Cim1, Tech::Femfet3T, 1).unwrap();
+    assert_eq!((b.batch(), b.in_dim(), b.out_dim()), (4, 32, 8));
+    assert!(b.run_batch(&[0i8; 32], 0).is_err(), "n_valid = 0");
+    assert!(b.run_batch(&[0i8; 32], 5).is_err(), "n_valid > batch");
+    assert!(b.run_batch(&[0i8; 16], 1).is_err(), "length mismatch");
+    // The backend still serves after rejecting bad batches.
+    let ok = b.run_batch(&[0i8; 64], 2).unwrap();
+    assert_eq!(ok.len(), 2 * 8);
+}
+
+// ---- PJRT-backed tests (need `make artifacts` + the pjrt feature) ----
 
 #[test]
 fn serves_requests_with_batching() {
