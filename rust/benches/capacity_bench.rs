@@ -1,0 +1,161 @@
+//! Capacity-sweep bench: serve an AlexNet-FC-shaped working set through
+//! the resident engine at a range of pool capacities — from heavy LRU
+//! eviction pressure up to fully resident — and record measured hit
+//! rates, eviction counts and serving throughput for all three designs.
+//! The paper's 2 M-word budget is always one of the sweep points, and
+//! the full-size working set (~58 M words of FC weights) exceeds it, so
+//! the 2 M row reports genuinely pressured (nonzero-miss) serving.
+//!
+//! Emits `BENCH_capacity.json` (uploaded as a CI artifact alongside
+//! `BENCH_engine.json`).
+//!
+//! `SITECIM_BENCH_FAST=1` scales the FC stack by 1/8 for CI smoke runs.
+
+use std::time::Instant;
+
+use sitecim::array::Design;
+use sitecim::device::Tech;
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::util::rng::Rng;
+
+const ARRAY: usize = 256;
+const WORDS_PER_ARRAY: u64 = (ARRAY * ARRAY) as u64;
+
+struct Entry {
+    design: Design,
+    capacity_words: u64,
+    arrays: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    hit_rate: f64,
+    inf_per_s: f64,
+}
+
+/// 16-row-padded words the layer's tiles occupy (what a pool must hold
+/// for all-hit serving, before packing).
+fn padded_words(k: usize, n: usize) -> u64 {
+    let mut total = 0u64;
+    for nt in 0..n.div_ceil(ARRAY) {
+        let n_len = ARRAY.min(n - nt * ARRAY);
+        for kt in 0..k.div_ceil(ARRAY) {
+            let k_len = ARRAY.min(k - kt * ARRAY);
+            total += (k_len.div_ceil(16) * 16 * n_len) as u64;
+        }
+    }
+    total
+}
+
+fn tiles(k: usize, n: usize) -> u64 {
+    (k.div_ceil(ARRAY) * n.div_ceil(ARRAY)) as u64
+}
+
+fn main() {
+    let fast = std::env::var("SITECIM_BENCH_FAST").is_ok();
+    // AlexNet's FC stack (fc6/fc7/fc8), scaled 1/8 in fast mode.
+    let dims: Vec<(usize, usize)> = if fast {
+        vec![(1152, 512), (512, 512), (512, 128)]
+    } else {
+        vec![(9216, 4096), (4096, 4096), (4096, 1000)]
+    };
+    let workload = if fast { "alexnet-fc/8" } else { "alexnet-fc" };
+    let reps = if fast { 2 } else { 3 };
+
+    let mut rng = Rng::new(0x5EED);
+    let weights: Vec<(Vec<i8>, usize, usize)> =
+        dims.iter().map(|&(k, n)| (rng.ternary_vec(k * n, 0.5), k, n)).collect();
+    let xs: Vec<Vec<i8>> = dims.iter().map(|&(k, _)| rng.ternary_vec(k, 0.5)).collect();
+
+    let ws_words: u64 = dims.iter().map(|&(k, n)| padded_words(k, n)).sum();
+    let tiles_total: u64 = dims.iter().map(|&(k, n)| tiles(k, n)).sum();
+    // One array per tile always serves all-hit; sweep fractions of that
+    // plus the paper's 2 M-word system budget.
+    let fit_words = tiles_total * WORDS_PER_ARRAY;
+    let mut caps: Vec<u64> =
+        vec![fit_words / 4, fit_words / 2, 3 * fit_words / 4, fit_words, 2 * 1024 * 1024];
+    caps.sort_unstable();
+    caps.dedup();
+
+    println!("== capacity_bench ({workload}) ==");
+    println!(
+        "working set: {} layers, {tiles_total} tiles, {ws_words} padded words ({fit_words} words unpacked)",
+        dims.len()
+    );
+
+    let mut entries: Vec<Entry> = Vec::new();
+    for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+        for &cap in &caps {
+            let engine = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T).with_capacity_words(cap),
+            );
+            let ids: Vec<_> = weights
+                .iter()
+                .map(|(w, k, n)| engine.register_weight(w, *k, *n).unwrap())
+                .collect();
+            // Warm pass: cold programming excluded from the measurement.
+            for (id, x) in ids.iter().zip(&xs) {
+                engine.gemm_resident(*id, x, 1).unwrap();
+            }
+            let before = engine.stats();
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                for (id, x) in ids.iter().zip(&xs) {
+                    engine.gemm_resident(*id, x, 1).unwrap();
+                }
+            }
+            let dt = t0.elapsed().as_secs_f64();
+            let d = engine.stats().since(&before);
+            let (hits, misses, evictions) = (d.hits, d.misses, d.evictions);
+            let hit_rate = d.hit_rate();
+            let inf_per_s = reps as f64 / dt;
+            println!(
+                "{:<11} cap {:>10} words ({:>3} arrays): hit rate {:>5.1}%  ({} h / {} m / {} e)  {:.2} inf/s",
+                format!("{design:?}"),
+                cap,
+                engine.pool_arrays(),
+                100.0 * hit_rate,
+                hits,
+                misses,
+                evictions,
+                inf_per_s,
+            );
+            entries.push(Entry {
+                design,
+                capacity_words: cap,
+                arrays: engine.pool_arrays(),
+                hits,
+                misses,
+                evictions,
+                hit_rate,
+                inf_per_s,
+            });
+        }
+    }
+
+    let mut json = String::from("{\n");
+    json.push_str(&format!(
+        "  \"bench\": \"capacity_sweep\",\n  \"fast_mode\": {fast},\n  \"workload\": \"{workload}\",\n"
+    ));
+    json.push_str(&format!(
+        "  \"working_set_words\": {ws_words},\n  \"fit_words\": {fit_words},\n  \"results\": [\n"
+    ));
+    for (i, e) in entries.iter().enumerate() {
+        json.push_str(&format!(
+            "    {{\"design\": \"{:?}\", \"capacity_words\": {}, \"arrays\": {}, \"hits\": {}, \"misses\": {}, \"evictions\": {}, \"hit_rate\": {:.4}, \"inf_per_s\": {:.3}}}{}\n",
+            e.design,
+            e.capacity_words,
+            e.arrays,
+            e.hits,
+            e.misses,
+            e.evictions,
+            e.hit_rate,
+            e.inf_per_s,
+            if i + 1 < entries.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  ]\n}\n");
+    match std::fs::write("BENCH_capacity.json", &json) {
+        Ok(()) => println!("\nwrote BENCH_capacity.json"),
+        Err(e) => eprintln!("\ncould not write BENCH_capacity.json: {e}"),
+    }
+}

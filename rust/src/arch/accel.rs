@@ -40,6 +40,15 @@ pub enum Residency {
     /// write latency uses the amortized fractional share, without the
     /// streaming path's per-inference ceil).
     Resident { inferences: u64 },
+    /// Weights served from a capacity-bounded resident pool of
+    /// `capacity_words` ternary words (⌊words / array_words⌋ arrays,
+    /// matching `EngineConfig::with_capacity_words`). When the network's
+    /// *packed* working set (`LayerWork::arrays_packed` summed over
+    /// layers) fits, programming amortizes as `Resident { inferences }`;
+    /// when it does not, steady-state LRU serving degenerates to the
+    /// sweep pathology — every tile re-programmed every inference — and
+    /// every layer is charged as `Streaming`.
+    Bounded { capacity_words: u64, inferences: u64 },
 }
 
 /// Execution report for one network on one config.
@@ -119,9 +128,10 @@ impl Accelerator {
 
         // Weight programming (same write path family for all designs):
         // full charge when streaming, amortized per-inference share when
-        // resident.
+        // resident. `Bounded` is resolved to one of the two by
+        // `run_with_residency` before layer costing.
         let (write_latency, write_energy) = match residency {
-            Residency::Streaming => {
+            Residency::Streaming | Residency::Bounded { .. } => {
                 let serial_writes = (w.write_rows as f64 / n_arrays).ceil();
                 (serial_writes * m.write.latency, w.write_rows as f64 * m.write.energy)
             }
@@ -140,20 +150,51 @@ impl Accelerator {
         (compute_latency, write_latency, compute_energy, write_energy, pcu + act)
     }
 
-    /// Run a full network with automatic residency: networks that fit the
-    /// on-chip capacity are charged as resident in steady state (weights
-    /// programmed once, amortized to zero), larger ones stream.
+    /// Run a full network with automatic residency: the capacity-bounded
+    /// pool at the config's own capacity. Networks whose packed working
+    /// set fits on-chip are charged as resident in steady state (weights
+    /// programmed once, amortized to zero), larger ones stream (the
+    /// bounded pool's LRU sweep pathology).
     pub fn run(&self, net: &Network) -> SystemReport {
-        let residency = if net.total_weight_words() <= self.cfg.capacity_words() {
-            Residency::Resident { inferences: 0 }
-        } else {
-            Residency::Streaming
-        };
-        self.run_with_residency(net, residency)
+        self.run_with_residency(
+            net,
+            Residency::Bounded { capacity_words: self.cfg.capacity_words(), inferences: 0 },
+        )
+    }
+
+    /// The network's packed working set: physical arrays its layers'
+    /// tiles occupy under sub-array shelf packing (summed per layer — no
+    /// cross-layer array sharing, matching how the accounting keeps
+    /// layers separable).
+    pub fn arrays_packed(&self, net: &Network) -> u64 {
+        net.layers.iter().map(|l| map_layer(&self.cfg, l).arrays_packed).sum()
     }
 
     /// Run a full network under an explicit weight-residency mode.
     pub fn run_with_residency(&self, net: &Network, residency: Residency) -> SystemReport {
+        // Map every layer once: the Bounded resolution and the costing
+        // loop share the same LayerWork (map_layer runs the shelf
+        // packer, which is not free on many-tile FC layers).
+        let works: Vec<LayerWork> = net.layers.iter().map(|l| map_layer(&self.cfg, l)).collect();
+        // Resolve the capacity-bounded mode against the packed working
+        // set once, for the whole network.
+        let residency = match residency {
+            Residency::Bounded { capacity_words, inferences } => {
+                let array_words = (self.cfg.geom.n_rows * self.cfg.geom.n_cols) as u64;
+                // Same floor as `EngineConfig::pool_arrays`: the engine
+                // always builds at least one array, so the analytic
+                // model must not charge streaming for a working set that
+                // one array would in fact hold resident.
+                let capacity_arrays = (capacity_words / array_words).max(1);
+                let packed: u64 = works.iter().map(|w| w.arrays_packed).sum();
+                if packed <= capacity_arrays {
+                    Residency::Resident { inferences }
+                } else {
+                    Residency::Streaming
+                }
+            }
+            r => r,
+        };
         let mut r = SystemReport {
             config: self.cfg.name.clone(),
             network: net.name.clone(),
@@ -167,9 +208,8 @@ impl Accelerator {
             total_windows: 0,
             total_write_rows: 0,
         };
-        for layer in &net.layers {
-            let w = map_layer(&self.cfg, layer);
-            let (cl, wl, ce, we, pe) = self.layer_cost(&w, residency);
+        for w in &works {
+            let (cl, wl, ce, we, pe) = self.layer_cost(w, residency);
             r.compute_latency += cl;
             r.write_latency += wl;
             r.compute_energy += ce;
@@ -198,15 +238,10 @@ impl Accelerator {
     /// cross-check is exact).
     pub fn engine_sized(&self, n_threads: usize, n_arrays: usize) -> TernaryGemmEngine {
         TernaryGemmEngine::new(
-            EngineConfig {
-                design: self.cfg.design,
-                tech: self.cfg.tech,
-                array_rows: self.cfg.geom.n_rows,
-                array_cols: self.cfg.geom.n_cols,
-                n_arrays: n_arrays.max(1),
-                n_threads: 1, // overwritten below
-            }
-            .with_threads(n_threads),
+            EngineConfig::new(self.cfg.design, self.cfg.tech)
+                .with_array_dims(self.cfg.geom.n_rows, self.cfg.geom.n_cols)
+                .with_pool(n_arrays.max(1))
+                .with_threads(n_threads),
         )
     }
 
@@ -482,6 +517,51 @@ mod tests {
         assert!(steady.latency < streaming.latency);
         // Compute is residency-independent.
         assert_eq!(steady.compute_latency, streaming.compute_latency);
+    }
+
+    #[test]
+    fn bounded_residency_resolves_by_packed_capacity() {
+        let accel = Accelerator::new(AccelConfig::sitecim(Tech::Femfet3T, Design::Cim1));
+
+        // AlexNet's packed working set exceeds 32 arrays by far: the
+        // bounded pool degenerates to streaming (the LRU sweep
+        // pathology), which is exactly what `run` charges.
+        let net = benchmarks::alexnet();
+        assert!(accel.arrays_packed(&net) > accel.cfg.n_arrays as u64);
+        let bounded = accel.run_with_residency(
+            &net,
+            Residency::Bounded { capacity_words: accel.cfg.capacity_words(), inferences: 0 },
+        );
+        let streaming = accel.run_with_residency(&net, Residency::Streaming);
+        assert_eq!(bounded.latency, streaming.latency);
+        assert_eq!(bounded.energy, streaming.energy);
+        assert_eq!(accel.run(&net).latency, streaming.latency);
+
+        // A small MLP packs into the pool: the bounded charge equals the
+        // steady-state resident charge.
+        let tiny = Network {
+            name: "tiny-mlp".into(),
+            layers: vec![
+                Layer::linear("fc0", 1, 256, 128),
+                Layer::linear("fc1", 1, 128, 64),
+            ],
+        };
+        assert!(accel.arrays_packed(&tiny) <= accel.cfg.n_arrays as u64);
+        let bounded = accel.run_with_residency(
+            &tiny,
+            Residency::Bounded { capacity_words: accel.cfg.capacity_words(), inferences: 0 },
+        );
+        let resident = accel.run_with_residency(&tiny, Residency::Resident { inferences: 0 });
+        assert_eq!(bounded.write_energy, resident.write_energy);
+        assert_eq!(bounded.latency, resident.latency);
+        // And a starved budget (floored to the engine's one-array
+        // minimum, still below the 2-array packed set) forces streaming.
+        let starved = accel.run_with_residency(
+            &tiny,
+            Residency::Bounded { capacity_words: 0, inferences: 0 },
+        );
+        let tiny_streaming = accel.run_with_residency(&tiny, Residency::Streaming);
+        assert_eq!(starved.write_energy, tiny_streaming.write_energy);
     }
 
     #[test]

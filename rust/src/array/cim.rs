@@ -76,6 +76,25 @@ pub trait CimArray: Send {
         self.storage_mut().write_matrix(weights);
     }
 
+    /// Program a `rows × cols` sub-rectangle of the array from a
+    /// row-major image, leaving every other cell untouched — the engine's
+    /// sub-array region placement path (several weight shards share one
+    /// physical array). Differential writes, same per-cell path as
+    /// [`CimArray::write`].
+    fn write_region(&mut self, row0: usize, col0: usize, rows: usize, cols: usize, w: &[Trit]) {
+        assert_eq!(w.len(), rows * cols, "region image must be rows × cols");
+        assert!(
+            row0 + rows <= self.n_rows() && col0 + cols <= self.n_cols(),
+            "region {rows}×{cols} at ({row0}, {col0}) exceeds the array"
+        );
+        let s = self.storage_mut();
+        for r in 0..rows {
+            for c in 0..cols {
+                s.write(row0 + r, col0 + c, w[r * cols + c]);
+            }
+        }
+    }
+
     /// Memory-mode read of one row.
     fn read_row(&self, row: usize) -> Vec<Trit> {
         (0..self.n_cols()).map(|c| self.storage().read(row, c)).collect()
@@ -218,6 +237,28 @@ mod tests {
             };
             assert_eq!(got, want, "{design:?}");
             assert!(got.iter().all(|&o| o.abs() <= a.dot_bound()), "{design:?}");
+        }
+    }
+
+    #[test]
+    fn write_region_leaves_other_cells_untouched() {
+        let mut rng = Rng::new(19);
+        for design in Design::ALL {
+            let mut a = make_array(design, Tech::Sram8T, 64, 16);
+            let base = rng.ternary_vec(64 * 16, 0.5);
+            a.write_matrix(&base);
+            let region = rng.ternary_vec(32 * 8, 0.5);
+            a.write_region(16, 4, 32, 8, &region);
+            for r in 0..64 {
+                for c in 0..16 {
+                    let want = if (16..48).contains(&r) && (4..12).contains(&c) {
+                        region[(r - 16) * 8 + (c - 4)]
+                    } else {
+                        base[r * 16 + c]
+                    };
+                    assert_eq!(a.storage().read(r, c), want, "{design:?} r={r} c={c}");
+                }
+            }
         }
     }
 

@@ -1,0 +1,272 @@
+//! The CI bench-regression gate behind `sitecim bench-check`.
+//!
+//! Compares a freshly-written `BENCH_engine.json` against the committed
+//! `BENCH_baseline.json`: per-entry throughput (`gmacs_per_s`, keyed by
+//! design/mode/threads/shape) and the per-design `resident_speedup`
+//! ratios, each within a relative tolerance. Only *regressions* fail —
+//! a fresh value above baseline always passes — and a baseline metric
+//! recorded as `null` is treated as unseeded (reported, never failed),
+//! so the gate can be committed before the reference runner has produced
+//! real numbers. A baseline metric *missing* from the fresh run fails:
+//! losing a benchmark silently is itself a regression.
+
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One comparison outcome.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Verdict {
+    Ok,
+    Improved,
+    Regressed,
+    Unseeded,
+    Missing,
+    /// Baseline entry keyed by a runner-dependent thread count (the
+    /// multi-thread bench entries embed `available_parallelism()`):
+    /// reported, never failed, so seeding the baseline by copying a
+    /// whole BENCH_engine.json from one machine cannot brick CI on a
+    /// machine with a different core count.
+    Skipped,
+}
+
+impl Verdict {
+    fn label(self) -> &'static str {
+        match self {
+            Verdict::Ok => "OK",
+            Verdict::Improved => "OK (faster)",
+            Verdict::Regressed => "REGRESSED",
+            Verdict::Unseeded => "unseeded",
+            Verdict::Missing => "MISSING",
+            Verdict::Skipped => "skipped (runner-dependent key)",
+        }
+    }
+
+    fn fails(self) -> bool {
+        matches!(self, Verdict::Regressed | Verdict::Missing)
+    }
+}
+
+fn fmt_val(v: Option<f64>) -> String {
+    match v {
+        Some(x) => format!("{x:.3}"),
+        None => "n/a".to_string(),
+    }
+}
+
+fn fmt_delta(base: Option<f64>, fresh: Option<f64>) -> String {
+    match (base, fresh) {
+        (Some(b), Some(f)) if b > 0.0 => format!("{:+.1}%", (f / b - 1.0) * 100.0),
+        _ => "-".to_string(),
+    }
+}
+
+/// Judge one higher-is-better metric against the tolerance.
+fn judge(base: Option<f64>, fresh: Option<f64>, tol_pct: f64) -> Verdict {
+    match (base, fresh) {
+        (None, _) => Verdict::Unseeded,
+        (Some(_), None) => Verdict::Missing,
+        (Some(b), Some(f)) => {
+            if f < b * (1.0 - tol_pct / 100.0) {
+                Verdict::Regressed
+            } else if f > b {
+                Verdict::Improved
+            } else {
+                Verdict::Ok
+            }
+        }
+    }
+}
+
+/// Identity of one `results[]` entry: design/mode/threads/shape.
+fn entry_key(e: &Json) -> Option<String> {
+    let design = e.get("design")?.as_str()?;
+    let mode = e.get("mode")?.as_str()?;
+    let threads = e.get("threads")?.as_usize()?;
+    let (m, k, n) = (
+        e.get("m")?.as_usize()?,
+        e.get("k")?.as_usize()?,
+        e.get("n")?.as_usize()?,
+    );
+    Some(format!("{design}/{mode} {threads}t {m}x{k}x{n}"))
+}
+
+/// Metric value, treating JSON `null` (or absence) as unseeded.
+fn metric(e: &Json, key: &str) -> Option<f64> {
+    e.get(key).and_then(Json::as_f64)
+}
+
+/// Render the per-metric delta table and return it with the overall
+/// verdict (`true` = no regression).
+pub fn compare(baseline: &Json, fresh: &Json, tol_pct: f64) -> (String, bool) {
+    let mut t = Table::new(format!("bench-check — regression gate at ±{tol_pct:.0}%"))
+        .header(&["metric (higher is better)", "baseline", "fresh", "delta", "status"]);
+    let mut failures = 0usize;
+    let mut unseeded = 0usize;
+    let mut checked = 0usize;
+
+    let empty: Vec<Json> = Vec::new();
+    let base_entries = baseline.get("results").and_then(Json::as_arr).unwrap_or(&empty);
+    let fresh_entries = fresh.get("results").and_then(Json::as_arr).unwrap_or(&empty);
+
+    for be in base_entries {
+        let Some(key) = entry_key(be) else { continue };
+        let base_v = metric(be, "gmacs_per_s");
+        let fresh_v = fresh_entries
+            .iter()
+            .find(|&fe| entry_key(fe).as_deref() == Some(key.as_str()))
+            .and_then(|fe| metric(fe, "gmacs_per_s"));
+        // Multi-thread entries embed the recording machine's core count
+        // in their key; only single-thread entries are machine-portable.
+        let portable = be.get("threads").and_then(Json::as_usize) == Some(1);
+        let v = if portable { judge(base_v, fresh_v, tol_pct) } else { Verdict::Skipped };
+        checked += usize::from(v != Verdict::Skipped);
+        failures += usize::from(v.fails());
+        unseeded += usize::from(v == Verdict::Unseeded);
+        t.row(&[
+            format!("GMAC/s {key}"),
+            fmt_val(base_v),
+            fmt_val(fresh_v),
+            fmt_delta(base_v, fresh_v),
+            v.label().to_string(),
+        ]);
+    }
+
+    if let Some(base_sp) = baseline.get("resident_speedup").and_then(Json::as_obj) {
+        for (design, bv) in base_sp {
+            let base_v = bv.as_f64();
+            let fresh_v = fresh
+                .get("resident_speedup")
+                .and_then(|o| o.get(design))
+                .and_then(Json::as_f64);
+            let v = judge(base_v, fresh_v, tol_pct);
+            checked += 1;
+            failures += usize::from(v.fails());
+            unseeded += usize::from(v == Verdict::Unseeded);
+            t.row(&[
+                format!("resident_speedup {design}"),
+                fmt_val(base_v),
+                fmt_val(fresh_v),
+                fmt_delta(base_v, fresh_v),
+                v.label().to_string(),
+            ]);
+        }
+    }
+
+    let ok = failures == 0 && checked > 0;
+    if checked == 0 {
+        t.note("baseline lists no metrics — seed BENCH_baseline.json from a bench run");
+    } else if unseeded == checked {
+        t.note(
+            "all baseline metrics are null (unseeded): gate passes vacuously; copy a real \
+             BENCH_engine.json over BENCH_baseline.json on the reference runner to arm it",
+        );
+    }
+    t.note(format!(
+        "{checked} metric(s) checked, {failures} regression(s), {unseeded} unseeded"
+    ));
+    let verdict = if ok {
+        "bench-check: PASS\n".to_string()
+    } else {
+        format!("bench-check: FAIL ({failures} regression(s))\n")
+    };
+    (t.render() + &verdict, ok)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(design: &str, gmacs: &str) -> String {
+        entry_threads(design, 1, gmacs)
+    }
+
+    fn entry_threads(design: &str, threads: usize, gmacs: &str) -> String {
+        format!(
+            "{{\"design\": \"{design}\", \"mode\": \"streaming\", \"threads\": {threads}, \
+             \"m\": 8, \"k\": 256, \"n\": 256, \"mean_s\": 0.01, \"gmacs_per_s\": {gmacs}}}"
+        )
+    }
+
+    fn doc(entries: &[String], speedups: &str) -> Json {
+        Json::parse(&format!(
+            "{{\"bench\": \"engine_gemm\", \"results\": [{}], \"resident_speedup\": {speedups}}}",
+            entries.join(", ")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn within_tolerance_and_improvements_pass() {
+        let base = doc(&[entry("Cim1", "10.0")], "{\"Cim1\": 4.0}");
+        let fresh = doc(&[entry("Cim1", "8.5")], "{\"Cim1\": 5.0}");
+        let (report, ok) = compare(&base, &fresh, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("PASS"));
+        assert!(report.contains("OK (faster)"), "speedup improved: {report}");
+    }
+
+    #[test]
+    fn regression_beyond_tolerance_fails() {
+        let base = doc(&[entry("Cim1", "10.0")], "{\"Cim1\": 4.0}");
+        let fresh = doc(&[entry("Cim1", "7.9")], "{\"Cim1\": 4.0}");
+        let (report, ok) = compare(&base, &fresh, 20.0);
+        assert!(!ok, "{report}");
+        assert!(report.contains("REGRESSED"));
+        assert!(report.contains("FAIL"));
+    }
+
+    #[test]
+    fn speedup_regression_fails_independently() {
+        let base = doc(&[entry("Cim1", "10.0")], "{\"Cim1\": 4.0}");
+        let fresh = doc(&[entry("Cim1", "10.0")], "{\"Cim1\": 2.0}");
+        let (report, ok) = compare(&base, &fresh, 20.0);
+        assert!(!ok, "{report}");
+    }
+
+    #[test]
+    fn null_baseline_metrics_pass_as_unseeded() {
+        let base = doc(&[entry("Cim1", "null")], "{\"Cim1\": null}");
+        let fresh = doc(&[entry("Cim1", "12.0")], "{\"Cim1\": 4.0}");
+        let (report, ok) = compare(&base, &fresh, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("unseeded"));
+    }
+
+    #[test]
+    fn baseline_metric_missing_from_fresh_fails() {
+        let base = doc(
+            &[entry("Cim1", "10.0"), entry("Cim2", "9.0")],
+            "{\"Cim1\": 4.0}",
+        );
+        let fresh = doc(&[entry("Cim1", "10.0")], "{\"Cim1\": 4.0}");
+        let (report, ok) = compare(&base, &fresh, 20.0);
+        assert!(!ok, "{report}");
+        assert!(report.contains("MISSING"));
+    }
+
+    #[test]
+    fn runner_dependent_thread_keys_are_skipped_not_failed() {
+        // A baseline seeded on an 8-core runner carries threads=8
+        // entries; a 4-core CI runner emits no matching key. That must
+        // not fail the gate — only single-thread keys are compared.
+        let base = doc(
+            &[entry("Cim1", "10.0"), entry_threads("Cim1", 8, "40.0")],
+            "{\"Cim1\": 4.0}",
+        );
+        let fresh = doc(
+            &[entry("Cim1", "10.0"), entry_threads("Cim1", 4, "1.0")],
+            "{\"Cim1\": 4.0}",
+        );
+        let (report, ok) = compare(&base, &fresh, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("skipped"));
+    }
+
+    #[test]
+    fn empty_baseline_is_not_a_pass() {
+        let base = Json::parse("{\"results\": []}").unwrap();
+        let fresh = doc(&[entry("Cim1", "10.0")], "{}");
+        let (report, ok) = compare(&base, &fresh, 20.0);
+        assert!(!ok, "an empty baseline must not green-light the gate: {report}");
+    }
+}

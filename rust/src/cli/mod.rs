@@ -2,14 +2,20 @@
 //!
 //! Subcommands:
 //!   figures  [--all|--fig4|--fig7|--fig9|--fig11|--fig12|--fig13|--area|--cmp|--err|--cosim]
+//!            (--cosim exits nonzero on any engine/accounting mismatch)
 //!   selftest             quick functional cross-check of both array flavors
 //!   engine   [--m M --k K --n N] [--design cim1|cim2|nm] [--threads T] [--resident] [--reps R]
+//!            [--capacity-words W]
+//!   bench-check [--baseline PATH] [--fresh PATH] [--tolerance PCT]
 //!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
 //!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine] [--threads T]
+//!            [--capacity-words W]
+
+mod bench_check;
 
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::array::area::Design;
 use crate::array::{mac, CimArray, SiTeCim1Array, SiTeCim2Array};
@@ -20,6 +26,7 @@ use crate::engine::{EngineConfig, TernaryGemmEngine};
 use crate::repro;
 use crate::runtime::{self, Manifest, ModelKind};
 use crate::util::cli::Args;
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 pub const USAGE: &str = "sitecim — SiTe CiM reproduction (signed ternary computing-in-memory)
@@ -27,22 +34,33 @@ pub const USAGE: &str = "sitecim — SiTe CiM reproduction (signed ternary compu
 USAGE: sitecim <subcommand> [flags]
 
   figures [--all | --fig4 --fig7 --fig9 --fig11 --fig12 --fig13 --area --cmp --err --cosim]
-          regenerate the paper's tables/figures (paper vs measured)
+          regenerate the paper's tables/figures (paper vs measured);
+          --cosim exits nonzero if any engine output or work counter
+          diverges from the analytic accounting (the CI gate)
   selftest [--seed S]
           functional cross-check: CiM I/II arrays vs reference semantics
   engine  [--m M] [--k K] [--n N] [--design cim1|cim2|nm] [--threads T] [--seed S]
-          [--resident] [--reps R]
+          [--resident] [--reps R] [--capacity-words W]
           run a ternary GEMM through the tiled array engine, verify it
           against the dot_ref tile composition, and report throughput;
           --resident registers the weights once and repeats the GEMM
           through the resident-tile cache, reporting streaming-vs-
-          resident throughput and cache hit/miss/evict counters
+          resident throughput and cache hit/miss/evict counters;
+          --capacity-words bounds the resident pool (e.g. 2097152 = the
+          paper's 2 M words) and serves under LRU eviction pressure
+  bench-check [--baseline PATH] [--fresh PATH] [--tolerance PCT]
+          compare a fresh BENCH_engine.json against the committed
+          baseline (default BENCH_baseline.json): per-design throughput
+          and resident speedups, ±20% by default; exits nonzero and
+          prints a per-metric delta table on regression
   infer   [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
           run the AOT-compiled ternary MLP on the held-out test set
   serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B] [--backend pjrt|engine]
-          [--threads T]
+          [--threads T] [--capacity-words W]
           start the serving coordinator and push synthetic traffic (the
-          engine backend shares one resident-weight model across workers)
+          engine backend shares one resident-weight model across
+          workers; --capacity-words serves from a bounded pool instead
+          of sizing it to the whole network)
   help    this message
 ";
 
@@ -52,6 +70,7 @@ pub fn run(args: Args) -> Result<i32> {
         Some("figures") => cmd_figures(&args),
         Some("selftest") => cmd_selftest(&args),
         Some("engine") => cmd_engine(&args),
+        Some("bench-check") => cmd_bench_check(&args),
         Some("infer") => cmd_infer(&args),
         Some("serve") => cmd_serve(&args),
         Some("help") | None => {
@@ -83,12 +102,38 @@ fn cmd_figures(args: &Args) -> Result<i32> {
     emit("fig12", &repro::fig12);
     emit("fig13", &repro::fig13);
     emit("err", &repro::error_prob);
-    emit("cosim", &repro::engine_cosim);
+    // The cosim is a verdict, not just a table: report its status
+    // through the exit code so CI can assert it directly.
+    let mut cosim_failed = false;
+    if all || args.has("cosim") {
+        let (table, ok) = repro::engine_cosim_status();
+        print!("{table}");
+        printed = true;
+        if !ok {
+            eprintln!("cosim FAILED: engine diverged from the reference or the accounting");
+            cosim_failed = true;
+        }
+    }
     if !printed {
         eprintln!("no figure selected\n{USAGE}");
         return Ok(2);
     }
-    Ok(0)
+    Ok(if cosim_failed { 1 } else { 0 })
+}
+
+fn cmd_bench_check(args: &Args) -> Result<i32> {
+    let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
+    let fresh_path = args.get_or("fresh", "BENCH_engine.json");
+    let tol = args.get_f64("tolerance", 20.0);
+    let read = |path: &str| -> Result<Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    };
+    let baseline = read(&baseline_path)?;
+    let fresh = read(&fresh_path)?;
+    let (report, ok) = bench_check::compare(&baseline, &fresh, tol);
+    print!("{report}");
+    Ok(if ok { 0 } else { 1 })
 }
 
 fn cmd_selftest(args: &Args) -> Result<i32> {
@@ -132,17 +177,31 @@ fn cmd_engine(args: &Args) -> Result<i32> {
             return Ok(2);
         }
     };
+    let capacity = args.get_u64("capacity-words", 0);
     let mut cfg = EngineConfig::new(design, Tech::Femfet3T);
     if threads > 0 {
         cfg = cfg.with_threads(threads);
     }
-    if resident {
+    if capacity > 0 {
+        // Capacity-bounded pool: serve under LRU eviction pressure when
+        // the working set exceeds the word budget.
+        cfg = cfg.with_capacity_words(capacity);
+    } else if resident {
         // Size the pool to the working set so repeated GEMMs are fully
         // resident (one array per tile).
         let tiles = cfg.tiles_for(k, n);
         cfg = cfg.with_pool(tiles.max(1));
     }
     let engine = TernaryGemmEngine::new(cfg);
+    if capacity > 0 {
+        println!(
+            "capacity-bounded pool: {} words → {} arrays of {}x{}",
+            capacity,
+            engine.pool_arrays(),
+            engine.cfg().array_rows,
+            engine.cfg().array_cols,
+        );
+    }
     let mut rng = Rng::new(seed);
     let x = rng.ternary_vec(m * k, 0.5);
     let w = rng.ternary_vec(k * n, 0.5);
@@ -178,7 +237,7 @@ fn cmd_engine(args: &Args) -> Result<i32> {
             rgot = engine.gemm_resident(id, &x, m)?;
         }
         let dt_res = t1.elapsed().as_secs_f64();
-        let s = engine.stats();
+        let d = engine.stats().since(&before);
         mismatches += rgot.iter().zip(&want).filter(|(a, b)| a != b).count();
         println!(
             "{:?} GEMM {m}x{k}x{n} ×{reps} on {} threads (resident):  {:.3}s, {:.2} GMAC/s ({:.2}x vs streaming)",
@@ -189,11 +248,12 @@ fn cmd_engine(args: &Args) -> Result<i32> {
             dt_stream / dt_res,
         );
         println!(
-            "tile cache: {} hits, {} misses, {} evictions, {} tiles programmed ({} resident)",
-            s.hits - before.hits,
-            s.misses - before.misses,
-            s.evictions - before.evictions,
-            s.tiles - before.tiles,
+            "tile cache: {} hits, {} misses ({:.1}% hit rate), {} evictions, {} regions programmed ({} resident)",
+            d.hits,
+            d.misses,
+            100.0 * d.hit_rate(),
+            d.evictions,
+            d.tiles,
             engine.resident_tiles(),
         );
     } else {
@@ -258,6 +318,8 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     cfg.n_workers = args.get_usize("workers", 2);
     cfg.policy.max_batch = args.get_usize("batch", 32);
     cfg.engine_threads = args.get_usize("threads", 2);
+    let capacity = args.get_u64("capacity-words", 0);
+    cfg.capacity_words = if capacity > 0 { Some(capacity) } else { None };
     cfg.backend = match args.get_or("backend", "pjrt").as_str() {
         "pjrt" => BackendKind::Pjrt,
         "engine" => BackendKind::Engine,
@@ -294,8 +356,14 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     if let Some(model) = server.engine_model() {
         let s = model.engine_stats();
         println!(
-            "engine tile cache: {} hits, {} misses, {} evictions, {} tiles programmed",
-            s.hits, s.misses, s.evictions, s.tiles
+            "engine pool: {} arrays ({} words); tile cache: {} hits, {} misses ({:.1}% hit rate), {} evictions, {} regions programmed",
+            model.pool_arrays(),
+            model.capacity_words(),
+            s.hits,
+            s.misses,
+            100.0 * s.hit_rate(),
+            s.evictions,
+            s.tiles
         );
     }
     server.shutdown();

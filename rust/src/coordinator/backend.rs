@@ -117,14 +117,20 @@ pub struct EngineBackend {
 
 impl EngineBackend {
     /// Load the manifest's layers and register their weights with a
-    /// fresh engine whose pool is sized to hold the whole network — the
-    /// weights are programmed lazily on first use and then stay
-    /// resident, so steady-state serving never re-programs a tile.
+    /// fresh engine. With `capacity_words = None` the pool is sized to
+    /// hold the whole network (one array per tile — conservative, since
+    /// sub-array packing can fit the shards into fewer arrays); with a
+    /// word budget the pool is capacity-bounded
+    /// (`EngineConfig::with_capacity_words`) and serves under LRU
+    /// eviction pressure when the network exceeds it — still bit-exact,
+    /// with measured hit rates in [`Self::engine_stats`]. Weights are
+    /// programmed lazily on first use and stay resident until evicted.
     pub fn load(
         manifest: &Manifest,
         design: Design,
         tech: Tech,
         n_threads: usize,
+        capacity_words: Option<u64>,
     ) -> Result<EngineBackend> {
         let mut weights = Vec::new();
         for i in 0..manifest.weights.len() {
@@ -156,10 +162,16 @@ impl EngineBackend {
         let in_dim = weights[0].1;
         let out_dim = weights.last().unwrap().2;
 
-        // One array per tile of the whole network: fully resident.
         let cfg = EngineConfig::new(design, tech).with_threads(n_threads);
-        let total_tiles: usize = weights.iter().map(|(_, k, n)| cfg.tiles_for(*k, *n)).sum();
-        let engine = TernaryGemmEngine::new(cfg.with_pool(total_tiles.max(1)));
+        let engine = match capacity_words {
+            // Bounded pool: serve at the given word budget.
+            Some(words) => TernaryGemmEngine::new(cfg.with_capacity_words(words)),
+            // One array per tile of the whole network: fully resident.
+            None => {
+                let total: usize = weights.iter().map(|(_, k, n)| cfg.tiles_for(*k, *n)).sum();
+                TernaryGemmEngine::new(cfg.with_pool(total.max(1)))
+            }
+        };
 
         let mut layers = Vec::new();
         for (w, k, n) in &weights {
@@ -181,6 +193,16 @@ impl EngineBackend {
     /// Engine work/cache counters (tile hits, misses, programming).
     pub fn engine_stats(&self) -> EngineStatsSnapshot {
         self.engine.stats()
+    }
+
+    /// Physical arrays in the serving pool.
+    pub fn pool_arrays(&self) -> usize {
+        self.engine.pool_arrays()
+    }
+
+    /// Ternary-word capacity of the serving pool.
+    pub fn capacity_words(&self) -> u64 {
+        self.engine.capacity_words()
     }
 }
 

@@ -65,6 +65,11 @@ pub struct ServerConfig {
     /// Tile-worker threads inside each engine-backend GEMM call (the
     /// server already parallelizes across workers/batches).
     pub engine_threads: usize,
+    /// Engine-backend pool bound in ternary words (`None` = size the
+    /// pool to hold the whole network). Bounding below the working set
+    /// serves under LRU eviction pressure — bit-exact, measured hit
+    /// rates in the serve report.
+    pub capacity_words: Option<u64>,
 }
 
 impl ServerConfig {
@@ -78,6 +83,7 @@ impl ServerConfig {
             sim_tech: Tech::Femfet3T,
             sim_design: Design::Cim1,
             engine_threads: 2,
+            capacity_words: None,
         }
     }
 
@@ -129,8 +135,14 @@ impl Server {
         // start-time error instead of silently dead workers.
         let engine_model = match cfg.backend {
             BackendKind::Engine => Some(Arc::new(
-                EngineBackend::load(&manifest, cfg.sim_design, cfg.sim_tech, cfg.engine_threads)
-                    .context("loading engine backend")?,
+                EngineBackend::load(
+                    &manifest,
+                    cfg.sim_design,
+                    cfg.sim_tech,
+                    cfg.engine_threads,
+                    cfg.capacity_words,
+                )
+                .context("loading engine backend")?,
             )),
             BackendKind::Pjrt => None,
         };

@@ -4,29 +4,41 @@
 //! `arch::Accelerator` (which only *accounts* for this work).
 //!
 //! Mapping (same weight-stationary scheme as `arch::mapper::map_layer`):
-//! K → array rows, N → array columns, one tile = one array-full of
-//! weights, zero-padded at the edges (inert — see [`tiling`]). Partial
-//! products accumulate into the shared output under a mutex (i32
-//! addition is order-independent, so single- and multi-threaded runs are
-//! bit-identical).
+//! K → array rows, N → array columns, zero-padded at the edges (inert —
+//! see [`tiling`]). Placement granularity is independent of the physical
+//! arrays: a grid's tiles split into array-fitting [`tiling::Shard`]s,
+//! and each shard executes on a 16-row-aligned *region* (sub-rectangle)
+//! of one array, so several small shards pack into one array and one
+//! oversized tile shards across arrays. Partial products accumulate into
+//! the shared output under a mutex (i32 addition is order-independent,
+//! so single- and multi-threaded runs are bit-identical).
 //!
 //! Two execution paths share the pool:
 //!
 //! - **Streaming** ([`TernaryGemmEngine::gemm`]): every worker programs
-//!   its own array once per claimed tile and streams the batch through —
+//!   its own array once per claimed shard and streams the batch through —
 //!   the paper's batch-1 accounting, where weights are re-programmed on
 //!   every call.
 //! - **Resident** ([`TernaryGemmEngine::register_weight`] +
 //!   [`TernaryGemmEngine::gemm_resident`]): weights are registered once;
-//!   an LRU [`resident::TileCache`] places their tiles across the pool
-//!   and a tile is only (re)programmed on a cache miss, so steady-state
-//!   serving pays zero weight-programming — the paper's actual
-//!   weight-stationary premise. Cache hit/miss/evict counters land in
-//!   [`EngineStats`].
+//!   an LRU [`resident::TileCache`] places their shards onto regions
+//!   across the pool and a region is only (re)programmed on a cache
+//!   miss, so steady-state serving pays zero weight-programming — the
+//!   paper's actual weight-stationary premise. Cache hit/miss/evict
+//!   counters land in [`EngineStats`].
 //!
-//! The specification for both paths is [`tiling::reference_gemm`] —
-//! `mac::dot_ref` composed over tiles — and both match it bit-for-bit
-//! for all three backends and any thread count (tests/cim_conformance.rs).
+//! The pool is sized either directly ([`EngineConfig::with_pool`]) or by
+//! a word budget ([`EngineConfig::with_capacity_words`] — e.g. the
+//! paper's 2 M words = 32 arrays of 256×256), in which case a working
+//! set larger than the budget serves under LRU eviction pressure with
+//! measured hit rates, still bit-exact.
+//!
+//! The specification for both paths is [`tiling::reference_gemm`] (tile
+//! shape = array shape, the default) or the general
+//! [`tiling::reference_gemm_sharded`] — `mac::dot_ref` composed over
+//! array-shaped shard images — and both match it bit-for-bit for all
+//! three backends, any thread count and any cache/capacity state
+//! (tests/cim_conformance.rs, tests/eviction_pressure.rs).
 
 pub mod resident;
 pub mod tiling;
@@ -42,10 +54,11 @@ use crate::array::mac::GROUP_ROWS;
 use crate::array::{make_array, CimArray};
 use crate::device::Tech;
 use self::resident::{RegisteredWeight, TileCache, TileKey, WeightId};
-use self::tiling::TileGrid;
+use self::tiling::{Rect, Shard, TileGrid};
 
 /// Engine shape: which backend design/tech, the array geometry, the pool
-/// size and the worker-thread count.
+/// size (direct or word-budgeted), the placement tile shape and the
+/// worker-thread count.
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     pub design: Design,
@@ -54,11 +67,21 @@ pub struct EngineConfig {
     pub array_rows: usize,
     /// Columns per array (N capacity per tile).
     pub array_cols: usize,
-    /// Arrays in the pool (the paper's system has 32). This is also the
-    /// resident tile capacity: one placed tile per array.
+    /// Arrays in the pool (the paper's system has 32). Overridden by
+    /// `capacity_words` when that is set.
     pub n_arrays: usize,
     /// Worker threads (clamped to the pool size; 1 = single-threaded).
     pub n_threads: usize,
+    /// Placement-granularity tile shape (`None` = the physical array
+    /// shape). Rows must be a multiple of 16. Tiles smaller than an
+    /// array pack several to an array; larger tiles shard across arrays.
+    pub tile_rows: Option<usize>,
+    pub tile_cols: Option<usize>,
+    /// Capacity-bounded pool mode: size the pool to this many ternary
+    /// words — ⌊words / array_words⌋ arrays (never exceeding the
+    /// budget), with a floor of one array — and serve under LRU eviction
+    /// pressure when the working set is larger.
+    pub capacity_words: Option<u64>,
 }
 
 impl EngineConfig {
@@ -73,6 +96,9 @@ impl EngineConfig {
             array_cols: 256,
             n_arrays: 32,
             n_threads: threads.min(32),
+            tile_rows: None,
+            tile_cols: None,
+            capacity_words: None,
         }
     }
 
@@ -92,8 +118,47 @@ impl EngineConfig {
         self
     }
 
-    /// Tiles a K×N weight matrix occupies on this array geometry — the
-    /// pool size needed to keep it fully resident (one array per tile).
+    /// Decouple placement granularity from the physical array shape.
+    pub fn with_tile_dims(mut self, rows: usize, cols: usize) -> EngineConfig {
+        assert!(
+            rows > 0 && rows % GROUP_ROWS == 0,
+            "tile rows must be a positive multiple of {GROUP_ROWS}"
+        );
+        assert!(cols > 0, "tiles must have columns");
+        self.tile_rows = Some(rows);
+        self.tile_cols = Some(cols);
+        self
+    }
+
+    /// Bound the pool by a ternary-word budget instead of an array count
+    /// (the paper's system capacity is 2 M words = 32 arrays of 256×256).
+    pub fn with_capacity_words(mut self, words: u64) -> EngineConfig {
+        self.capacity_words = Some(words);
+        self
+    }
+
+    /// Placement tile rows (the array rows unless decoupled).
+    pub fn tile_rows(&self) -> usize {
+        self.tile_rows.unwrap_or(self.array_rows)
+    }
+
+    /// Placement tile columns (the array columns unless decoupled).
+    pub fn tile_cols(&self) -> usize {
+        self.tile_cols.unwrap_or(self.array_cols)
+    }
+
+    /// Arrays the pool will actually hold: ⌊capacity / array_words⌋ (at
+    /// least one) when word-bounded, else `n_arrays`.
+    pub fn pool_arrays(&self) -> usize {
+        match self.capacity_words {
+            Some(w) => ((w / (self.array_rows * self.array_cols) as u64) as usize).max(1),
+            None => self.n_arrays,
+        }
+    }
+
+    /// Tiles a K×N weight matrix occupies at *array* granularity — a
+    /// conservative pool size for keeping it fully resident (packing can
+    /// need fewer arrays, never more).
     pub fn tiles_for(&self, k: usize, n: usize) -> usize {
         k.div_ceil(self.array_rows) * n.div_ceil(self.array_cols)
     }
@@ -105,9 +170,9 @@ impl EngineConfig {
 /// `tiles`/`write_rows` count *actual array programming* (content
 /// level); `hits`/`misses`/`evictions` count resident-cache placement
 /// lookups. The two can drift under adversarial interleavings (e.g. a
-/// streaming call trashing a placed tile makes the next resident access
-/// a placement hit that still re-programs), which is exactly what the
-/// split is meant to surface.
+/// streaming call trashing a placed region makes the next resident
+/// access a placement hit that still re-programs), which is exactly what
+/// the split is meant to surface.
 #[derive(Debug, Default)]
 pub struct EngineStats {
     gemms: AtomicU64,
@@ -124,33 +189,75 @@ pub struct EngineStats {
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct EngineStatsSnapshot {
     pub gemms: u64,
-    /// Weight tiles actually programmed (array-fulls streamed in).
+    /// Weight shards actually programmed into array cells. One per tile
+    /// when the tile shape is the array shape (the default).
     pub tiles: u64,
-    /// 16-row MAC windows executed across all tiles and input vectors.
-    /// Partial k-tiles only count their occupied windows (⌈k_len/16⌉),
+    /// 16-row MAC windows executed across all shards and input vectors.
+    /// Partial k-shards only count their occupied windows (⌈k_len/16⌉),
     /// matching `arch::mapper::map_layer`.
     pub windows: u64,
     /// Useful multiply-accumulates covered (excludes padding).
     pub macs: u64,
     /// Occupied weight rows programmed (matches mapper `write_rows`).
     pub write_rows: u64,
-    /// Resident-cache placement hits (tile already routed to an array).
+    /// Resident-cache placement hits (shard already routed to a region).
     pub hits: u64,
-    /// Resident-cache placement misses (tile had to be placed).
+    /// Resident-cache placement misses (shard had to be placed).
     pub misses: u64,
-    /// Placements that displaced another resident tile (LRU victim).
+    /// Resident regions displaced by placements (LRU victims).
     pub evictions: u64,
 }
 
-/// One pool slot: the functional array plus the identity of the resident
-/// tile its cells currently hold (`None` after the streaming path
-/// borrowed it). The tag is authoritative for array *content*; the
-/// placement cache is only routing. A resident worker re-programs
-/// whenever tag ≠ its tile key, which keeps every interleaving of
-/// streaming/resident/concurrent callers bit-exact.
+impl EngineStatsSnapshot {
+    /// Resident placement hit rate over all lookups so far (0 when no
+    /// resident lookup has happened).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    /// The counter deltas accumulated since an earlier snapshot of the
+    /// same engine (counters are monotonic), e.g.
+    /// `engine.stats().since(&before).hit_rate()` for a measurement
+    /// window's hit rate.
+    pub fn since(&self, before: &EngineStatsSnapshot) -> EngineStatsSnapshot {
+        EngineStatsSnapshot {
+            gemms: self.gemms - before.gemms,
+            tiles: self.tiles - before.tiles,
+            windows: self.windows - before.windows,
+            macs: self.macs - before.macs,
+            write_rows: self.write_rows - before.write_rows,
+            hits: self.hits - before.hits,
+            misses: self.misses - before.misses,
+            evictions: self.evictions - before.evictions,
+        }
+    }
+}
+
+/// One pool slot: the functional array plus per-region content tags —
+/// which placed rects currently hold which shard key (empty after the
+/// streaming path borrowed the array). Tags are authoritative for array
+/// *content*; the placement cache is only routing. A resident worker
+/// re-programs whenever its (rect, key) tag is absent, which keeps every
+/// interleaving of streaming/resident/concurrent callers bit-exact.
 struct PoolSlot {
     arr: Box<dyn CimArray>,
-    programmed: Option<TileKey>,
+    programmed: Vec<(Rect, TileKey)>,
+}
+
+impl PoolSlot {
+    fn holds(&self, rect: &Rect, key: TileKey) -> bool {
+        self.programmed.iter().any(|(r, k)| r == rect && *k == key)
+    }
+
+    /// Drop every tag whose cells a write to `rect` will clobber.
+    fn clear_overlapping(&mut self, rect: &Rect) {
+        self.programmed.retain(|(r, _)| !r.overlaps(rect));
+    }
 }
 
 /// Functional tiled ternary GEMM over a pool of [`CimArray`] backends.
@@ -158,7 +265,7 @@ pub struct TernaryGemmEngine {
     cfg: EngineConfig,
     pool: Vec<Mutex<PoolSlot>>,
     stats: EngineStats,
-    /// LRU placement of registered tiles onto pool slots.
+    /// LRU placement of registered shards onto pool regions.
     cache: Mutex<TileCache>,
     /// Registered weights by id (ids are never reused).
     registry: RwLock<Vec<Arc<RegisteredWeight>>>,
@@ -166,19 +273,22 @@ pub struct TernaryGemmEngine {
 
 impl TernaryGemmEngine {
     pub fn new(cfg: EngineConfig) -> TernaryGemmEngine {
-        assert!(cfg.array_rows > 0 && cfg.array_rows % GROUP_ROWS == 0,
-            "array_rows must be a positive multiple of {GROUP_ROWS}");
-        assert!(cfg.array_cols > 0 && cfg.n_arrays > 0);
-        let pool = (0..cfg.n_arrays)
+        assert!(
+            cfg.array_rows > 0 && cfg.array_rows % GROUP_ROWS == 0,
+            "array_rows must be a positive multiple of {GROUP_ROWS}"
+        );
+        assert!(cfg.array_cols > 0);
+        let n_arrays = cfg.pool_arrays();
+        let pool = (0..n_arrays)
             .map(|_| {
                 Mutex::new(PoolSlot {
                     arr: make_array(cfg.design, cfg.tech, cfg.array_rows, cfg.array_cols),
-                    programmed: None,
+                    programmed: Vec::new(),
                 })
             })
             .collect();
         TernaryGemmEngine {
-            cache: Mutex::new(TileCache::new(cfg.n_arrays)),
+            cache: Mutex::new(TileCache::new(n_arrays, cfg.array_rows, cfg.array_cols)),
             registry: RwLock::new(Vec::new()),
             cfg,
             pool,
@@ -193,9 +303,9 @@ impl TernaryGemmEngine {
     /// Lock a pool slot, recovering from poisoning. The engine is shared
     /// across serving workers that catch panics and keep going; a panic
     /// mid-programming must not brick every later request. Recovery is
-    /// safe because the `programmed` tag is cleared *before* any write
-    /// and only set after it completes — an interrupted write leaves the
-    /// slot tagged `None`, so the next user re-programs it.
+    /// safe because a region's tag is cleared *before* any write to its
+    /// rect and only restored after it completes — an interrupted write
+    /// leaves the region untagged, so the next user re-programs it.
     fn lock_slot(&self, slot: usize) -> std::sync::MutexGuard<'_, PoolSlot> {
         self.pool[slot].lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
@@ -206,14 +316,19 @@ impl TernaryGemmEngine {
         self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
     }
 
-    /// Resident tile capacity: one placed tile per pool array.
-    pub fn capacity_tiles(&self) -> usize {
+    /// Physical arrays in the pool.
+    pub fn pool_arrays(&self) -> usize {
         self.pool.len()
     }
 
-    /// Tiles currently placed in the pool.
+    /// Ternary-word capacity of the pool.
+    pub fn capacity_words(&self) -> u64 {
+        (self.pool.len() * self.cfg.array_rows * self.cfg.array_cols) as u64
+    }
+
+    /// Regions (placed shards) currently resident in the pool.
     pub fn resident_tiles(&self) -> usize {
-        self.lock_cache().resident_tiles()
+        self.lock_cache().resident_regions()
     }
 
     pub fn stats(&self) -> EngineStatsSnapshot {
@@ -229,30 +344,25 @@ impl TernaryGemmEngine {
         }
     }
 
-    /// The tile grid a GEMM of this shape maps to on this engine.
+    /// The tile grid a GEMM of this shape maps to on this engine's
+    /// placement granularity (the array shape unless decoupled).
     pub fn grid(&self, k: usize, n: usize) -> TileGrid {
-        TileGrid::new(k, n, self.cfg.array_rows, self.cfg.array_cols)
+        TileGrid::new(k, n, self.cfg.tile_rows(), self.cfg.tile_cols())
     }
 
     /// Register a row-major K×N ternary weight matrix for resident
     /// execution. The engine keeps the single weight copy (callers can
-    /// drop theirs); its tiles are placed lazily by [`Self::gemm_resident`]
-    /// and stay programmed until evicted or trashed by a streaming call.
+    /// drop theirs); its shards are placed lazily by
+    /// [`Self::gemm_resident`] and stay programmed until evicted or
+    /// trashed by a streaming call.
     pub fn register_weight(&self, w: &[Trit], k: usize, n: usize) -> Result<WeightId> {
         ensure!(k > 0 && n > 0, "empty weight matrix ({k}×{n})");
         ensure!(w.len() == k * n, "weights must be k×n = {k}×{n}, got {} trits", w.len());
         let grid = self.grid(k, n);
-        let mut reg =
-            self.registry.write().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let shards = grid.shards(self.cfg.array_rows, self.cfg.array_cols);
+        let mut reg = self.registry.write().unwrap_or_else(std::sync::PoisonError::into_inner);
         let id = reg.len();
-        reg.push(Arc::new(RegisteredWeight {
-            id,
-            k,
-            n,
-            grid,
-            tiles: grid.tiles(),
-            w: w.to_vec(),
-        }));
+        reg.push(Arc::new(RegisteredWeight { id, k, n, grid, shards, w: w.to_vec() }));
         Ok(WeightId(id))
     }
 
@@ -268,23 +378,24 @@ impl TernaryGemmEngine {
     /// Execute a ternary GEMM in streaming mode: `x` (row-major M×K
     /// trits) × `w` (row-major K×N trits) → row-major M×N i32 outputs,
     /// under the backend's MAC semantics (saturating per 16-row group for
-    /// the CiM flavors, exact for near-memory). Every tile is programmed
+    /// the CiM flavors, exact for near-memory). Every shard is programmed
     /// on every call. Deterministic: bit-identical to
-    /// [`tiling::reference_gemm`] regardless of thread count.
+    /// [`tiling::reference_gemm_sharded`] regardless of thread count
+    /// (= [`tiling::reference_gemm`] at the default tile shape).
     pub fn gemm(&self, x: &[Trit], w: &[Trit], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
         ensure!(m > 0, "empty batch (m = 0)");
         ensure!(k > 0 && n > 0, "empty GEMM ({k}×{n})");
         ensure!(x.len() == m * k, "x must be m×k = {m}×{k}, got {} trits", x.len());
         ensure!(w.len() == k * n, "w must be k×n = {k}×{n}, got {} trits", w.len());
         let grid = self.grid(k, n);
-        let tiles = grid.tiles();
+        let shards = grid.shards(self.cfg.array_rows, self.cfg.array_cols);
         let out = Mutex::new(vec![0i32; m * n]);
         let next = AtomicUsize::new(0);
-        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(tiles.len());
+        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(shards.len());
         std::thread::scope(|s| {
             for wid in 0..workers {
-                let (tiles, out, next, grid) = (&tiles, &out, &next, &grid);
-                s.spawn(move || self.run_tiles(wid, x, w, m, grid, tiles, next, out));
+                let (shards, out, next, grid) = (&shards, &out, &next, &grid);
+                s.spawn(move || self.run_shards_streaming(wid, x, w, m, grid, shards, next, out));
             }
         });
         self.stats.gemms.fetch_add(1, Ordering::Relaxed);
@@ -292,11 +403,11 @@ impl TernaryGemmEngine {
     }
 
     /// Execute a ternary GEMM against a registered weight in resident
-    /// mode: tiles already placed in the pool are reused as-is
-    /// (placement hit → no programming), missing tiles are placed via
-    /// LRU eviction and programmed once. Bit-identical to the streaming
-    /// path and to [`tiling::reference_gemm`] for any thread count and
-    /// any cache state.
+    /// mode: shards already placed in the pool are reused as-is
+    /// (placement hit → no programming), missing shards are placed via
+    /// LRU region eviction and programmed once. Bit-identical to the
+    /// streaming path and to the sharded reference for any thread count,
+    /// any cache state and any pool capacity.
     pub fn gemm_resident(&self, id: WeightId, x: &[Trit], m: usize) -> Result<Vec<i32>> {
         let reg = {
             let registry =
@@ -315,28 +426,29 @@ impl TernaryGemmEngine {
         );
         let out = Mutex::new(vec![0i32; m * reg.n]);
         let next = AtomicUsize::new(0);
-        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(reg.tiles.len());
+        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(reg.shards.len());
         std::thread::scope(|s| {
             for _ in 0..workers {
                 let (reg, out, next) = (&reg, &out, &next);
-                s.spawn(move || self.run_tiles_resident(reg, x, m, next, out));
+                s.spawn(move || self.run_shards_resident(reg, x, m, next, out));
             }
         });
         self.stats.gemms.fetch_add(1, Ordering::Relaxed);
         Ok(out.into_inner().unwrap())
     }
 
-    /// Streaming worker loop: claim tiles off the shared counter, program
-    /// this worker's own array, stream the batch, merge partials.
+    /// Streaming worker loop: claim shards off the shared counter,
+    /// program this worker's own array whole, stream the batch, merge
+    /// partials.
     #[allow(clippy::too_many_arguments)]
-    fn run_tiles(
+    fn run_shards_streaming(
         &self,
         wid: usize,
         x: &[Trit],
         w: &[Trit],
         m: usize,
         grid: &TileGrid,
-        tiles: &[tiling::Tile],
+        shards: &[Shard],
         next: &AtomicUsize,
         out: &Mutex<Vec<i32>>,
     ) {
@@ -349,35 +461,36 @@ impl TernaryGemmEngine {
         let mut xbuf = vec![0i8; m * rows];
         loop {
             let ti = next.fetch_add(1, Ordering::Relaxed);
-            let Some(tile) = tiles.get(ti) else { break };
-            // Stream the tile's weights in (once per tile, weight-
+            let Some(shard) = shards.get(ti) else { break };
+            // Stream the shard's weights in (once per shard, weight-
             // stationary across the whole batch).
-            tiling::extract_tile_weights(w, grid.k, grid.n, tile, rows, cols, &mut wbuf);
-            slot.programmed = None;
+            tiling::extract_shard_weights(w, grid.k, grid.n, shard, rows, cols, &mut wbuf);
+            slot.programmed.clear();
             slot.arr.write_matrix(&wbuf);
             for r in 0..m {
-                tiling::extract_tile_inputs(
+                tiling::extract_shard_inputs(
                     &x[r * grid.k..(r + 1) * grid.k],
-                    tile,
-                    rows,
+                    shard,
+                    0,
                     &mut xbuf[r * rows..(r + 1) * rows],
                 );
             }
             let partial = slot.arr.dot_batch(&xbuf, m);
-            self.merge_partial(out, &partial, tile, grid.n, m, cols);
+            self.merge_partial(out, &partial, shard, 0, grid.n, m, cols);
             self.stats.tiles.fetch_add(1, Ordering::Relaxed);
-            self.stats.write_rows.fetch_add(tile.k_len as u64, Ordering::Relaxed);
+            self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
             self.stats
                 .windows
-                .fetch_add((m * tile.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
-            self.stats.macs.fetch_add((m * tile.k_len * tile.n_len) as u64, Ordering::Relaxed);
+                .fetch_add((m * shard.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
+            self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
         }
     }
 
-    /// Resident worker loop: claim tiles, route each through the
-    /// placement cache, program only when the slot's content tag does
-    /// not already hold the tile, stream the batch, merge partials.
-    fn run_tiles_resident(
+    /// Resident worker loop: claim shards, route each through the
+    /// placement cache to a region, program only when the region's
+    /// content tag does not already hold the shard, stream the batch,
+    /// merge partials.
+    fn run_shards_resident(
         &self,
         reg: &RegisteredWeight,
         x: &[Trit],
@@ -387,72 +500,75 @@ impl TernaryGemmEngine {
     ) {
         let (rows, cols) = (self.cfg.array_rows, self.cfg.array_cols);
         // Weight buffer is only needed on a miss; the steady-state
-        // all-hit serving path never allocates it.
+        // all-hit serving path never fills it.
         let mut wbuf: Vec<i8> = Vec::new();
         let mut xbuf = vec![0i8; m * rows];
         loop {
             let ti = next.fetch_add(1, Ordering::Relaxed);
-            let Some(tile) = reg.tiles.get(ti) else { break };
+            let Some(shard) = reg.shards.get(ti) else { break };
             let key: TileKey = (reg.id, ti);
-            let placement = self.lock_cache().place(key);
+            let placement = self.lock_cache().place(key, shard.k_len, shard.n_len);
             if placement.hit {
                 self.stats.hits.fetch_add(1, Ordering::Relaxed);
             } else {
                 self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                if placement.evicted {
-                    self.stats.evictions.fetch_add(1, Ordering::Relaxed);
-                }
+                self.stats.evictions.fetch_add(placement.evicted, Ordering::Relaxed);
             }
+            let rect = placement.rect;
             let mut slot = self.lock_slot(placement.slot);
-            if slot.programmed != Some(key) {
-                if wbuf.is_empty() {
-                    wbuf = vec![0i8; rows * cols];
-                }
-                tiling::extract_tile_weights(
-                    &reg.w, reg.grid.k, reg.grid.n, tile, rows, cols, &mut wbuf,
+            if !slot.holds(&rect, key) {
+                wbuf.clear();
+                wbuf.resize(rect.rows * rect.cols, 0);
+                tiling::extract_shard_weights(
+                    &reg.w, reg.grid.k, reg.grid.n, shard, rect.rows, rect.cols, &mut wbuf,
                 );
-                // Tag is cleared across the write so an interrupted
-                // programming pass can never masquerade as a valid tile.
-                slot.programmed = None;
-                slot.arr.write_matrix(&wbuf);
-                slot.programmed = Some(key);
+                // Overlapping tags are dropped across the write so an
+                // interrupted programming pass can never masquerade as a
+                // valid region.
+                slot.clear_overlapping(&rect);
+                slot.arr.write_region(rect.row0, rect.col0, rect.rows, rect.cols, &wbuf);
+                slot.programmed.push((rect, key));
                 self.stats.tiles.fetch_add(1, Ordering::Relaxed);
-                self.stats.write_rows.fetch_add(tile.k_len as u64, Ordering::Relaxed);
+                self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
             }
             for r in 0..m {
-                tiling::extract_tile_inputs(
+                tiling::extract_shard_inputs(
                     &x[r * reg.grid.k..(r + 1) * reg.grid.k],
-                    tile,
-                    rows,
+                    shard,
+                    rect.row0,
                     &mut xbuf[r * rows..(r + 1) * rows],
                 );
             }
             let partial = slot.arr.dot_batch(&xbuf, m);
             drop(slot);
-            self.merge_partial(out, &partial, tile, reg.grid.n, m, cols);
+            self.merge_partial(out, &partial, shard, rect.col0, reg.grid.n, m, cols);
             self.stats
                 .windows
-                .fetch_add((m * tile.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
-            self.stats.macs.fetch_add((m * tile.k_len * tile.n_len) as u64, Ordering::Relaxed);
+                .fetch_add((m * shard.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
+            self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
         }
     }
 
-    /// Accumulate one tile's batch of partial products into the shared
-    /// output (i32 addition commutes, so merge order never matters).
+    /// Accumulate one region's batch of partial products into the shared
+    /// output (i32 addition commutes, so merge order never matters). The
+    /// shard's columns start at `src_col0` of the array's `src_cols`-wide
+    /// output rows.
+    #[allow(clippy::too_many_arguments)]
     fn merge_partial(
         &self,
         out: &Mutex<Vec<i32>>,
         partial: &[i32],
-        tile: &tiling::Tile,
+        shard: &Shard,
+        src_col0: usize,
         n: usize,
         m: usize,
-        cols: usize,
+        src_cols: usize,
     ) {
         let mut o = out.lock().unwrap();
         for r in 0..m {
-            let src = &partial[r * cols..r * cols + tile.n_len];
-            let base = r * n + tile.n0;
-            for (d, s) in o[base..base + tile.n_len].iter_mut().zip(src) {
+            let src = &partial[r * src_cols + src_col0..r * src_cols + src_col0 + shard.n_len];
+            let base = r * n + shard.n0;
+            for (d, s) in o[base..base + shard.n_len].iter_mut().zip(src) {
                 *d += s;
             }
         }
@@ -461,6 +577,7 @@ impl TernaryGemmEngine {
 
 #[cfg(test)]
 mod tests {
+    use super::tiling::reference_gemm_sharded;
     use super::*;
     use crate::array::mac::Flavor;
     use crate::util::rng::Rng;
@@ -593,5 +710,92 @@ mod tests {
         assert!(eng.gemm_resident(id, &x[..10], 1).is_err(), "bad x len");
         assert!(eng.gemm_resident(WeightId(99), &x, 1).is_err(), "unknown id");
         assert!(eng.gemm_resident(id, &x, 1).is_ok());
+    }
+
+    #[test]
+    fn capacity_words_bound_the_pool_with_a_floor_of_one() {
+        let cfg = EngineConfig::new(Design::Cim1, Tech::Femfet3T); // 256×256 arrays
+        let paper = TernaryGemmEngine::new(cfg.clone().with_capacity_words(2 * 1024 * 1024));
+        assert_eq!(paper.pool_arrays(), 32, "the paper's 2 M words = 32 arrays");
+        assert_eq!(paper.capacity_words(), 2 * 1024 * 1024);
+        // Floor semantics: a budget below one array still yields a
+        // usable (single-array) pool, and a fractional budget never
+        // rounds up past the bound.
+        let one = TernaryGemmEngine::new(cfg.clone().with_capacity_words(100_000));
+        assert_eq!(one.pool_arrays(), 1);
+        let three = TernaryGemmEngine::new(cfg.with_capacity_words(3 * 65536 + 100));
+        assert_eq!(three.pool_arrays(), 3);
+    }
+
+    #[test]
+    fn small_weights_pack_several_per_array() {
+        // Four 32×32 weights on one 64×64 array: sub-array packing keeps
+        // all four resident at once where PR 2's slot-granular cache
+        // would have thrashed a 1-array pool.
+        let mut rng = Rng::new(47);
+        for design in Design::ALL {
+            let eng = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Sram8T)
+                    .with_array_dims(64, 64)
+                    .with_capacity_words(64 * 64)
+                    .with_threads(2),
+            );
+            assert_eq!(eng.pool_arrays(), 1);
+            let mut wants = Vec::new();
+            let mut ids = Vec::new();
+            let mut xs = Vec::new();
+            for _ in 0..4 {
+                let w = rng.ternary_vec(32 * 32, 0.5);
+                let x = rng.ternary_vec(32, 0.5);
+                let want =
+                    tiling::reference_gemm(&x, &w, 1, &eng.grid(32, 32), design.flavor());
+                ids.push(eng.register_weight(&w, 32, 32).unwrap());
+                xs.push(x);
+                wants.push(want);
+            }
+            for pass in 0..2 {
+                for i in 0..4 {
+                    assert_eq!(
+                        eng.gemm_resident(ids[i], &xs[i], 1).unwrap(),
+                        wants[i],
+                        "{design:?} weight {i} pass {pass}"
+                    );
+                }
+            }
+            let s = eng.stats();
+            assert_eq!(s.misses, 4, "{design:?} every shard placed once");
+            assert_eq!(s.hits, 4, "{design:?} second pass all hits");
+            assert_eq!(s.evictions, 0, "{design:?} all four pack into the array");
+            assert_eq!(eng.resident_tiles(), 4);
+        }
+    }
+
+    #[test]
+    fn oversized_tiles_shard_across_arrays() {
+        // 128×64 placement tiles on 64×32 physical arrays: one logical
+        // tile = four shards with partial-sum recombination.
+        let mut rng = Rng::new(48);
+        let (m, k, n) = (2usize, 128usize, 64usize);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        for design in Design::ALL {
+            let eng = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_tile_dims(128, 64)
+                    .with_pool(4)
+                    .with_threads(2),
+            );
+            let grid = eng.grid(k, n);
+            assert_eq!(grid.n_tiles_total(), 1, "one oversized logical tile");
+            let want = reference_gemm_sharded(&x, &w, m, &grid, 64, 32, design.flavor());
+            assert_eq!(eng.gemm(&x, &w, m, k, n).unwrap(), want, "{design:?} streaming");
+            let id = eng.register_weight(&w, k, n).unwrap();
+            assert_eq!(eng.gemm_resident(id, &x, m).unwrap(), want, "{design:?} cold");
+            assert_eq!(eng.gemm_resident(id, &x, m).unwrap(), want, "{design:?} warm");
+            let s = eng.stats();
+            assert_eq!(s.misses, 4, "{design:?} four shards placed");
+            assert_eq!(s.hits, 4, "{design:?} four shard hits warm");
+        }
     }
 }

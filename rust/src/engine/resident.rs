@@ -1,5 +1,5 @@
-//! Resident-tile placement: the cache that keeps registered weight tiles
-//! programmed in the array pool across GEMM calls.
+//! Resident-tile placement: the cache that keeps registered weight
+//! shards programmed in the array pool across GEMM calls.
 //!
 //! The paper's premise is weight-stationary CiM — weights sit in the
 //! arrays and only inputs stream — so re-programming every tile on every
@@ -8,170 +8,430 @@
 //!
 //! - [`WeightId`] — handle returned by `TernaryGemmEngine::register_weight`;
 //!   the engine keeps the (single) ternary weight copy for cache refills.
-//! - [`TileCache`] — an LRU map from [`TileKey`] (weight, tile index) to
-//!   pool slots. `place` returns the slot plus whether the placement was
-//!   already cached; a miss evicts the least-recently-used slot.
+//! - [`TileCache`] — an LRU map from [`TileKey`] (weight, shard index)
+//!   to *regions*: 16-row-aligned [`Rect`]s inside pool slots, handed
+//!   out by a per-slot shelf allocator. Placement granularity is the
+//!   shard, not the physical array, so several small shards pack into
+//!   one array and an oversized tile's shards spread across arrays.
+//!   `place` returns the slot + rect plus whether the placement was
+//!   already cached; when no free rect exists anywhere, least-recently-
+//!   used regions are evicted until the request fits (a request never
+//!   exceeds one array — the engine shards first).
 //!
-//! The cache only decides *routing*. Whether the slot's array actually
-//! holds the tile is tracked by the pool slot's `programmed` tag under
-//! the array mutex (see `engine::PoolSlot`): the streaming path clears
-//! the tag when it borrows an array, and a resident worker re-programs
-//! whenever tag ≠ key. That split keeps results bit-exact under any
-//! interleaving of streaming calls, resident calls and concurrent
-//! callers — stale placements only cost an extra programming pass.
+//! The cache only decides *routing*. Whether a rect's cells actually
+//! hold the shard is tracked by per-region `programmed` tags on the pool
+//! slot under the array mutex (see `engine::PoolSlot`): the streaming
+//! path clears a slot's tags when it borrows the array, programming a
+//! region drops every overlapping tag first, and a resident worker
+//! re-programs whenever its (rect, key) tag is absent. That split keeps
+//! results bit-exact under any interleaving of streaming calls, resident
+//! calls and concurrent callers — stale placements only cost an extra
+//! programming pass. Regions are 16-row aligned so a shard keeps the MAC
+//! group structure of the `tiling::reference_gemm_sharded` specification
+//! at any placement (see the `tiling` module docs for the translation-
+//! invariance argument).
 
 use std::collections::HashMap;
 
 use crate::array::encoding::Trit;
+use crate::array::mac::GROUP_ROWS;
 
-use super::tiling::{Tile, TileGrid};
+use super::tiling::{Rect, Shard, TileGrid};
 
 /// Handle to a weight matrix registered with the engine for resident
 /// execution.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct WeightId(pub(crate) usize);
 
-/// Identity of one placed tile: (registered weight id, tile index in its
-/// k-major grid order).
+/// Identity of one placed region: (registered weight id, shard index in
+/// the weight's flat shard order).
 pub(crate) type TileKey = (usize, usize);
 
 /// A weight matrix registered for resident execution: the engine's own
-/// copy of the trits (used to (re)program tiles on cache misses) plus its
-/// precomputed tile decomposition.
+/// copy of the trits (used to (re)program regions on cache misses) plus
+/// its precomputed shard decomposition on the engine's array shape.
 pub(crate) struct RegisteredWeight {
     pub id: usize,
     pub k: usize,
     pub n: usize,
     pub grid: TileGrid,
-    pub tiles: Vec<Tile>,
+    pub shards: Vec<Shard>,
     pub w: Vec<Trit>,
 }
 
 /// Outcome of one placement lookup.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub(crate) struct Placement {
-    /// Pool slot (array index) the tile is routed to.
+    /// Pool slot (array index) the region lives on.
     pub slot: usize,
+    /// Where on the slot's array the region lives.
+    pub rect: Rect,
     /// The key was already mapped (steady-state serving path).
     pub hit: bool,
-    /// A different key was displaced to make room.
-    pub evicted: bool,
+    /// Resident regions displaced to make room (0 on a hit or a
+    /// free-space placement; can exceed 1 when fragmented space must be
+    /// drained before the request fits).
+    pub evicted: u64,
 }
 
-/// LRU placement of tile keys onto array-pool slots. Purely bookkeeping —
-/// no array access happens here; callers hold the engine's cache mutex.
+/// One allocated-or-free span of columns inside a shelf. Spans partition
+/// `[0, slot_cols)`; freeing coalesces with free neighbours.
+#[derive(Clone, Debug)]
+struct Seg {
+    col0: usize,
+    cols: usize,
+    used: bool,
+}
+
+/// A horizontal band of one array, `rows` high (multiple of 16), packed
+/// left-to-right with region segments.
+#[derive(Clone, Debug)]
+struct Shelf {
+    row0: usize,
+    rows: usize,
+    segs: Vec<Seg>,
+}
+
+/// Free-space tracker for one pool array: classic shelf packing. All
+/// shelf offsets and heights are multiples of 16 rows, so every region
+/// keeps the reference MAC group structure (see module docs).
+#[derive(Clone, Debug, Default)]
+struct SlotSpace {
+    shelves: Vec<Shelf>,
+    used_rows: usize,
+}
+
+impl SlotSpace {
+    /// First-fit: reuse a free span of a tall-enough shelf, else open a
+    /// new shelf at the high-water mark. `None` when neither fits.
+    fn alloc(
+        &mut self,
+        slot_rows: usize,
+        slot_cols: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Option<Rect> {
+        for shelf in &mut self.shelves {
+            if shelf.rows < rows {
+                continue;
+            }
+            for i in 0..shelf.segs.len() {
+                if !shelf.segs[i].used && shelf.segs[i].cols >= cols {
+                    let col0 = shelf.segs[i].col0;
+                    let extra = shelf.segs[i].cols - cols;
+                    shelf.segs[i].cols = cols;
+                    shelf.segs[i].used = true;
+                    if extra > 0 {
+                        shelf
+                            .segs
+                            .insert(i + 1, Seg { col0: col0 + cols, cols: extra, used: false });
+                    }
+                    return Some(Rect { row0: shelf.row0, rows, col0, cols });
+                }
+            }
+        }
+        if self.used_rows + rows <= slot_rows && cols <= slot_cols {
+            let row0 = self.used_rows;
+            self.used_rows += rows;
+            let mut segs = vec![Seg { col0: 0, cols, used: true }];
+            if cols < slot_cols {
+                segs.push(Seg { col0: cols, cols: slot_cols - cols, used: false });
+            }
+            self.shelves.push(Shelf { row0, rows, segs });
+            return Some(Rect { row0, rows, col0: 0, cols });
+        }
+        None
+    }
+
+    /// Release a region previously returned by [`Self::alloc`].
+    fn free(&mut self, rect: &Rect) {
+        let shelf = self
+            .shelves
+            .iter_mut()
+            .find(|s| s.row0 == rect.row0)
+            .expect("freed region belongs to a shelf");
+        let i = shelf
+            .segs
+            .iter()
+            .position(|g| g.used && g.col0 == rect.col0 && g.cols == rect.cols)
+            .expect("freed region is an allocated segment");
+        shelf.segs[i].used = false;
+        if i + 1 < shelf.segs.len() && !shelf.segs[i + 1].used {
+            shelf.segs[i].cols += shelf.segs[i + 1].cols;
+            shelf.segs.remove(i + 1);
+        }
+        if i > 0 && !shelf.segs[i - 1].used {
+            shelf.segs[i - 1].cols += shelf.segs[i].cols;
+            shelf.segs.remove(i);
+        }
+        // Pop fully-free shelves off the top so their rows can re-open
+        // at a different height.
+        while let Some(last) = self.shelves.last() {
+            if last.segs.len() == 1 && !last.segs[0].used {
+                self.used_rows = last.row0;
+                self.shelves.pop();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.shelves.clear();
+        self.used_rows = 0;
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct RegionInfo {
+    slot: usize,
+    rect: Rect,
+    stamp: u64,
+}
+
+/// LRU placement of shard keys onto sub-array regions of the pool.
+/// Purely bookkeeping — no array access happens here; callers hold the
+/// engine's cache mutex.
 #[derive(Debug)]
 pub(crate) struct TileCache {
-    /// Per-slot reverse mapping + recency stamp (0 = never used / freed).
-    keys: Vec<Option<TileKey>>,
-    stamps: Vec<u64>,
-    map: HashMap<TileKey, usize>,
+    slot_rows: usize,
+    slot_cols: usize,
+    slots: Vec<SlotSpace>,
+    map: HashMap<TileKey, RegionInfo>,
     clock: u64,
 }
 
 impl TileCache {
-    pub fn new(n_slots: usize) -> TileCache {
+    pub fn new(n_slots: usize, slot_rows: usize, slot_cols: usize) -> TileCache {
         assert!(n_slots > 0, "cache needs at least one slot");
+        assert!(
+            slot_rows > 0 && slot_rows % GROUP_ROWS == 0,
+            "slot rows must be a positive multiple of {GROUP_ROWS}"
+        );
+        assert!(slot_cols > 0, "slots must have columns");
         TileCache {
-            keys: vec![None; n_slots],
-            stamps: vec![0; n_slots],
+            slot_rows,
+            slot_cols,
+            slots: vec![SlotSpace::default(); n_slots],
             map: HashMap::new(),
             clock: 0,
         }
     }
 
-    /// Number of currently mapped tiles.
-    pub fn resident_tiles(&self) -> usize {
+    /// Number of currently mapped regions.
+    pub fn resident_regions(&self) -> usize {
         self.map.len()
     }
 
-    /// Route `key` to a slot: reuse its mapping on a hit, otherwise claim
-    /// the least-recently-used slot (evicting whatever it held).
-    pub fn place(&mut self, key: TileKey) -> Placement {
+    /// Route `key` to a 16-row-aligned region of (at least) `rows × cols`
+    /// cells: reuse its mapping on a hit, otherwise claim free space
+    /// anywhere in the pool, evicting least-recently-used regions until
+    /// some slot fits the request.
+    pub fn place(&mut self, key: TileKey, rows: usize, cols: usize) -> Placement {
+        let rows = rows.div_ceil(GROUP_ROWS) * GROUP_ROWS;
+        assert!(
+            rows <= self.slot_rows && cols <= self.slot_cols,
+            "region {rows}×{cols} exceeds the {}×{} array (shard before placing)",
+            self.slot_rows,
+            self.slot_cols
+        );
         self.clock += 1;
-        if let Some(&slot) = self.map.get(&key) {
-            self.stamps[slot] = self.clock;
-            return Placement { slot, hit: true, evicted: false };
+        let clock = self.clock;
+        if let Some(info) = self.map.get_mut(&key) {
+            info.stamp = clock;
+            return Placement { slot: info.slot, rect: info.rect, hit: true, evicted: 0 };
         }
-        let slot = (0..self.stamps.len())
-            .min_by_key(|&s| self.stamps[s])
-            .expect("cache has at least one slot");
-        let evicted = match self.keys[slot].take() {
-            Some(old) => {
-                self.map.remove(&old);
-                true
+        let mut evicted = 0u64;
+        loop {
+            for s in 0..self.slots.len() {
+                if let Some(rect) = self.slots[s].alloc(self.slot_rows, self.slot_cols, rows, cols)
+                {
+                    self.map.insert(key, RegionInfo { slot: s, rect, stamp: clock });
+                    return Placement { slot: s, rect, hit: false, evicted };
+                }
             }
-            None => false,
-        };
-        self.keys[slot] = Some(key);
-        self.stamps[slot] = self.clock;
-        self.map.insert(key, slot);
-        Placement { slot, hit: false, evicted }
+            // No free rect anywhere: evict the LRU region and retry
+            // (evicting drains some slot to empty in the worst case, and
+            // any sharded request fits an empty array, so this ends).
+            let victim = self
+                .map
+                .iter()
+                .min_by_key(|&(k, info)| (info.stamp, *k))
+                .map(|(k, _)| *k)
+                .expect("an array-fitting request cannot fail with nothing resident");
+            let info = self.map.remove(&victim).unwrap();
+            self.slots[info.slot].free(&info.rect);
+            evicted += 1;
+        }
     }
 
-    /// Forget whatever is placed on `slot` (the streaming path borrowed
-    /// the array, so its contents no longer match the placement). The
-    /// slot becomes the preferred LRU victim.
+    /// Forget every region placed on `slot` (the streaming path borrowed
+    /// the whole array, so no placement there matches its cells anymore).
     pub fn invalidate_slot(&mut self, slot: usize) {
-        if let Some(old) = self.keys[slot].take() {
-            self.map.remove(&old);
-        }
-        self.stamps[slot] = 0;
+        self.map.retain(|_, info| info.slot != slot);
+        self.slots[slot].clear();
     }
+}
+
+/// Number of physical `slot_rows × slot_cols` arrays that first-fit
+/// shelf packing needs for `shapes` ((rows, cols) per tile; rows are
+/// padded to whole 16-row groups here). The analytic counterpart of the
+/// allocator [`TileCache`] drives — `arch::mapper` uses it for packed
+/// array counts.
+pub fn packed_array_count(shapes: &[(usize, usize)], slot_rows: usize, slot_cols: usize) -> usize {
+    let mut slots: Vec<SlotSpace> = Vec::new();
+    for &(rows, cols) in shapes {
+        let rows = rows.div_ceil(GROUP_ROWS) * GROUP_ROWS;
+        assert!(
+            rows <= slot_rows && cols <= slot_cols,
+            "tile {rows}×{cols} exceeds the {slot_rows}×{slot_cols} array"
+        );
+        let placed = slots.iter_mut().any(|s| s.alloc(slot_rows, slot_cols, rows, cols).is_some());
+        if !placed {
+            let mut s = SlotSpace::default();
+            s.alloc(slot_rows, slot_cols, rows, cols).expect("fresh array fits a checked tile");
+            slots.push(s);
+        }
+    }
+    slots.len()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// Whole-array regions on a 64×32 pool: behaves like the PR 2
+    /// slot-granular cache.
+    fn full(c: &mut TileCache, key: TileKey) -> Placement {
+        c.place(key, 64, 32)
+    }
+
     #[test]
     fn hits_after_first_placement() {
-        let mut c = TileCache::new(2);
-        let p0 = c.place((0, 0));
-        assert!(!p0.hit && !p0.evicted);
-        let p1 = c.place((0, 0));
+        let mut c = TileCache::new(2, 64, 32);
+        let p0 = full(&mut c, (0, 0));
+        assert!(!p0.hit && p0.evicted == 0);
+        let p1 = full(&mut c, (0, 0));
         assert!(p1.hit);
-        assert_eq!(p1.slot, p0.slot);
-        assert_eq!(c.resident_tiles(), 1);
+        assert_eq!((p1.slot, p1.rect), (p0.slot, p0.rect));
+        assert_eq!(c.resident_regions(), 1);
     }
 
     #[test]
     fn lru_evicts_least_recently_used() {
-        let mut c = TileCache::new(2);
-        let a = c.place((0, 0)).slot;
-        let b = c.place((0, 1)).slot;
+        let mut c = TileCache::new(2, 64, 32);
+        let a = full(&mut c, (0, 0)).slot;
+        let b = full(&mut c, (0, 1)).slot;
         assert_ne!(a, b);
         // Touch (0,0) so (0,1) is the LRU victim.
-        assert!(c.place((0, 0)).hit);
-        let p = c.place((0, 2));
-        assert!(!p.hit && p.evicted);
+        assert!(full(&mut c, (0, 0)).hit);
+        let p = full(&mut c, (0, 2));
+        assert!(!p.hit && p.evicted == 1);
         assert_eq!(p.slot, b);
         // (0,1) was displaced; (0,0) survived.
-        assert!(c.place((0, 0)).hit);
-        assert!(!c.place((0, 1)).hit);
+        assert!(full(&mut c, (0, 0)).hit);
+        assert!(!full(&mut c, (0, 1)).hit);
     }
 
     #[test]
     fn sequential_sweep_larger_than_cache_never_hits() {
         // The classic LRU pathology the counters must make visible.
-        let mut c = TileCache::new(3);
+        let mut c = TileCache::new(3, 64, 32);
         for pass in 0..2 {
             for t in 0..4 {
-                assert!(!c.place((0, t)).hit, "pass {pass} tile {t}");
+                assert!(!full(&mut c, (0, t)).hit, "pass {pass} tile {t}");
             }
         }
     }
 
     #[test]
-    fn invalidate_slot_frees_mapping_and_prefers_slot() {
-        let mut c = TileCache::new(3);
-        let s = c.place((7, 0)).slot;
-        c.place((7, 1));
+    fn small_regions_pack_into_one_slot() {
+        // Four 32×16 regions tile one 64×32 array: two shelves of two
+        // segments each. No eviction, four resident regions, one slot.
+        let mut c = TileCache::new(2, 64, 32);
+        let mut slots = Vec::new();
+        for t in 0..4 {
+            let p = c.place((0, t), 32, 16);
+            assert!(!p.hit && p.evicted == 0, "region {t}");
+            assert_eq!(p.rect.rows, 32);
+            assert_eq!(p.rect.row0 % GROUP_ROWS, 0, "16-row aligned");
+            slots.push(p.slot);
+        }
+        assert!(slots.iter().all(|&s| s == slots[0]), "all packed on one array");
+        assert_eq!(c.resident_regions(), 4);
+        // A fifth region spills to the next slot without eviction.
+        let p = c.place((0, 4), 32, 16);
+        assert!(!p.hit && p.evicted == 0);
+        assert_ne!(p.slot, slots[0]);
+    }
+
+    #[test]
+    fn rows_pad_to_whole_groups() {
+        let mut c = TileCache::new(1, 64, 32);
+        let p = c.place((1, 0), 20, 8); // 20 rows → a 32-row region
+        assert_eq!(p.rect.rows, 32);
+        // A 48-row request no longer fits beside the 32-row shelf
+        // (32 + 48 > 64), so the first region must go.
+        let q = c.place((1, 1), 33, 8);
+        assert!(!q.hit);
+        assert_eq!(q.rect.rows, 48);
+        assert_eq!(q.evicted, 1, "33 rows only fit after evicting the first region");
+    }
+
+    #[test]
+    fn eviction_drains_fragmented_space_until_the_request_fits() {
+        // Two 32-row shelves occupied; a full-height region must evict
+        // both residents of one... all slots, then fits.
+        let mut c = TileCache::new(1, 64, 32);
+        c.place((0, 0), 32, 32);
+        c.place((0, 1), 32, 32);
+        let p = c.place((0, 2), 64, 32);
+        assert_eq!(p.evicted, 2);
+        assert_eq!(c.resident_regions(), 1);
+        assert_eq!(p.rect, Rect { row0: 0, rows: 64, col0: 0, cols: 32 });
+    }
+
+    #[test]
+    fn invalidate_slot_frees_all_its_regions() {
+        let mut c = TileCache::new(2, 64, 32);
+        let s = c.place((7, 0), 32, 16).slot;
+        c.place((7, 1), 32, 16); // packs on the same slot
+        c.place((7, 2), 64, 32); // fills the other slot
+        assert_eq!(c.resident_regions(), 3);
         c.invalidate_slot(s);
-        assert_eq!(c.resident_tiles(), 1);
-        // The freed slot is reused before any eviction happens.
-        let p = c.place((7, 2));
+        assert_eq!(c.resident_regions(), 1);
+        // The freed slot is reusable immediately, no eviction.
+        let p = c.place((7, 3), 64, 32);
         assert_eq!(p.slot, s);
-        assert!(!p.evicted);
+        assert_eq!(p.evicted, 0);
+    }
+
+    #[test]
+    fn freeing_coalesces_and_reopens_shelves() {
+        let mut c = TileCache::new(1, 64, 32);
+        c.place((0, 0), 32, 16);
+        c.place((0, 1), 32, 16);
+        c.place((0, 2), 32, 32);
+        // Evicting the two top-shelf neighbours must coalesce their
+        // columns so a full-width region fits in their place.
+        let p = c.place((0, 3), 32, 32);
+        assert!(!p.hit);
+        assert_eq!(p.evicted, 2, "both 16-col residents of the shelf evicted");
+        assert_eq!(p.rect.cols, 32);
+        assert_eq!(c.resident_regions(), 2);
+    }
+
+    #[test]
+    fn packed_array_count_packs_and_rounds() {
+        // Four full-array tiles: no packing possible.
+        assert_eq!(packed_array_count(&[(256, 256); 4], 256, 256), 4);
+        // Four quarter arrays pack into one.
+        assert_eq!(packed_array_count(&[(128, 128); 4], 256, 256), 1);
+        // Ragged mix: (256,256) fills array 0; (44,256) pads to a
+        // full-width 48-row shelf on array 1; (256,44) fits neither and
+        // opens array 2; (44,44) opens a second shelf on array 1.
+        let shapes = [(256, 256), (44, 256), (256, 44), (44, 44)];
+        assert_eq!(packed_array_count(&shapes, 256, 256), 3);
+        assert_eq!(packed_array_count(&[], 256, 256), 0);
     }
 }

@@ -2,15 +2,69 @@
 //!
 //! Weight-stationary mapping, mirroring `arch::mapper`: a GEMM's K
 //! (reduction) dimension maps to array rows, N (output channels) to
-//! columns; one tile is one array-full of weights. Partial edge tiles are
-//! zero-padded to the full array shape — zero weights and zero inputs are
-//! electrically inert, so padding never changes a group output, and the
-//! row grouping of a padded tile is identical for every tile in a grid
-//! (this is what makes the per-tile reference composition exact).
+//! columns. Partial edge tiles are zero-padded — zero weights and zero
+//! inputs are electrically inert, so padding never changes a group
+//! output, and the row grouping of a padded tile is identical for every
+//! tile in a grid (this is what makes the per-tile reference composition
+//! exact).
+//!
+//! Since PR 3, *placement* granularity is independent of the physical
+//! array: a [`TileGrid`]'s tile shape may differ from the array shape.
+//! Each tile splits into array-fitting [`Shard`]s (at 16-row-aligned
+//! boundaries), and every shard is placed onto a [`Rect`] — a row/col
+//! sub-rectangle of one physical array. Small tiles therefore pack
+//! several to an array, and one oversized tile shards across several
+//! arrays with partial-sum recombination in the engine. Placement is
+//! position-independent: because every pool array has the same row
+//! count, a shard's 16-row group structure is identical at any
+//! 16-aligned row offset (CiM I groups are consecutive 16-row windows;
+//! CiM II co-groups rows congruent mod `n_rows/16`, and a common offset
+//! cancels in the congruence), and foreign rows always see zero inputs,
+//! which are inert. [`reference_gemm_sharded`] is the executable
+//! statement of that specification.
 
 use crate::array::encoding::Trit;
-use crate::array::mac::{dot_exact, dot_ref, Flavor};
+use crate::array::mac::{dot_exact, dot_ref, Flavor, GROUP_ROWS};
 use crate::array::TernaryStorage;
+
+/// A row/col sub-rectangle of one physical array — where a placed shard
+/// lives. `row0` is always 16-row aligned (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub row0: usize,
+    pub rows: usize,
+    pub col0: usize,
+    pub cols: usize,
+}
+
+impl Rect {
+    /// Whether two rects share any cell.
+    pub fn overlaps(&self, o: &Rect) -> bool {
+        self.row0 < o.row0 + o.rows
+            && o.row0 < self.row0 + self.rows
+            && self.col0 < o.col0 + o.cols
+            && o.col0 < self.col0 + self.cols
+    }
+}
+
+/// One array-fitting piece of a (possibly oversized) tile: rows
+/// `k0..k0+k_len` × columns `n0..n0+n_len` of the full K×N weight
+/// matrix. Equal to its tile when the tile already fits one array.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Shard {
+    pub k0: usize,
+    pub k_len: usize,
+    pub n0: usize,
+    pub n_len: usize,
+}
+
+impl Shard {
+    /// Rows the shard occupies on an array, padded up to whole 16-row
+    /// MAC groups (what the region allocator reserves).
+    pub fn padded_rows(&self) -> usize {
+        self.k_len.div_ceil(GROUP_ROWS) * GROUP_ROWS
+    }
+}
 
 /// The K×N tile grid of one GEMM on one array shape.
 #[derive(Clone, Copy, Debug)]
@@ -64,6 +118,36 @@ impl TileGrid {
         }
         out
     }
+
+    /// Every tile split into pieces that fit one `array_rows × array_cols`
+    /// physical array, in tile order (k-major within each tile's splits).
+    /// K splits land on multiples of `array_rows` (which is a multiple of
+    /// 16), so shard boundaries never cut a 16-row MAC group and the
+    /// per-shard window counts sum to the per-tile counts. One shard per
+    /// tile when the tile shape already fits the array.
+    pub fn shards(&self, array_rows: usize, array_cols: usize) -> Vec<Shard> {
+        assert!(
+            array_rows > 0 && array_rows % GROUP_ROWS == 0,
+            "array rows must be a positive multiple of {GROUP_ROWS}"
+        );
+        assert!(array_cols > 0, "array must have columns");
+        let mut out = Vec::new();
+        for tile in self.tiles() {
+            for n_off in (0..tile.n_len).step_by(array_cols) {
+                let n_len = array_cols.min(tile.n_len - n_off);
+                for k_off in (0..tile.k_len).step_by(array_rows) {
+                    let k_len = array_rows.min(tile.k_len - k_off);
+                    out.push(Shard {
+                        k0: tile.k0 + k_off,
+                        k_len,
+                        n0: tile.n0 + n_off,
+                        n_len,
+                    });
+                }
+            }
+        }
+        out
+    }
 }
 
 /// Copy one tile of the row-major K×N weight matrix into a zero-padded
@@ -92,6 +176,37 @@ pub fn extract_tile_inputs(x_row: &[Trit], tile: &Tile, rows: usize, buf: &mut [
     assert_eq!(buf.len(), rows);
     buf.fill(0);
     buf[..tile.k_len].copy_from_slice(&x_row[tile.k0..tile.k0 + tile.k_len]);
+}
+
+/// Copy one shard of the row-major K×N weight matrix into a zero-padded
+/// `rect_rows × rect_cols` region image (shard at the top-left).
+pub fn extract_shard_weights(
+    w: &[Trit],
+    k: usize,
+    n: usize,
+    shard: &Shard,
+    rect_rows: usize,
+    rect_cols: usize,
+    buf: &mut [Trit],
+) {
+    assert_eq!(w.len(), k * n);
+    assert_eq!(buf.len(), rect_rows * rect_cols);
+    assert!(shard.k_len <= rect_rows && shard.n_len <= rect_cols, "shard exceeds region");
+    buf.fill(0);
+    for r in 0..shard.k_len {
+        let src = (shard.k0 + r) * n + shard.n0;
+        buf[r * rect_cols..r * rect_cols + shard.n_len]
+            .copy_from_slice(&w[src..src + shard.n_len]);
+    }
+}
+
+/// Copy the k-slice of one input vector into an array-length input
+/// image at the shard's placed row offset; every other row is zero, so
+/// co-resident regions and stale cells of the same array are inert.
+pub fn extract_shard_inputs(x_row: &[Trit], shard: &Shard, row0: usize, buf: &mut [Trit]) {
+    assert!(row0 + shard.k_len <= buf.len(), "region rows exceed the array");
+    buf.fill(0);
+    buf[row0..row0 + shard.k_len].copy_from_slice(&x_row[shard.k0..shard.k0 + shard.k_len]);
 }
 
 /// The engine's specification: `dot_ref` (or the exact MAC when `flavor`
@@ -124,6 +239,47 @@ pub fn reference_gemm(
             };
             let dst = &mut out[r * grid.n + tile.n0..r * grid.n + tile.n0 + tile.n_len];
             for (d, s) in dst.iter_mut().zip(&partial[..tile.n_len]) {
+                *d += s;
+            }
+        }
+    }
+    out
+}
+
+/// The engine's specification when placement granularity differs from
+/// the physical arrays: each array-fitting shard of `grid`'s tiles is
+/// zero-padded into an `array_rows × array_cols` storage, evaluated with
+/// `dot_ref` (or the exact MAC when `flavor` is `None`), and the partial
+/// sums recombined. Pure integer math — no engine, no threads, no
+/// placement. Equals [`reference_gemm`] whenever the grid's tile shape
+/// is the array shape, because then every tile is its own single shard.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_gemm_sharded(
+    x: &[Trit],
+    w: &[Trit],
+    m: usize,
+    grid: &TileGrid,
+    array_rows: usize,
+    array_cols: usize,
+    flavor: Option<Flavor>,
+) -> Vec<i32> {
+    assert_eq!(x.len(), m * grid.k);
+    assert_eq!(w.len(), grid.k * grid.n);
+    let mut out = vec![0i32; m * grid.n];
+    let mut wbuf = vec![0i8; array_rows * array_cols];
+    let mut xbuf = vec![0i8; array_rows];
+    for shard in grid.shards(array_rows, array_cols) {
+        extract_shard_weights(w, grid.k, grid.n, &shard, array_rows, array_cols, &mut wbuf);
+        let mut storage = TernaryStorage::new(array_rows, array_cols);
+        storage.write_matrix(&wbuf);
+        for r in 0..m {
+            extract_shard_inputs(&x[r * grid.k..(r + 1) * grid.k], &shard, 0, &mut xbuf);
+            let partial: Vec<i32> = match flavor {
+                Some(f) => dot_ref(&storage, &xbuf, f),
+                None => dot_exact(&storage, &xbuf).into_iter().map(|v| v as i32).collect(),
+            };
+            let dst = &mut out[r * grid.n + shard.n0..r * grid.n + shard.n0 + shard.n_len];
+            for (d, s) in dst.iter_mut().zip(&partial[..shard.n_len]) {
                 *d += s;
             }
         }
@@ -208,5 +364,85 @@ mod tests {
         let a = reference_gemm(&x, &w, m, &TileGrid::new(k, n, 32, 16), None);
         let b = reference_gemm(&x, &w, m, &TileGrid::new(k, n, 64, 30), None);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn shards_equal_tiles_when_tiles_fit_the_array() {
+        let g = TileGrid::new(300, 70, 64, 32);
+        let tiles = g.tiles();
+        let shards = g.shards(64, 32);
+        assert_eq!(shards.len(), tiles.len());
+        for (s, t) in shards.iter().zip(&tiles) {
+            assert_eq!((s.k0, s.k_len, s.n0, s.n_len), (t.k0, t.k_len, t.n0, t.n_len));
+        }
+    }
+
+    #[test]
+    fn oversized_tiles_shard_with_exact_cover() {
+        // 128×64 tiles on 64×32 arrays: each full tile → 2×2 shards.
+        let g = TileGrid::new(200, 100, 128, 64);
+        assert_eq!((g.k_tiles, g.n_tiles), (2, 2));
+        let shards = g.shards(64, 32);
+        // Every (k, n) element covered exactly once, all shards fit.
+        let mut cover = vec![0u8; 200 * 100];
+        for s in &shards {
+            assert!(s.k_len <= 64 && s.n_len <= 32);
+            assert_eq!(s.padded_rows() % GROUP_ROWS, 0);
+            for r in s.k0..s.k0 + s.k_len {
+                for c in s.n0..s.n0 + s.n_len {
+                    cover[r * 100 + c] += 1;
+                }
+            }
+        }
+        assert!(cover.iter().all(|&c| c == 1));
+        // K split points are 16-aligned, so shard windows sum per tile.
+        for s in &shards {
+            assert_eq!(s.k0 % GROUP_ROWS, 0);
+        }
+    }
+
+    #[test]
+    fn sharded_reference_equals_reference_when_shapes_match() {
+        let mut rng = Rng::new(4);
+        let (m, k, n) = (2usize, 150usize, 60usize);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let g = TileGrid::new(k, n, 64, 32);
+        for flavor in [Some(Flavor::Cim1), Some(Flavor::Cim2), None] {
+            assert_eq!(
+                reference_gemm_sharded(&x, &w, m, &g, 64, 32, flavor),
+                reference_gemm(&x, &w, m, &g, flavor),
+                "{flavor:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_reference_exact_flavor_is_plain_matmul() {
+        // Oversized tiles + exact MAC: recombined partial sums must be
+        // the plain integer matmul.
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (3usize, 130usize, 70usize);
+        let x = rng.ternary_vec(m * k, 0.4);
+        let w = rng.ternary_vec(k * n, 0.4);
+        let g = TileGrid::new(k, n, 128, 64); // tiles larger than arrays
+        let got = reference_gemm_sharded(&x, &w, m, &g, 32, 16, None);
+        for r in 0..m {
+            for c in 0..n {
+                let want: i32 = (0..k).map(|i| x[r * k + i] as i32 * w[i * n + c] as i32).sum();
+                assert_eq!(got[r * n + c], want, "r={r} c={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn rect_overlap_is_symmetric_and_strict() {
+        let a = Rect { row0: 0, rows: 32, col0: 0, cols: 16 };
+        let b = Rect { row0: 16, rows: 32, col0: 8, cols: 16 };
+        let c = Rect { row0: 32, rows: 16, col0: 0, cols: 16 }; // touches a, no overlap
+        assert!(a.overlaps(&b) && b.overlaps(&a));
+        assert!(!a.overlaps(&c) && !c.overlaps(&a));
+        let d = Rect { row0: 0, rows: 32, col0: 16, cols: 4 }; // adjacent columns
+        assert!(!a.overlaps(&d));
     }
 }

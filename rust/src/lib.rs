@@ -16,17 +16,25 @@
 //! - [`engine`] — the tiled ternary GEMM execution engine: maps
 //!   arbitrary M×K×N GEMMs onto a pool of `CimArray` backends
 //!   (K×N weight-stationary tiling, batched bit-packed MAC fast path,
-//!   multi-threaded tile execution) with a `dot_ref`-composed reference
-//!   specification. Two paths: streaming (tiles re-programmed every
-//!   call) and resident (`register_weight` + `gemm_resident` — tiles
-//!   placed once via the LRU `engine::resident` cache and reused, with
-//!   hit/miss/evict counters), bit-identical to each other.
+//!   multi-threaded execution) with a `dot_ref`-composed reference
+//!   specification. Placement granularity is independent of the
+//!   physical arrays: tiles split into array-fitting shards placed on
+//!   16-row-aligned sub-array *regions*, so small tiles pack several to
+//!   an array and oversized tiles shard across arrays with partial-sum
+//!   recombination. Two paths: streaming (shards re-programmed every
+//!   call) and resident (`register_weight` + `gemm_resident` — regions
+//!   placed by the LRU `engine::resident` cache and reused, with
+//!   hit/miss/evict counters), bit-identical to each other. Pools size
+//!   directly (`with_pool`) or by word budget (`with_capacity_words`,
+//!   the paper's 2 M words = 32 arrays), serving bit-exact under LRU
+//!   eviction pressure when the working set exceeds the budget.
 //! - [`arch`] — the TiM-DNN-style accelerator (32 arrays, 32 PCUs) plus
 //!   iso-capacity / iso-area near-memory baseline systems, explicit
-//!   streaming-vs-resident weight accounting (`arch::Residency`), and
-//!   the functional co-simulation mode that cross-checks the analytic
-//!   model against the engine in both modes (outputs *and* work
-//!   counters).
+//!   streaming / resident / capacity-bounded weight accounting
+//!   (`arch::Residency`, packed array counts from the same shelf packer
+//!   the engine uses), and the functional co-simulation mode that
+//!   cross-checks the analytic model against the engine in both modes
+//!   (outputs *and* work counters).
 //! - [`dnn`] — the five benchmark workloads (AlexNet, ResNet34,
 //!   Inception, LSTM, GRU) as ternary GEMM workloads.
 //! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas

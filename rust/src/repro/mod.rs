@@ -6,7 +6,7 @@ pub mod figures;
 pub mod system;
 
 pub use figures::{area_table, cim1_vs_cim2, error_prob, fig11, fig4, fig7, fig9};
-pub use system::{engine_cosim, fig12, fig13};
+pub use system::{engine_cosim, engine_cosim_status, fig12, fig13};
 
 /// Run every reproduction, returning the combined report.
 pub fn run_all() -> String {

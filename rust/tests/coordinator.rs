@@ -177,7 +177,7 @@ fn engine_backend_rejects_bad_batches_as_errors() {
     let dir = synth_dir("badbatch");
     write_synth_artifacts(&dir, &[32, 16, 8], 4, 4);
     let manifest = Manifest::load(&dir).unwrap();
-    let b = EngineBackend::load(&manifest, Design::Cim1, Tech::Femfet3T, 1).unwrap();
+    let b = EngineBackend::load(&manifest, Design::Cim1, Tech::Femfet3T, 1, None).unwrap();
     assert_eq!((b.batch(), b.in_dim(), b.out_dim()), (4, 32, 8));
     assert!(b.run_batch(&[0i8; 32], 0).is_err(), "n_valid = 0");
     assert!(b.run_batch(&[0i8; 32], 5).is_err(), "n_valid > batch");
@@ -185,6 +185,29 @@ fn engine_backend_rejects_bad_batches_as_errors() {
     // The backend still serves after rejecting bad batches.
     let ok = b.run_batch(&[0i8; 64], 2).unwrap();
     assert_eq!(ok.len(), 2 * 8);
+}
+
+#[test]
+fn bounded_engine_backend_serves_bit_exact_under_eviction_pressure() {
+    // A 512×512 first layer is 4 full 256×256 tiles; a 1-array word
+    // budget (65536 words) forces LRU eviction on every pass. Outputs
+    // must stay bit-identical to the unbounded reference forward.
+    let dir = synth_dir("bounded");
+    write_synth_artifacts(&dir, &[512, 512, 8], 4, 5);
+    let manifest = Manifest::load(&dir).unwrap();
+    let b =
+        EngineBackend::load(&manifest, Design::Cim1, Tech::Femfet3T, 2, Some(65536)).unwrap();
+    assert_eq!(b.pool_arrays(), 1);
+    assert_eq!(b.capacity_words(), 65536);
+    let mut rng = Rng::new(12);
+    for pass in 0..3 {
+        let input = rng.ternary_vec(512, 0.5);
+        let want = reference_forward(&manifest, &input);
+        let got = b.run_batch(&input, 1).unwrap();
+        assert_eq!(got, want, "bounded pool must stay bit-exact (pass {pass})");
+    }
+    let s = b.engine_stats();
+    assert!(s.misses > 0 && s.evictions > 0, "working set exceeds the bound: {s:?}");
 }
 
 // ---- PJRT-backed tests (need `make artifacts` + the pjrt feature) ----

@@ -1,0 +1,177 @@
+//! Eviction-pressure conformance battery: capacity-bounded resident
+//! pools smaller than the working set must stay bit-exact vs the
+//! `dot_ref` shard composition across all three designs and thread
+//! counts, the LRU sweep pathology's hit-rate counters must match the
+//! closed-form expectation, and sub-array packing / cross-array
+//! sharding must be exact under the same pressure.
+
+use sitecim::array::Design;
+use sitecim::device::Tech;
+use sitecim::engine::tiling::reference_gemm;
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::util::rng::Rng;
+
+#[test]
+fn bounded_pool_smaller_than_working_set_stays_bit_exact() {
+    // 300×90 on 64×32 arrays = 15 shards; a 2-array budget serves the
+    // whole set under constant eviction, for every design and thread
+    // count, without a single bit of drift.
+    for design in Design::ALL {
+        for threads in [1usize, 4] {
+            let engine = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_capacity_words(2 * 64 * 32)
+                    .with_threads(threads),
+            );
+            assert_eq!(engine.pool_arrays(), 2);
+            let mut rng = Rng::new(200 + threads as u64);
+            let (m, k, n) = (2usize, 300usize, 90usize);
+            let x = rng.ternary_vec(m * k, 0.5);
+            let w = rng.ternary_vec(k * n, 0.5);
+            let want = reference_gemm(&x, &w, m, &engine.grid(k, n), design.flavor());
+            let id = engine.register_weight(&w, k, n).unwrap();
+            for pass in 0..3 {
+                assert_eq!(
+                    engine.gemm_resident(id, &x, m).unwrap(),
+                    want,
+                    "{design:?} threads={threads} pass={pass}"
+                );
+            }
+            let s = engine.stats();
+            assert!(s.misses > 0, "{design:?}: an over-subscribed pool must miss");
+            assert!(s.evictions > 0, "{design:?}: an over-subscribed pool must evict");
+        }
+    }
+}
+
+#[test]
+fn streaming_interleaved_with_pressured_resident_stays_bit_exact() {
+    // A streaming GEMM on a different weight trashes pool arrays between
+    // resident passes; the per-region content tags must force exactly
+    // the re-programming needed to keep both bit-exact.
+    for design in Design::ALL {
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(design, Tech::Sram8T)
+                .with_array_dims(64, 32)
+                .with_capacity_words(2 * 64 * 32)
+                .with_threads(2),
+        );
+        let mut rng = Rng::new(300);
+        let (m, k, n) = (2usize, 200usize, 60usize);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w1 = rng.ternary_vec(k * n, 0.5);
+        let w2 = rng.ternary_vec(k * n, 0.5);
+        let grid = engine.grid(k, n);
+        let want1 = reference_gemm(&x, &w1, m, &grid, design.flavor());
+        let want2 = reference_gemm(&x, &w2, m, &grid, design.flavor());
+        let id = engine.register_weight(&w1, k, n).unwrap();
+        for pass in 0..3 {
+            assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want1, "{design:?} p{pass}");
+            assert_eq!(engine.gemm(&x, &w2, m, k, n).unwrap(), want2, "{design:?} p{pass}");
+        }
+        assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want1, "{design:?} final");
+    }
+}
+
+#[test]
+fn lru_sweep_counters_match_closed_form() {
+    // Uniform full-array tiles, single thread: a cyclic sweep of W tiles
+    // through a C-array pool (W > C) is the classic LRU pathology. The
+    // closed form over P passes: hits = 0, misses = P·W, evictions =
+    // P·W − C (the first C placements land in free arrays, every later
+    // placement displaces exactly one), tiles programmed = misses.
+    let (w_tiles, cap, passes) = (5u64, 3u64, 4u64);
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+            .with_array_dims(64, 32)
+            .with_capacity_words(cap * 64 * 32)
+            .with_threads(1),
+    );
+    assert_eq!(engine.pool_arrays(), cap as usize);
+    let mut rng = Rng::new(400);
+    let (m, k, n) = (1usize, w_tiles as usize * 64, 32usize);
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    let grid = engine.grid(k, n);
+    assert_eq!(grid.n_tiles_total() as u64, w_tiles);
+    let want = reference_gemm(&x, &w, m, &grid, Design::Cim1.flavor());
+    let id = engine.register_weight(&w, k, n).unwrap();
+    for pass in 0..passes {
+        assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "pass {pass}");
+    }
+    let s = engine.stats();
+    assert_eq!(s.hits, 0, "LRU sweep never hits");
+    assert_eq!(s.misses, passes * w_tiles);
+    assert_eq!(s.evictions, passes * w_tiles - cap);
+    assert_eq!(s.tiles, passes * w_tiles, "every miss re-programs");
+    assert_eq!(s.write_rows, passes * w_tiles * 64);
+}
+
+#[test]
+fn pool_at_working_set_size_serves_all_hit_after_warmup() {
+    // The complementary closed form: capacity = working set → cold
+    // misses once, then pure hits, zero evictions.
+    let (w_tiles, passes) = (5u64, 3u64);
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim2, Tech::Femfet3T)
+            .with_array_dims(64, 32)
+            .with_capacity_words(w_tiles * 64 * 32)
+            .with_threads(1),
+    );
+    let mut rng = Rng::new(401);
+    let (m, k, n) = (1usize, w_tiles as usize * 64, 32usize);
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    let want = reference_gemm(&x, &w, m, &engine.grid(k, n), Design::Cim2.flavor());
+    let id = engine.register_weight(&w, k, n).unwrap();
+    for _ in 0..passes {
+        assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want);
+    }
+    let s = engine.stats();
+    assert_eq!(s.misses, w_tiles);
+    assert_eq!(s.hits, (passes - 1) * w_tiles);
+    assert_eq!(s.evictions, 0);
+    assert_eq!(s.tiles, w_tiles, "fully-resident set programmed exactly once");
+    let snap_rate = s.hit_rate();
+    let want_rate = (passes - 1) as f64 / passes as f64;
+    assert!((snap_rate - want_rate).abs() < 1e-12, "{snap_rate} vs {want_rate}");
+}
+
+#[test]
+fn packed_small_weights_survive_eviction_pressure() {
+    // Six 32×32 weights (each half an array's rows, half its columns)
+    // through a 1-array pool: four pack resident, placing the other two
+    // sweeps regions in and out. Bit-exactness must hold throughout.
+    for design in Design::ALL {
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(design, Tech::Edram3T)
+                .with_array_dims(64, 64)
+                .with_capacity_words(64 * 64)
+                .with_threads(1),
+        );
+        assert_eq!(engine.pool_arrays(), 1);
+        let mut rng = Rng::new(402);
+        let mut ids = Vec::new();
+        let mut xs = Vec::new();
+        let mut wants = Vec::new();
+        for _ in 0..6 {
+            let w = rng.ternary_vec(32 * 32, 0.5);
+            let x = rng.ternary_vec(32, 0.5);
+            wants.push(reference_gemm(&x, &w, 1, &engine.grid(32, 32), design.flavor()));
+            ids.push(engine.register_weight(&w, 32, 32).unwrap());
+            xs.push(x);
+        }
+        for pass in 0..3 {
+            for i in 0..6 {
+                assert_eq!(
+                    engine.gemm_resident(ids[i], &xs[i], 1).unwrap(),
+                    wants[i],
+                    "{design:?} weight {i} pass {pass}"
+                );
+            }
+        }
+        let s = engine.stats();
+        assert!(s.evictions > 0, "{design:?}: 6 regions through 4 slots must evict");
+    }
+}
