@@ -1,16 +1,18 @@
 //! L3 hot-path micro-benchmarks: the functional array MAC (bit-packed
 //! fast paths vs scalar reference vs analog model) and the tiled GEMM
-//! engine — single- vs multi-threaded, all three backends, and the
+//! engine — single- vs multi-threaded, all three backends, the
 //! streaming path vs the resident-tile cache at a serving-shaped
-//! repeated GEMM. §Perf L3(a).
+//! repeated GEMM, and packed-small-tile serving through the
+//! region-scoped kernels vs the full-array path. §Perf L3(a).
 //!
 //! Emits `BENCH_engine.json` next to the working directory so future PRs
 //! can track the engine's perf trajectory (every entry carries a `mode`
-//! of `streaming` or `resident`, plus the per-design resident speedups).
+//! of `streaming` or `resident`, plus the per-design resident and
+//! region speedups).
 //!
 //! `SITECIM_BENCH_FAST=1` shrinks the GEMMs to smoke sizes for CI.
 use sitecim::array::mac::{dot_fast, dot_fast_cim1, dot_ref, Flavor};
-use sitecim::array::{CimArray, Design, SiTeCim1Array, TernaryStorage};
+use sitecim::array::{make_array, CimArray, Design, Rect, SiTeCim1Array, TernaryStorage};
 use sitecim::device::Tech;
 use sitecim::engine::{EngineConfig, TernaryGemmEngine};
 use sitecim::util::bench::{config_from_env, run, BenchResult};
@@ -162,6 +164,91 @@ fn main() {
         speedups.push((design, speedup));
     }
 
+    // ---- packed-small-tile serving: region-scoped vs full-array ----
+    // 16 small tiles (64×64) packed onto one 256×256 array — the shape
+    // sub-array packing produces. The full-array path (what the engine
+    // executed before the region kernels) runs every tile's dot as a
+    // whole-array `dot_batch` on zero-padded inputs and slices the
+    // tile's columns; the region path cycles only the tile's 16-row
+    // groups and column span. The accounting always charged the
+    // occupied windows — `region_speedup` measures the wall-clock
+    // finally matching it.
+    let (rm, tiles_per_side) = if fast_mode { (2usize, 4usize) } else { (8usize, 4usize) };
+    let tile = 256 / tiles_per_side;
+    println!(
+        "\n== engine_bench packed small tiles ({n} {tile}x{tile} tiles / 256x256 array, batch {rm}) ==",
+        n = tiles_per_side * tiles_per_side
+    );
+    let mut region_speedups: Vec<(Design, f64)> = Vec::new();
+    for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+        let mut arr = make_array(design, Tech::Femfet3T, 256, 256);
+        arr.write_matrix(&rng.ternary_vec(256 * 256, 0.5));
+        let rects: Vec<Rect> = (0..tiles_per_side * tiles_per_side)
+            .map(|i| Rect {
+                row0: tile * (i / tiles_per_side),
+                rows: tile,
+                col0: tile * (i % tiles_per_side),
+                cols: tile,
+            })
+            .collect();
+        let region_inputs: Vec<Vec<i8>> =
+            rects.iter().map(|r| rng.ternary_vec(rm * r.rows, 0.5)).collect();
+        // Zero-padded full-array inputs, as the pre-region engine built.
+        let padded_inputs: Vec<Vec<i8>> = rects
+            .iter()
+            .zip(&region_inputs)
+            .map(|(rect, xs)| {
+                let mut padded = vec![0i8; rm * 256];
+                for v in 0..rm {
+                    padded[v * 256 + rect.row0..v * 256 + rect.row0 + rect.rows]
+                        .copy_from_slice(&xs[v * rect.rows..(v + 1) * rect.rows]);
+                }
+                padded
+            })
+            .collect();
+        // Sanity: the region kernel is the full path's column slice.
+        for (rect, (xs, padded)) in rects.iter().zip(region_inputs.iter().zip(&padded_inputs)) {
+            let got = arr.dot_batch_region(rect, xs, rm);
+            let full = arr.dot_batch(padded, rm);
+            for v in 0..rm {
+                assert_eq!(
+                    &got[v * rect.cols..(v + 1) * rect.cols],
+                    &full[v * 256 + rect.col0..v * 256 + rect.col0 + rect.cols],
+                    "region kernel diverged from full-array slice"
+                );
+            }
+        }
+        let name = format!("packed {:<11} full-array", format!("{design:?}"));
+        let rf = run(&name, &cfg, || {
+            let mut acc = 0i64;
+            for (rect, padded) in rects.iter().zip(&padded_inputs) {
+                let full = arr.dot_batch(padded, rm);
+                for v in 0..rm {
+                    acc += full[v * 256 + rect.col0] as i64;
+                }
+            }
+            acc
+        });
+        let name = format!("packed {:<11} region", format!("{design:?}"));
+        let rr = run(&name, &cfg, || {
+            let mut acc = 0i64;
+            for (rect, xs) in rects.iter().zip(&region_inputs) {
+                let out = arr.dot_batch_region(rect, xs, rm);
+                for v in 0..rm {
+                    acc += out[v * rect.cols] as i64;
+                }
+            }
+            acc
+        });
+        let speedup = rf.mean_s / rr.mean_s;
+        println!(
+            "{:?}: region {speedup:.2}x full-array{}",
+            design,
+            if speedup > 1.0 { "" } else { "  ** region NOT faster **" }
+        );
+        region_speedups.push((design, speedup));
+    }
+
     // ---- perf-trajectory record ----
     let mut json = String::from("{\n");
     json.push_str(&format!(
@@ -187,6 +274,13 @@ fn main() {
         json.push_str(&format!(
             "    \"{design:?}\": {s:.3}{}\n",
             if i + 1 < speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"region_speedup\": {\n");
+    for (i, (design, s)) in region_speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{design:?}\": {s:.3}{}\n",
+            if i + 1 < region_speedups.len() { "," } else { "" }
         ));
     }
     json.push_str("  }\n}\n");

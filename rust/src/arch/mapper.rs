@@ -63,6 +63,16 @@ impl LayerWork {
 /// k-tiles only count their occupied windows, ⌈k_len/16⌉, not a full
 /// array's worth (`EngineStats.windows` agrees tile-by-tile; the cosim
 /// cross-check in `arch::Accelerator::run_cosim` asserts equality).
+/// Since the engine executes shards through the region-scoped
+/// `dot_batch_region` kernels, the functional simulation's wall-clock
+/// cost now scales with the occupied region charged here (its row span
+/// × its columns), not with the full array a packed tile happens to sit
+/// in. For CiM I the kernel literally runs ⌈k_len/16⌉ cycles; for CiM II
+/// the stride grouping spans the whole array, so the kernel still
+/// evaluates every intersecting group, but each at a cost proportional
+/// to the region's word span — the *count* of charged windows stays a
+/// hardware-occupancy accounting, not a claim about simulated group
+/// evaluations.
 pub fn map_layer(cfg: &AccelConfig, layer: &Layer) -> LayerWork {
     let g = &layer.gemm;
     let rows = cfg.geom.n_rows;

@@ -31,7 +31,7 @@
 
 use super::area::Design;
 use super::encoding::Trit;
-use super::mac::{self, Flavor, GROUP_ROWS, SAT};
+use super::mac::{self, Flavor, Rect, GROUP_ROWS, SAT};
 use super::storage::TernaryStorage;
 use crate::array::metrics::ArrayGeom;
 
@@ -178,6 +178,25 @@ pub trait CimArray: Send {
         }
     }
 
+    /// Region-scoped batched dot products — the engine's packed-tile hot
+    /// path. `inputs` are `m` row-major *region-local* vectors (each
+    /// `rect.rows` long; `inputs[j]` drives array row `rect.row0 + j`),
+    /// and the result is the row-major `m × rect.cols` output of the
+    /// region's columns. Bit-identical to [`CimArray::dot_batch`] on
+    /// inputs zero-padded to the full array, sliced to
+    /// `rect.col0..rect.col0 + rect.cols` — the zero rows are
+    /// electrically inert — but costs wall-clock proportional to the
+    /// region's occupied windows and column span (CiM II keeps the
+    /// full-array stride grouping, restricted to the region's word
+    /// span; see `mac`'s region kernels).
+    fn dot_batch_region(&self, rect: &Rect, inputs: &[Trit], m: usize) -> Vec<i32> {
+        match self.flavor() {
+            Some(Flavor::Cim1) => mac::dot_region_cim1(self.storage(), rect, inputs, m),
+            Some(Flavor::Cim2) => mac::dot_region_cim2(self.storage(), rect, inputs, m),
+            None => mac::dot_region_exact(self.storage(), rect, inputs, m),
+        }
+    }
+
     /// Upper bound on `|dot|` per output — `SAT` per group for the
     /// saturating flavors, the full row count for the exact baseline.
     fn dot_bound(&self) -> i32 {
@@ -259,6 +278,30 @@ mod tests {
                     assert_eq!(a.storage().read(r, c), want, "{design:?} r={r} c={c}");
                 }
             }
+        }
+    }
+
+    #[test]
+    fn dot_batch_region_equals_padded_full_array_slice() {
+        let mut rng = Rng::new(23);
+        for design in Design::ALL {
+            let mut a = make_array(design, Tech::Sram8T, 128, 24);
+            a.write_matrix(&rng.ternary_vec(128 * 24, 0.5));
+            let m = 2;
+            let rect = Rect { row0: 32, rows: 48, col0: 5, cols: 11 };
+            let region_inputs = rng.ternary_vec(m * rect.rows, 0.5);
+            let got = a.dot_batch_region(&rect, &region_inputs, m);
+            // The contract: zero-pad to the full array, batch, slice.
+            let mut padded = vec![0i8; m * 128];
+            for v in 0..m {
+                padded[v * 128 + rect.row0..v * 128 + rect.row0 + rect.rows]
+                    .copy_from_slice(&region_inputs[v * rect.rows..(v + 1) * rect.rows]);
+            }
+            let full = a.dot_batch(&padded, m);
+            let want: Vec<i32> = (0..m)
+                .flat_map(|v| full[v * 24 + rect.col0..v * 24 + rect.col0 + rect.cols].to_vec())
+                .collect();
+            assert_eq!(got, want, "{design:?}");
         }
     }
 

@@ -9,6 +9,22 @@
 //!   digitizes the magnitude with one ADC: O = sign(a−b)·min(|a−b|, 8).
 //! Both approximate outputs beyond 8 as 8; they differ when a and b are
 //! simultaneously large (e.g. a=10, b=9 → CiM I: 0, CiM II: +1).
+//!
+//! # Region-scoped kernels
+//!
+//! The engine packs several weight shards into one physical array, each
+//! on a 16-row-aligned [`Rect`]. The paper's array-level win is that a
+//! dot product only cycles the rows/columns it actually occupies, so the
+//! region kernels ([`dot_region_cim1`], [`dot_region_cim2`],
+//! [`dot_region_exact`]) compute exactly what the full-array batch MAC
+//! would produce for inputs that are zero outside the region, restricted
+//! to the region's column span — at a cost proportional to the occupied
+//! window, not the whole array. Semantics are *defined* by that
+//! equivalence: `dot_region_*(rect, x) == dot_batch(pad(x))[cols of
+//! rect]` bit-for-bit (zero inputs are electrically inert, so the
+//! skipped rows/cycles contribute exactly nothing; for CiM II the
+//! full-array stride grouping is preserved — only the per-cycle popcount
+//! is restricted to the region's word span).
 
 use super::encoding::Trit;
 use super::storage::{pack_inputs16, pack_inputs_words, TernaryStorage};
@@ -17,6 +33,29 @@ use super::storage::{pack_inputs16, pack_inputs_words, TernaryStorage};
 pub const GROUP_ROWS: usize = 16;
 /// ADC saturation code.
 pub const SAT: u32 = 8;
+
+/// A row/col sub-rectangle of one physical array — where a placed shard
+/// lives and what the region-scoped MAC kernels cycle. `row0` and `rows`
+/// are always multiples of [`GROUP_ROWS`] (regions never cut a MAC
+/// group); columns are unconstrained. Re-exported as
+/// `engine::tiling::Rect` for the placement layer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rect {
+    pub row0: usize,
+    pub rows: usize,
+    pub col0: usize,
+    pub cols: usize,
+}
+
+impl Rect {
+    /// Whether two rects share any cell.
+    pub fn overlaps(&self, o: &Rect) -> bool {
+        self.row0 < o.row0 + o.rows
+            && o.row0 < self.row0 + self.rows
+            && self.col0 < o.col0 + o.cols
+            && o.col0 < self.col0 + self.cols
+    }
+}
 
 /// Which flavor's digitization path to apply to a group's (a, b) counts.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -221,6 +260,170 @@ pub fn dot_exact(storage: &TernaryStorage, inputs: &[Trit]) -> Vec<i64> {
     (0..storage.n_cols()).map(|c| storage.column_dot_exact(c, inputs)).collect()
 }
 
+/// Validate a region request against the storage and the batch shape.
+/// All three region kernels funnel through this so violations fail with
+/// the same message everywhere.
+fn check_region(storage: &TernaryStorage, rect: &Rect, inputs_len: usize, m: usize) {
+    assert!(m > 0, "empty batch (m = 0)");
+    assert!(rect.rows > 0 && rect.cols > 0, "empty region {rect:?}");
+    assert!(
+        rect.row0 % GROUP_ROWS == 0 && rect.rows % GROUP_ROWS == 0,
+        "region rows must be {GROUP_ROWS}-aligned: {rect:?}"
+    );
+    assert!(
+        rect.row0 + rect.rows <= storage.n_rows() && rect.col0 + rect.cols <= storage.n_cols(),
+        "region {rect:?} exceeds the {}x{} array",
+        storage.n_rows(),
+        storage.n_cols()
+    );
+    assert_eq!(
+        inputs_len,
+        m * rect.rows,
+        "batch of {m} region vectors x {} rows",
+        rect.rows
+    );
+}
+
+/// Region-scoped batched MAC for `Flavor::Cim1`: `m` region-local input
+/// vectors (row-major, each `rect.rows` long — `inputs[j]` drives array
+/// row `rect.row0 + j`) against the region's columns → row-major
+/// `m × rect.cols` outputs. Bit-identical to the full-array
+/// [`dot_fast_batch`] on zero-padded inputs, sliced to the region's
+/// columns, at a cost proportional to the region: consecutive groups
+/// align with the packed 16-bit blocks, so only the region's
+/// `rect.rows / 16` cycles run, over only `rect.cols` columns.
+pub fn dot_region_cim1(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+) -> Vec<i32> {
+    check_region(storage, rect, inputs.len(), m);
+    let mut out = vec![0i32; m * rect.cols];
+    for v in 0..m {
+        let xv = &inputs[v * rect.rows..(v + 1) * rect.rows];
+        let o = &mut out[v * rect.cols..(v + 1) * rect.cols];
+        for g in (0..rect.rows).step_by(GROUP_ROWS) {
+            let (ip, in_) = pack_inputs16(&xv[g..g + GROUP_ROWS]);
+            if ip == 0 && in_ == 0 {
+                continue; // all-zero input group: no wordline asserted
+            }
+            let base = rect.row0 + g;
+            for (c, oc) in o.iter_mut().enumerate() {
+                let (a, b) = storage.block_ab(base, rect.col0 + c, ip, in_);
+                *oc += Flavor::Cim1.group_output(a, b);
+            }
+        }
+    }
+    out
+}
+
+/// Region-scoped batched MAC for `Flavor::Cim2` (same surface as
+/// [`dot_region_cim1`]). The strided grouping spans the whole array, so
+/// the *full-array* cycle masks are kept — saturation happens in exactly
+/// the groups the hardware would digitize — but each mask is restricted
+/// to the region's word span and cycles that assert no region row are
+/// skipped entirely (their counts are zero: rows outside the region see
+/// zero inputs). Per-column plane construction and per-cycle popcounts
+/// then cost `O(span words)` instead of `O(all words)`.
+pub fn dot_region_cim2(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+) -> Vec<i32> {
+    check_region(storage, rect, inputs.len(), m);
+    let n_rows = storage.n_rows();
+    let w0 = rect.row0 / 64;
+    let w1 = (rect.row0 + rect.rows).div_ceil(64);
+    let span = w1 - w0;
+    // The region's rows as a bit mask over the span words (span words
+    // can cover non-region rows when the region is not 64-aligned).
+    let mut range = vec![0u64; span];
+    for r in rect.row0..rect.row0 + rect.rows {
+        range[r / 64 - w0] |= 1u64 << (r % 64);
+    }
+    // Full-array stride masks, restricted to the region; empty cycles
+    // (no region row asserted) contribute group_output(0, 0) = 0 and
+    // are dropped.
+    let masks: Vec<Vec<u64>> = cim2_cycle_masks(n_rows)
+        .iter()
+        .filter_map(|cm| {
+            let mm: Vec<u64> = (0..span).map(|wi| cm[w0 + wi] & range[wi]).collect();
+            if mm.iter().any(|&w| w != 0) {
+                Some(mm)
+            } else {
+                None
+            }
+        })
+        .collect();
+    let mut out = vec![0i32; m * rect.cols];
+    let mut ip = vec![0u64; span];
+    let mut in_ = vec![0u64; span];
+    let mut plus = vec![0u64; span];
+    let mut minus = vec![0u64; span];
+    for v in 0..m {
+        let xv = &inputs[v * rect.rows..(v + 1) * rect.rows];
+        ip.fill(0);
+        in_.fill(0);
+        for (j, &i) in xv.iter().enumerate() {
+            let r = rect.row0 + j;
+            match i {
+                1 => ip[r / 64 - w0] |= 1u64 << (r % 64),
+                -1 => in_[r / 64 - w0] |= 1u64 << (r % 64),
+                _ => {}
+            }
+        }
+        for c in 0..rect.cols {
+            let (wp, wn) = storage.col_words(rect.col0 + c);
+            let (wp, wn) = (&wp[w0..w1], &wn[w0..w1]);
+            for wi in 0..span {
+                plus[wi] = (ip[wi] & wp[wi]) | (in_[wi] & wn[wi]);
+                minus[wi] = (ip[wi] & wn[wi]) | (in_[wi] & wp[wi]);
+            }
+            let mut acc = 0i32;
+            for mask in &masks {
+                let mut a = 0u32;
+                let mut b = 0u32;
+                for wi in 0..span {
+                    a += (plus[wi] & mask[wi]).count_ones();
+                    b += (minus[wi] & mask[wi]).count_ones();
+                }
+                acc += Flavor::Cim2.group_output(a, b);
+            }
+            out[v * rect.cols + c] = acc;
+        }
+    }
+    out
+}
+
+/// Region-scoped exact batched MAC — the near-memory baseline's region
+/// path (same surface as [`dot_region_cim1`], no saturation). Reads only
+/// the region's rows and columns; outputs are bounded by `rect.rows`, so
+/// `i32` is exact.
+pub fn dot_region_exact(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+) -> Vec<i32> {
+    check_region(storage, rect, inputs.len(), m);
+    let mut out = vec![0i32; m * rect.cols];
+    for v in 0..m {
+        let xv = &inputs[v * rect.rows..(v + 1) * rect.rows];
+        for c in 0..rect.cols {
+            let mut acc = 0i32;
+            for (j, &i) in xv.iter().enumerate() {
+                if i != 0 {
+                    acc += i as i32 * storage.read(rect.row0 + j, rect.col0 + c) as i32;
+                }
+            }
+            out[v * rect.cols + c] = acc;
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -346,6 +549,104 @@ mod tests {
             let out = dot_ref(&s, &inputs, flavor);
             assert!(out.iter().all(|&o| o == 16 * 8), "{flavor:?}: {out:?}");
         }
+    }
+
+    /// The region-kernel specification, in miniature: pad region-local
+    /// inputs to the full array, run the full batched MAC, slice the
+    /// region's columns.
+    fn full_array_region_ref(
+        s: &TernaryStorage,
+        rect: &Rect,
+        inputs: &[Trit],
+        m: usize,
+        flavor: Option<Flavor>,
+    ) -> Vec<i32> {
+        let mut out = Vec::with_capacity(m * rect.cols);
+        for v in 0..m {
+            let mut padded = vec![0i8; s.n_rows()];
+            padded[rect.row0..rect.row0 + rect.rows]
+                .copy_from_slice(&inputs[v * rect.rows..(v + 1) * rect.rows]);
+            let full: Vec<i32> = match flavor {
+                Some(f) => dot_ref(s, &padded, f),
+                None => dot_exact(s, &padded).into_iter().map(|x| x as i32).collect(),
+            };
+            out.extend_from_slice(&full[rect.col0..rect.col0 + rect.cols]);
+        }
+        out
+    }
+
+    #[test]
+    fn region_kernels_match_full_array_slice() {
+        let mut rng = Rng::new(21);
+        let (s, _) = random_setup(21, 256, 48, 0.4);
+        let m = 3;
+        for rect in [
+            Rect { row0: 0, rows: 256, col0: 0, cols: 48 }, // whole array
+            Rect { row0: 64, rows: 64, col0: 7, cols: 13 }, // unaligned cols
+            Rect { row0: 240, rows: 16, col0: 47, cols: 1 }, // last group/col
+            Rect { row0: 16, rows: 208, col0: 0, cols: 48 }, // unaligned words
+        ] {
+            let inputs = rng.ternary_vec(m * rect.rows, 0.4);
+            assert_eq!(
+                dot_region_cim1(&s, &rect, &inputs, m),
+                full_array_region_ref(&s, &rect, &inputs, m, Some(Flavor::Cim1)),
+                "cim1 {rect:?}"
+            );
+            assert_eq!(
+                dot_region_cim2(&s, &rect, &inputs, m),
+                full_array_region_ref(&s, &rect, &inputs, m, Some(Flavor::Cim2)),
+                "cim2 {rect:?}"
+            );
+            assert_eq!(
+                dot_region_exact(&s, &rect, &inputs, m),
+                full_array_region_ref(&s, &rect, &inputs, m, None),
+                "exact {rect:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn cim2_region_keeps_full_array_saturation_grouping() {
+        // A dense +1 region: CiM II groups stride over the whole array,
+        // so a 32-row region of a 64-row array spreads its rows across
+        // all 4 cycles (8 rows each, no saturation), while a local
+        // 2-cycle grouping would have pegged both groups at +8.
+        let mut s = TernaryStorage::new(64, 2);
+        s.write_matrix(&vec![1i8; 64 * 2]);
+        let rect = Rect { row0: 0, rows: 32, col0: 0, cols: 2 };
+        let inputs = vec![1i8; 32];
+        let got = dot_region_cim2(&s, &rect, &inputs, 1);
+        assert_eq!(got, vec![32, 32], "4 cycles x 8 unsaturated counts");
+        // And it matches the padded full-array reference, which is the
+        // actual contract.
+        assert_eq!(got, full_array_region_ref(&s, &rect, &inputs, 1, Some(Flavor::Cim2)));
+    }
+
+    #[test]
+    #[should_panic(expected = "region rows must be")]
+    fn region_rejects_unaligned_rows() {
+        let s = TernaryStorage::new(64, 4);
+        let rect = Rect { row0: 8, rows: 16, col0: 0, cols: 4 };
+        dot_region_cim1(&s, &rect, &[0i8; 16], 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the")]
+    fn region_rejects_out_of_bounds() {
+        let s = TernaryStorage::new(64, 4);
+        let rect = Rect { row0: 48, rows: 32, col0: 0, cols: 4 };
+        dot_region_cim2(&s, &rect, &[0i8; 32], 1);
+    }
+
+    #[test]
+    fn rect_overlap_is_symmetric_and_strict() {
+        let a = Rect { row0: 0, rows: 32, col0: 0, cols: 16 };
+        let b = Rect { row0: 16, rows: 32, col0: 8, cols: 16 };
+        let c = Rect { row0: 32, rows: 16, col0: 0, cols: 16 }; // touches a, no overlap
+        assert!(a.overlaps(&b) && b.overlaps(&a));
+        assert!(!a.overlaps(&c) && !c.overlaps(&a));
+        let d = Rect { row0: 0, rows: 32, col0: 16, cols: 4 }; // adjacent columns
+        assert!(!a.overlaps(&d));
     }
 
     #[test]

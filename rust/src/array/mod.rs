@@ -10,7 +10,9 @@
 //!   sensing, block-strided row assertion.
 //! - [`near_memory`] — the row-by-row NM baseline with exact digital MAC.
 //! - [`mac`] — the saturating MAC semantics both flavors implement, with
-//!   bit-packed single and batched fast paths for both flavors.
+//!   bit-packed single, batched and region-scoped (`dot_region_*`, over
+//!   a [`Rect`] of one array) fast paths for both flavors plus the
+//!   exact region path for the NM baseline.
 //! - [`metrics`] — latency/energy models per (design, op) → Figs 9/11.
 //! - [`area`] — layout-area models → §V.1a/V.2a, Figs 8/10.
 //! - [`variation`] — V_TH variation Monte Carlo → error probability.
@@ -28,7 +30,7 @@ pub mod variation;
 
 pub use area::Design;
 pub use cim::{make_array, CimArray};
-pub use mac::Flavor;
+pub use mac::{Flavor, Rect};
 pub use near_memory::NearMemoryArray;
 pub use sitecim1::SiTeCim1Array;
 pub use sitecim2::SiTeCim2Array;

@@ -2,13 +2,21 @@
 //!
 //! Compares a freshly-written `BENCH_engine.json` against the committed
 //! `BENCH_baseline.json`: per-entry throughput (`gmacs_per_s`, keyed by
-//! design/mode/threads/shape) and the per-design `resident_speedup`
-//! ratios, each within a relative tolerance. Only *regressions* fail —
-//! a fresh value above baseline always passes — and a baseline metric
-//! recorded as `null` is treated as unseeded (reported, never failed),
-//! so the gate can be committed before the reference runner has produced
-//! real numbers. A baseline metric *missing* from the fresh run fails:
-//! losing a benchmark silently is itself a regression.
+//! design/mode/threads/shape) and the per-design `resident_speedup` /
+//! `region_speedup` ratios, each within a relative tolerance. Only
+//! *regressions* fail — a fresh value above baseline always passes —
+//! and a baseline metric recorded as `null` is treated as unseeded
+//! (reported, never failed), so the gate can be committed before the
+//! reference runner has produced real numbers. A baseline metric
+//! *missing* from the fresh run fails: losing a benchmark silently is
+//! itself a regression.
+//!
+//! [`compare_capacity`] additionally gates the *machine-independent*
+//! hit-rate columns of `BENCH_capacity.json` (the bench records them
+//! from a deterministic single-threaded placement replay, so they are
+//! exact on any runner); throughput columns of that record stay
+//! ungated. Entries recorded for a different workload (fast vs full
+//! mode) are skipped, not failed.
 
 use crate::util::json::Json;
 use crate::util::table::Table;
@@ -21,11 +29,11 @@ enum Verdict {
     Regressed,
     Unseeded,
     Missing,
-    /// Baseline entry keyed by a runner-dependent thread count (the
-    /// multi-thread bench entries embed `available_parallelism()`):
-    /// reported, never failed, so seeding the baseline by copying a
-    /// whole BENCH_engine.json from one machine cannot brick CI on a
-    /// machine with a different core count.
+    /// Baseline entry not comparable on this run: keyed by a
+    /// runner-dependent thread count (the multi-thread bench entries
+    /// embed `available_parallelism()`), or recorded for a different
+    /// capacity-sweep workload. Reported, never failed, so seeding the
+    /// baseline from one configuration cannot brick CI on another.
     Skipped,
 }
 
@@ -37,7 +45,7 @@ impl Verdict {
             Verdict::Regressed => "REGRESSED",
             Verdict::Unseeded => "unseeded",
             Verdict::Missing => "MISSING",
-            Verdict::Skipped => "skipped (runner-dependent key)",
+            Verdict::Skipped => "skipped (not comparable here)",
         }
     }
 
@@ -131,24 +139,24 @@ pub fn compare(baseline: &Json, fresh: &Json, tol_pct: f64) -> (String, bool) {
         ]);
     }
 
-    if let Some(base_sp) = baseline.get("resident_speedup").and_then(Json::as_obj) {
-        for (design, bv) in base_sp {
-            let base_v = bv.as_f64();
-            let fresh_v = fresh
-                .get("resident_speedup")
-                .and_then(|o| o.get(design))
-                .and_then(Json::as_f64);
-            let v = judge(base_v, fresh_v, tol_pct);
-            checked += 1;
-            failures += usize::from(v.fails());
-            unseeded += usize::from(v == Verdict::Unseeded);
-            t.row(&[
-                format!("resident_speedup {design}"),
-                fmt_val(base_v),
-                fmt_val(fresh_v),
-                fmt_delta(base_v, fresh_v),
-                v.label().to_string(),
-            ]);
+    for section in ["resident_speedup", "region_speedup"] {
+        if let Some(base_sp) = baseline.get(section).and_then(Json::as_obj) {
+            for (design, bv) in base_sp {
+                let base_v = bv.as_f64();
+                let fresh_v =
+                    fresh.get(section).and_then(|o| o.get(design)).and_then(Json::as_f64);
+                let v = judge(base_v, fresh_v, tol_pct);
+                checked += 1;
+                failures += usize::from(v.fails());
+                unseeded += usize::from(v == Verdict::Unseeded);
+                t.row(&[
+                    format!("{section} {design}"),
+                    fmt_val(base_v),
+                    fmt_val(fresh_v),
+                    fmt_delta(base_v, fresh_v),
+                    v.label().to_string(),
+                ]);
+            }
         }
     }
 
@@ -168,6 +176,70 @@ pub fn compare(baseline: &Json, fresh: &Json, tol_pct: f64) -> (String, bool) {
         "bench-check: PASS\n".to_string()
     } else {
         format!("bench-check: FAIL ({failures} regression(s))\n")
+    };
+    (t.render() + &verdict, ok)
+}
+
+/// Identity of one capacity-sweep `results[]` entry.
+fn capacity_key(e: &Json) -> Option<String> {
+    let design = e.get("design")?.as_str()?;
+    let cap = e.get("capacity_words")?.as_usize()?;
+    Some(format!("{design} cap={cap}"))
+}
+
+/// Gate the machine-independent hit-rate columns of a capacity-sweep
+/// record against a committed baseline. Only `hit_rate` is judged: the
+/// bench records it from a deterministic single-threaded placement
+/// replay (exact on any runner), while `inf_per_s` is machine-dependent
+/// and never gated. A baseline recorded for a different workload (fast
+/// vs full sweep) is skipped wholesale rather than failed.
+pub fn compare_capacity(baseline: &Json, fresh: &Json, tol_pct: f64) -> (String, bool) {
+    let mut t =
+        Table::new(format!("bench-check capacity — hit-rate gate at ±{tol_pct:.0}%"))
+            .header(&["metric (higher is better)", "baseline", "fresh", "delta", "status"]);
+    let empty: Vec<Json> = Vec::new();
+    let base_entries = baseline.get("results").and_then(Json::as_arr).unwrap_or(&empty);
+    let fresh_entries = fresh.get("results").and_then(Json::as_arr).unwrap_or(&empty);
+    let base_workload = baseline.get("workload").and_then(Json::as_str);
+    let fresh_workload = fresh.get("workload").and_then(Json::as_str);
+    let comparable = base_workload.is_some() && base_workload == fresh_workload;
+
+    let mut failures = 0usize;
+    let mut unseeded = 0usize;
+    let mut checked = 0usize;
+    for be in base_entries {
+        let Some(key) = capacity_key(be) else { continue };
+        let base_v = metric(be, "hit_rate");
+        let fresh_v = fresh_entries
+            .iter()
+            .find(|&fe| capacity_key(fe).as_deref() == Some(key.as_str()))
+            .and_then(|fe| metric(fe, "hit_rate"));
+        let v = if comparable { judge(base_v, fresh_v, tol_pct) } else { Verdict::Skipped };
+        checked += usize::from(v != Verdict::Skipped);
+        failures += usize::from(v.fails());
+        unseeded += usize::from(v == Verdict::Unseeded);
+        t.row(&[
+            format!("hit_rate {key}"),
+            fmt_val(base_v),
+            fmt_val(fresh_v),
+            fmt_delta(base_v, fresh_v),
+            v.label().to_string(),
+        ]);
+    }
+    if !comparable {
+        t.note(format!(
+            "workload mismatch (baseline {base_workload:?}, fresh {fresh_workload:?}): \
+             entries skipped, not compared"
+        ));
+    }
+    t.note(format!(
+        "{checked} metric(s) checked, {failures} regression(s), {unseeded} unseeded"
+    ));
+    let ok = failures == 0;
+    let verdict = if ok {
+        "bench-check capacity: PASS\n".to_string()
+    } else {
+        format!("bench-check capacity: FAIL ({failures} regression(s))\n")
     };
     (t.render() + &verdict, ok)
 }
@@ -268,5 +340,83 @@ mod tests {
         let fresh = doc(&[entry("Cim1", "10.0")], "{}");
         let (report, ok) = compare(&base, &fresh, 20.0);
         assert!(!ok, "an empty baseline must not green-light the gate: {report}");
+    }
+
+    #[test]
+    fn region_speedup_section_is_gated_like_resident() {
+        let parse_doc = |region: &str| {
+            Json::parse(&format!(
+                "{{\"results\": [{}], \"resident_speedup\": {{\"Cim1\": 4.0}}, \
+                 \"region_speedup\": {region}}}",
+                entry("Cim1", "10.0")
+            ))
+            .unwrap()
+        };
+        let base = parse_doc("{\"Cim1\": 3.0}");
+        let good = parse_doc("{\"Cim1\": 3.5}");
+        let (report, ok) = compare(&base, &good, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("region_speedup Cim1"));
+        let bad = parse_doc("{\"Cim1\": 1.0}");
+        let (report, ok) = compare(&base, &bad, 20.0);
+        assert!(!ok, "region speedup regression must fail: {report}");
+    }
+
+    fn cap_entry(design: &str, cap: u64, hit_rate: &str) -> String {
+        format!(
+            "{{\"design\": \"{design}\", \"capacity_words\": {cap}, \"arrays\": 4, \
+             \"hits\": 6, \"misses\": 26, \"evictions\": 26, \"hit_rate\": {hit_rate}, \
+             \"inf_per_s\": null}}"
+        )
+    }
+
+    fn cap_doc(workload: &str, entries: &[String]) -> Json {
+        Json::parse(&format!(
+            "{{\"bench\": \"capacity_sweep\", \"workload\": \"{workload}\", \"results\": [{}]}}",
+            entries.join(", ")
+        ))
+        .unwrap()
+    }
+
+    #[test]
+    fn capacity_hit_rates_gate_within_tolerance() {
+        let base = cap_doc("alexnet-fc/8", &[cap_entry("Cim1", 262144, "0.1875")]);
+        let same = cap_doc("alexnet-fc/8", &[cap_entry("Cim1", 262144, "0.1875")]);
+        let (report, ok) = compare_capacity(&base, &same, 20.0);
+        assert!(ok, "{report}");
+        let worse = cap_doc("alexnet-fc/8", &[cap_entry("Cim1", 262144, "0.05")]);
+        let (report, ok) = compare_capacity(&base, &worse, 20.0);
+        assert!(!ok, "hit-rate collapse must fail the gate: {report}");
+        assert!(report.contains("REGRESSED"));
+    }
+
+    #[test]
+    fn capacity_missing_entry_fails_but_workload_mismatch_skips() {
+        let base = cap_doc(
+            "alexnet-fc/8",
+            &[
+                cap_entry("Cim1", 262144, "0.1875"),
+                cap_entry("Cim1", 524288, "0.4375"),
+            ],
+        );
+        let missing = cap_doc("alexnet-fc/8", &[cap_entry("Cim1", 262144, "0.1875")]);
+        let (report, ok) = compare_capacity(&base, &missing, 20.0);
+        assert!(!ok, "losing a sweep point must fail: {report}");
+        assert!(report.contains("MISSING"));
+        // A full-size run against a fast-mode baseline is not comparable:
+        // skipped, never failed.
+        let other = cap_doc("alexnet-fc", &[cap_entry("Cim1", 2097152, "0.03")]);
+        let (report, ok) = compare_capacity(&base, &other, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("skipped"));
+    }
+
+    #[test]
+    fn capacity_null_baseline_is_unseeded_pass() {
+        let base = cap_doc("alexnet-fc/8", &[cap_entry("Cim1", 262144, "null")]);
+        let fresh = cap_doc("alexnet-fc/8", &[cap_entry("Cim1", 262144, "0.5")]);
+        let (report, ok) = compare_capacity(&base, &fresh, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("unseeded"));
     }
 }

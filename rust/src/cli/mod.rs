@@ -41,26 +41,33 @@ USAGE: sitecim <subcommand> [flags]
           functional cross-check: CiM I/II arrays vs reference semantics
   engine  [--m M] [--k K] [--n N] [--design cim1|cim2|nm] [--threads T] [--seed S]
           [--resident] [--reps R] [--capacity-words W]
-          run a ternary GEMM through the tiled array engine, verify it
-          against the dot_ref tile composition, and report throughput;
-          --resident registers the weights once and repeats the GEMM
-          through the resident-tile cache, reporting streaming-vs-
-          resident throughput and cache hit/miss/evict counters;
+          run a ternary GEMM through the tiled array engine (persistent
+          stripe-scheduled executor), verify it against the dot_ref tile
+          composition, and report throughput; --resident registers the
+          weights once and repeats the GEMM through the resident-tile
+          cache, reporting streaming-vs-resident throughput, cache
+          hit/miss/evict counters and executor affinity stats;
           --capacity-words bounds the resident pool (e.g. 2097152 = the
-          paper's 2 M words) and serves under LRU eviction pressure
+          paper's 2 M words) and serves under second-chance eviction
+          pressure
   bench-check [--baseline PATH] [--fresh PATH] [--tolerance PCT]
+              [--capacity-baseline PATH] [--capacity-fresh PATH]
           compare a fresh BENCH_engine.json against the committed
-          baseline (default BENCH_baseline.json): per-design throughput
-          and resident speedups, ±20% by default; exits nonzero and
-          prints a per-metric delta table on regression
+          baseline (default BENCH_baseline.json): per-design throughput,
+          resident and region speedups, ±20% by default; also gates the
+          machine-independent hit-rate columns of BENCH_capacity.json
+          against BENCH_capacity_baseline.json when present; exits
+          nonzero and prints per-metric delta tables on regression
   infer   [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
           run the AOT-compiled ternary MLP on the held-out test set
   serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B] [--backend pjrt|engine]
           [--threads T] [--capacity-words W]
           start the serving coordinator and push synthetic traffic (the
-          engine backend shares one resident-weight model across
-          workers; --capacity-words serves from a bounded pool instead
-          of sizing it to the whole network)
+          engine backend shares one resident-weight model and one
+          persistent executor across workers; --capacity-words serves
+          from a bounded pool instead of sizing it to the whole network;
+          the report includes measured amortized residency costs from
+          the engine's own counters)
   help    this message
 ";
 
@@ -124,6 +131,8 @@ fn cmd_figures(args: &Args) -> Result<i32> {
 fn cmd_bench_check(args: &Args) -> Result<i32> {
     let baseline_path = args.get_or("baseline", "BENCH_baseline.json");
     let fresh_path = args.get_or("fresh", "BENCH_engine.json");
+    let cap_baseline_path = args.get_or("capacity-baseline", "BENCH_capacity_baseline.json");
+    let cap_fresh_path = args.get_or("capacity-fresh", "BENCH_capacity.json");
     let tol = args.get_f64("tolerance", 20.0);
     let read = |path: &str| -> Result<Json> {
         let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
@@ -131,8 +140,20 @@ fn cmd_bench_check(args: &Args) -> Result<i32> {
     };
     let baseline = read(&baseline_path)?;
     let fresh = read(&fresh_path)?;
-    let (report, ok) = bench_check::compare(&baseline, &fresh, tol);
+    let (report, mut ok) = bench_check::compare(&baseline, &fresh, tol);
     print!("{report}");
+    // The capacity gate is optional when no capacity baseline is
+    // committed; once one exists, a missing fresh BENCH_capacity.json
+    // is itself a failure (losing the bench silently is a regression).
+    if std::path::Path::new(&cap_baseline_path).exists() {
+        let cap_baseline = read(&cap_baseline_path)?;
+        let cap_fresh = read(&cap_fresh_path)?;
+        let (cap_report, cap_ok) = bench_check::compare_capacity(&cap_baseline, &cap_fresh, tol);
+        print!("{cap_report}");
+        ok = ok && cap_ok;
+    } else {
+        println!("(no {cap_baseline_path} — capacity hit-rate gate skipped)");
+    }
     Ok(if ok { 0 } else { 1 })
 }
 
@@ -183,8 +204,8 @@ fn cmd_engine(args: &Args) -> Result<i32> {
         cfg = cfg.with_threads(threads);
     }
     if capacity > 0 {
-        // Capacity-bounded pool: serve under LRU eviction pressure when
-        // the working set exceeds the word budget.
+        // Capacity-bounded pool: serve under second-chance eviction
+        // pressure when the working set exceeds the word budget.
         cfg = cfg.with_capacity_words(capacity);
     } else if resident {
         // Size the pool to the working set so repeated GEMMs are fully
@@ -255,6 +276,11 @@ fn cmd_engine(args: &Args) -> Result<i32> {
             d.evictions,
             d.tiles,
             engine.resident_tiles(),
+        );
+        let e = engine.exec_stats();
+        println!(
+            "executor: {} items ({} affine / {} stolen), {} panics",
+            e.executed, e.affine, e.stolen, e.panics
         );
     } else {
         let s = engine.stats();
@@ -364,6 +390,21 @@ fn cmd_serve(args: &Args) -> Result<i32> {
             100.0 * s.hit_rate(),
             s.evictions,
             s.tiles
+        );
+        let e = model.exec_stats();
+        println!(
+            "executor: {} items across all workers ({} affine / {} stolen), {} panics",
+            e.executed, e.affine, e.stolen, e.panics
+        );
+    }
+    if let Some(m) = server.measured_residency() {
+        println!(
+            "measured residency: {} write rows over {} inferences → {}/inf energy, {}/inf latency (amortized write {} + marginal)",
+            m.write_rows,
+            m.inferences,
+            crate::util::units::fmt_energy(m.energy_per_inf_j),
+            crate::util::units::fmt_time(m.latency_per_inf_s),
+            crate::util::units::fmt_energy(m.write_energy_j / m.inferences.max(1) as f64),
         );
     }
     server.shutdown();

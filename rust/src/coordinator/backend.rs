@@ -13,7 +13,11 @@
 //!   (`gemm_resident`), layer by layer, with the AOT-recorded activation
 //!   thresholds between layers. The backend is `Sync`: the server wraps
 //!   one instance in an `Arc` and every worker serves through it — one
-//!   weight copy, one pool, instead of a private pool per worker.
+//!   weight copy, one pool, one persistent stripe-scheduled executor.
+//!   Server workers therefore *submit* work to a shared worker pool
+//!   (per-shard items with per-slot affinity, see `engine::exec`)
+//!   rather than each spinning up threads per GEMM; concurrent batches
+//!   pipeline through disjoint arrays.
 //!
 //! Both present the same padded-batch trits → logits surface, so the
 //! server's worker loop is backend-agnostic.
@@ -26,7 +30,7 @@ use crate::array::area::Design;
 use crate::device::Tech;
 use crate::dnn::ternary;
 use crate::engine::resident::WeightId;
-use crate::engine::{EngineConfig, EngineStatsSnapshot, TernaryGemmEngine};
+use crate::engine::{EngineConfig, EngineStatsSnapshot, ExecStatsSnapshot, TernaryGemmEngine};
 use crate::runtime::executor::PjrtClient;
 use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind};
 
@@ -121,8 +125,9 @@ impl EngineBackend {
     /// hold the whole network (one array per tile — conservative, since
     /// sub-array packing can fit the shards into fewer arrays); with a
     /// word budget the pool is capacity-bounded
-    /// (`EngineConfig::with_capacity_words`) and serves under LRU
-    /// eviction pressure when the network exceeds it — still bit-exact,
+    /// (`EngineConfig::with_capacity_words`) and serves under
+    /// second-chance eviction pressure when the network exceeds it —
+    /// still bit-exact,
     /// with measured hit rates in [`Self::engine_stats`]. Weights are
     /// programmed lazily on first use and stay resident until evicted.
     pub fn load(
@@ -193,6 +198,12 @@ impl EngineBackend {
     /// Engine work/cache counters (tile hits, misses, programming).
     pub fn engine_stats(&self) -> EngineStatsSnapshot {
         self.engine.stats()
+    }
+
+    /// Executor counters: items submitted/executed across all serving
+    /// workers, affinity-vs-steal split, panics survived.
+    pub fn exec_stats(&self) -> ExecStatsSnapshot {
+        self.engine.exec_stats()
     }
 
     /// Physical arrays in the serving pool.

@@ -15,4 +15,4 @@ pub mod server;
 pub use backend::{BackendKind, EngineBackend, InferenceBackend, PjrtBackend};
 pub use batcher::BatchPolicy;
 pub use metrics::Metrics;
-pub use server::{InferReply, Server, ServerConfig};
+pub use server::{InferReply, MeasuredResidency, Server, ServerConfig};

@@ -1,0 +1,354 @@
+//! The persistent stripe-scheduled executor.
+//!
+//! PR 1–3 ran every GEMM on per-call `std::thread::scope` workers that
+//! claimed shards off a shared `AtomicUsize` and merged partials under
+//! one global output mutex. That shape has three scaling problems the
+//! paper's system-level numbers care about: every call pays thread
+//! spawn/join, concurrent GEMMs (server batches) contend on the same
+//! pool arrays implicitly instead of pipelining through disjoint ones,
+//! and the single merge mutex serializes all partial-sum traffic — the
+//! RRAM scalability literature's observation that partial-sum
+//! orchestration, not array compute, becomes the bottleneck.
+//!
+//! The [`Executor`] replaces all of it:
+//!
+//! - **Long-lived workers.** `TernaryGemmEngine::new` spawns
+//!   `min(n_threads, pool size)` worker threads that live as long as the
+//!   engine. Worker *w* owns pool slot *w* for streaming work (it is the
+//!   only worker that programs that array whole).
+//! - **Stripe work queue.** A GEMM submission decomposes into one
+//!   [`WorkItem`] per (job, shard) — each shard belongs to exactly one
+//!   n-stripe of the output. Items land on per-worker queues; idle
+//!   workers steal from the back of their neighbours' queues, so a
+//!   single hot queue still drains at full parallelism while queue order
+//!   stays FIFO for the owner.
+//! - **Per-slot affinity.** A resident shard whose placement is already
+//!   known is enqueued to the worker that owns its array
+//!   (`slot % n_workers`, probed via `TileCache::peek_slot` without
+//!   touching the second-chance bit), so steady-state serving sends each
+//!   array's work to the same thread instead of bouncing slot mutexes
+//!   between all of them. Unplaced/streaming items round-robin.
+//! - **Stripe-sharded merge.** Each job carries one accumulator per
+//!   n-stripe ([`GemmJob::merge`]); shards of different stripes merge
+//!   with no shared lock at all, shards within a stripe serialize only
+//!   on that stripe's mutex. `i32` addition commutes, so any merge order
+//!   is bit-identical to the sequential reference.
+//!
+//! Submitters block on the job's condvar until its last item completes,
+//! then assemble the stripes into the row-major output — so the public
+//! `gemm`/`gemm_resident` surface is unchanged and multiple server
+//! workers can submit concurrently while their GEMMs pipeline through
+//! the shared pool. A panic inside a shard item (poisoned storage
+//! asserts, etc.) marks the job failed and is reported as an `Err` by
+//! the submitter; the worker itself survives and keeps serving, which
+//! preserves the coordinator's worker-never-dies property.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+use std::thread::JoinHandle;
+
+use crate::array::encoding::Trit;
+
+use super::resident::RegisteredWeight;
+use super::tiling::{Shard, TileGrid};
+use super::EngineCore;
+
+/// What a job executes against: a one-shot streaming GEMM (the job owns
+/// copies of both operands) or a registered resident weight.
+pub(crate) enum JobKind {
+    Streaming { x: Vec<Trit>, w: Vec<Trit>, grid: TileGrid, shards: Vec<Shard> },
+    Resident { reg: Arc<RegisteredWeight>, x: Vec<Trit> },
+}
+
+/// One submitted GEMM: its operands, per-n-stripe output accumulators,
+/// and completion state.
+pub(crate) struct GemmJob {
+    pub kind: JobKind,
+    pub m: usize,
+    n: usize,
+    /// Stripe width in output columns (the grid's tile columns).
+    stripe_cols: usize,
+    /// One accumulator per n-stripe, each row-major `m × stripe_len`.
+    stripes: Vec<Mutex<Vec<i32>>>,
+    remaining: AtomicUsize,
+    failed: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+impl GemmJob {
+    pub fn streaming(
+        x: Vec<Trit>,
+        w: Vec<Trit>,
+        grid: TileGrid,
+        shards: Vec<Shard>,
+        m: usize,
+        n: usize,
+    ) -> GemmJob {
+        let n_shards = shards.len();
+        GemmJob::new(JobKind::Streaming { x, w, grid, shards }, m, n, &grid, n_shards)
+    }
+
+    pub fn resident(reg: Arc<RegisteredWeight>, x: Vec<Trit>, m: usize) -> GemmJob {
+        let (grid, n, n_shards) = (reg.grid, reg.n, reg.shards.len());
+        GemmJob::new(JobKind::Resident { reg, x }, m, n, &grid, n_shards)
+    }
+
+    fn new(kind: JobKind, m: usize, n: usize, grid: &TileGrid, n_shards: usize) -> GemmJob {
+        let stripe_cols = grid.cols;
+        let stripes = (0..grid.n_tiles)
+            .map(|j| {
+                let len = stripe_cols.min(n - j * stripe_cols);
+                Mutex::new(vec![0i32; m * len])
+            })
+            .collect();
+        GemmJob {
+            kind,
+            m,
+            n,
+            stripe_cols,
+            stripes,
+            remaining: AtomicUsize::new(n_shards),
+            failed: AtomicBool::new(false),
+            done: Mutex::new(false),
+            done_cv: Condvar::new(),
+        }
+    }
+
+    /// The job's shard list (the work-item index space).
+    pub fn shards(&self) -> &[Shard] {
+        match &self.kind {
+            JobKind::Streaming { shards, .. } => shards,
+            JobKind::Resident { reg, .. } => &reg.shards,
+        }
+    }
+
+    fn stripe_len(&self, j: usize) -> usize {
+        self.stripe_cols.min(self.n - j * self.stripe_cols)
+    }
+
+    /// Accumulate one shard's `m × shard.n_len` partial into its
+    /// n-stripe. Shards of different stripes touch disjoint accumulators;
+    /// within a stripe the per-stripe mutex serializes (i32 addition
+    /// commutes, so order never matters).
+    pub fn merge(&self, shard: &Shard, partial: &[i32]) {
+        let j = shard.n0 / self.stripe_cols;
+        let off = shard.n0 - j * self.stripe_cols;
+        let len = self.stripe_len(j);
+        let mut acc = self.stripes[j].lock().unwrap_or_else(PoisonError::into_inner);
+        for r in 0..self.m {
+            let src = &partial[r * shard.n_len..(r + 1) * shard.n_len];
+            let dst = &mut acc[r * len + off..r * len + off + shard.n_len];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+
+    /// Concatenate the finished stripes into the row-major `m × n`
+    /// output (submitter-side, after completion).
+    fn assemble(&self) -> Vec<i32> {
+        let mut out = vec![0i32; self.m * self.n];
+        for j in 0..self.stripes.len() {
+            let len = self.stripe_len(j);
+            let acc = self.stripes[j].lock().unwrap_or_else(PoisonError::into_inner);
+            for r in 0..self.m {
+                out[r * self.n + j * self.stripe_cols..][..len]
+                    .copy_from_slice(&acc[r * len..(r + 1) * len]);
+            }
+        }
+        out
+    }
+}
+
+/// One queued unit of work: one shard of one job.
+pub(crate) struct WorkItem {
+    pub job: Arc<GemmJob>,
+    pub shard: usize,
+}
+
+struct QueueState {
+    /// One FIFO per worker; idle workers steal from neighbours' backs.
+    queues: Vec<VecDeque<WorkItem>>,
+    shutdown: bool,
+}
+
+struct ExecShared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+    stats: ExecStats,
+}
+
+/// Cumulative executor counters.
+#[derive(Default)]
+struct ExecStats {
+    submitted: AtomicU64,
+    executed: AtomicU64,
+    affine: AtomicU64,
+    stolen: AtomicU64,
+    panics: AtomicU64,
+}
+
+/// Point-in-time copy of the executor counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ExecStatsSnapshot {
+    /// Work items enqueued (one per shard per GEMM).
+    pub submitted: u64,
+    /// Work items completed.
+    pub executed: u64,
+    /// Items executed by the worker they were enqueued to (for resident
+    /// shards with a known placement: the thread that owns the array).
+    pub affine: u64,
+    /// Items executed by a different worker (work stealing).
+    pub stolen: u64,
+    /// Items that panicked (job reported failed; worker survived).
+    pub panics: u64,
+}
+
+/// Long-lived worker pool executing [`WorkItem`]s against an
+/// [`EngineCore`]. Dropping it (with the owning engine) shuts the
+/// workers down after the queues drain.
+pub(crate) struct Executor {
+    shared: Arc<ExecShared>,
+    n_workers: usize,
+    rr: AtomicUsize,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl Executor {
+    /// Spawn `n_workers` threads over the core. Worker `w` owns pool
+    /// slot `w` for streaming work, so `n_workers` must not exceed the
+    /// pool size (the engine clamps).
+    pub fn new(core: &Arc<EngineCore>, n_workers: usize) -> Executor {
+        assert!(
+            (1..=core.pool_len()).contains(&n_workers),
+            "worker count must be in 1..=pool size (worker w owns slot w)"
+        );
+        let shared = Arc::new(ExecShared {
+            state: Mutex::new(QueueState {
+                queues: (0..n_workers).map(|_| VecDeque::new()).collect(),
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            stats: ExecStats::default(),
+        });
+        let workers = (0..n_workers)
+            .map(|w| {
+                let core = Arc::clone(core);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sitecim-exec-{w}"))
+                    .spawn(move || worker_loop(core, shared, w))
+                    .expect("spawning engine executor worker")
+            })
+            .collect();
+        Executor { shared, n_workers, rr: AtomicUsize::new(0), workers }
+    }
+
+    pub fn stats(&self) -> ExecStatsSnapshot {
+        let s = &self.shared.stats;
+        ExecStatsSnapshot {
+            submitted: s.submitted.load(Ordering::Relaxed),
+            executed: s.executed.load(Ordering::Relaxed),
+            affine: s.affine.load(Ordering::Relaxed),
+            stolen: s.stolen.load(Ordering::Relaxed),
+            panics: s.panics.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Enqueue one item per shard (`hints[i]` = the pool slot shard `i`
+    /// is expected to execute on, when known), block until the job
+    /// drains, and assemble the output. Errors if any item panicked.
+    pub fn run(&self, job: GemmJob, hints: &[Option<usize>]) -> anyhow::Result<Vec<i32>> {
+        let n_shards = job.shards().len();
+        assert_eq!(hints.len(), n_shards);
+        if n_shards == 0 {
+            return Ok(job.assemble());
+        }
+        let job = Arc::new(job);
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+            for (i, hint) in hints.iter().enumerate() {
+                let target = match hint {
+                    Some(slot) => slot % self.n_workers,
+                    None => self.rr.fetch_add(1, Ordering::Relaxed) % self.n_workers,
+                };
+                st.queues[target].push_back(WorkItem { job: Arc::clone(&job), shard: i });
+            }
+            self.shared.stats.submitted.fetch_add(n_shards as u64, Ordering::Relaxed);
+            self.shared.cv.notify_all();
+        }
+        let mut done = job.done.lock().unwrap_or_else(PoisonError::into_inner);
+        while !*done {
+            done = job.done_cv.wait(done).unwrap_or_else(PoisonError::into_inner);
+        }
+        drop(done);
+        if job.failed.load(Ordering::Acquire) {
+            anyhow::bail!("engine worker panicked executing a shard; output discarded");
+        }
+        Ok(job.assemble())
+    }
+}
+
+impl Drop for Executor {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+            st.shutdown = true;
+            self.shared.cv.notify_all();
+        }
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(core: Arc<EngineCore>, shared: Arc<ExecShared>, w: usize) {
+    loop {
+        let (item, affine) = {
+            let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
+            loop {
+                if let Some(it) = st.queues[w].pop_front() {
+                    break (Some(it), true);
+                }
+                let n = st.queues.len();
+                let mut stolen = None;
+                for off in 1..n {
+                    if let Some(it) = st.queues[(w + off) % n].pop_back() {
+                        stolen = Some(it);
+                        break;
+                    }
+                }
+                if let Some(it) = stolen {
+                    break (Some(it), false);
+                }
+                if st.shutdown {
+                    break (None, false);
+                }
+                st = shared.cv.wait(st).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let Some(item) = item else { return };
+        shared.stats.affine.fetch_add(u64::from(affine), Ordering::Relaxed);
+        shared.stats.stolen.fetch_add(u64::from(!affine), Ordering::Relaxed);
+        let job = Arc::clone(&item.job);
+        // A panicking shard (storage asserts, poisoned invariants) must
+        // not kill the worker — that would strand every queued job and
+        // permanently shrink the pool's parallelism. Mark the job failed
+        // and keep serving; the submitter turns it into an `Err`.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            core.run_item(w, &item);
+        }));
+        if result.is_err() {
+            shared.stats.panics.fetch_add(1, Ordering::Relaxed);
+            job.failed.store(true, Ordering::Release);
+        }
+        shared.stats.executed.fetch_add(1, Ordering::Relaxed);
+        if job.remaining.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut done = job.done.lock().unwrap_or_else(PoisonError::into_inner);
+            *done = true;
+            job.done_cv.notify_all();
+        }
+    }
+}

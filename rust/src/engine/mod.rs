@@ -10,8 +10,8 @@
 //! and each shard executes on a 16-row-aligned *region* (sub-rectangle)
 //! of one array, so several small shards pack into one array and one
 //! oversized tile shards across arrays. Partial products accumulate into
-//! the shared output under a mutex (i32 addition is order-independent,
-//! so single- and multi-threaded runs are bit-identical).
+//! per-n-stripe accumulators (i32 addition is order-independent, so
+//! single- and multi-threaded runs are bit-identical).
 //!
 //! Two execution paths share the pool:
 //!
@@ -21,7 +21,7 @@
 //!   every call.
 //! - **Resident** ([`TernaryGemmEngine::register_weight`] +
 //!   [`TernaryGemmEngine::gemm_resident`]): weights are registered once;
-//!   an LRU [`resident::TileCache`] places their shards onto regions
+//!   a second-chance [`resident::TileCache`] places their shards onto regions
 //!   across the pool and a region is only (re)programmed on a cache
 //!   miss, so steady-state serving pays zero weight-programming — the
 //!   paper's actual weight-stationary premise. Cache hit/miss/evict
@@ -30,20 +30,41 @@
 //! The pool is sized either directly ([`EngineConfig::with_pool`]) or by
 //! a word budget ([`EngineConfig::with_capacity_words`] — e.g. the
 //! paper's 2 M words = 32 arrays of 256×256), in which case a working
-//! set larger than the budget serves under LRU eviction pressure with
-//! measured hit rates, still bit-exact.
+//! set larger than the budget serves under second-chance eviction
+//! pressure with measured hit rates, still bit-exact.
+//!
+//! # Execution: the persistent stripe-scheduled executor
+//!
+//! Since PR 4 the engine no longer spawns scoped threads per call.
+//! [`TernaryGemmEngine::new`] starts a long-lived worker pool
+//! ([`exec::Executor`]); `gemm`/`gemm_resident` decompose into one work
+//! item per shard (each shard belongs to exactly one n-stripe of the
+//! output), enqueue them — resident shards with a known placement go to
+//! the worker that owns their array — and block until the job drains.
+//! Partials merge into per-n-stripe accumulators instead of one global
+//! output mutex. Shard MACs execute through the region-scoped
+//! [`crate::array::CimArray::dot_batch_region`] kernels, so a packed
+//! small tile costs wall-clock proportional to its occupied rows ×
+//! columns — matching what the cycle accounting already claims — rather
+//! than a full-array `dot_batch` that gets sliced. See `exec` for the
+//! queue/affinity design.
 //!
 //! The specification for both paths is [`tiling::reference_gemm`] (tile
 //! shape = array shape, the default) or the general
 //! [`tiling::reference_gemm_sharded`] — `mac::dot_ref` composed over
 //! array-shaped shard images — and both match it bit-for-bit for all
-//! three backends, any thread count and any cache/capacity state
-//! (tests/cim_conformance.rs, tests/eviction_pressure.rs).
+//! three backends, any thread count, any cache/capacity state and any
+//! interleaving of concurrent submissions (tests/cim_conformance.rs,
+//! tests/eviction_pressure.rs, tests/region_kernels.rs,
+//! tests/executor_stress.rs).
 
+mod exec;
 pub mod resident;
 pub mod tiling;
 
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+pub use self::exec::ExecStatsSnapshot;
+
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{ensure, Result};
@@ -53,6 +74,7 @@ use crate::array::encoding::Trit;
 use crate::array::mac::GROUP_ROWS;
 use crate::array::{make_array, CimArray};
 use crate::device::Tech;
+use self::exec::{Executor, GemmJob, JobKind, WorkItem};
 use self::resident::{RegisteredWeight, TileCache, TileKey, WeightId};
 use self::tiling::{Rect, Shard, TileGrid};
 
@@ -79,7 +101,7 @@ pub struct EngineConfig {
     pub tile_cols: Option<usize>,
     /// Capacity-bounded pool mode: size the pool to this many ternary
     /// words — ⌊words / array_words⌋ arrays (never exceeding the
-    /// budget), with a floor of one array — and serve under LRU eviction
+    /// budget), with a floor of one array — and serve under second-chance eviction
     /// pressure when the working set is larger.
     pub capacity_words: Option<u64>,
 }
@@ -204,7 +226,7 @@ pub struct EngineStatsSnapshot {
     pub hits: u64,
     /// Resident-cache placement misses (shard had to be placed).
     pub misses: u64,
-    /// Resident regions displaced by placements (LRU victims).
+    /// Resident regions displaced by placements (second-chance victims).
     pub evictions: u64,
 }
 
@@ -260,15 +282,160 @@ impl PoolSlot {
     }
 }
 
-/// Functional tiled ternary GEMM over a pool of [`CimArray`] backends.
-pub struct TernaryGemmEngine {
+/// The engine's shared state: configuration, array pool, placement
+/// cache, weight registry and work counters. The executor's worker
+/// threads hold an `Arc` of this; the public [`TernaryGemmEngine`] is a
+/// handle over it plus the executor itself.
+pub(crate) struct EngineCore {
     cfg: EngineConfig,
     pool: Vec<Mutex<PoolSlot>>,
     stats: EngineStats,
-    /// LRU placement of registered shards onto pool regions.
+    /// Second-chance placement of registered shards onto pool regions.
     cache: Mutex<TileCache>,
     /// Registered weights by id (ids are never reused).
     registry: RwLock<Vec<Arc<RegisteredWeight>>>,
+}
+
+impl EngineCore {
+    /// Lock a pool slot, recovering from poisoning. The engine is shared
+    /// across serving workers that catch panics and keep going; a panic
+    /// mid-programming must not brick every later request. Recovery is
+    /// safe because a region's tag is cleared *before* any write to its
+    /// rect and only restored after it completes — an interrupted write
+    /// leaves the region untagged, so the next user re-programs it.
+    fn lock_slot(&self, slot: usize) -> std::sync::MutexGuard<'_, PoolSlot> {
+        self.pool[slot].lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Lock the placement cache, recovering from poisoning (the cache is
+    /// routing only — stale routing at worst costs a re-program).
+    fn lock_cache(&self) -> std::sync::MutexGuard<'_, TileCache> {
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Physical arrays in the pool (the executor sizes its worker count
+    /// by this).
+    pub(crate) fn pool_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Execute one queued work item: run its shard's region-scoped MAC
+    /// and merge the partial into the job's n-stripe accumulator. Called
+    /// from executor worker threads; `worker` is the executing worker's
+    /// index (= the pool slot it owns for streaming work).
+    pub(crate) fn run_item(&self, worker: usize, item: &WorkItem) {
+        let job = &item.job;
+        let shard = &job.shards()[item.shard];
+        let partial = match &job.kind {
+            JobKind::Streaming { x, w, grid, .. } => {
+                self.exec_streaming_shard(worker, x, w, job.m, grid, shard)
+            }
+            JobKind::Resident { reg, x } => {
+                self.exec_resident_shard(reg, x, job.m, item.shard, shard)
+            }
+        };
+        job.merge(shard, &partial);
+    }
+
+    /// Streaming shard: program this worker's own array (only the
+    /// shard's region — everything else is never read) and run the
+    /// region-scoped batch MAC at the array's top-left.
+    fn exec_streaming_shard(
+        &self,
+        slot_idx: usize,
+        x: &[Trit],
+        w: &[Trit],
+        m: usize,
+        grid: &TileGrid,
+        shard: &Shard,
+    ) -> Vec<i32> {
+        let rect = Rect { row0: 0, rows: shard.padded_rows(), col0: 0, cols: shard.n_len };
+        // This worker is about to overwrite its array: drop any resident
+        // placement routed to it (lock order is always cache → pool).
+        self.lock_cache().invalidate_slot(slot_idx);
+        let mut slot = self.lock_slot(slot_idx);
+        let mut wbuf = vec![0i8; rect.rows * rect.cols];
+        tiling::extract_shard_weights(w, grid.k, grid.n, shard, rect.rows, rect.cols, &mut wbuf);
+        slot.programmed.clear();
+        slot.arr.write_region(0, 0, rect.rows, rect.cols, &wbuf);
+        let mut xbuf = vec![0i8; m * rect.rows];
+        for r in 0..m {
+            tiling::extract_shard_inputs(
+                &x[r * grid.k..(r + 1) * grid.k],
+                shard,
+                0,
+                &mut xbuf[r * rect.rows..(r + 1) * rect.rows],
+            );
+        }
+        let partial = slot.arr.dot_batch_region(&rect, &xbuf, m);
+        drop(slot);
+        let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
+        self.stats.tiles.fetch_add(1, Ordering::Relaxed);
+        self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
+        self.stats.windows.fetch_add(windows, Ordering::Relaxed);
+        self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
+        partial
+    }
+
+    /// Resident shard: route through the placement cache to a region,
+    /// program only when the region's content tag does not already hold
+    /// the shard, run the region-scoped batch MAC in place.
+    fn exec_resident_shard(
+        &self,
+        reg: &RegisteredWeight,
+        x: &[Trit],
+        m: usize,
+        shard_idx: usize,
+        shard: &Shard,
+    ) -> Vec<i32> {
+        let key: TileKey = (reg.id, shard_idx);
+        let placement = self.lock_cache().place(key, shard.k_len, shard.n_len);
+        if placement.hit {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.stats.misses.fetch_add(1, Ordering::Relaxed);
+            self.stats.evictions.fetch_add(placement.evicted, Ordering::Relaxed);
+        }
+        let rect = placement.rect;
+        let mut slot = self.lock_slot(placement.slot);
+        if !slot.holds(&rect, key) {
+            let mut wbuf = vec![0i8; rect.rows * rect.cols];
+            tiling::extract_shard_weights(
+                &reg.w, reg.grid.k, reg.grid.n, shard, rect.rows, rect.cols, &mut wbuf,
+            );
+            // Overlapping tags are dropped across the write so an
+            // interrupted programming pass can never masquerade as a
+            // valid region.
+            slot.clear_overlapping(&rect);
+            slot.arr.write_region(rect.row0, rect.col0, rect.rows, rect.cols, &wbuf);
+            slot.programmed.push((rect, key));
+            self.stats.tiles.fetch_add(1, Ordering::Relaxed);
+            self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
+        }
+        let mut xbuf = vec![0i8; m * rect.rows];
+        for r in 0..m {
+            tiling::extract_shard_inputs(
+                &x[r * reg.grid.k..(r + 1) * reg.grid.k],
+                shard,
+                0,
+                &mut xbuf[r * rect.rows..(r + 1) * rect.rows],
+            );
+        }
+        let partial = slot.arr.dot_batch_region(&rect, &xbuf, m);
+        drop(slot);
+        let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
+        self.stats.windows.fetch_add(windows, Ordering::Relaxed);
+        self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
+        partial
+    }
+}
+
+/// Functional tiled ternary GEMM over a pool of [`CimArray`] backends,
+/// executed by a persistent stripe-scheduled worker pool (see [`exec`]'s
+/// module docs — per-slot affinity, work stealing, per-stripe merge).
+pub struct TernaryGemmEngine {
+    core: Arc<EngineCore>,
+    exec: Executor,
 }
 
 impl TernaryGemmEngine {
@@ -287,67 +454,61 @@ impl TernaryGemmEngine {
                 })
             })
             .collect();
-        TernaryGemmEngine {
+        let core = Arc::new(EngineCore {
             cache: Mutex::new(TileCache::new(n_arrays, cfg.array_rows, cfg.array_cols)),
             registry: RwLock::new(Vec::new()),
             cfg,
             pool,
             stats: EngineStats::default(),
-        }
+        });
+        let workers = core.cfg.n_threads.clamp(1, n_arrays);
+        let exec = Executor::new(&core, workers);
+        TernaryGemmEngine { core, exec }
     }
 
     pub fn cfg(&self) -> &EngineConfig {
-        &self.cfg
-    }
-
-    /// Lock a pool slot, recovering from poisoning. The engine is shared
-    /// across serving workers that catch panics and keep going; a panic
-    /// mid-programming must not brick every later request. Recovery is
-    /// safe because a region's tag is cleared *before* any write to its
-    /// rect and only restored after it completes — an interrupted write
-    /// leaves the region untagged, so the next user re-programs it.
-    fn lock_slot(&self, slot: usize) -> std::sync::MutexGuard<'_, PoolSlot> {
-        self.pool[slot].lock().unwrap_or_else(std::sync::PoisonError::into_inner)
-    }
-
-    /// Lock the placement cache, recovering from poisoning (the cache is
-    /// routing only — stale routing at worst costs a re-program).
-    fn lock_cache(&self) -> std::sync::MutexGuard<'_, TileCache> {
-        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+        &self.core.cfg
     }
 
     /// Physical arrays in the pool.
     pub fn pool_arrays(&self) -> usize {
-        self.pool.len()
+        self.core.pool.len()
     }
 
     /// Ternary-word capacity of the pool.
     pub fn capacity_words(&self) -> u64 {
-        (self.pool.len() * self.cfg.array_rows * self.cfg.array_cols) as u64
+        (self.core.pool.len() * self.core.cfg.array_rows * self.core.cfg.array_cols) as u64
     }
 
     /// Regions (placed shards) currently resident in the pool.
     pub fn resident_tiles(&self) -> usize {
-        self.lock_cache().resident_regions()
+        self.core.lock_cache().resident_regions()
     }
 
     pub fn stats(&self) -> EngineStatsSnapshot {
+        let stats = &self.core.stats;
         EngineStatsSnapshot {
-            gemms: self.stats.gemms.load(Ordering::Relaxed),
-            tiles: self.stats.tiles.load(Ordering::Relaxed),
-            windows: self.stats.windows.load(Ordering::Relaxed),
-            macs: self.stats.macs.load(Ordering::Relaxed),
-            write_rows: self.stats.write_rows.load(Ordering::Relaxed),
-            hits: self.stats.hits.load(Ordering::Relaxed),
-            misses: self.stats.misses.load(Ordering::Relaxed),
-            evictions: self.stats.evictions.load(Ordering::Relaxed),
+            gemms: stats.gemms.load(Ordering::Relaxed),
+            tiles: stats.tiles.load(Ordering::Relaxed),
+            windows: stats.windows.load(Ordering::Relaxed),
+            macs: stats.macs.load(Ordering::Relaxed),
+            write_rows: stats.write_rows.load(Ordering::Relaxed),
+            hits: stats.hits.load(Ordering::Relaxed),
+            misses: stats.misses.load(Ordering::Relaxed),
+            evictions: stats.evictions.load(Ordering::Relaxed),
         }
+    }
+
+    /// Executor counters: items submitted/executed, affinity vs steal
+    /// split, panics survived.
+    pub fn exec_stats(&self) -> ExecStatsSnapshot {
+        self.exec.stats()
     }
 
     /// The tile grid a GEMM of this shape maps to on this engine's
     /// placement granularity (the array shape unless decoupled).
     pub fn grid(&self, k: usize, n: usize) -> TileGrid {
-        TileGrid::new(k, n, self.cfg.tile_rows(), self.cfg.tile_cols())
+        TileGrid::new(k, n, self.core.cfg.tile_rows(), self.core.cfg.tile_cols())
     }
 
     /// Register a row-major K×N ternary weight matrix for resident
@@ -359,8 +520,9 @@ impl TernaryGemmEngine {
         ensure!(k > 0 && n > 0, "empty weight matrix ({k}×{n})");
         ensure!(w.len() == k * n, "weights must be k×n = {k}×{n}, got {} trits", w.len());
         let grid = self.grid(k, n);
-        let shards = grid.shards(self.cfg.array_rows, self.cfg.array_cols);
-        let mut reg = self.registry.write().unwrap_or_else(std::sync::PoisonError::into_inner);
+        let shards = grid.shards(self.core.cfg.array_rows, self.core.cfg.array_cols);
+        let mut reg =
+            self.core.registry.write().unwrap_or_else(std::sync::PoisonError::into_inner);
         let id = reg.len();
         reg.push(Arc::new(RegisteredWeight { id, k, n, grid, shards, w: w.to_vec() }));
         Ok(WeightId(id))
@@ -368,7 +530,8 @@ impl TernaryGemmEngine {
 
     /// Shape (k, n) of a registered weight.
     pub fn registered_shape(&self, id: WeightId) -> Option<(usize, usize)> {
-        self.registry
+        self.core
+            .registry
             .read()
             .unwrap_or_else(std::sync::PoisonError::into_inner)
             .get(id.0)
@@ -379,7 +542,9 @@ impl TernaryGemmEngine {
     /// trits) × `w` (row-major K×N trits) → row-major M×N i32 outputs,
     /// under the backend's MAC semantics (saturating per 16-row group for
     /// the CiM flavors, exact for near-memory). Every shard is programmed
-    /// on every call. Deterministic: bit-identical to
+    /// on every call. The shards run as work items on the persistent
+    /// executor (each on its executing worker's own array).
+    /// Deterministic: bit-identical to
     /// [`tiling::reference_gemm_sharded`] regardless of thread count
     /// (= [`tiling::reference_gemm`] at the default tile shape).
     pub fn gemm(&self, x: &[Trit], w: &[Trit], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
@@ -388,30 +553,27 @@ impl TernaryGemmEngine {
         ensure!(x.len() == m * k, "x must be m×k = {m}×{k}, got {} trits", x.len());
         ensure!(w.len() == k * n, "w must be k×n = {k}×{n}, got {} trits", w.len());
         let grid = self.grid(k, n);
-        let shards = grid.shards(self.cfg.array_rows, self.cfg.array_cols);
-        let out = Mutex::new(vec![0i32; m * n]);
-        let next = AtomicUsize::new(0);
-        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(shards.len());
-        std::thread::scope(|s| {
-            for wid in 0..workers {
-                let (shards, out, next, grid) = (&shards, &out, &next, &grid);
-                s.spawn(move || self.run_shards_streaming(wid, x, w, m, grid, shards, next, out));
-            }
-        });
-        self.stats.gemms.fetch_add(1, Ordering::Relaxed);
-        Ok(out.into_inner().unwrap())
+        let shards = grid.shards(self.core.cfg.array_rows, self.core.cfg.array_cols);
+        let hints = vec![None; shards.len()];
+        let job = GemmJob::streaming(x.to_vec(), w.to_vec(), grid, shards, m, n);
+        let out = self.exec.run(job, &hints)?;
+        self.core.stats.gemms.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
     }
 
     /// Execute a ternary GEMM against a registered weight in resident
     /// mode: shards already placed in the pool are reused as-is
     /// (placement hit → no programming), missing shards are placed via
-    /// LRU region eviction and programmed once. Bit-identical to the
-    /// streaming path and to the sharded reference for any thread count,
-    /// any cache state and any pool capacity.
+    /// second-chance region eviction and programmed once. Work items for
+    /// already-placed shards are enqueued to the worker that owns their
+    /// array (per-slot affinity). Bit-identical to the streaming path
+    /// and to the sharded reference for any thread count, any cache
+    /// state, any pool capacity and any concurrent-submission
+    /// interleaving.
     pub fn gemm_resident(&self, id: WeightId, x: &[Trit], m: usize) -> Result<Vec<i32>> {
         let reg = {
             let registry =
-                self.registry.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+                self.core.registry.read().unwrap_or_else(std::sync::PoisonError::into_inner);
             match registry.get(id.0) {
                 Some(r) => Arc::clone(r),
                 None => anyhow::bail!("unknown weight id {} (register_weight first)", id.0),
@@ -424,154 +586,17 @@ impl TernaryGemmEngine {
             reg.k,
             x.len()
         );
-        let out = Mutex::new(vec![0i32; m * reg.n]);
-        let next = AtomicUsize::new(0);
-        let workers = self.cfg.n_threads.clamp(1, self.pool.len()).min(reg.shards.len());
-        std::thread::scope(|s| {
-            for _ in 0..workers {
-                let (reg, out, next) = (&reg, &out, &next);
-                s.spawn(move || self.run_shards_resident(reg, x, m, next, out));
-            }
-        });
-        self.stats.gemms.fetch_add(1, Ordering::Relaxed);
-        Ok(out.into_inner().unwrap())
-    }
-
-    /// Streaming worker loop: claim shards off the shared counter,
-    /// program this worker's own array whole, stream the batch, merge
-    /// partials.
-    #[allow(clippy::too_many_arguments)]
-    fn run_shards_streaming(
-        &self,
-        wid: usize,
-        x: &[Trit],
-        w: &[Trit],
-        m: usize,
-        grid: &TileGrid,
-        shards: &[Shard],
-        next: &AtomicUsize,
-        out: &Mutex<Vec<i32>>,
-    ) {
-        let (rows, cols) = (self.cfg.array_rows, self.cfg.array_cols);
-        // This worker is about to overwrite its array: drop any resident
-        // placement routed to it (lock order is always cache → pool).
-        self.lock_cache().invalidate_slot(wid);
-        let mut slot = self.lock_slot(wid);
-        let mut wbuf = vec![0i8; rows * cols];
-        let mut xbuf = vec![0i8; m * rows];
-        loop {
-            let ti = next.fetch_add(1, Ordering::Relaxed);
-            let Some(shard) = shards.get(ti) else { break };
-            // Stream the shard's weights in (once per shard, weight-
-            // stationary across the whole batch).
-            tiling::extract_shard_weights(w, grid.k, grid.n, shard, rows, cols, &mut wbuf);
-            slot.programmed.clear();
-            slot.arr.write_matrix(&wbuf);
-            for r in 0..m {
-                tiling::extract_shard_inputs(
-                    &x[r * grid.k..(r + 1) * grid.k],
-                    shard,
-                    0,
-                    &mut xbuf[r * rows..(r + 1) * rows],
-                );
-            }
-            let partial = slot.arr.dot_batch(&xbuf, m);
-            self.merge_partial(out, &partial, shard, 0, grid.n, m, cols);
-            self.stats.tiles.fetch_add(1, Ordering::Relaxed);
-            self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
-            self.stats
-                .windows
-                .fetch_add((m * shard.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
-            self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
-        }
-    }
-
-    /// Resident worker loop: claim shards, route each through the
-    /// placement cache to a region, program only when the region's
-    /// content tag does not already hold the shard, stream the batch,
-    /// merge partials.
-    fn run_shards_resident(
-        &self,
-        reg: &RegisteredWeight,
-        x: &[Trit],
-        m: usize,
-        next: &AtomicUsize,
-        out: &Mutex<Vec<i32>>,
-    ) {
-        let (rows, cols) = (self.cfg.array_rows, self.cfg.array_cols);
-        // Weight buffer is only needed on a miss; the steady-state
-        // all-hit serving path never fills it.
-        let mut wbuf: Vec<i8> = Vec::new();
-        let mut xbuf = vec![0i8; m * rows];
-        loop {
-            let ti = next.fetch_add(1, Ordering::Relaxed);
-            let Some(shard) = reg.shards.get(ti) else { break };
-            let key: TileKey = (reg.id, ti);
-            let placement = self.lock_cache().place(key, shard.k_len, shard.n_len);
-            if placement.hit {
-                self.stats.hits.fetch_add(1, Ordering::Relaxed);
-            } else {
-                self.stats.misses.fetch_add(1, Ordering::Relaxed);
-                self.stats.evictions.fetch_add(placement.evicted, Ordering::Relaxed);
-            }
-            let rect = placement.rect;
-            let mut slot = self.lock_slot(placement.slot);
-            if !slot.holds(&rect, key) {
-                wbuf.clear();
-                wbuf.resize(rect.rows * rect.cols, 0);
-                tiling::extract_shard_weights(
-                    &reg.w, reg.grid.k, reg.grid.n, shard, rect.rows, rect.cols, &mut wbuf,
-                );
-                // Overlapping tags are dropped across the write so an
-                // interrupted programming pass can never masquerade as a
-                // valid region.
-                slot.clear_overlapping(&rect);
-                slot.arr.write_region(rect.row0, rect.col0, rect.rows, rect.cols, &wbuf);
-                slot.programmed.push((rect, key));
-                self.stats.tiles.fetch_add(1, Ordering::Relaxed);
-                self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
-            }
-            for r in 0..m {
-                tiling::extract_shard_inputs(
-                    &x[r * reg.grid.k..(r + 1) * reg.grid.k],
-                    shard,
-                    rect.row0,
-                    &mut xbuf[r * rows..(r + 1) * rows],
-                );
-            }
-            let partial = slot.arr.dot_batch(&xbuf, m);
-            drop(slot);
-            self.merge_partial(out, &partial, shard, rect.col0, reg.grid.n, m, cols);
-            self.stats
-                .windows
-                .fetch_add((m * shard.k_len.div_ceil(GROUP_ROWS)) as u64, Ordering::Relaxed);
-            self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
-        }
-    }
-
-    /// Accumulate one region's batch of partial products into the shared
-    /// output (i32 addition commutes, so merge order never matters). The
-    /// shard's columns start at `src_col0` of the array's `src_cols`-wide
-    /// output rows.
-    #[allow(clippy::too_many_arguments)]
-    fn merge_partial(
-        &self,
-        out: &Mutex<Vec<i32>>,
-        partial: &[i32],
-        shard: &Shard,
-        src_col0: usize,
-        n: usize,
-        m: usize,
-        src_cols: usize,
-    ) {
-        let mut o = out.lock().unwrap();
-        for r in 0..m {
-            let src = &partial[r * src_cols + src_col0..r * src_cols + src_col0 + shard.n_len];
-            let base = r * n + shard.n0;
-            for (d, s) in o[base..base + shard.n_len].iter_mut().zip(src) {
-                *d += s;
-            }
-        }
+        // Affinity probe: shards with a known placement land on the
+        // worker that owns their array (a read-only peek — routing is
+        // not a use, so it leaves the second-chance bit alone).
+        let hints: Vec<Option<usize>> = {
+            let cache = self.core.lock_cache();
+            (0..reg.shards.len()).map(|i| cache.peek_slot((reg.id, i))).collect()
+        };
+        let job = GemmJob::resident(reg, x.to_vec(), m);
+        let out = self.exec.run(job, &hints)?;
+        self.core.stats.gemms.fetch_add(1, Ordering::Relaxed);
+        Ok(out)
     }
 }
 
@@ -768,6 +793,76 @@ mod tests {
             assert_eq!(s.evictions, 0, "{design:?} all four pack into the array");
             assert_eq!(eng.resident_tiles(), 4);
         }
+    }
+
+    #[test]
+    fn executor_drains_every_submitted_item() {
+        let mut rng = Rng::new(50);
+        let (m, k, n) = (2usize, 150usize, 60usize); // 3×2 grid = 6 shards
+        let eng = small_engine(Design::Cim1, 2);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        eng.gemm(&x, &w, m, k, n).unwrap();
+        let id = eng.register_weight(&w, k, n).unwrap();
+        eng.gemm_resident(id, &x, m).unwrap();
+        let s = eng.exec_stats();
+        assert_eq!(s.submitted, 12, "6 shards × 2 GEMMs");
+        assert_eq!(s.executed, 12, "every item drained");
+        assert_eq!(s.affine + s.stolen, s.executed);
+        assert_eq!(s.panics, 0);
+    }
+
+    #[test]
+    fn single_worker_executes_in_submission_order_all_affine() {
+        // One worker: no stealing is possible, every item runs from its
+        // own queue in FIFO order (the determinism the closed-form
+        // eviction tests rely on).
+        let mut rng = Rng::new(51);
+        let (m, k, n) = (1usize, 300usize, 32usize);
+        let eng = small_engine(Design::Cim2, 1);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let id = eng.register_weight(&w, k, n).unwrap();
+        eng.gemm_resident(id, &x, m).unwrap();
+        eng.gemm_resident(id, &x, m).unwrap();
+        let s = eng.exec_stats();
+        assert_eq!(s.stolen, 0);
+        assert_eq!(s.affine, s.executed);
+    }
+
+    #[test]
+    fn concurrent_submissions_pipeline_through_one_executor() {
+        // Several caller threads submit resident GEMMs against different
+        // weights at once; every result must equal its single-threaded
+        // reference (per-stripe merges never cross jobs).
+        let mut rng = Rng::new(52);
+        let eng = TernaryGemmEngine::new(
+            EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_pool(8)
+                .with_threads(4),
+        );
+        let mut cases = Vec::new();
+        for _ in 0..4 {
+            let (m, k, n) = (2usize, 130usize, 50usize);
+            let x = rng.ternary_vec(m * k, 0.5);
+            let w = rng.ternary_vec(k * n, 0.5);
+            let want = tiling::reference_gemm(&x, &w, m, &eng.grid(k, n), Design::Cim1.flavor());
+            let id = eng.register_weight(&w, k, n).unwrap();
+            cases.push((id, x, m, want));
+        }
+        let engref = &eng;
+        std::thread::scope(|sc| {
+            for (id, x, m, want) in &cases {
+                sc.spawn(move || {
+                    for _ in 0..3 {
+                        assert_eq!(engref.gemm_resident(*id, x, *m).unwrap(), *want);
+                    }
+                });
+            }
+        });
+        let s = eng.exec_stats();
+        assert_eq!(s.submitted, s.executed, "shutdown-free drain");
     }
 
     #[test]

@@ -8,15 +8,40 @@
 //!
 //! - [`WeightId`] — handle returned by `TernaryGemmEngine::register_weight`;
 //!   the engine keeps the (single) ternary weight copy for cache refills.
-//! - [`TileCache`] — an LRU map from [`TileKey`] (weight, shard index)
-//!   to *regions*: 16-row-aligned [`Rect`]s inside pool slots, handed
-//!   out by a per-slot shelf allocator. Placement granularity is the
-//!   shard, not the physical array, so several small shards pack into
-//!   one array and an oversized tile's shards spread across arrays.
-//!   `place` returns the slot + rect plus whether the placement was
-//!   already cached; when no free rect exists anywhere, least-recently-
-//!   used regions are evicted until the request fits (a request never
-//!   exceeds one array — the engine shards first).
+//! - [`TileCache`] — a second-chance (CLOCK) map from [`TileKey`]
+//!   (weight, shard index) to *regions*: 16-row-aligned [`Rect`]s inside
+//!   pool slots, handed out by a per-slot shelf allocator. Placement
+//!   granularity is the shard, not the physical array, so several small
+//!   shards pack into one array and an oversized tile's shards spread
+//!   across arrays. `place` returns the slot + rect plus whether the
+//!   placement was already cached; when no free rect exists anywhere,
+//!   resident regions are evicted until the request fits (a request
+//!   never exceeds one array — the engine shards first).
+//!
+//! # Eviction policy: sweep-resistant second chance
+//!
+//! PR 3's pure LRU had the classic pathology: a cyclic sweep of W tiles
+//! through a C-array pool (W > C) evicts every tile just before its
+//! reuse — 0% hits at *any* capacity below the working set. The CLOCK
+//! variant here keeps a victim queue whose front is the next probe:
+//!
+//! - a placement **hit** sets the region's *referenced* bit (its second
+//!   chance);
+//! - a **new** region enters at the *front* of the queue with the bit
+//!   clear, so the freshest unproven region is on probation and gets
+//!   evicted first;
+//! - the eviction scan pops the front: a referenced region is recycled
+//!   to the back with its bit cleared, an unreferenced one is evicted.
+//!
+//! On a cyclic sweep the probation slot churns through the sweep while
+//! regions that demonstrated reuse stay resident: steady-state hits are
+//! proportional to capacity (roughly the fraction of the working set
+//! that fits, minus the probation slot) instead of zero. The scan
+//! terminates because every recycle clears a bit. Eviction *order* is
+//! deterministic for a deterministic access order (the closed forms in
+//! `tests/eviction_pressure.rs` pin it), and the policy only changes
+//! *which* regions are resident — never correctness, which the content
+//! tags guarantee under any placement.
 //!
 //! The cache only decides *routing*. Whether a rect's cells actually
 //! hold the shard is tracked by per-region `programmed` tags on the pool
@@ -31,7 +56,7 @@
 //! at any placement (see the `tiling` module docs for the translation-
 //! invariance argument).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 
 use crate::array::encoding::Trit;
 use crate::array::mac::GROUP_ROWS;
@@ -186,19 +211,23 @@ impl SlotSpace {
 struct RegionInfo {
     slot: usize,
     rect: Rect,
-    stamp: u64,
+    /// Second-chance bit: set on every placement hit, cleared when the
+    /// eviction scan recycles the region past the probe.
+    referenced: bool,
 }
 
-/// LRU placement of shard keys onto sub-array regions of the pool.
-/// Purely bookkeeping — no array access happens here; callers hold the
-/// engine's cache mutex.
+/// Second-chance (CLOCK) placement of shard keys onto sub-array regions
+/// of the pool. Purely bookkeeping — no array access happens here;
+/// callers hold the engine's cache mutex.
 #[derive(Debug)]
 pub(crate) struct TileCache {
     slot_rows: usize,
     slot_cols: usize,
     slots: Vec<SlotSpace>,
     map: HashMap<TileKey, RegionInfo>,
-    clock: u64,
+    /// Victim queue: front = next eviction probe. New regions enter at
+    /// the front (probation); referenced regions recycle to the back.
+    order: VecDeque<TileKey>,
 }
 
 impl TileCache {
@@ -214,7 +243,7 @@ impl TileCache {
             slot_cols,
             slots: vec![SlotSpace::default(); n_slots],
             map: HashMap::new(),
-            clock: 0,
+            order: VecDeque::new(),
         }
     }
 
@@ -223,10 +252,17 @@ impl TileCache {
         self.map.len()
     }
 
+    /// The slot `key` is currently routed to, if any — a read-only probe
+    /// for the executor's queue affinity (does not touch the second-
+    /// chance bit: routing a work item is not a use of the region).
+    pub fn peek_slot(&self, key: TileKey) -> Option<usize> {
+        self.map.get(&key).map(|info| info.slot)
+    }
+
     /// Route `key` to a 16-row-aligned region of (at least) `rows × cols`
     /// cells: reuse its mapping on a hit, otherwise claim free space
-    /// anywhere in the pool, evicting least-recently-used regions until
-    /// some slot fits the request.
+    /// anywhere in the pool, evicting second-chance victims until some
+    /// slot fits the request.
     pub fn place(&mut self, key: TileKey, rows: usize, cols: usize) -> Placement {
         let rows = rows.div_ceil(GROUP_ROWS) * GROUP_ROWS;
         assert!(
@@ -235,10 +271,8 @@ impl TileCache {
             self.slot_rows,
             self.slot_cols
         );
-        self.clock += 1;
-        let clock = self.clock;
         if let Some(info) = self.map.get_mut(&key) {
-            info.stamp = clock;
+            info.referenced = true;
             return Placement { slot: info.slot, rect: info.rect, hit: true, evicted: 0 };
         }
         let mut evicted = 0u64;
@@ -246,28 +280,41 @@ impl TileCache {
             for s in 0..self.slots.len() {
                 if let Some(rect) = self.slots[s].alloc(self.slot_rows, self.slot_cols, rows, cols)
                 {
-                    self.map.insert(key, RegionInfo { slot: s, rect, stamp: clock });
+                    self.map.insert(key, RegionInfo { slot: s, rect, referenced: false });
+                    self.order.push_front(key);
                     return Placement { slot: s, rect, hit: false, evicted };
                 }
             }
-            // No free rect anywhere: evict the LRU region and retry
-            // (evicting drains some slot to empty in the worst case, and
-            // any sharded request fits an empty array, so this ends).
-            let victim = self
-                .map
-                .iter()
-                .min_by_key(|&(k, info)| (info.stamp, *k))
-                .map(|(k, _)| *k)
-                .expect("an array-fitting request cannot fail with nothing resident");
-            let info = self.map.remove(&victim).unwrap();
-            self.slots[info.slot].free(&info.rect);
-            evicted += 1;
+            // No free rect anywhere: run the second-chance scan from the
+            // probe and retry (each recycle clears a bit, so the scan
+            // terminates; evicting drains some slot to empty in the
+            // worst case, and any sharded request fits an empty array,
+            // so the outer loop ends too).
+            loop {
+                let victim = self
+                    .order
+                    .pop_front()
+                    .expect("an array-fitting request cannot fail with nothing resident");
+                let referenced =
+                    self.map.get(&victim).expect("victim queue tracks the map").referenced;
+                if referenced {
+                    self.map.get_mut(&victim).unwrap().referenced = false;
+                    self.order.push_back(victim);
+                } else {
+                    let info = self.map.remove(&victim).unwrap();
+                    self.slots[info.slot].free(&info.rect);
+                    evicted += 1;
+                    break;
+                }
+            }
         }
     }
 
     /// Forget every region placed on `slot` (the streaming path borrowed
     /// the whole array, so no placement there matches its cells anymore).
     pub fn invalidate_slot(&mut self, slot: usize) {
+        let map = &self.map;
+        self.order.retain(|key| map.get(key).is_some_and(|info| info.slot != slot));
         self.map.retain(|_, info| info.slot != slot);
         self.slots[slot].clear();
     }
@@ -318,30 +365,65 @@ mod tests {
     }
 
     #[test]
-    fn lru_evicts_least_recently_used() {
+    fn second_chance_evicts_probation_before_referenced() {
         let mut c = TileCache::new(2, 64, 32);
         let a = full(&mut c, (0, 0)).slot;
         let b = full(&mut c, (0, 1)).slot;
         assert_ne!(a, b);
-        // Touch (0,0) so (0,1) is the LRU victim.
+        // (0,0) proves reuse; (0,1) never does.
         assert!(full(&mut c, (0, 0)).hit);
         let p = full(&mut c, (0, 2));
         assert!(!p.hit && p.evicted == 1);
-        assert_eq!(p.slot, b);
-        // (0,1) was displaced; (0,0) survived.
-        assert!(full(&mut c, (0, 0)).hit);
+        assert_eq!(p.slot, b, "the unreferenced region is the victim");
+        assert!(full(&mut c, (0, 0)).hit, "the referenced region survived");
         assert!(!full(&mut c, (0, 1)).hit);
     }
 
     #[test]
-    fn sequential_sweep_larger_than_cache_never_hits() {
-        // The classic LRU pathology the counters must make visible.
+    fn referenced_regions_recycle_once_then_yield() {
+        // Both residents referenced: the scan recycles both (clearing
+        // their bits) and evicts the first one it revisits — exactly one
+        // eviction, never a livelock.
+        let mut c = TileCache::new(2, 64, 32);
+        full(&mut c, (0, 0));
+        let b = full(&mut c, (0, 1)).slot;
+        assert!(full(&mut c, (0, 0)).hit);
+        assert!(full(&mut c, (0, 1)).hit);
+        let p = full(&mut c, (0, 2));
+        assert!(!p.hit);
+        assert_eq!(p.evicted, 1);
+        assert_eq!(p.slot, b, "the recycle order revisits (0,1) first");
+        assert!(full(&mut c, (0, 0)).hit);
+    }
+
+    #[test]
+    fn cyclic_sweep_hits_capacity_proportionally() {
+        // The pathology the policy swap fixes: LRU measured 0% here. A
+        // 4-tile cyclic sweep through 3 slots keeps C−1 = 2 regions
+        // resident in steady state while the probation slot churns.
         let mut c = TileCache::new(3, 64, 32);
-        for pass in 0..2 {
+        for pass in 0..3 {
+            let mut hits = 0;
             for t in 0..4 {
-                assert!(!full(&mut c, (0, t)).hit, "pass {pass} tile {t}");
+                hits += u64::from(full(&mut c, (0, t)).hit);
             }
+            let want = if pass == 0 { 0 } else { 2 };
+            assert_eq!(hits, want, "pass {pass}");
         }
+    }
+
+    #[test]
+    fn peek_slot_routes_without_touching_the_bit() {
+        let mut c = TileCache::new(2, 64, 32);
+        assert_eq!(c.peek_slot((0, 0)), None);
+        let s = full(&mut c, (0, 0)).slot;
+        full(&mut c, (0, 1));
+        assert_eq!(c.peek_slot((0, 0)), Some(s));
+        // A peek is not a use: (0,0) stays unreferenced, so it loses to
+        // the referenced (0,1) when the scan needs a victim.
+        assert!(full(&mut c, (0, 1)).hit);
+        full(&mut c, (0, 2));
+        assert_eq!(c.peek_slot((0, 0)), None, "peeked-but-unreferenced region evicted");
     }
 
     #[test]
@@ -412,13 +494,86 @@ mod tests {
         c.place((0, 0), 32, 16);
         c.place((0, 1), 32, 16);
         c.place((0, 2), 32, 32);
-        // Evicting the two top-shelf neighbours must coalesce their
-        // columns so a full-width region fits in their place.
+        // (0,2) proves reuse, so the scan recycles it and evicts the two
+        // unreferenced 16-col neighbours instead — whose columns must
+        // coalesce so a full-width region fits in their place.
+        assert!(c.place((0, 2), 32, 32).hit);
         let p = c.place((0, 3), 32, 32);
         assert!(!p.hit);
         assert_eq!(p.evicted, 2, "both 16-col residents of the shelf evicted");
-        assert_eq!(p.rect.cols, 32);
+        assert_eq!(p.rect, Rect { row0: 0, rows: 32, col0: 0, cols: 32 });
         assert_eq!(c.resident_regions(), 2);
+    }
+
+    #[test]
+    fn fast_mode_capacity_sweep_matches_seeded_baseline() {
+        // The exact placement sequence benches/capacity_bench.rs replays
+        // in fast mode (AlexNet-FC/8: (1152,512) + (512,512) + (512,128)
+        // on 256×256 arrays = 10 + 4 + 2 tiles, one warm pass then two
+        // measured passes), pinned against the hit-rate seeds committed
+        // in BENCH_capacity_baseline.json. If this closed form moves,
+        // the policy changed — update the seeds (and the bench gate)
+        // deliberately, not accidentally.
+        let dims = [(1152usize, 512usize), (512, 512), (512, 128)];
+        // The *real* decomposition and order the engine places — if
+        // `TileGrid`'s splitting ever changes, this sequence moves with
+        // it instead of silently pinning a stale copy.
+        let shapes: Vec<Vec<(usize, usize)>> = dims
+            .iter()
+            .map(|&(k, n)| {
+                TileGrid::new(k, n, 256, 256)
+                    .shards(256, 256)
+                    .iter()
+                    .map(|s| (s.k_len, s.n_len))
+                    .collect()
+            })
+            .collect();
+        let mut keys: Vec<Vec<usize>> = Vec::new();
+        let mut next = 0usize;
+        for lt in &shapes {
+            keys.push((next..next + lt.len()).collect());
+            next += lt.len();
+        }
+        assert_eq!(next, 16, "10 + 4 + 2 tiles");
+        // (arrays, hits, misses, evictions) over the two measured passes.
+        let expect = [
+            (4usize, 6u64, 26u64, 26u64),
+            (8, 14, 18, 18),
+            (12, 24, 8, 8),
+            (16, 32, 0, 0),
+            (32, 32, 0, 0),
+        ];
+        for (arrays, hits, misses, evictions) in expect {
+            let mut c = TileCache::new(arrays, 256, 256);
+            let pass = |c: &mut TileCache| {
+                let (mut h, mut m, mut e) = (0u64, 0u64, 0u64);
+                for (ks, lt) in keys.iter().zip(&shapes) {
+                    for (&key, &(rows, cols)) in ks.iter().zip(lt) {
+                        let p = c.place((0, key), rows, cols);
+                        if p.hit {
+                            h += 1;
+                        } else {
+                            m += 1;
+                        }
+                        e += p.evicted;
+                    }
+                }
+                (h, m, e)
+            };
+            pass(&mut c); // warm
+            let (mut h, mut m, mut e) = (0u64, 0u64, 0u64);
+            for _ in 0..2 {
+                let (dh, dm, de) = pass(&mut c);
+                h += dh;
+                m += dm;
+                e += de;
+            }
+            assert_eq!(
+                (h, m, e),
+                (hits, misses, evictions),
+                "{arrays}-array sweep diverged from the seeded baseline"
+            );
+        }
     }
 
     #[test]

@@ -28,24 +28,9 @@ use crate::array::mac::{dot_exact, dot_ref, Flavor, GROUP_ROWS};
 use crate::array::TernaryStorage;
 
 /// A row/col sub-rectangle of one physical array — where a placed shard
-/// lives. `row0` is always 16-row aligned (see module docs).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct Rect {
-    pub row0: usize,
-    pub rows: usize,
-    pub col0: usize,
-    pub cols: usize,
-}
-
-impl Rect {
-    /// Whether two rects share any cell.
-    pub fn overlaps(&self, o: &Rect) -> bool {
-        self.row0 < o.row0 + o.rows
-            && o.row0 < self.row0 + self.rows
-            && self.col0 < o.col0 + o.cols
-            && o.col0 < self.col0 + self.cols
-    }
-}
+/// lives. Defined in `array::mac` (the region-scoped MAC kernels take
+/// it); re-exported here because placement is where rects come from.
+pub use crate::array::mac::Rect;
 
 /// One array-fitting piece of a (possibly oversized) tile: rows
 /// `k0..k0+k_len` × columns `n0..n0+n_len` of the full K×N weight
@@ -435,14 +420,4 @@ mod tests {
         }
     }
 
-    #[test]
-    fn rect_overlap_is_symmetric_and_strict() {
-        let a = Rect { row0: 0, rows: 32, col0: 0, cols: 16 };
-        let b = Rect { row0: 16, rows: 32, col0: 8, cols: 16 };
-        let c = Rect { row0: 32, rows: 16, col0: 0, cols: 16 }; // touches a, no overlap
-        assert!(a.overlaps(&b) && b.overlaps(&a));
-        assert!(!a.overlaps(&c) && !c.overlaps(&a));
-        let d = Rect { row0: 0, rows: 32, col0: 16, cols: 4 }; // adjacent columns
-        assert!(!a.overlaps(&d));
-    }
 }

@@ -15,19 +15,26 @@
 //!   saturation / flavor contract).
 //! - [`engine`] — the tiled ternary GEMM execution engine: maps
 //!   arbitrary M×K×N GEMMs onto a pool of `CimArray` backends
-//!   (K×N weight-stationary tiling, batched bit-packed MAC fast path,
-//!   multi-threaded execution) with a `dot_ref`-composed reference
-//!   specification. Placement granularity is independent of the
-//!   physical arrays: tiles split into array-fitting shards placed on
-//!   16-row-aligned sub-array *regions*, so small tiles pack several to
-//!   an array and oversized tiles shard across arrays with partial-sum
-//!   recombination. Two paths: streaming (shards re-programmed every
-//!   call) and resident (`register_weight` + `gemm_resident` — regions
-//!   placed by the LRU `engine::resident` cache and reused, with
-//!   hit/miss/evict counters), bit-identical to each other. Pools size
-//!   directly (`with_pool`) or by word budget (`with_capacity_words`,
-//!   the paper's 2 M words = 32 arrays), serving bit-exact under LRU
-//!   eviction pressure when the working set exceeds the budget.
+//!   (K×N weight-stationary tiling, region-scoped bit-packed MAC
+//!   kernels) with a `dot_ref`-composed reference specification.
+//!   Placement granularity is independent of the physical arrays: tiles
+//!   split into array-fitting shards placed on 16-row-aligned sub-array
+//!   *regions*, so small tiles pack several to an array and oversized
+//!   tiles shard across arrays with partial-sum recombination; each
+//!   shard executes through `CimArray::dot_batch_region`, costing
+//!   wall-clock proportional to its occupied window. Execution runs on
+//!   a persistent stripe-scheduled worker pool (`engine::exec`): one
+//!   work item per (GEMM, shard, n-stripe), per-slot affinity for
+//!   resident shards, work stealing, per-n-stripe partial-sum merge —
+//!   no per-call thread spawn, no global output mutex. Two paths:
+//!   streaming (shards re-programmed every call) and resident
+//!   (`register_weight` + `gemm_resident` — regions placed by the
+//!   sweep-resistant second-chance `engine::resident` cache and reused,
+//!   with hit/miss/evict counters), bit-identical to each other. Pools
+//!   size directly (`with_pool`) or by word budget
+//!   (`with_capacity_words`, the paper's 2 M words = 32 arrays),
+//!   serving bit-exact under eviction pressure when the working set
+//!   exceeds the budget.
 //! - [`arch`] — the TiM-DNN-style accelerator (32 arrays, 32 PCUs) plus
 //!   iso-capacity / iso-area near-memory baseline systems, explicit
 //!   streaming / resident / capacity-bounded weight accounting
@@ -42,8 +49,10 @@
 //!   `pjrt` feature; the default build stubs it.
 //! - [`coordinator`] — a thread-based inference service with two
 //!   servable backends: per-worker PJRT numerics, or one `Arc`-shared
-//!   engine model whose weights stay resident in a single array pool
-//!   across all workers.
+//!   engine model whose weights stay resident in a single array pool —
+//!   server workers submit to the engine's shared executor, and serving
+//!   reports *measured* amortized residency costs
+//!   (`Server::measured_residency`) from the engine's own counters.
 //! - [`repro`] — one entry point per paper figure/table.
 
 pub mod arch;

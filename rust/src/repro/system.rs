@@ -86,7 +86,7 @@ pub fn fig13() -> String {
 /// Functional co-simulation: the tiled GEMM engine executes the front of
 /// AlexNet on every design's array fabric — in streaming mode (every
 /// tile re-programmed each pass) and in resident mode (tiles placed
-/// once, later passes hit the LRU tile cache) — and the outputs are
+/// once, later passes hit the resident tile cache) — and the outputs are
 /// compared element-for-element against the `mac::dot_ref` tile
 /// composition while the engine's tile/window/write-row counters are
 /// checked against `arch::mapper` accounting. No paper figure

@@ -174,7 +174,7 @@ fn engine_single_and_multi_thread_are_bit_identical() {
 fn resident_gemm_matches_streaming_and_reference_on_random_shapes() {
     let mut rng = Rng::new(107);
     // The 4-array pool is smaller than several of these grids, so the
-    // resident path also exercises LRU eviction mid-GEMM.
+    // resident path also exercises second-chance eviction mid-GEMM.
     let shapes = [(1usize, 64usize, 32usize), (3, 100, 70), (2, 256, 40), (5, 300, 90), (1, 48, 130)];
     for design in Design::ALL {
         for &(m, k, n) in &shapes {
@@ -227,7 +227,8 @@ fn resident_gemm_thread_count_is_bit_identical() {
 fn resident_cache_counts_hits_misses_and_evictions() {
     let mut rng = Rng::new(109);
     // 5 k-tiles × 1 n-stripe = 5 tiles on a 2-array pool, single thread:
-    // the sequential LRU sweep never hits.
+    // a cyclic sweep under second-chance keeps C − 1 = 1 proven region
+    // resident per pass (pure LRU measured 0 hits here).
     let (m, k, n) = (2usize, 300usize, 32usize);
     let engine = TernaryGemmEngine::new(
         EngineConfig::new(Design::Cim1, Tech::Femfet3T)
@@ -251,10 +252,11 @@ fn resident_cache_counts_hits_misses_and_evictions() {
     let second = engine.gemm_resident(id, &x, m).unwrap();
     let s2 = engine.stats();
     assert_eq!(second, want, "eviction-then-reuse stays bit-exact");
-    // LRU sweep pathology: every tile missed and re-programmed again.
-    assert_eq!((s2.hits, s2.misses), (0, 10));
-    assert_eq!(s2.evictions, 8);
-    assert_eq!(s2.tiles, 10);
+    // Second pass of the sweep: the first tile survived on its second
+    // chance (1 hit); the probation slot churns through the other 4.
+    assert_eq!((s2.hits, s2.misses), (1, 9));
+    assert_eq!(s2.evictions, 7);
+    assert_eq!(s2.tiles, 9);
 
     // Now a pool that fits the working set: steady state is all hits.
     let roomy = TernaryGemmEngine::new(

@@ -190,7 +190,7 @@ fn engine_backend_rejects_bad_batches_as_errors() {
 #[test]
 fn bounded_engine_backend_serves_bit_exact_under_eviction_pressure() {
     // A 512×512 first layer is 4 full 256×256 tiles; a 1-array word
-    // budget (65536 words) forces LRU eviction on every pass. Outputs
+    // budget (65536 words) forces eviction on every pass. Outputs
     // must stay bit-identical to the unbounded reference forward.
     let dir = synth_dir("bounded");
     write_synth_artifacts(&dir, &[512, 512, 8], 4, 5);
@@ -208,6 +208,38 @@ fn bounded_engine_backend_serves_bit_exact_under_eviction_pressure() {
     }
     let s = b.engine_stats();
     assert!(s.misses > 0 && s.evictions > 0, "working set exceeds the bound: {s:?}");
+}
+
+#[test]
+fn serve_reports_measured_amortized_residency() {
+    // The accounting satellite: `serve` must report amortized
+    // energy/latency from its *own* counters — write rows the engine
+    // actually programmed over inferences actually served — not a
+    // steady-state assumption.
+    let dir = synth_dir("measured");
+    write_synth_artifacts(&dir, &[32, 16, 8], 8, 6);
+    let server = Server::start(engine_server_config(dir, 2)).unwrap();
+    let mut rng = Rng::new(13);
+    for _ in 0..10 {
+        server.infer(rng.ternary_vec(32, 0.5)).unwrap();
+    }
+    let m = server.measured_residency().expect("engine backend reports measured residency");
+    assert_eq!(m.inferences, 10);
+    // Two single-tile layers programmed once ever: 32 + 16 occupied rows.
+    assert_eq!(m.write_rows, 48);
+    assert!(m.write_energy_j > 0.0 && m.write_latency_s > 0.0);
+    assert!(m.hit_rate > 0.5, "steady-state serving hits the cache: {}", m.hit_rate);
+    // Serving more traffic re-programs nothing and amortizes the same
+    // charge over more inferences: the measured per-inference cost falls.
+    for _ in 0..10 {
+        server.infer(rng.ternary_vec(32, 0.5)).unwrap();
+    }
+    let m2 = server.measured_residency().unwrap();
+    assert_eq!(m2.inferences, 20);
+    assert_eq!(m2.write_rows, 48, "steady state: no re-programming");
+    assert!(m2.energy_per_inf_j < m.energy_per_inf_j, "amortization deepens");
+    assert!(m2.latency_per_inf_s < m.latency_per_inf_s);
+    server.shutdown();
 }
 
 // ---- PJRT-backed tests (need `make artifacts` + the pjrt feature) ----

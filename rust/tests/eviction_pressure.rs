@@ -1,9 +1,11 @@
 //! Eviction-pressure conformance battery: capacity-bounded resident
 //! pools smaller than the working set must stay bit-exact vs the
 //! `dot_ref` shard composition across all three designs and thread
-//! counts, the LRU sweep pathology's hit-rate counters must match the
-//! closed-form expectation, and sub-array packing / cross-array
-//! sharding must be exact under the same pressure.
+//! counts, the second-chance (CLOCK) policy's cyclic-sweep counters
+//! must match the closed-form expectation — capacity-proportional hits
+//! where the old LRU policy measured exactly zero — and sub-array
+//! packing / cross-array sharding must be exact under the same
+//! pressure.
 
 use sitecim::array::Design;
 use sitecim::device::Tech;
@@ -75,12 +77,20 @@ fn streaming_interleaved_with_pressured_resident_stays_bit_exact() {
 }
 
 #[test]
-fn lru_sweep_counters_match_closed_form() {
+fn second_chance_sweep_counters_match_closed_form() {
     // Uniform full-array tiles, single thread: a cyclic sweep of W tiles
-    // through a C-array pool (W > C) is the classic LRU pathology. The
-    // closed form over P passes: hits = 0, misses = P·W, evictions =
-    // P·W − C (the first C placements land in free arrays, every later
-    // placement displaces exactly one), tiles programmed = misses.
+    // through a C-array pool (W > C) is the classic LRU pathology —
+    // under LRU this measured hits = 0 at *any* capacity. The
+    // second-chance policy keeps C − 1 proven regions resident while the
+    // probation slot churns through the sweep. Closed form:
+    //
+    //   pass 1:        hits 0,      misses W,          evictions W − C
+    //   passes 2..P:   hits C − 1,  misses W − C + 1,  evictions W − C + 1
+    //
+    // so over P passes: hits = (P−1)(C−1), misses = W + (P−1)(W−C+1),
+    // evictions = misses − C (the first C placements land in free
+    // arrays; uniform tiles evict exactly one region per later miss),
+    // tiles programmed = misses.
     let (w_tiles, cap, passes) = (5u64, 3u64, 4u64);
     let engine = TernaryGemmEngine::new(
         EngineConfig::new(Design::Cim1, Tech::Femfet3T)
@@ -101,11 +111,16 @@ fn lru_sweep_counters_match_closed_form() {
         assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "pass {pass}");
     }
     let s = engine.stats();
-    assert_eq!(s.hits, 0, "LRU sweep never hits");
-    assert_eq!(s.misses, passes * w_tiles);
-    assert_eq!(s.evictions, passes * w_tiles - cap);
-    assert_eq!(s.tiles, passes * w_tiles, "every miss re-programs");
-    assert_eq!(s.write_rows, passes * w_tiles * 64);
+    let hits = (passes - 1) * (cap - 1);
+    let misses = w_tiles + (passes - 1) * (w_tiles - cap + 1);
+    assert_eq!(s.hits, hits, "capacity-proportional steady-state hits");
+    assert_eq!(s.misses, misses);
+    assert_eq!(s.evictions, misses - cap);
+    assert_eq!(s.tiles, misses, "every miss re-programs");
+    assert_eq!(s.write_rows, misses * 64);
+    // The rate the capacity bench records: (P−1)(C−1) / P·W.
+    let want_rate = hits as f64 / (passes * w_tiles) as f64;
+    assert!((s.hit_rate() - want_rate).abs() < 1e-12, "{} vs {want_rate}", s.hit_rate());
 }
 
 #[test]

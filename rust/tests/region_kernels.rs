@@ -1,0 +1,148 @@
+//! Region-kernel conformance battery.
+//!
+//! The contract of `CimArray::dot_batch_region` is equivalence with the
+//! full-array path: for any 16-row-aligned rect, region-local inputs
+//! zero-padded to the full array and run through `dot_batch` must equal
+//! the region kernel's output on the rect's column slice — bit for bit,
+//! for all three designs, every tech, unaligned column spans, and
+//! partial final 16-row groups (shards whose occupied rows end short of
+//! their padded region). The engine-level battery then checks that the
+//! region-scoped execution path composes: packed small weights served
+//! resident match the `reference_gemm_sharded` spec exactly.
+
+use sitecim::array::{make_array, CimArray, Design, Rect};
+use sitecim::device::Tech;
+use sitecim::engine::tiling::reference_gemm_sharded;
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::util::rng::Rng;
+
+/// The specification: zero-pad the region-local inputs to the full
+/// array, run the full-array batched MAC, slice the region's columns.
+fn padded_full_slice(arr: &dyn CimArray, rect: &Rect, inputs: &[i8], m: usize) -> Vec<i32> {
+    let n_rows = arr.n_rows();
+    let n_cols = arr.n_cols();
+    let mut padded = vec![0i8; m * n_rows];
+    for v in 0..m {
+        padded[v * n_rows + rect.row0..v * n_rows + rect.row0 + rect.rows]
+            .copy_from_slice(&inputs[v * rect.rows..(v + 1) * rect.rows]);
+    }
+    let full = arr.dot_batch(&padded, m);
+    let mut out = Vec::with_capacity(m * rect.cols);
+    for v in 0..m {
+        out.extend_from_slice(&full[v * n_cols + rect.col0..v * n_cols + rect.col0 + rect.cols]);
+    }
+    out
+}
+
+#[test]
+fn random_rects_match_full_array_slice_all_designs_and_techs() {
+    let mut rng = Rng::new(600);
+    let (rows, cols) = (256usize, 96usize);
+    for design in Design::ALL {
+        for tech in Tech::ALL {
+            let mut arr = make_array(design, tech, rows, cols);
+            arr.write_matrix(&rng.ternary_vec(rows * cols, 0.5));
+            for trial in 0..12 {
+                // Random 16-aligned row window, random (unaligned) column
+                // span, random small batch.
+                let r_groups = 1 + rng.below((rows / 16) as u64) as usize;
+                let row0 = 16 * rng.below(((rows / 16) - r_groups + 1) as u64) as usize;
+                let c_len = 1 + rng.below(cols as u64) as usize;
+                let col0 = rng.below((cols - c_len + 1) as u64) as usize;
+                let rect = Rect { row0, rows: 16 * r_groups, col0, cols: c_len };
+                let m = 1 + rng.below(3) as usize;
+                let inputs = rng.ternary_vec(m * rect.rows, 0.5);
+                assert_eq!(
+                    arr.dot_batch_region(&rect, &inputs, m),
+                    padded_full_slice(arr.as_ref(), &rect, &inputs, m),
+                    "{design:?}/{tech:?} trial {trial} rect {rect:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn partial_final_groups_are_inert_padding() {
+    // A shard with k_len = 36 occupies a 48-row region; rows 36..48 carry
+    // zero inputs. The kernel must treat them as electrically inert: the
+    // result equals the same region with the tail rows explicitly zero in
+    // a longer input (which is exactly how the engine pads).
+    let mut rng = Rng::new(601);
+    for design in Design::ALL {
+        let mut arr = make_array(design, Tech::Femfet3T, 128, 40);
+        arr.write_matrix(&rng.ternary_vec(128 * 40, 0.5));
+        let rect = Rect { row0: 64, rows: 48, col0: 3, cols: 17 };
+        let m = 2;
+        let mut inputs = rng.ternary_vec(m * rect.rows, 0.5);
+        for v in 0..m {
+            for j in 36..48 {
+                inputs[v * rect.rows + j] = 0; // zero-padded shard tail
+            }
+        }
+        assert_eq!(
+            arr.dot_batch_region(&rect, &inputs, m),
+            padded_full_slice(arr.as_ref(), &rect, &inputs, m),
+            "{design:?}"
+        );
+    }
+}
+
+#[test]
+fn whole_array_region_equals_dot_batch() {
+    let mut rng = Rng::new(602);
+    for design in Design::ALL {
+        let mut arr = make_array(design, Tech::Sram8T, 64, 32);
+        arr.write_matrix(&rng.ternary_vec(64 * 32, 0.4));
+        let rect = Rect { row0: 0, rows: 64, col0: 0, cols: 32 };
+        let m = 3;
+        let inputs = rng.ternary_vec(m * 64, 0.4);
+        assert_eq!(
+            arr.dot_batch_region(&rect, &inputs, m),
+            arr.dot_batch(&inputs, m),
+            "{design:?}: the full-array rect is literally dot_batch"
+        );
+    }
+}
+
+#[test]
+fn engine_region_path_composes_to_sharded_reference() {
+    // Ragged GEMMs whose shards land on packed sub-array regions: the
+    // region-scoped execution path must still equal the sharded dot_ref
+    // composition bit-for-bit — streaming, resident cold and resident
+    // warm — across designs and thread counts.
+    let mut rng = Rng::new(603);
+    let shapes = [(1usize, 80usize, 20usize), (3, 130, 50), (2, 300, 90)];
+    for design in Design::ALL {
+        for threads in [1usize, 3] {
+            for &(m, k, n) in &shapes {
+                let engine = TernaryGemmEngine::new(
+                    EngineConfig::new(design, Tech::Edram3T)
+                        .with_array_dims(64, 32)
+                        .with_pool(4)
+                        .with_threads(threads),
+                );
+                let x = rng.ternary_vec(m * k, 0.5);
+                let w = rng.ternary_vec(k * n, 0.5);
+                let grid = engine.grid(k, n);
+                let want = reference_gemm_sharded(&x, &w, m, &grid, 64, 32, design.flavor());
+                assert_eq!(
+                    engine.gemm(&x, &w, m, k, n).unwrap(),
+                    want,
+                    "{design:?} {m}x{k}x{n} t{threads} streaming"
+                );
+                let id = engine.register_weight(&w, k, n).unwrap();
+                assert_eq!(
+                    engine.gemm_resident(id, &x, m).unwrap(),
+                    want,
+                    "{design:?} {m}x{k}x{n} t{threads} resident cold"
+                );
+                assert_eq!(
+                    engine.gemm_resident(id, &x, m).unwrap(),
+                    want,
+                    "{design:?} {m}x{k}x{n} t{threads} resident warm"
+                );
+            }
+        }
+    }
+}
