@@ -2,8 +2,9 @@
 //! fast paths vs scalar reference vs analog model) and the tiled GEMM
 //! engine — single- vs multi-threaded, all three backends, the
 //! streaming path vs the resident-tile cache at a serving-shaped
-//! repeated GEMM, and packed-small-tile serving through the
-//! region-scoped kernels vs the full-array path. §Perf L3(a).
+//! repeated GEMM, packed-small-tile serving through the region-scoped
+//! kernels vs the full-array path, and the slice-copy vs zero-copy Arc
+//! operand comparison (`arc_speedup`). §Perf L3(a).
 //!
 //! Emits `BENCH_engine.json` next to the working directory so future PRs
 //! can track the engine's perf trajectory (every entry carries a `mode`
@@ -11,6 +12,8 @@
 //! region speedups).
 //!
 //! `SITECIM_BENCH_FAST=1` shrinks the GEMMs to smoke sizes for CI.
+use std::sync::Arc;
+
 use sitecim::array::mac::{dot_fast, dot_fast_cim1, dot_ref, Flavor};
 use sitecim::array::{make_array, CimArray, Design, Rect, SiTeCim1Array, TernaryStorage};
 use sitecim::device::Tech;
@@ -249,6 +252,59 @@ fn main() {
         region_speedups.push((design, speedup));
     }
 
+    // ---- streaming overhead: slice-copy vs Arc operand path ----
+    // The same GEMM through the slice surface (`gemm` — one operand copy
+    // at the API boundary) and the zero-copy Arc surface (`gemm_arc` —
+    // the job shares the caller's planes, workers reuse scratch).
+    // Equality-checked before timing; `arc_speedup` is the constant
+    // orchestration overhead the Arc data path shaves off streaming.
+    let (am, ak, an) = if fast_mode { (2usize, 256usize, 256usize) } else { (4, 1024, 1024) };
+    println!("\n== engine_bench streaming overhead ({am}x{ak}x{an}, slice-copy vs Arc) ==");
+    let ax: Arc<[i8]> = rng.ternary_vec(am * ak, 0.5).into();
+    let aw: Arc<[i8]> = rng.ternary_vec(ak * an, 0.5).into();
+    let amacs = (am * ak * an) as f64;
+    let mut arc_speedups: Vec<(Design, f64)> = Vec::new();
+    for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+        let engine =
+            TernaryGemmEngine::new(EngineConfig::new(design, Tech::Femfet3T).with_threads(threads));
+        let via_slice = engine.gemm(&ax, &aw, am, ak, an).unwrap();
+        let via_arc = engine.gemm_arc(Arc::clone(&ax), Arc::clone(&aw), am, ak, an).unwrap();
+        assert_eq!(via_slice, via_arc, "slice and Arc paths diverged");
+        let name = format!("overhead {:<11} slice-copy", format!("{design:?}"));
+        let rs = run(&name, &cfg, || engine.gemm(&ax, &aw, am, ak, an).unwrap());
+        entries.push(EngineEntry {
+            design,
+            mode: "streaming-slice",
+            threads,
+            m: am,
+            k: ak,
+            n: an,
+            result: rs.clone(),
+            gmacs_per_s: amacs / rs.mean_s / 1e9,
+        });
+        let name = format!("overhead {:<11} arc", format!("{design:?}"));
+        let ra = run(&name, &cfg, || {
+            engine.gemm_arc(Arc::clone(&ax), Arc::clone(&aw), am, ak, an).unwrap()
+        });
+        entries.push(EngineEntry {
+            design,
+            mode: "streaming-arc",
+            threads,
+            m: am,
+            k: ak,
+            n: an,
+            result: ra.clone(),
+            gmacs_per_s: amacs / ra.mean_s / 1e9,
+        });
+        let speedup = rs.mean_s / ra.mean_s;
+        println!(
+            "{:?}: arc {speedup:.2}x slice-copy{}",
+            design,
+            if speedup >= 1.0 { "" } else { "  ** arc NOT faster **" }
+        );
+        arc_speedups.push((design, speedup));
+    }
+
     // ---- perf-trajectory record ----
     let mut json = String::from("{\n");
     json.push_str(&format!(
@@ -281,6 +337,13 @@ fn main() {
         json.push_str(&format!(
             "    \"{design:?}\": {s:.3}{}\n",
             if i + 1 < region_speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"arc_speedup\": {\n");
+    for (i, (design, s)) in arc_speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{design:?}\": {s:.3}{}\n",
+            if i + 1 < arc_speedups.len() { "," } else { "" }
         ));
     }
     json.push_str("  }\n}\n");

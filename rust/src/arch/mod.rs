@@ -12,5 +12,7 @@ pub mod accel;
 pub mod config;
 pub mod mapper;
 
-pub use accel::{Accelerator, CosimConfig, CosimReport, Residency, SystemReport};
+pub use accel::{
+    sweep_miss_fraction, Accelerator, CosimConfig, CosimReport, Residency, SystemReport,
+};
 pub use config::AccelConfig;

@@ -190,10 +190,24 @@ pub trait CimArray: Send {
     /// full-array stride grouping, restricted to the region's word
     /// span; see `mac`'s region kernels).
     fn dot_batch_region(&self, rect: &Rect, inputs: &[Trit], m: usize) -> Vec<i32> {
+        let mut out = Vec::new();
+        self.dot_batch_region_into(rect, inputs, m, &mut out);
+        out
+    }
+
+    /// [`CimArray::dot_batch_region`] into a caller-provided buffer
+    /// (resized to `m × rect.cols`, capacity retained) — the executor's
+    /// per-worker scratch path: steady-state streaming reuses one
+    /// partial-sum buffer per worker instead of allocating a fresh
+    /// output per work item. Only sizes the buffer; the kernels accept
+    /// dirty contents and zero-fill themselves, so reuse at a stable
+    /// shape performs no work here at all.
+    fn dot_batch_region_into(&self, rect: &Rect, inputs: &[Trit], m: usize, out: &mut Vec<i32>) {
+        out.resize(m * rect.cols, 0);
         match self.flavor() {
-            Some(Flavor::Cim1) => mac::dot_region_cim1(self.storage(), rect, inputs, m),
-            Some(Flavor::Cim2) => mac::dot_region_cim2(self.storage(), rect, inputs, m),
-            None => mac::dot_region_exact(self.storage(), rect, inputs, m),
+            Some(Flavor::Cim1) => mac::dot_region_cim1_into(self.storage(), rect, inputs, m, out),
+            Some(Flavor::Cim2) => mac::dot_region_cim2_into(self.storage(), rect, inputs, m, out),
+            None => mac::dot_region_exact_into(self.storage(), rect, inputs, m, out),
         }
     }
 

@@ -298,8 +298,25 @@ pub fn dot_region_cim1(
     inputs: &[Trit],
     m: usize,
 ) -> Vec<i32> {
-    check_region(storage, rect, inputs.len(), m);
     let mut out = vec![0i32; m * rect.cols];
+    dot_region_cim1_into(storage, rect, inputs, m, &mut out);
+    out
+}
+
+/// [`dot_region_cim1`] into a caller-provided `m × rect.cols` buffer
+/// (overwritten): the executor's scratch-reuse path — a long-lived
+/// worker keeps one partial-sum buffer instead of allocating a fresh
+/// output per work item.
+pub fn dot_region_cim1_into(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+    out: &mut [i32],
+) {
+    check_region(storage, rect, inputs.len(), m);
+    assert_eq!(out.len(), m * rect.cols, "output buffer must be m × rect.cols");
+    out.fill(0);
     for v in 0..m {
         let xv = &inputs[v * rect.rows..(v + 1) * rect.rows];
         let o = &mut out[v * rect.cols..(v + 1) * rect.cols];
@@ -315,7 +332,6 @@ pub fn dot_region_cim1(
             }
         }
     }
-    out
 }
 
 /// Region-scoped batched MAC for `Flavor::Cim2` (same surface as
@@ -332,7 +348,25 @@ pub fn dot_region_cim2(
     inputs: &[Trit],
     m: usize,
 ) -> Vec<i32> {
+    let mut out = vec![0i32; m * rect.cols];
+    dot_region_cim2_into(storage, rect, inputs, m, &mut out);
+    out
+}
+
+/// [`dot_region_cim2`] into a caller-provided `m × rect.cols` buffer
+/// (overwritten). The restricted stride masks and bit planes are still
+/// built per call (they depend on the region); hoisting them into
+/// per-worker scratch is a possible follow-on.
+pub fn dot_region_cim2_into(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+    out: &mut [i32],
+) {
     check_region(storage, rect, inputs.len(), m);
+    assert_eq!(out.len(), m * rect.cols, "output buffer must be m × rect.cols");
+    out.fill(0);
     let n_rows = storage.n_rows();
     let w0 = rect.row0 / 64;
     let w1 = (rect.row0 + rect.rows).div_ceil(64);
@@ -357,7 +391,6 @@ pub fn dot_region_cim2(
             }
         })
         .collect();
-    let mut out = vec![0i32; m * rect.cols];
     let mut ip = vec![0u64; span];
     let mut in_ = vec![0u64; span];
     let mut plus = vec![0u64; span];
@@ -394,7 +427,6 @@ pub fn dot_region_cim2(
             out[v * rect.cols + c] = acc;
         }
     }
-    out
 }
 
 /// Region-scoped exact batched MAC — the near-memory baseline's region
@@ -407,8 +439,23 @@ pub fn dot_region_exact(
     inputs: &[Trit],
     m: usize,
 ) -> Vec<i32> {
-    check_region(storage, rect, inputs.len(), m);
     let mut out = vec![0i32; m * rect.cols];
+    dot_region_exact_into(storage, rect, inputs, m, &mut out);
+    out
+}
+
+/// [`dot_region_exact`] into a caller-provided `m × rect.cols` buffer
+/// (overwritten) — allocation-free like [`dot_region_cim1_into`].
+pub fn dot_region_exact_into(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+    out: &mut [i32],
+) {
+    check_region(storage, rect, inputs.len(), m);
+    assert_eq!(out.len(), m * rect.cols, "output buffer must be m × rect.cols");
+    out.fill(0);
     for v in 0..m {
         let xv = &inputs[v * rect.rows..(v + 1) * rect.rows];
         for c in 0..rect.cols {
@@ -421,7 +468,6 @@ pub fn dot_region_exact(
             out[v * rect.cols + c] = acc;
         }
     }
-    out
 }
 
 #[cfg(test)]
@@ -603,6 +649,27 @@ mod tests {
                 "exact {rect:?}"
             );
         }
+    }
+
+    #[test]
+    fn region_into_kernels_overwrite_dirty_buffers() {
+        // The `_into` variants are the executor's scratch-reuse path: a
+        // worker's buffer arrives full of the previous item's partials
+        // and must be fully overwritten, not accumulated into.
+        let (s, _) = random_setup(27, 128, 24, 0.5);
+        let mut rng = Rng::new(28);
+        let m = 2;
+        let rect = Rect { row0: 16, rows: 64, col0: 3, cols: 9 };
+        let inputs = rng.ternary_vec(m * rect.rows, 0.5);
+        let mut buf = vec![i32::MAX; m * rect.cols];
+        dot_region_cim1_into(&s, &rect, &inputs, m, &mut buf);
+        assert_eq!(buf, dot_region_cim1(&s, &rect, &inputs, m));
+        buf.fill(-7);
+        dot_region_cim2_into(&s, &rect, &inputs, m, &mut buf);
+        assert_eq!(buf, dot_region_cim2(&s, &rect, &inputs, m));
+        buf.fill(123);
+        dot_region_exact_into(&s, &rect, &inputs, m, &mut buf);
+        assert_eq!(buf, dot_region_exact(&s, &rect, &inputs, m));
     }
 
     #[test]

@@ -54,7 +54,7 @@ USAGE: sitecim <subcommand> [flags]
               [--capacity-baseline PATH] [--capacity-fresh PATH]
           compare a fresh BENCH_engine.json against the committed
           baseline (default BENCH_baseline.json): per-design throughput,
-          resident and region speedups, ±20% by default; also gates the
+          resident/region/arc speedups, ±20% by default; also gates the
           machine-independent hit-rate columns of BENCH_capacity.json
           against BENCH_capacity_baseline.json when present; exits
           nonzero and prints per-metric delta tables on regression
@@ -279,8 +279,8 @@ fn cmd_engine(args: &Args) -> Result<i32> {
         );
         let e = engine.exec_stats();
         println!(
-            "executor: {} items ({} affine / {} stolen), {} panics",
-            e.executed, e.affine, e.stolen, e.panics
+            "executor: {} items ({} affine / {} stolen / {} spilled), max queue depth {}, {} panics",
+            e.executed, e.affine, e.stolen, e.spilled, e.queue_depth_max, e.panics
         );
     } else {
         let s = engine.stats();
@@ -393,8 +393,8 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         );
         let e = model.exec_stats();
         println!(
-            "executor: {} items across all workers ({} affine / {} stolen), {} panics",
-            e.executed, e.affine, e.stolen, e.panics
+            "executor: {} items across all workers ({} affine / {} stolen / {} spilled), max queue depth {}, {} panics",
+            e.executed, e.affine, e.stolen, e.spilled, e.queue_depth_max, e.panics
         );
     }
     if let Some(m) = server.measured_residency() {

@@ -15,9 +15,12 @@
 //!   one instance in an `Arc` and every worker serves through it — one
 //!   weight copy, one pool, one persistent stripe-scheduled executor.
 //!   Server workers therefore *submit* work to a shared worker pool
-//!   (per-shard items with per-slot affinity, see `engine::exec`)
-//!   rather than each spinning up threads per GEMM; concurrent batches
-//!   pipeline through disjoint arrays.
+//!   (per-shard items with load-aware per-slot affinity, see
+//!   `engine::exec`) rather than each spinning up threads per GEMM;
+//!   concurrent batches pipeline through disjoint arrays, and the data
+//!   path is zero-copy — weights are registered as shared `Arc` planes
+//!   and each layer's activation plane is handed to the engine by
+//!   reference count (`gemm_resident_arc`), never recopied per job.
 //!
 //! Both present the same padded-batch trits → logits surface, so the
 //! server's worker loop is backend-agnostic.
@@ -179,11 +182,13 @@ impl EngineBackend {
         };
 
         let mut layers = Vec::new();
-        for (w, k, n) in &weights {
+        for (w, k, n) in weights {
+            // Zero-copy registration: the engine takes over this (sole)
+            // copy of the layer's trits as a shared plane.
             let id = engine
-                .register_weight(w, *k, *n)
+                .register_weight_arc(w.into(), k, n)
                 .with_context(|| format!("registering {k}×{n} layer weights"))?;
-            layers.push((id, *k, *n));
+            layers.push((id, k, n));
         }
         Ok(EngineBackend {
             engine,
@@ -238,16 +243,19 @@ impl InferenceBackend for EngineBackend {
             bail!("expected {} trits, got {}", n_valid * self.in_dim, trits.len());
         }
         let m = n_valid;
-        let mut h: Vec<i8> = trits.to_vec();
+        // One shared activation plane per layer boundary: the engine's
+        // zero-copy resident path hands it to every shard's work item by
+        // reference count, never by cloning trits.
+        let mut h: Arc<[i8]> = Arc::from(trits);
         for (li, (id, _k, _n)) in self.layers.iter().enumerate() {
             let y = self
                 .engine
-                .gemm_resident(*id, &h, m)
+                .gemm_resident_arc(*id, Arc::clone(&h), m)
                 .with_context(|| format!("layer {li} resident GEMM"))?;
             if li + 1 < self.layers.len() {
                 // Ternarize hidden activations at the recorded threshold
                 // (length validated at load).
-                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]);
+                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]).into();
             } else {
                 return Ok(y.iter().map(|&v| v as f32).collect());
             }

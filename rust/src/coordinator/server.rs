@@ -11,10 +11,12 @@
 //! `Arc` — one copy of the weights, one resident array pool, one
 //! persistent stripe-scheduled executor: server workers *submit* their
 //! batches' GEMMs to the shared executor (per-shard work items with
-//! per-slot affinity) instead of each running whole GEMMs on private
-//! scoped threads, so concurrent batches pipeline through disjoint
-//! arrays explicitly. (PJRT handles are not `Send`, so that backend is
-//! still created per-worker, in-thread.)
+//! load-aware per-slot affinity — a hot array's backlog spills to the
+//! shallowest queue instead of serializing behind one worker) instead
+//! of each running whole GEMMs on private scoped threads, so concurrent
+//! batches pipeline through disjoint arrays explicitly. (PJRT handles
+//! are not `Send`, so that backend is still created per-worker,
+//! in-thread.)
 //!
 //! Accounting: engine-backed serving records the *marginal*
 //! (weights-resident) simulated cost per inference and reports the

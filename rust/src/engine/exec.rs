@@ -16,23 +16,42 @@
 //!   `min(n_threads, pool size)` worker threads that live as long as the
 //!   engine. Worker *w* owns pool slot *w* for streaming work (it is the
 //!   only worker that programs that array whole).
+//! - **Zero-copy jobs.** Operands travel as `Arc<[Trit]>` planes: a
+//!   streaming job shares the caller's input/weight planes and a
+//!   resident job shares the registered weight (`RegisteredWeight`) plus
+//!   the caller's input plane — submission clones reference counts, not
+//!   trits. The slice-based `gemm` surface pays exactly one copy at the
+//!   API boundary (`Arc::from`); `gemm_arc` callers pay none.
 //! - **Stripe work queue.** A GEMM submission decomposes into one
 //!   [`WorkItem`] per (job, shard) — each shard belongs to exactly one
 //!   n-stripe of the output. Items land on per-worker queues; idle
 //!   workers steal from the back of their neighbours' queues, so a
 //!   single hot queue still drains at full parallelism while queue order
 //!   stays FIFO for the owner.
-//! - **Per-slot affinity.** A resident shard whose placement is already
-//!   known is enqueued to the worker that owns its array
+//! - **Load-aware affinity.** A resident shard whose placement is
+//!   already known prefers the worker that owns its array
 //!   (`slot % n_workers`, probed via `TileCache::peek_slot` without
 //!   touching the second-chance bit), so steady-state serving sends each
-//!   array's work to the same thread instead of bouncing slot mutexes
-//!   between all of them. Unplaced/streaming items round-robin.
-//! - **Stripe-sharded merge.** Each job carries one accumulator per
-//!   n-stripe ([`GemmJob::merge`]); shards of different stripes merge
-//!   with no shared lock at all, shards within a stripe serialize only
-//!   on that stripe's mutex. `i32` addition commutes, so any merge order
-//!   is bit-identical to the sequential reference.
+//!   array's work to the same thread. But affinity is no longer static:
+//!   submission (which already holds the queue lock) consults per-worker
+//!   queue depths and *spills* the item to the shallowest queue when the
+//!   preferred queue is `spill_depth_ratio` times deeper — a skewed
+//!   working set where a couple of hot arrays own most shards no longer
+//!   funnels everything through one worker. Unplaced/streaming items
+//!   round-robin. The `spilled` / `queue_depth_max` counters in
+//!   [`ExecStatsSnapshot`] make the policy observable, and
+//!   [`AffinityMode`] lets the schedule-replay test harness force
+//!   degenerate orders (all-pinned, all-spill) deterministically.
+//! - **Stripe-sharded merge, scratch-reused MACs.** Each job carries one
+//!   accumulator per n-stripe ([`GemmJob::merge`]); shards of different
+//!   stripes merge with no shared lock at all, shards within a stripe
+//!   serialize only on that stripe's mutex. `i32` addition commutes, so
+//!   any merge order is bit-identical to the sequential reference. Each
+//!   worker owns a [`WorkerScratch`] — weight-image, input-slice and
+//!   partial-sum buffers grown monotonically — so the steady-state
+//!   streaming path performs zero per-item heap allocations in the
+//!   executor data path (the CiM II region kernel still builds its
+//!   restricted stride masks per call; see `array::mac`).
 //!
 //! Submitters block on the job's condvar until its last item completes,
 //! then assemble the stripes into the row-major output — so the public
@@ -40,8 +59,8 @@
 //! workers can submit concurrently while their GEMMs pipeline through
 //! the shared pool. A panic inside a shard item (poisoned storage
 //! asserts, etc.) marks the job failed and is reported as an `Err` by
-//! the submitter; the worker itself survives and keeps serving, which
-//! preserves the coordinator's worker-never-dies property.
+//! the submitter; the worker itself survives, which preserves the
+//! coordinator's worker-never-dies property.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
@@ -54,11 +73,28 @@ use super::resident::RegisteredWeight;
 use super::tiling::{Shard, TileGrid};
 use super::EngineCore;
 
-/// What a job executes against: a one-shot streaming GEMM (the job owns
-/// copies of both operands) or a registered resident weight.
+/// How submissions choose a worker queue.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AffinityMode {
+    /// Placed shards prefer the worker owning their array, spilling to
+    /// the shallowest queue when the preferred queue is
+    /// `spill_depth_ratio` times deeper (the production default).
+    LoadAware,
+    /// Every item is enqueued to worker 0 regardless of placement; with
+    /// more than one worker the rest serve purely by stealing. Schedule-
+    /// replay harness: forces the all-steal order.
+    PinToZero,
+    /// Every item goes to the shallowest queue, ignoring placement
+    /// affinity entirely (and counts as spilled when its enqueue worker
+    /// executes it). Schedule-replay harness: forces the all-spill order.
+    ForceSpill,
+}
+
+/// What a job executes against: a one-shot streaming GEMM (the job
+/// shares both operand planes) or a registered resident weight.
 pub(crate) enum JobKind {
-    Streaming { x: Vec<Trit>, w: Vec<Trit>, grid: TileGrid, shards: Vec<Shard> },
-    Resident { reg: Arc<RegisteredWeight>, x: Vec<Trit> },
+    Streaming { x: Arc<[Trit]>, w: Arc<[Trit]>, grid: TileGrid, shards: Vec<Shard> },
+    Resident { reg: Arc<RegisteredWeight>, x: Arc<[Trit]> },
 }
 
 /// One submitted GEMM: its operands, per-n-stripe output accumulators,
@@ -79,8 +115,8 @@ pub(crate) struct GemmJob {
 
 impl GemmJob {
     pub fn streaming(
-        x: Vec<Trit>,
-        w: Vec<Trit>,
+        x: Arc<[Trit]>,
+        w: Arc<[Trit]>,
         grid: TileGrid,
         shards: Vec<Shard>,
         m: usize,
@@ -90,7 +126,7 @@ impl GemmJob {
         GemmJob::new(JobKind::Streaming { x, w, grid, shards }, m, n, &grid, n_shards)
     }
 
-    pub fn resident(reg: Arc<RegisteredWeight>, x: Vec<Trit>, m: usize) -> GemmJob {
+    pub fn resident(reg: Arc<RegisteredWeight>, x: Arc<[Trit]>, m: usize) -> GemmJob {
         let (grid, n, n_shards) = (reg.grid, reg.n, reg.shards.len());
         GemmJob::new(JobKind::Resident { reg, x }, m, n, &grid, n_shards)
     }
@@ -162,10 +198,26 @@ impl GemmJob {
     }
 }
 
-/// One queued unit of work: one shard of one job.
+/// One queued unit of work: one shard of one job, plus whether the
+/// load-aware policy diverted it off its preferred queue at submission.
 pub(crate) struct WorkItem {
     pub job: Arc<GemmJob>,
     pub shard: usize,
+    pub spilled: bool,
+}
+
+/// Per-worker reusable buffers: weight image, input slices and partial
+/// sums, grown monotonically (capacity never shrinks), so steady-state
+/// streaming performs zero per-item heap allocations in the executor
+/// data path.
+#[derive(Default)]
+pub(crate) struct WorkerScratch {
+    /// Zero-padded weight image of the shard being programmed.
+    pub wbuf: Vec<Trit>,
+    /// Region-local input slices for the whole batch.
+    pub xbuf: Vec<Trit>,
+    /// Partial-sum output of the region MAC.
+    pub partial: Vec<i32>,
 }
 
 struct QueueState {
@@ -187,21 +239,31 @@ struct ExecStats {
     executed: AtomicU64,
     affine: AtomicU64,
     stolen: AtomicU64,
+    spilled: AtomicU64,
+    queue_depth_max: AtomicU64,
     panics: AtomicU64,
 }
 
-/// Point-in-time copy of the executor counters.
+/// Point-in-time copy of the executor counters. Every executed item is
+/// classified as exactly one of `affine` / `stolen` / `spilled`, so
+/// `executed == affine + stolen + spilled` at every drain point.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ExecStatsSnapshot {
     /// Work items enqueued (one per shard per GEMM).
     pub submitted: u64,
     /// Work items completed.
     pub executed: u64,
-    /// Items executed by the worker they were enqueued to (for resident
-    /// shards with a known placement: the thread that owns the array).
+    /// Items executed by the worker they were enqueued to, off the
+    /// preferred (owner or round-robin) queue.
     pub affine: u64,
     /// Items executed by a different worker (work stealing).
     pub stolen: u64,
+    /// Items diverted to the shallowest queue at submission (load-aware
+    /// spill) and executed there.
+    pub spilled: u64,
+    /// Deepest any queue has been at enqueue time — how far behind the
+    /// slowest worker got.
+    pub queue_depth_max: u64,
     /// Items that panicked (job reported failed; worker survived).
     pub panics: u64,
 }
@@ -212,14 +274,30 @@ pub struct ExecStatsSnapshot {
 pub(crate) struct Executor {
     shared: Arc<ExecShared>,
     n_workers: usize,
+    mode: AffinityMode,
+    /// Spill threshold: divert when the preferred queue holds at least
+    /// `ratio × (shallowest + 1)` items.
+    spill_ratio: usize,
     rr: AtomicUsize,
     workers: Vec<JoinHandle<()>>,
+}
+
+/// First queue of minimal depth (deterministic tie-break: lowest index).
+fn shallowest(queues: &[VecDeque<WorkItem>]) -> usize {
+    let mut best = 0;
+    for (i, q) in queues.iter().enumerate() {
+        if q.len() < queues[best].len() {
+            best = i;
+        }
+    }
+    best
 }
 
 impl Executor {
     /// Spawn `n_workers` threads over the core. Worker `w` owns pool
     /// slot `w` for streaming work, so `n_workers` must not exceed the
-    /// pool size (the engine clamps).
+    /// pool size (the engine clamps). Affinity mode and spill ratio come
+    /// from the core's `EngineConfig`.
     pub fn new(core: &Arc<EngineCore>, n_workers: usize) -> Executor {
         assert!(
             (1..=core.pool_len()).contains(&n_workers),
@@ -243,7 +321,14 @@ impl Executor {
                     .expect("spawning engine executor worker")
             })
             .collect();
-        Executor { shared, n_workers, rr: AtomicUsize::new(0), workers }
+        Executor {
+            shared,
+            n_workers,
+            mode: core.cfg.affinity,
+            spill_ratio: core.cfg.spill_depth_ratio.max(1),
+            rr: AtomicUsize::new(0),
+            workers,
+        }
     }
 
     pub fn stats(&self) -> ExecStatsSnapshot {
@@ -253,6 +338,8 @@ impl Executor {
             executed: s.executed.load(Ordering::Relaxed),
             affine: s.affine.load(Ordering::Relaxed),
             stolen: s.stolen.load(Ordering::Relaxed),
+            spilled: s.spilled.load(Ordering::Relaxed),
+            queue_depth_max: s.queue_depth_max.load(Ordering::Relaxed),
             panics: s.panics.load(Ordering::Relaxed),
         }
     }
@@ -260,6 +347,10 @@ impl Executor {
     /// Enqueue one item per shard (`hints[i]` = the pool slot shard `i`
     /// is expected to execute on, when known), block until the job
     /// drains, and assemble the output. Errors if any item panicked.
+    ///
+    /// The whole hint loop runs under the queue lock, so the spill
+    /// decisions within one submission are deterministic given the queue
+    /// depths at lock acquisition (workers cannot pop mid-submission).
     pub fn run(&self, job: GemmJob, hints: &[Option<usize>]) -> anyhow::Result<Vec<i32>> {
         let n_shards = job.shards().len();
         assert_eq!(hints.len(), n_shards);
@@ -270,11 +361,30 @@ impl Executor {
         {
             let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
             for (i, hint) in hints.iter().enumerate() {
-                let target = match hint {
-                    Some(slot) => slot % self.n_workers,
-                    None => self.rr.fetch_add(1, Ordering::Relaxed) % self.n_workers,
+                let (target, spilled) = match self.mode {
+                    AffinityMode::PinToZero => (0, false),
+                    AffinityMode::ForceSpill => (shallowest(&st.queues), true),
+                    AffinityMode::LoadAware => {
+                        let preferred = match hint {
+                            Some(slot) => slot % self.n_workers,
+                            None => self.rr.fetch_add(1, Ordering::Relaxed) % self.n_workers,
+                        };
+                        let shallow = shallowest(&st.queues);
+                        let (pd, sd) = (st.queues[preferred].len(), st.queues[shallow].len());
+                        if preferred != shallow && pd >= self.spill_ratio * (sd + 1) {
+                            (shallow, true)
+                        } else {
+                            (preferred, false)
+                        }
+                    }
                 };
-                st.queues[target].push_back(WorkItem { job: Arc::clone(&job), shard: i });
+                st.queues[target].push_back(WorkItem {
+                    job: Arc::clone(&job),
+                    shard: i,
+                    spilled,
+                });
+                let depth = st.queues[target].len() as u64;
+                self.shared.stats.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
             }
             self.shared.stats.submitted.fetch_add(n_shards as u64, Ordering::Relaxed);
             self.shared.cv.notify_all();
@@ -305,8 +415,9 @@ impl Drop for Executor {
 }
 
 fn worker_loop(core: Arc<EngineCore>, shared: Arc<ExecShared>, w: usize) {
+    let mut scratch = WorkerScratch::default();
     loop {
-        let (item, affine) = {
+        let (item, own) = {
             let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
             loop {
                 if let Some(it) = st.queues[w].pop_front() {
@@ -330,15 +441,23 @@ fn worker_loop(core: Arc<EngineCore>, shared: Arc<ExecShared>, w: usize) {
             }
         };
         let Some(item) = item else { return };
-        shared.stats.affine.fetch_add(u64::from(affine), Ordering::Relaxed);
-        shared.stats.stolen.fetch_add(u64::from(!affine), Ordering::Relaxed);
+        // Exactly one of affine/stolen/spilled per executed item: stolen
+        // wins over the submission-time spill tag (the item left its
+        // enqueue queue after all).
+        if !own {
+            shared.stats.stolen.fetch_add(1, Ordering::Relaxed);
+        } else if item.spilled {
+            shared.stats.spilled.fetch_add(1, Ordering::Relaxed);
+        } else {
+            shared.stats.affine.fetch_add(1, Ordering::Relaxed);
+        }
         let job = Arc::clone(&item.job);
         // A panicking shard (storage asserts, poisoned invariants) must
         // not kill the worker — that would strand every queued job and
         // permanently shrink the pool's parallelism. Mark the job failed
         // and keep serving; the submitter turns it into an `Err`.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            core.run_item(w, &item);
+            core.run_item(w, &item, &mut scratch);
         }));
         if result.is_err() {
             shared.stats.panics.fetch_add(1, Ordering::Relaxed);

@@ -39,15 +39,25 @@
 //! [`TernaryGemmEngine::new`] starts a long-lived worker pool
 //! ([`exec::Executor`]); `gemm`/`gemm_resident` decompose into one work
 //! item per shard (each shard belongs to exactly one n-stripe of the
-//! output), enqueue them — resident shards with a known placement go to
-//! the worker that owns their array — and block until the job drains.
-//! Partials merge into per-n-stripe accumulators instead of one global
-//! output mutex. Shard MACs execute through the region-scoped
-//! [`crate::array::CimArray::dot_batch_region`] kernels, so a packed
-//! small tile costs wall-clock proportional to its occupied rows ×
-//! columns — matching what the cycle accounting already claims — rather
-//! than a full-array `dot_batch` that gets sliced. See `exec` for the
-//! queue/affinity design.
+//! output), enqueue them — resident shards with a known placement
+//! prefer the worker that owns their array, spilling to the shallowest
+//! queue under load skew (see [`AffinityMode`]) — and block until the
+//! job drains. Partials merge into per-n-stripe accumulators instead of
+//! one global output mutex. Shard MACs execute through the
+//! region-scoped [`crate::array::CimArray::dot_batch_region`] kernels,
+//! so a packed small tile costs wall-clock proportional to its occupied
+//! rows × columns — matching what the cycle accounting already claims —
+//! rather than a full-array `dot_batch` that gets sliced. See `exec`
+//! for the queue/affinity design.
+//!
+//! Since PR 5 the data path is zero-copy: job operands are shared
+//! `Arc<[Trit]>` planes ([`TernaryGemmEngine::gemm_arc`] /
+//! [`TernaryGemmEngine::gemm_resident_arc`] /
+//! [`TernaryGemmEngine::register_weight_arc`]; the slice-based surface
+//! delegates with exactly one copy at the boundary), and each worker
+//! reuses monotonically-grown weight/input/partial scratch buffers, so
+//! steady-state streaming performs zero per-item heap allocations in
+//! the executor data path.
 //!
 //! The specification for both paths is [`tiling::reference_gemm`] (tile
 //! shape = array shape, the default) or the general
@@ -62,7 +72,7 @@ mod exec;
 pub mod resident;
 pub mod tiling;
 
-pub use self::exec::ExecStatsSnapshot;
+pub use self::exec::{AffinityMode, ExecStatsSnapshot};
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
@@ -74,7 +84,7 @@ use crate::array::encoding::Trit;
 use crate::array::mac::GROUP_ROWS;
 use crate::array::{make_array, CimArray};
 use crate::device::Tech;
-use self::exec::{Executor, GemmJob, JobKind, WorkItem};
+use self::exec::{Executor, GemmJob, JobKind, WorkItem, WorkerScratch};
 use self::resident::{RegisteredWeight, TileCache, TileKey, WeightId};
 use self::tiling::{Rect, Shard, TileGrid};
 
@@ -104,6 +114,14 @@ pub struct EngineConfig {
     /// budget), with a floor of one array — and serve under second-chance eviction
     /// pressure when the working set is larger.
     pub capacity_words: Option<u64>,
+    /// How submissions choose a worker queue (the schedule-replay test
+    /// harness forces degenerate orders; production uses the default
+    /// load-aware policy).
+    pub affinity: AffinityMode,
+    /// Load-aware spill threshold: a placed shard leaves its owning
+    /// worker's queue for the shallowest one when the owner's queue
+    /// holds at least `ratio × (shallowest depth + 1)` items.
+    pub spill_depth_ratio: usize,
 }
 
 impl EngineConfig {
@@ -121,6 +139,8 @@ impl EngineConfig {
             tile_rows: None,
             tile_cols: None,
             capacity_words: None,
+            affinity: AffinityMode::LoadAware,
+            spill_depth_ratio: 4,
         }
     }
 
@@ -156,6 +176,20 @@ impl EngineConfig {
     /// (the paper's system capacity is 2 M words = 32 arrays of 256×256).
     pub fn with_capacity_words(mut self, words: u64) -> EngineConfig {
         self.capacity_words = Some(words);
+        self
+    }
+
+    /// Override the submission policy (schedule-replay harness; see
+    /// [`AffinityMode`]).
+    pub fn with_affinity(mut self, mode: AffinityMode) -> EngineConfig {
+        self.affinity = mode;
+        self
+    }
+
+    /// Tune the load-aware spill threshold (clamped to ≥ 1; 1 = spill as
+    /// soon as the preferred queue is deeper than the shallowest).
+    pub fn with_spill_ratio(mut self, ratio: usize) -> EngineConfig {
+        self.spill_depth_ratio = ratio.max(1);
         self
     }
 
@@ -320,26 +354,31 @@ impl EngineCore {
     }
 
     /// Execute one queued work item: run its shard's region-scoped MAC
-    /// and merge the partial into the job's n-stripe accumulator. Called
-    /// from executor worker threads; `worker` is the executing worker's
-    /// index (= the pool slot it owns for streaming work).
-    pub(crate) fn run_item(&self, worker: usize, item: &WorkItem) {
+    /// through the worker's reusable scratch buffers and merge the
+    /// partial into the job's n-stripe accumulator. Called from executor
+    /// worker threads; `worker` is the executing worker's index (= the
+    /// pool slot it owns for streaming work). Steady state performs zero
+    /// per-item heap allocations here: operands are shared `Arc` planes
+    /// and the scratch buffers only grow.
+    pub(crate) fn run_item(&self, worker: usize, item: &WorkItem, scratch: &mut WorkerScratch) {
         let job = &item.job;
         let shard = &job.shards()[item.shard];
-        let partial = match &job.kind {
+        match &job.kind {
             JobKind::Streaming { x, w, grid, .. } => {
-                self.exec_streaming_shard(worker, x, w, job.m, grid, shard)
+                self.exec_streaming_shard(worker, x, w, job.m, grid, shard, scratch);
             }
             JobKind::Resident { reg, x } => {
-                self.exec_resident_shard(reg, x, job.m, item.shard, shard)
+                self.exec_resident_shard(reg, x, job.m, item.shard, shard, scratch);
             }
-        };
-        job.merge(shard, &partial);
+        }
+        job.merge(shard, &scratch.partial);
     }
 
     /// Streaming shard: program this worker's own array (only the
     /// shard's region — everything else is never read) and run the
-    /// region-scoped batch MAC at the array's top-left.
+    /// region-scoped batch MAC at the array's top-left. The partial
+    /// lands in `scratch.partial`.
+    #[allow(clippy::too_many_arguments)]
     fn exec_streaming_shard(
         &self,
         slot_idx: usize,
@@ -348,38 +387,35 @@ impl EngineCore {
         m: usize,
         grid: &TileGrid,
         shard: &Shard,
-    ) -> Vec<i32> {
+        scratch: &mut WorkerScratch,
+    ) {
         let rect = Rect { row0: 0, rows: shard.padded_rows(), col0: 0, cols: shard.n_len };
         // This worker is about to overwrite its array: drop any resident
         // placement routed to it (lock order is always cache → pool).
         self.lock_cache().invalidate_slot(slot_idx);
         let mut slot = self.lock_slot(slot_idx);
-        let mut wbuf = vec![0i8; rect.rows * rect.cols];
-        tiling::extract_shard_weights(w, grid.k, grid.n, shard, rect.rows, rect.cols, &mut wbuf);
+        // Size only: `extract_shard_weights` zero-fills the whole image
+        // itself, so stable-shape reuse does no redundant clearing.
+        scratch.wbuf.resize(rect.rows * rect.cols, 0);
+        tiling::extract_shard_weights(
+            w, grid.k, grid.n, shard, rect.rows, rect.cols, &mut scratch.wbuf,
+        );
         slot.programmed.clear();
-        slot.arr.write_region(0, 0, rect.rows, rect.cols, &wbuf);
-        let mut xbuf = vec![0i8; m * rect.rows];
-        for r in 0..m {
-            tiling::extract_shard_inputs(
-                &x[r * grid.k..(r + 1) * grid.k],
-                shard,
-                0,
-                &mut xbuf[r * rect.rows..(r + 1) * rect.rows],
-            );
-        }
-        let partial = slot.arr.dot_batch_region(&rect, &xbuf, m);
+        slot.arr.write_region(0, 0, rect.rows, rect.cols, &scratch.wbuf);
+        extract_batch_inputs(x, grid.k, shard, m, rect.rows, &mut scratch.xbuf);
+        slot.arr.dot_batch_region_into(&rect, &scratch.xbuf, m, &mut scratch.partial);
         drop(slot);
         let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
         self.stats.tiles.fetch_add(1, Ordering::Relaxed);
         self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
         self.stats.windows.fetch_add(windows, Ordering::Relaxed);
         self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
-        partial
     }
 
     /// Resident shard: route through the placement cache to a region,
     /// program only when the region's content tag does not already hold
-    /// the shard, run the region-scoped batch MAC in place.
+    /// the shard, run the region-scoped batch MAC in place. The partial
+    /// lands in `scratch.partial`.
     fn exec_resident_shard(
         &self,
         reg: &RegisteredWeight,
@@ -387,7 +423,8 @@ impl EngineCore {
         m: usize,
         shard_idx: usize,
         shard: &Shard,
-    ) -> Vec<i32> {
+        scratch: &mut WorkerScratch,
+    ) {
         let key: TileKey = (reg.id, shard_idx);
         let placement = self.lock_cache().place(key, shard.k_len, shard.n_len);
         if placement.hit {
@@ -399,34 +436,48 @@ impl EngineCore {
         let rect = placement.rect;
         let mut slot = self.lock_slot(placement.slot);
         if !slot.holds(&rect, key) {
-            let mut wbuf = vec![0i8; rect.rows * rect.cols];
+            scratch.wbuf.resize(rect.rows * rect.cols, 0);
             tiling::extract_shard_weights(
-                &reg.w, reg.grid.k, reg.grid.n, shard, rect.rows, rect.cols, &mut wbuf,
+                &reg.w, reg.grid.k, reg.grid.n, shard, rect.rows, rect.cols, &mut scratch.wbuf,
             );
             // Overlapping tags are dropped across the write so an
             // interrupted programming pass can never masquerade as a
             // valid region.
             slot.clear_overlapping(&rect);
-            slot.arr.write_region(rect.row0, rect.col0, rect.rows, rect.cols, &wbuf);
+            slot.arr.write_region(rect.row0, rect.col0, rect.rows, rect.cols, &scratch.wbuf);
             slot.programmed.push((rect, key));
             self.stats.tiles.fetch_add(1, Ordering::Relaxed);
             self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
         }
-        let mut xbuf = vec![0i8; m * rect.rows];
-        for r in 0..m {
-            tiling::extract_shard_inputs(
-                &x[r * reg.grid.k..(r + 1) * reg.grid.k],
-                shard,
-                0,
-                &mut xbuf[r * rect.rows..(r + 1) * rect.rows],
-            );
-        }
-        let partial = slot.arr.dot_batch_region(&rect, &xbuf, m);
+        extract_batch_inputs(x, reg.grid.k, shard, m, rect.rows, &mut scratch.xbuf);
+        slot.arr.dot_batch_region_into(&rect, &scratch.xbuf, m, &mut scratch.partial);
         drop(slot);
         let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
         self.stats.windows.fetch_add(windows, Ordering::Relaxed);
         self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
-        partial
+    }
+}
+
+/// Extract the shard's k-slice of every batch row into `buf` (resized
+/// to `m × rect_rows`, capacity retained — the worker's input-slice
+/// scratch). `extract_shard_inputs` zero-fills each row slice itself
+/// and the loop covers every slice, so no separate clearing pass runs.
+fn extract_batch_inputs(
+    x: &[Trit],
+    k: usize,
+    shard: &Shard,
+    m: usize,
+    rect_rows: usize,
+    buf: &mut Vec<Trit>,
+) {
+    buf.resize(m * rect_rows, 0);
+    for r in 0..m {
+        tiling::extract_shard_inputs(
+            &x[r * k..(r + 1) * k],
+            shard,
+            0,
+            &mut buf[r * rect_rows..(r + 1) * rect_rows],
+        );
     }
 }
 
@@ -499,8 +550,8 @@ impl TernaryGemmEngine {
         }
     }
 
-    /// Executor counters: items submitted/executed, affinity vs steal
-    /// split, panics survived.
+    /// Executor counters: items submitted/executed, the
+    /// affine/stolen/spilled split, deepest queue seen, panics survived.
     pub fn exec_stats(&self) -> ExecStatsSnapshot {
         self.exec.stats()
     }
@@ -515,8 +566,17 @@ impl TernaryGemmEngine {
     /// execution. The engine keeps the single weight copy (callers can
     /// drop theirs); its shards are placed lazily by
     /// [`Self::gemm_resident`] and stay programmed until evicted or
-    /// trashed by a streaming call.
+    /// trashed by a streaming call. One copy at this boundary; callers
+    /// that already hold an `Arc` plane should use
+    /// [`Self::register_weight_arc`] instead (zero copies).
     pub fn register_weight(&self, w: &[Trit], k: usize, n: usize) -> Result<WeightId> {
+        self.register_weight_arc(Arc::from(w), k, n)
+    }
+
+    /// [`Self::register_weight`] without the copy: the registration
+    /// shares the caller's weight plane, and every resident job shares
+    /// it in turn (the plane is only read, never re-cloned).
+    pub fn register_weight_arc(&self, w: Arc<[Trit]>, k: usize, n: usize) -> Result<WeightId> {
         ensure!(k > 0 && n > 0, "empty weight matrix ({k}×{n})");
         ensure!(w.len() == k * n, "weights must be k×n = {k}×{n}, got {} trits", w.len());
         let grid = self.grid(k, n);
@@ -524,7 +584,7 @@ impl TernaryGemmEngine {
         let mut reg =
             self.core.registry.write().unwrap_or_else(std::sync::PoisonError::into_inner);
         let id = reg.len();
-        reg.push(Arc::new(RegisteredWeight { id, k, n, grid, shards, w: w.to_vec() }));
+        reg.push(Arc::new(RegisteredWeight { id, k, n, grid, shards, w }));
         Ok(WeightId(id))
     }
 
@@ -546,8 +606,24 @@ impl TernaryGemmEngine {
     /// executor (each on its executing worker's own array).
     /// Deterministic: bit-identical to
     /// [`tiling::reference_gemm_sharded`] regardless of thread count
-    /// (= [`tiling::reference_gemm`] at the default tile shape).
+    /// (= [`tiling::reference_gemm`] at the default tile shape). Pays
+    /// one operand copy at this boundary; [`Self::gemm_arc`] pays none.
     pub fn gemm(&self, x: &[Trit], w: &[Trit], m: usize, k: usize, n: usize) -> Result<Vec<i32>> {
+        self.gemm_arc(Arc::from(x), Arc::from(w), m, k, n)
+    }
+
+    /// [`Self::gemm`] with zero operand copies: the job shares the
+    /// caller's `Arc` planes end to end — submission clones reference
+    /// counts, the long-lived workers read the planes in place, and the
+    /// caller keeps its handles. Bit-identical to [`Self::gemm`].
+    pub fn gemm_arc(
+        &self,
+        x: Arc<[Trit]>,
+        w: Arc<[Trit]>,
+        m: usize,
+        k: usize,
+        n: usize,
+    ) -> Result<Vec<i32>> {
         ensure!(m > 0, "empty batch (m = 0)");
         ensure!(k > 0 && n > 0, "empty GEMM ({k}×{n})");
         ensure!(x.len() == m * k, "x must be m×k = {m}×{k}, got {} trits", x.len());
@@ -555,7 +631,7 @@ impl TernaryGemmEngine {
         let grid = self.grid(k, n);
         let shards = grid.shards(self.core.cfg.array_rows, self.core.cfg.array_cols);
         let hints = vec![None; shards.len()];
-        let job = GemmJob::streaming(x.to_vec(), w.to_vec(), grid, shards, m, n);
+        let job = GemmJob::streaming(x, w, grid, shards, m, n);
         let out = self.exec.run(job, &hints)?;
         self.core.stats.gemms.fetch_add(1, Ordering::Relaxed);
         Ok(out)
@@ -565,12 +641,21 @@ impl TernaryGemmEngine {
     /// mode: shards already placed in the pool are reused as-is
     /// (placement hit → no programming), missing shards are placed via
     /// second-chance region eviction and programmed once. Work items for
-    /// already-placed shards are enqueued to the worker that owns their
-    /// array (per-slot affinity). Bit-identical to the streaming path
-    /// and to the sharded reference for any thread count, any cache
-    /// state, any pool capacity and any concurrent-submission
-    /// interleaving.
+    /// already-placed shards prefer the worker that owns their array,
+    /// spilling to the shallowest queue under load skew. Bit-identical
+    /// to the streaming path and to the sharded reference for any thread
+    /// count, any cache state, any pool capacity and any
+    /// concurrent-submission interleaving. Pays one input copy at this
+    /// boundary; [`Self::gemm_resident_arc`] pays none.
     pub fn gemm_resident(&self, id: WeightId, x: &[Trit], m: usize) -> Result<Vec<i32>> {
+        self.gemm_resident_arc(id, Arc::from(x), m)
+    }
+
+    /// [`Self::gemm_resident`] with a shared input plane: the job holds
+    /// the caller's `Arc` (and the registered weight's shared plane)
+    /// instead of copies — the serving backend threads one activation
+    /// plane through every layer this way.
+    pub fn gemm_resident_arc(&self, id: WeightId, x: Arc<[Trit]>, m: usize) -> Result<Vec<i32>> {
         let reg = {
             let registry =
                 self.core.registry.read().unwrap_or_else(std::sync::PoisonError::into_inner);
@@ -586,14 +671,14 @@ impl TernaryGemmEngine {
             reg.k,
             x.len()
         );
-        // Affinity probe: shards with a known placement land on the
+        // Affinity probe: shards with a known placement prefer the
         // worker that owns their array (a read-only peek — routing is
         // not a use, so it leaves the second-chance bit alone).
         let hints: Vec<Option<usize>> = {
             let cache = self.core.lock_cache();
             (0..reg.shards.len()).map(|i| cache.peek_slot((reg.id, i))).collect()
         };
-        let job = GemmJob::resident(reg, x.to_vec(), m);
+        let job = GemmJob::resident(reg, x, m);
         let out = self.exec.run(job, &hints)?;
         self.core.stats.gemms.fetch_add(1, Ordering::Relaxed);
         Ok(out)
@@ -808,7 +893,66 @@ mod tests {
         let s = eng.exec_stats();
         assert_eq!(s.submitted, 12, "6 shards × 2 GEMMs");
         assert_eq!(s.executed, 12, "every item drained");
-        assert_eq!(s.affine + s.stolen, s.executed);
+        assert_eq!(s.affine + s.stolen + s.spilled, s.executed);
+        assert!(s.queue_depth_max >= 1);
+        assert_eq!(s.panics, 0);
+    }
+
+    #[test]
+    fn arc_surface_is_bit_identical_and_shares_planes() {
+        let mut rng = Rng::new(53);
+        let (m, k, n) = (2usize, 150usize, 60usize);
+        let x: Arc<[Trit]> = rng.ternary_vec(m * k, 0.5).into();
+        let w: Arc<[Trit]> = rng.ternary_vec(k * n, 0.5).into();
+        for design in Design::ALL {
+            let eng = small_engine(design, 2);
+            // Zero-copy registration: the engine holds the same plane,
+            // not a clone of its contents. Checked before any job runs —
+            // in-flight jobs hold transient clones of the job Arc.
+            let id = eng.register_weight_arc(Arc::clone(&w), k, n).unwrap();
+            assert_eq!(Arc::strong_count(&w), 2, "{design:?} registration shares the plane");
+            let via_slice = eng.gemm(&x, &w, m, k, n).unwrap();
+            let via_arc = eng.gemm_arc(Arc::clone(&x), Arc::clone(&w), m, k, n).unwrap();
+            assert_eq!(via_arc, via_slice, "{design:?} arc vs slice");
+            let via_res = eng.gemm_resident_arc(id, Arc::clone(&x), m).unwrap();
+            assert_eq!(via_res, via_slice, "{design:?} resident arc");
+        }
+        // Both operands are still usable by the caller afterwards.
+        assert_eq!(x.len(), m * k);
+        assert_eq!(w.len(), k * n);
+    }
+
+    #[test]
+    fn load_aware_submission_spills_off_a_deep_owner_queue() {
+        // 8 small shards all placed on pool slots 0 and 1 of a 4-worker
+        // engine (32×16 tiles pack 4 per 64×32 array). With spill ratio
+        // 1 the warm submission — whose hints all point at workers 0/1 —
+        // must divert items to the idle queues. Spill decisions happen
+        // under the queue lock with empty queues between sequential
+        // calls, so the spilled count is deterministic at submission;
+        // execution classification (affine vs stolen) is not asserted.
+        let mut rng = Rng::new(54);
+        let eng = TernaryGemmEngine::new(
+            EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_tile_dims(32, 16)
+                .with_pool(4)
+                .with_threads(4)
+                .with_spill_ratio(1),
+        );
+        let (m, k, n) = (1usize, 64usize, 64usize); // 2×4 grid = 8 shards
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let want =
+            reference_gemm_sharded(&x, &w, m, &eng.grid(k, n), 64, 32, Design::Cim1.flavor());
+        let id = eng.register_weight(&w, k, n).unwrap();
+        assert_eq!(eng.gemm_resident(id, &x, m).unwrap(), want, "cold");
+        for pass in 0..3 {
+            assert_eq!(eng.gemm_resident(id, &x, m).unwrap(), want, "warm {pass}");
+        }
+        let s = eng.exec_stats();
+        assert!(s.spilled > 0, "skewed placement must spill: {s:?}");
+        assert_eq!(s.affine + s.stolen + s.spilled, s.executed);
         assert_eq!(s.panics, 0);
     }
 

@@ -57,6 +57,7 @@
 //! invariance argument).
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::Arc;
 
 use crate::array::encoding::Trit;
 use crate::array::mac::GROUP_ROWS;
@@ -72,16 +73,18 @@ pub struct WeightId(pub(crate) usize);
 /// the weight's flat shard order).
 pub(crate) type TileKey = (usize, usize);
 
-/// A weight matrix registered for resident execution: the engine's own
-/// copy of the trits (used to (re)program regions on cache misses) plus
-/// its precomputed shard decomposition on the engine's array shape.
+/// A weight matrix registered for resident execution: the shared weight
+/// plane (used to (re)program regions on cache misses — an `Arc`, so
+/// `register_weight_arc` callers and resident jobs share one copy with
+/// zero re-cloning) plus its precomputed shard decomposition on the
+/// engine's array shape.
 pub(crate) struct RegisteredWeight {
     pub id: usize,
     pub k: usize,
     pub n: usize,
     pub grid: TileGrid,
     pub shards: Vec<Shard>,
-    pub w: Vec<Trit>,
+    pub w: Arc<[Trit]>,
 }
 
 /// Outcome of one placement lookup.

@@ -24,9 +24,12 @@
 //!   shard executes through `CimArray::dot_batch_region`, costing
 //!   wall-clock proportional to its occupied window. Execution runs on
 //!   a persistent stripe-scheduled worker pool (`engine::exec`): one
-//!   work item per (GEMM, shard, n-stripe), per-slot affinity for
-//!   resident shards, work stealing, per-n-stripe partial-sum merge —
-//!   no per-call thread spawn, no global output mutex. Two paths:
+//!   work item per (GEMM, shard, n-stripe), load-aware per-slot
+//!   affinity for resident shards (deep owner queues spill to the
+//!   shallowest), work stealing, per-n-stripe partial-sum merge, and a
+//!   zero-copy data path (`Arc<[Trit]>` operand planes + per-worker
+//!   scratch) — no per-call thread spawn, no global output mutex, no
+//!   per-item allocation in steady state. Two paths:
 //!   streaming (shards re-programmed every call) and resident
 //!   (`register_weight` + `gemm_resident` — regions placed by the
 //!   sweep-resistant second-chance `engine::resident` cache and reused,
@@ -38,7 +41,9 @@
 //! - [`arch`] — the TiM-DNN-style accelerator (32 arrays, 32 PCUs) plus
 //!   iso-capacity / iso-area near-memory baseline systems, explicit
 //!   streaming / resident / capacity-bounded weight accounting
-//!   (`arch::Residency`, packed array counts from the same shelf packer
+//!   (`arch::Residency` — the bounded mode charges the analytic
+//!   second-chance sweep-miss rate `arch::sweep_miss_fraction`; packed
+//!   array counts from the same shelf packer
 //!   the engine uses), and the functional co-simulation mode that
 //!   cross-checks the analytic model against the engine in both modes
 //!   (outputs *and* work counters).

@@ -52,6 +52,11 @@ fn system_fig(design: Design, title: &str, paper: &PaperAvgs) -> String {
             "iso-area baseline uses {} NM arrays (area-model derived)",
             isoa.cfg.n_arrays
         ));
+        t.note(
+            "write charges use the analytic bounded-residency model: over-capacity \
+             networks re-program (W−C+1)/W of their rows per inference (second-chance \
+             steady state), not the full streaming worst case",
+        );
         out.push_str(&t.render());
     }
     out

@@ -2,14 +2,16 @@
 //! caller threads must pipeline through one persistent worker pool and
 //! stay bit-exact per submission, under capacity pressure (evictions
 //! mid-flight), with streaming calls interleaved (slot invalidation
-//! mid-flight), and the queues must drain so engine drop (executor
-//! shutdown) never hangs.
+//! mid-flight), the queues must drain so engine drop (executor
+//! shutdown) never hangs, and the load-aware affinity policy must
+//! redistribute a skewed working set (hot arrays owning most shards)
+//! without losing bit-exactness.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use sitecim::array::Design;
 use sitecim::device::Tech;
-use sitecim::engine::tiling::reference_gemm;
+use sitecim::engine::tiling::{reference_gemm, reference_gemm_sharded};
 use sitecim::engine::{EngineConfig, TernaryGemmEngine};
 use sitecim::util::rng::Rng;
 
@@ -98,4 +100,84 @@ fn streaming_and_resident_interleave_concurrently_bit_exact() {
     });
     let s = engine.exec_stats();
     assert_eq!(s.submitted, s.executed);
+}
+
+#[test]
+fn skewed_working_set_redistributes_and_stays_bit_exact() {
+    // 8 small placement tiles (32×16 on 64×32 arrays, 4 per array) all
+    // pack onto pool slots 0 and 1 of an 8-array, 8-worker engine: 2 of
+    // 8 arrays own 100% of the shards. Static `slot % n_workers`
+    // affinity would funnel every warm item through workers 0 and 1;
+    // the load-aware policy must divert work (spills at submission —
+    // deterministic, since the whole hint loop runs under the queue
+    // lock against empty queues — plus whatever stealing the scheduler
+    // adds), with results bit-exact throughout.
+    let mut rng = Rng::new(702);
+    for design in Design::ALL {
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(design, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_tile_dims(32, 16)
+                .with_pool(8)
+                .with_threads(8)
+                .with_spill_ratio(1),
+        );
+        let (m, k, n) = (2usize, 64usize, 64usize); // 2×4 grid = 8 shards
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let want =
+            reference_gemm_sharded(&x, &w, m, &engine.grid(k, n), 64, 32, design.flavor());
+        let id = engine.register_weight(&w, k, n).unwrap();
+        assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "{design:?} cold");
+        for pass in 0..4 {
+            assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "{design:?} p{pass}");
+        }
+        let s = engine.exec_stats();
+        assert!(
+            s.stolen + s.spilled > 0,
+            "{design:?}: a 2-hot-array working set must redistribute: {s:?}"
+        );
+        assert!(s.spilled > 0, "{design:?}: submission-side spills are deterministic: {s:?}");
+        assert_eq!(s.affine + s.stolen + s.spilled, s.executed, "{design:?}");
+        assert_eq!(s.panics, 0, "{design:?}");
+    }
+}
+
+#[test]
+fn uniform_working_set_keeps_affinity_and_never_spills() {
+    // The complementary case: 4 full-array shards placed one per slot
+    // on a 4-worker engine. Warm submissions put exactly one item on
+    // each preferred queue, so the spill condition (depth ≥ ratio ×
+    // (shallowest + 1)) never fires — `spilled == 0` is deterministic.
+    // The affine/stolen split of *execution* is scheduling-dependent,
+    // but the first worker to take the queue lock after a uniform
+    // submission always finds its own queue non-empty, so at least one
+    // item per pass executes affine.
+    let mut rng = Rng::new(703);
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+            .with_array_dims(64, 32)
+            .with_pool(4)
+            .with_threads(4),
+    );
+    let (m, k, n) = (2usize, 128usize, 64usize); // 2×2 grid = 4 full shards
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    let want = reference_gemm(&x, &w, m, &engine.grid(k, n), Design::Cim1.flavor());
+    let id = engine.register_weight(&w, k, n).unwrap();
+    engine.gemm_resident(id, &x, m).unwrap(); // cold: placements land 1/slot
+    let passes = 8u64;
+    let before = engine.exec_stats();
+    for pass in 0..passes {
+        assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "pass {pass}");
+    }
+    let s = engine.exec_stats();
+    assert_eq!(s.spilled, before.spilled, "uniform load never spills");
+    assert_eq!(s.spilled, 0);
+    assert!(
+        s.affine >= before.affine + passes,
+        "at least one affine execution per uniform pass: {s:?}"
+    );
+    assert_eq!(s.affine + s.stolen + s.spilled, s.executed);
+    assert_eq!(s.panics, 0);
 }

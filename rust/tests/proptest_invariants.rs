@@ -1,9 +1,17 @@
 //! Property tests (hand-rolled driver, util::prop) on the core
-//! invariants of the SiTe CiM semantics.
+//! invariants of the SiTe CiM semantics — array/MAC laws plus the
+//! engine's Arc-operand invariants (zero-copy surface ≡ slice surface ≡
+//! sharded reference, and per-worker scratch reuse never leaks state
+//! across jobs).
+use std::sync::Arc;
+
 use sitecim::array::encoding::{decode_output, rbl_current_cim2, rbl_pulldown_cim1};
 use sitecim::array::mac::{dot_exact, dot_ref, Flavor, GROUP_ROWS, SAT};
-use sitecim::array::TernaryStorage;
-use sitecim::util::prop::{check, Config};
+use sitecim::array::{Design, TernaryStorage};
+use sitecim::device::Tech;
+use sitecim::engine::tiling::reference_gemm_sharded;
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::util::prop::{check, eq, Config};
 use sitecim::util::rng::Rng;
 
 fn storage_and_inputs(rng: &mut Rng, groups: usize, cols: usize, pz: f64) -> (TernaryStorage, Vec<i8>) {
@@ -102,6 +110,89 @@ fn prop_cell_truth_tables_exhaustive() {
             assert_eq!(decode_output(c1, c2), i * w);
         }
     }
+}
+
+#[test]
+fn prop_gemm_arc_equals_slice_equals_sharded_reference() {
+    // Random shapes × designs × thread counts: the zero-copy Arc
+    // surface, the slice surface and the pure-integer sharded reference
+    // agree bit-for-bit, streaming and resident alike.
+    check(
+        &Config { cases: 18, seed: 0xA2C0_5EED, max_size: 48 },
+        |rng, size| {
+            let m = 1 + rng.below(3) as usize;
+            let k = 16 + 4 * size + 4 * rng.below(16) as usize; // ragged, ≥ 16
+            let n = 8 + size + rng.below(40) as usize;
+            let threads = 1 + rng.below(3) as usize;
+            let design = Design::ALL[rng.below(3) as usize];
+            let x = rng.ternary_vec(m * k, 0.5);
+            let w = rng.ternary_vec(k * n, 0.5);
+            (design, threads, m, k, n, x, w)
+        },
+        |(design, threads, m, k, n, x, w)| {
+            let engine = TernaryGemmEngine::new(
+                EngineConfig::new(*design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_pool(4)
+                    .with_threads(*threads),
+            );
+            let want =
+                reference_gemm_sharded(x, w, *m, &engine.grid(*k, *n), 64, 32, design.flavor());
+            let via_slice = engine.gemm(x, w, *m, *k, *n).map_err(|e| e.to_string())?;
+            eq(via_slice, want.clone())?;
+            let ax: Arc<[i8]> = x.clone().into();
+            let aw: Arc<[i8]> = w.clone().into();
+            let via_arc = engine
+                .gemm_arc(Arc::clone(&ax), Arc::clone(&aw), *m, *k, *n)
+                .map_err(|e| e.to_string())?;
+            eq(via_arc, want.clone())?;
+            let id = engine.register_weight_arc(aw, *k, *n).map_err(|e| e.to_string())?;
+            let via_resident = engine.gemm_resident_arc(id, ax, *m).map_err(|e| e.to_string())?;
+            eq(via_resident, want)
+        },
+    );
+}
+
+#[test]
+fn prop_scratch_reuse_never_leaks_across_jobs() {
+    // Back-to-back jobs of different shapes through one long-lived
+    // engine — whose workers reuse monotonically-grown scratch buffers —
+    // give exactly the results of a fresh engine per job: no stale
+    // weight image, input slice or partial sum survives a shape change.
+    check(
+        &Config { cases: 10, seed: 0x5C4A_7C11, max_size: 40 },
+        |rng, size| {
+            let design = Design::ALL[rng.below(3) as usize];
+            let mut jobs = Vec::new();
+            for _ in 0..4 {
+                let m = 1 + rng.below(2) as usize;
+                let k = 16 + size + rng.below(130) as usize;
+                let n = 4 + rng.below(70) as usize;
+                let x = rng.ternary_vec(m * k, 0.5);
+                let w = rng.ternary_vec(k * n, 0.5);
+                jobs.push((m, k, n, x, w));
+            }
+            (design, jobs)
+        },
+        |(design, jobs)| {
+            let cfg = EngineConfig::new(*design, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_pool(3)
+                .with_threads(2);
+            let shared = TernaryGemmEngine::new(cfg.clone());
+            for (m, k, n, x, w) in jobs {
+                let fresh = TernaryGemmEngine::new(cfg.clone());
+                let a = shared.gemm(x, w, *m, *k, *n).map_err(|e| e.to_string())?;
+                let b = fresh.gemm(x, w, *m, *k, *n).map_err(|e| e.to_string())?;
+                eq(a, b.clone())?;
+                // Resident passes reuse the same scratch too.
+                let id = shared.register_weight(w, *k, *n).map_err(|e| e.to_string())?;
+                let r = shared.gemm_resident(id, x, *m).map_err(|e| e.to_string())?;
+                eq(r, b)?;
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]
