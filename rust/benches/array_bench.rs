@@ -3,8 +3,10 @@
 //! engine — single- vs multi-threaded, all three backends, the
 //! streaming path vs the resident-tile cache at a serving-shaped
 //! repeated GEMM, packed-small-tile serving through the region-scoped
-//! kernels vs the full-array path, and the slice-copy vs zero-copy Arc
-//! operand comparison (`arc_speedup`). §Perf L3(a).
+//! kernels vs the full-array path, the slice-copy vs zero-copy Arc
+//! operand comparison (`arc_speedup`), and per-request vs merged-M
+//! serving over a resident weight (`batched_speedup` — the continuous
+//! batcher's amortization). §Perf L3(a).
 //!
 //! Emits `BENCH_engine.json` next to the working directory so future PRs
 //! can track the engine's perf trajectory (every entry carries a `mode`
@@ -305,6 +307,76 @@ fn main() {
         arc_speedups.push((design, speedup));
     }
 
+    // ---- continuous batching: per-request vs merged-M serving ----
+    // The serving-shaped comparison behind the coordinator's continuous
+    // batcher: R independent single-row requests against a resident
+    // weight, executed either as R separate M=1 pipeline passes
+    // (per-request serving) or as one merged R×K plane (one GEMM with
+    // M = R). Equality-checked before timing; `batched_speedup` is the
+    // orchestration amortization the merged M dimension buys on a
+    // streaming-dominated workload.
+    let (br, bk, bn) = if fast_mode { (8usize, 256usize, 256usize) } else { (32, 1024, 1024) };
+    println!(
+        "\n== engine_bench continuous batching ({br} requests of 1x{bk}x{bn}, per-request vs merged-M) =="
+    );
+    let bw = rng.ternary_vec(bk * bn, 0.5);
+    let rows: Vec<Arc<[i8]>> = (0..br).map(|_| rng.ternary_vec(bk, 0.5).into()).collect();
+    let plane: Arc<[i8]> =
+        rows.iter().flat_map(|r| r.iter().copied()).collect::<Vec<i8>>().into();
+    let bmacs = (br * bk * bn) as f64;
+    let mut batched_speedups: Vec<(Design, f64)> = Vec::new();
+    for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+        let base = EngineConfig::new(design, Tech::Femfet3T).with_threads(threads);
+        let tiles = base.tiles_for(bk, bn);
+        let engine = TernaryGemmEngine::new(base.with_pool(tiles.max(1)));
+        let id = engine.register_weight(&bw, bk, bn).unwrap();
+        // Equality first: the merged plane must be the per-request
+        // results concatenated in submission order, bit for bit.
+        let mut serial = Vec::with_capacity(br * bn);
+        for row in &rows {
+            serial.extend(engine.gemm_resident_arc(id, Arc::clone(row), 1).unwrap());
+        }
+        let merged = engine.gemm_resident_arc(id, Arc::clone(&plane), br).unwrap();
+        assert_eq!(serial, merged, "merged M-plane diverged from per-request serial");
+        let name = format!("batching {:<11} per-request", format!("{design:?}"));
+        let rp = run(&name, &cfg, || {
+            let mut acc = 0i64;
+            for row in &rows {
+                acc += engine.gemm_resident_arc(id, Arc::clone(row), 1).unwrap()[0] as i64;
+            }
+            acc
+        });
+        entries.push(EngineEntry {
+            design,
+            mode: "serving-per-request",
+            threads,
+            m: 1,
+            k: bk,
+            n: bn,
+            result: rp.clone(),
+            gmacs_per_s: bmacs / rp.mean_s / 1e9,
+        });
+        let name = format!("batching {:<11} merged-M", format!("{design:?}"));
+        let rb = run(&name, &cfg, || engine.gemm_resident_arc(id, Arc::clone(&plane), br).unwrap());
+        entries.push(EngineEntry {
+            design,
+            mode: "serving-merged",
+            threads,
+            m: br,
+            k: bk,
+            n: bn,
+            result: rb.clone(),
+            gmacs_per_s: bmacs / rb.mean_s / 1e9,
+        });
+        let speedup = rp.mean_s / rb.mean_s;
+        println!(
+            "{:?}: merged-M {speedup:.2}x per-request{}",
+            design,
+            if speedup >= 1.0 { "" } else { "  ** merged NOT faster **" }
+        );
+        batched_speedups.push((design, speedup));
+    }
+
     // ---- perf-trajectory record ----
     let mut json = String::from("{\n");
     json.push_str(&format!(
@@ -344,6 +416,13 @@ fn main() {
         json.push_str(&format!(
             "    \"{design:?}\": {s:.3}{}\n",
             if i + 1 < arc_speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"batched_speedup\": {\n");
+    for (i, (design, s)) in batched_speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{design:?}\": {s:.3}{}\n",
+            if i + 1 < batched_speedups.len() { "," } else { "" }
         ));
     }
     json.push_str("  }\n}\n");

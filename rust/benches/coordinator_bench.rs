@@ -17,7 +17,11 @@ fn main() {
         for i in 0..32 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 32, max_wait: Duration::from_micros(10) };
+        let policy = BatchPolicy {
+            max_batch: 32,
+            max_wait: Duration::from_micros(10),
+            ..Default::default()
+        };
         next_batch(&rx, &policy)
     });
 

@@ -211,6 +211,31 @@ pub trait CimArray: Send {
         }
     }
 
+    /// [`CimArray::dot_batch_region_into`] against a per-worker
+    /// [`mac::RegionScratch`] — the executor's steady-state path. CiM I
+    /// and the exact baseline are already allocation-free per call; CiM
+    /// II additionally reuses the scratch's cached restricted stride
+    /// masks and bit-plane buffers, making every region kernel
+    /// allocation-free in steady state. Bit-identical to the plain
+    /// variant.
+    fn dot_batch_region_scratch_into(
+        &self,
+        rect: &Rect,
+        inputs: &[Trit],
+        m: usize,
+        scratch: &mut mac::RegionScratch,
+        out: &mut Vec<i32>,
+    ) {
+        out.resize(m * rect.cols, 0);
+        match self.flavor() {
+            Some(Flavor::Cim1) => mac::dot_region_cim1_into(self.storage(), rect, inputs, m, out),
+            Some(Flavor::Cim2) => {
+                mac::dot_region_cim2_scratch_into(self.storage(), rect, inputs, m, scratch, out)
+            }
+            None => mac::dot_region_exact_into(self.storage(), rect, inputs, m, out),
+        }
+    }
+
     /// Upper bound on `|dot|` per output — `SAT` per group for the
     /// saturating flavors, the full row count for the exact baseline.
     fn dot_bound(&self) -> i32 {

@@ -354,9 +354,10 @@ pub fn dot_region_cim2(
 }
 
 /// [`dot_region_cim2`] into a caller-provided `m × rect.cols` buffer
-/// (overwritten). The restricted stride masks and bit planes are still
-/// built per call (they depend on the region); hoisting them into
-/// per-worker scratch is a possible follow-on.
+/// (overwritten). Builds the restricted stride masks and bit-plane
+/// buffers per call; the executor's steady-state path uses
+/// [`dot_region_cim2_scratch_into`] instead, which caches both in a
+/// per-worker [`RegionScratch`].
 pub fn dot_region_cim2_into(
     storage: &TernaryStorage,
     rect: &Rect,
@@ -365,36 +366,132 @@ pub fn dot_region_cim2_into(
     out: &mut [i32],
 ) {
     check_region(storage, rect, inputs.len(), m);
-    assert_eq!(out.len(), m * rect.cols, "output buffer must be m × rect.cols");
-    out.fill(0);
-    let n_rows = storage.n_rows();
-    let w0 = rect.row0 / 64;
-    let w1 = (rect.row0 + rect.rows).div_ceil(64);
-    let span = w1 - w0;
-    // The region's rows as a bit mask over the span words (span words
-    // can cover non-region rows when the region is not 64-aligned).
-    let mut range = vec![0u64; span];
-    for r in rect.row0..rect.row0 + rect.rows {
-        range[r / 64 - w0] |= 1u64 << (r % 64);
+    let masks = Cim2RegionMasks::build(storage.n_rows(), rect.row0, rect.rows);
+    let mut bufs = Cim2PlaneBufs::default();
+    cim2_region_kernel(storage, rect, inputs, m, &masks, &mut bufs, out);
+}
+
+/// [`dot_region_cim2`] against a per-worker [`RegionScratch`]: the
+/// restricted stride masks are computed once per (row geometry, region
+/// row span) and cached, and the ±1 bit planes reuse the scratch's
+/// buffers — the steady-state call performs zero heap allocations.
+pub fn dot_region_cim2_scratch_into(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+    scratch: &mut RegionScratch,
+    out: &mut [i32],
+) {
+    check_region(storage, rect, inputs.len(), m);
+    let key = (storage.n_rows(), rect.row0, rect.rows);
+    if !scratch.cim2_masks.contains_key(&key) {
+        // Bounded cache: a pathological churn of region shapes (far
+        // beyond any real placement working set) resets it rather than
+        // growing without bound.
+        if scratch.cim2_masks.len() >= REGION_MASK_CACHE_CAP {
+            scratch.cim2_masks.clear();
+        }
+        scratch
+            .cim2_masks
+            .insert(key, Cim2RegionMasks::build(key.0, key.1, key.2));
     }
-    // Full-array stride masks, restricted to the region; empty cycles
-    // (no region row asserted) contribute group_output(0, 0) = 0 and
-    // are dropped.
-    let masks: Vec<Vec<u64>> = cim2_cycle_masks(n_rows)
-        .iter()
-        .filter_map(|cm| {
+    let masks = &scratch.cim2_masks[&key];
+    cim2_region_kernel(storage, rect, inputs, m, masks, &mut scratch.bufs, out);
+}
+
+/// Entries retained in [`RegionScratch`]'s mask cache before it resets.
+/// Keys are (array row count, region row start, region row count) — a
+/// worker's steady-state working set is one entry per distinct placed
+/// region row-span it executes, typically a handful.
+const REGION_MASK_CACHE_CAP: usize = 256;
+
+/// Per-worker scratch for the region kernels: the CiM II restricted
+/// stride-mask cache plus reusable bit-plane buffers. Owned by each
+/// executor worker (see `engine::exec::WorkerScratch`); the kernels
+/// never share one across threads.
+#[derive(Default)]
+pub struct RegionScratch {
+    /// (n_rows, row0, rows) → restricted cycle masks. The masks depend
+    /// only on the array's row count and the region's *row* span — not
+    /// its columns and not the array's contents — so one entry serves
+    /// every same-shaped placement on every array.
+    cim2_masks: std::collections::HashMap<(usize, usize, usize), Cim2RegionMasks>,
+    bufs: Cim2PlaneBufs,
+}
+
+impl RegionScratch {
+    /// Cached mask entries (observability for tests).
+    pub fn cached_masks(&self) -> usize {
+        self.cim2_masks.len()
+    }
+}
+
+/// The full-array CiM II stride masks restricted to one region's word
+/// span, precomputed: cycles that assert no region row contribute
+/// `group_output(0, 0) = 0` and are dropped.
+pub struct Cim2RegionMasks {
+    /// First packed word of the span (`row0 / 64`).
+    w0: usize,
+    /// Words in the span.
+    span: usize,
+    /// Kept cycles' masks, flattened `n_kept × span` row-major.
+    masks: Vec<u64>,
+}
+
+impl Cim2RegionMasks {
+    fn build(n_rows: usize, row0: usize, rows: usize) -> Cim2RegionMasks {
+        let w0 = row0 / 64;
+        let w1 = (row0 + rows).div_ceil(64);
+        let span = w1 - w0;
+        // The region's rows as a bit mask over the span words (span
+        // words can cover non-region rows when the region is not
+        // 64-aligned).
+        let mut range = vec![0u64; span];
+        for r in row0..row0 + rows {
+            range[r / 64 - w0] |= 1u64 << (r % 64);
+        }
+        let mut masks = Vec::new();
+        for cm in cim2_cycle_masks(n_rows) {
             let mm: Vec<u64> = (0..span).map(|wi| cm[w0 + wi] & range[wi]).collect();
             if mm.iter().any(|&w| w != 0) {
-                Some(mm)
-            } else {
-                None
+                masks.extend_from_slice(&mm);
             }
-        })
-        .collect();
-    let mut ip = vec![0u64; span];
-    let mut in_ = vec![0u64; span];
-    let mut plus = vec![0u64; span];
-    let mut minus = vec![0u64; span];
+        }
+        Cim2RegionMasks { w0, span, masks }
+    }
+}
+
+/// Reusable ±1-product plane buffers for the CiM II region kernel.
+#[derive(Default)]
+struct Cim2PlaneBufs {
+    ip: Vec<u64>,
+    in_: Vec<u64>,
+    plus: Vec<u64>,
+    minus: Vec<u64>,
+}
+
+/// The shared CiM II region kernel body: both the per-call and the
+/// scratch-cached entry points funnel here.
+fn cim2_region_kernel(
+    storage: &TernaryStorage,
+    rect: &Rect,
+    inputs: &[Trit],
+    m: usize,
+    rm: &Cim2RegionMasks,
+    bufs: &mut Cim2PlaneBufs,
+    out: &mut [i32],
+) {
+    check_region(storage, rect, inputs.len(), m);
+    assert_eq!(out.len(), m * rect.cols, "output buffer must be m × rect.cols");
+    out.fill(0);
+    let (w0, span) = (rm.w0, rm.span);
+    let w1 = w0 + span;
+    bufs.ip.resize(span, 0);
+    bufs.in_.resize(span, 0);
+    bufs.plus.resize(span, 0);
+    bufs.minus.resize(span, 0);
+    let (ip, in_, plus, minus) = (&mut bufs.ip, &mut bufs.in_, &mut bufs.plus, &mut bufs.minus);
     for v in 0..m {
         let xv = &inputs[v * rect.rows..(v + 1) * rect.rows];
         ip.fill(0);
@@ -415,7 +512,7 @@ pub fn dot_region_cim2_into(
                 minus[wi] = (ip[wi] & wn[wi]) | (in_[wi] & wp[wi]);
             }
             let mut acc = 0i32;
-            for mask in &masks {
+            for mask in rm.masks.chunks_exact(span) {
                 let mut a = 0u32;
                 let mut b = 0u32;
                 for wi in 0..span {
@@ -703,6 +800,38 @@ mod tests {
         let s = TernaryStorage::new(64, 4);
         let rect = Rect { row0: 48, rows: 32, col0: 0, cols: 4 };
         dot_region_cim2(&s, &rect, &[0i8; 32], 1);
+    }
+
+    #[test]
+    fn cim2_scratch_path_matches_per_call_and_caches_masks() {
+        let (s, _) = random_setup(33, 256, 48, 0.4);
+        let mut rng = Rng::new(34);
+        let mut scratch = RegionScratch::default();
+        let m = 3;
+        let rects = [
+            Rect { row0: 0, rows: 256, col0: 0, cols: 48 },
+            Rect { row0: 64, rows: 64, col0: 7, cols: 13 },
+            Rect { row0: 240, rows: 16, col0: 47, cols: 1 },
+            Rect { row0: 16, rows: 208, col0: 0, cols: 48 },
+            // Same row span as the second rect, different columns: must
+            // share its cached masks, not add an entry.
+            Rect { row0: 64, rows: 64, col0: 20, cols: 5 },
+        ];
+        for (pass, rect) in rects.iter().enumerate() {
+            let inputs = rng.ternary_vec(m * rect.rows, 0.4);
+            let mut got = vec![i32::MIN; m * rect.cols]; // dirty scratch buffer
+            dot_region_cim2_scratch_into(&s, rect, &inputs, m, &mut scratch, &mut got);
+            assert_eq!(got, dot_region_cim2(&s, rect, &inputs, m), "pass {pass} {rect:?}");
+        }
+        assert_eq!(scratch.cached_masks(), 4, "one entry per distinct row span");
+        // Steady state: repeating the working set adds no entries.
+        for rect in &rects {
+            let inputs = rng.ternary_vec(m * rect.rows, 0.4);
+            let mut got = vec![0i32; m * rect.cols];
+            dot_region_cim2_scratch_into(&s, rect, &inputs, m, &mut scratch, &mut got);
+            assert_eq!(got, dot_region_cim2(&s, rect, &inputs, m));
+        }
+        assert_eq!(scratch.cached_masks(), 4);
     }
 
     #[test]

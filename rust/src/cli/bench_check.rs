@@ -3,8 +3,8 @@
 //! Compares a freshly-written `BENCH_engine.json` against the committed
 //! `BENCH_baseline.json`: per-entry throughput (`gmacs_per_s`, keyed by
 //! design/mode/threads/shape) and the per-design `resident_speedup` /
-//! `region_speedup` / `arc_speedup` ratios, each within a relative
-//! tolerance. Only
+//! `region_speedup` / `arc_speedup` / `batched_speedup` ratios, each
+//! within a relative tolerance. Only
 //! *regressions* fail — a fresh value above baseline always passes —
 //! and a baseline metric recorded as `null` is treated as unseeded
 //! (reported, never failed), so the gate can be committed before the
@@ -140,7 +140,7 @@ pub fn compare(baseline: &Json, fresh: &Json, tol_pct: f64) -> (String, bool) {
         ]);
     }
 
-    for section in ["resident_speedup", "region_speedup", "arc_speedup"] {
+    for section in ["resident_speedup", "region_speedup", "arc_speedup", "batched_speedup"] {
         if let Some(base_sp) = baseline.get(section).and_then(Json::as_obj) {
             for (design, bv) in base_sp {
                 let base_v = bv.as_f64();
@@ -382,6 +382,31 @@ mod tests {
         let (report, ok) = compare(&base, &bad, 20.0);
         assert!(!ok, "arc speedup regression must fail: {report}");
         // Null-seeded arc entries pass as unseeded, per convention.
+        let unseeded = parse_doc("{\"Cim1\": null}");
+        let (report, ok) = compare(&unseeded, &good, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("unseeded"));
+    }
+
+    #[test]
+    fn batched_speedup_section_is_gated_like_the_others() {
+        let parse_doc = |batched: &str| {
+            Json::parse(&format!(
+                "{{\"results\": [{}], \"resident_speedup\": {{\"Cim1\": 4.0}}, \
+                 \"batched_speedup\": {batched}}}",
+                entry("Cim1", "10.0")
+            ))
+            .unwrap()
+        };
+        let base = parse_doc("{\"Cim1\": 2.0}");
+        let good = parse_doc("{\"Cim1\": 2.4}");
+        let (report, ok) = compare(&base, &good, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("batched_speedup Cim1"));
+        let bad = parse_doc("{\"Cim1\": 0.8}");
+        let (report, ok) = compare(&base, &bad, 20.0);
+        assert!(!ok, "batched speedup regression must fail: {report}");
+        // Null-seeded batched entries pass as unseeded, per convention.
         let unseeded = parse_doc("{\"Cim1\": null}");
         let (report, ok) = compare(&unseeded, &good, 20.0);
         assert!(ok, "{report}");

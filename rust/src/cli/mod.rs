@@ -9,7 +9,7 @@
 //!   bench-check [--baseline PATH] [--fresh PATH] [--tolerance PCT]
 //!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
 //!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine] [--threads T]
-//!            [--capacity-words W]
+//!            [--capacity-words W] [--max-batch-rows R]
 
 mod bench_check;
 
@@ -54,20 +54,23 @@ USAGE: sitecim <subcommand> [flags]
               [--capacity-baseline PATH] [--capacity-fresh PATH]
           compare a fresh BENCH_engine.json against the committed
           baseline (default BENCH_baseline.json): per-design throughput,
-          resident/region/arc speedups, ±20% by default; also gates the
+          resident/region/arc/batched speedups, ±20% by default; also gates the
           machine-independent hit-rate columns of BENCH_capacity.json
           against BENCH_capacity_baseline.json when present; exits
           nonzero and prints per-metric delta tables on regression
   infer   [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
           run the AOT-compiled ternary MLP on the held-out test set
   serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B] [--backend pjrt|engine]
-          [--threads T] [--capacity-words W]
+          [--threads T] [--capacity-words W] [--max-batch-rows R]
           start the serving coordinator and push synthetic traffic (the
           engine backend shares one resident-weight model and one
-          persistent executor across workers; --capacity-words serves
-          from a bounded pool instead of sizing it to the whole network;
-          the report includes measured amortized residency costs from
-          the engine's own counters)
+          persistent executor across workers, and merges all in-flight
+          requests into one GEMM M-plane per flush — --max-batch-rows
+          caps the rows per merged flush, --batch caps the PJRT path;
+          --capacity-words serves from a bounded pool instead of sizing
+          it to the whole network; the report includes rows-per-flush
+          p50/p95 and measured amortized residency costs from the
+          engine's own counters)
   help    this message
 ";
 
@@ -343,6 +346,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let mut cfg = ServerConfig::new(dir.clone());
     cfg.n_workers = args.get_usize("workers", 2);
     cfg.policy.max_batch = args.get_usize("batch", 32);
+    cfg.policy.max_batch_rows = args.get_usize("max-batch-rows", cfg.policy.max_batch_rows);
     cfg.engine_threads = args.get_usize("threads", 2);
     let capacity = args.get_u64("capacity-words", 0);
     cfg.capacity_words = if capacity > 0 { Some(capacity) } else { None };

@@ -48,7 +48,10 @@ pub enum BackendKind {
 
 /// A loaded, servable model: a batch of trit inputs in, logits out.
 pub trait InferenceBackend {
-    /// Maximum batch rows per `run_batch` call.
+    /// The manifest's batch dimension. For the PJRT path this is a hard
+    /// per-call cap (the compiled executable's fixed batch dim); for the
+    /// engine path it is only a policy default — `run_batch` accepts any
+    /// M (see [`EngineBackend::run_batch_arc`]).
     fn batch(&self) -> usize;
     fn in_dim(&self) -> usize;
     fn out_dim(&self) -> usize;
@@ -220,6 +223,44 @@ impl EngineBackend {
     pub fn capacity_words(&self) -> u64 {
         self.engine.capacity_words()
     }
+
+    /// The continuous-batching entry point: run an already-merged
+    /// `n_valid × in_dim` activation plane through the layer pipeline.
+    ///
+    /// Unlike the trait's `run_batch`, M is **not** capped by the
+    /// manifest `batch` — that number is the AOT executable's fixed
+    /// batch dimension (a PJRT compile-time constant), not an engine
+    /// limit. GEMM rows are independent, the stripe accumulators and
+    /// `WorkerScratch` buffers grow with M, so any merged row count the
+    /// batcher forms is served in one pipeline pass. The plane is handed
+    /// to every layer by reference count (zero-copy).
+    pub fn run_batch_arc(&self, plane: Arc<[i8]>, n_valid: usize) -> Result<Vec<f32>> {
+        if n_valid == 0 {
+            bail!("n_valid must be >= 1");
+        }
+        if plane.len() != n_valid * self.in_dim {
+            bail!("expected {} trits, got {}", n_valid * self.in_dim, plane.len());
+        }
+        let m = n_valid;
+        // One shared activation plane per layer boundary: the engine's
+        // zero-copy resident path hands it to every shard's work item by
+        // reference count, never by cloning trits.
+        let mut h = plane;
+        for (li, (id, _k, _n)) in self.layers.iter().enumerate() {
+            let y = self
+                .engine
+                .gemm_resident_arc(*id, Arc::clone(&h), m)
+                .with_context(|| format!("layer {li} resident GEMM"))?;
+            if li + 1 < self.layers.len() {
+                // Ternarize hidden activations at the recorded threshold
+                // (length validated at load).
+                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]).into();
+            } else {
+                return Ok(y.iter().map(|&v| v as f32).collect());
+            }
+        }
+        unreachable!("layers is non-empty; the final layer returns")
+    }
 }
 
 impl InferenceBackend for EngineBackend {
@@ -236,31 +277,10 @@ impl InferenceBackend for EngineBackend {
     }
 
     fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>> {
-        if n_valid == 0 || n_valid > self.batch {
-            bail!("n_valid {} out of range 1..={}", n_valid, self.batch);
-        }
-        if trits.len() != n_valid * self.in_dim {
-            bail!("expected {} trits, got {}", n_valid * self.in_dim, trits.len());
-        }
-        let m = n_valid;
-        // One shared activation plane per layer boundary: the engine's
-        // zero-copy resident path hands it to every shard's work item by
-        // reference count, never by cloning trits.
-        let mut h: Arc<[i8]> = Arc::from(trits);
-        for (li, (id, _k, _n)) in self.layers.iter().enumerate() {
-            let y = self
-                .engine
-                .gemm_resident_arc(*id, Arc::clone(&h), m)
-                .with_context(|| format!("layer {li} resident GEMM"))?;
-            if li + 1 < self.layers.len() {
-                // Ternarize hidden activations at the recorded threshold
-                // (length validated at load).
-                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]).into();
-            } else {
-                return Ok(y.iter().map(|&v| v as f32).collect());
-            }
-        }
-        unreachable!("layers is non-empty; the final layer returns")
+        // No `n_valid > self.batch` cap: the engine serves arbitrary M
+        // (see `run_batch_arc`); `self.batch` only informs batching
+        // policy defaults.
+        self.run_batch_arc(Arc::from(trits), n_valid)
     }
 }
 

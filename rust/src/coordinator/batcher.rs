@@ -1,33 +1,107 @@
-//! Dynamic batcher: greedily coalesces queued requests into PJRT-sized
-//! batches under a latency deadline — the standard serving trade-off
-//! (bigger batches amortize dispatch; the deadline bounds queueing delay).
+//! Dynamic batching: coalesces queued requests under a latency deadline —
+//! the standard serving trade-off (bigger batches amortize dispatch; the
+//! deadline bounds queueing delay).
+//!
+//! Two formers share one [`BatchPolicy`]:
+//!
+//! - [`next_batch`] — the PJRT former: collects up to `max_batch` items
+//!   (the compiled executable's fixed batch dimension) and hands them
+//!   back as a `Vec` for the caller to flatten.
+//! - [`form_merged_batch`] — the engine backend's *continuous* former:
+//!   merges every in-flight request into one contiguous `Arc<[i8]>`
+//!   M-plane (one activation row per request, M = total live rows),
+//!   capped by `max_batch_rows` instead of the manifest batch. The
+//!   concatenation here is the **only** copy on the merged path — the
+//!   engine's zero-copy resident surface (`gemm_resident_arc`) threads
+//!   the plane through every layer by reference count.
+//!
+//! # Why flush at layer 0 only
+//!
+//! GEMM rows are independent, so merging any set of requests into one
+//! M-plane is *always* bit-exact — each row's outputs equal its
+//! single-request execution regardless of what shares the batch.
+//! Admitting a late-arriving request *between layer boundaries* of an
+//! in-flight merged batch is a different matter: the newcomer has not
+//! been through layers `0..i`, so it would need catch-up GEMMs through
+//! the earlier layers before its row could join the plane — exactly the
+//! per-request small-M executions the merge exists to amortize away,
+//! plus ragged per-row bookkeeping in the scatter path. The batcher
+//! therefore admits requests only when a merged batch *starts* (flush at
+//! layer 0); requests arriving mid-pipeline seed the next merge, whose
+//! deadline is already bounded by `max_wait`.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 /// Batching policy.
 #[derive(Clone, Debug)]
 pub struct BatchPolicy {
-    /// Hard cap — the compiled executable's batch dimension.
+    /// Hard cap for the PJRT former — the compiled executable's batch
+    /// dimension.
     pub max_batch: usize,
+    /// Hard cap on merged M-plane rows for the engine former (one row
+    /// per request; independent of the manifest `batch`).
+    pub max_batch_rows: usize,
     /// Max time the first request in a batch may wait for company.
     pub max_wait: Duration,
 }
 
 impl Default for BatchPolicy {
     fn default() -> Self {
-        BatchPolicy { max_batch: 32, max_wait: Duration::from_millis(2) }
+        BatchPolicy {
+            max_batch: 32,
+            max_batch_rows: 256,
+            max_wait: Duration::from_millis(2),
+        }
     }
+}
+
+/// All in-flight requests merged into one contiguous activation plane:
+/// `plane` is the row-major `rows × row_len` concatenation of
+/// `items[i]`'s activation rows, in item order.
+pub struct MergedBatch<T> {
+    pub items: Vec<T>,
+    pub plane: Arc<[i8]>,
+    pub rows: usize,
 }
 
 /// Collect the next batch from `rx`. Blocks for the first item; then
 /// drains up to `max_batch` items or until `max_wait` expires. Returns
 /// `None` when the channel is closed and empty (shutdown).
 pub fn next_batch<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Option<Vec<T>> {
+    drain(rx, policy.max_batch, policy.max_wait)
+}
+
+/// The continuous former: collect up to `max_batch_rows` requests (or
+/// until `max_wait` expires after the first), then concatenate each
+/// item's activation row — `row(item)` — into one shared M-plane. The
+/// concatenation is the only copy; everything downstream shares the
+/// `Arc`. Returns `None` when the channel is closed and empty
+/// (shutdown). Each item contributes exactly one row, so `rows ==
+/// items.len()` and a deadline flush yields a partial (but never empty)
+/// plane.
+pub fn form_merged_batch<T>(
+    rx: &Receiver<T>,
+    policy: &BatchPolicy,
+    row: impl Fn(&T) -> &[i8],
+) -> Option<MergedBatch<T>> {
+    let items = drain(rx, policy.max_batch_rows.max(1), policy.max_wait)?;
+    let rows = items.len();
+    let mut plane = Vec::with_capacity(items.iter().map(|it| row(it).len()).sum());
+    for it in &items {
+        plane.extend_from_slice(row(it));
+    }
+    Some(MergedBatch { items, plane: plane.into(), rows })
+}
+
+/// Shared drain loop: block for the first item, then greedily collect
+/// until `cap` items or the deadline.
+fn drain<T>(rx: &Receiver<T>, cap: usize, max_wait: Duration) -> Option<Vec<T>> {
     let first = rx.recv().ok()?;
     let mut batch = vec![first];
-    let deadline = Instant::now() + policy.max_wait;
-    while batch.len() < policy.max_batch {
+    let deadline = Instant::now() + max_wait;
+    while batch.len() < cap {
         let now = Instant::now();
         if now >= deadline {
             break;
@@ -52,7 +126,8 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) };
+        let policy =
+            BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5), ..Default::default() };
         let b = next_batch(&rx, &policy).unwrap();
         assert_eq!(b, vec![0, 1, 2, 3]);
         let b2 = next_batch(&rx, &policy).unwrap();
@@ -63,7 +138,8 @@ mod tests {
     fn deadline_caps_waiting() {
         let (tx, rx) = channel();
         tx.send(1).unwrap();
-        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) };
+        let policy =
+            BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10), ..Default::default() };
         let t0 = Instant::now();
         let b = next_batch(&rx, &policy).unwrap();
         assert_eq!(b, vec![1]);
@@ -85,5 +161,53 @@ mod tests {
         let b = next_batch(&rx, &BatchPolicy::default()).unwrap();
         assert_eq!(b, vec![7]);
         assert!(next_batch(&rx, &BatchPolicy::default()).is_none());
+    }
+
+    #[test]
+    fn merged_plane_is_row_concatenation_in_item_order() {
+        let (tx, rx) = channel::<Vec<i8>>();
+        tx.send(vec![1, -1, 0]).unwrap();
+        tx.send(vec![0, 1, 1]).unwrap();
+        tx.send(vec![-1, -1, -1]).unwrap();
+        drop(tx);
+        let mb = form_merged_batch(&rx, &BatchPolicy::default(), |v| v.as_slice()).unwrap();
+        assert_eq!(mb.rows, 3);
+        assert_eq!(mb.items.len(), 3);
+        assert_eq!(&mb.plane[..], &[1, -1, 0, 0, 1, 1, -1, -1, -1]);
+        assert!(form_merged_batch(&rx, &BatchPolicy::default(), |v| v.as_slice()).is_none());
+    }
+
+    #[test]
+    fn merged_batch_respects_max_batch_rows_not_max_batch() {
+        let (tx, rx) = channel::<Vec<i8>>();
+        for i in 0..10i8 {
+            tx.send(vec![i]).unwrap();
+        }
+        // max_batch (the PJRT cap) must not constrain the merged former.
+        let policy = BatchPolicy {
+            max_batch: 2,
+            max_batch_rows: 4,
+            max_wait: Duration::from_millis(5),
+        };
+        let mb = form_merged_batch(&rx, &policy, |v| v.as_slice()).unwrap();
+        assert_eq!(mb.rows, 4, "exactly the row cap");
+        assert_eq!(&mb.plane[..], &[0, 1, 2, 3]);
+        let mb2 = form_merged_batch(&rx, &policy, |v| v.as_slice()).unwrap();
+        assert_eq!(&mb2.plane[..], &[4, 5, 6, 7], "FIFO across flushes");
+    }
+
+    #[test]
+    fn merged_deadline_flushes_partial_batch() {
+        let (tx, rx) = channel::<Vec<i8>>();
+        tx.send(vec![9]).unwrap();
+        let policy = BatchPolicy {
+            max_batch_rows: 64,
+            max_wait: Duration::from_millis(10),
+            ..Default::default()
+        };
+        let t0 = Instant::now();
+        let mb = form_merged_batch(&rx, &policy, |v| v.as_slice()).unwrap();
+        assert_eq!(mb.rows, 1, "deadline flush is partial, never empty");
+        assert!(t0.elapsed() < Duration::from_millis(500));
     }
 }

@@ -50,6 +50,9 @@ pub struct Metrics {
     pub errors: AtomicU64,
     /// Wall-clock end-to-end request latencies (seconds), rolling window.
     latencies: Mutex<LatencyRing>,
+    /// Rows per executed flush (merged-batch size), rolling window — the
+    /// continuous batcher's effectiveness histogram (p50/p95 rows).
+    batch_rows: Mutex<LatencyRing>,
     /// Simulated accelerator energy (femtojoule-granularity, stored as
     /// integer attojoules to stay atomic) and busy time (picoseconds).
     sim_energy_aj: AtomicU64,
@@ -76,6 +79,7 @@ impl Metrics {
             batched_items: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             latencies: Mutex::new(LatencyRing::new(window)),
+            batch_rows: Mutex::new(LatencyRing::new(window)),
             sim_energy_aj: AtomicU64::new(0),
             sim_time_ps: AtomicU64::new(0),
         }
@@ -89,6 +93,7 @@ impl Metrics {
     pub fn record_batch(&self, n: usize, sim_energy_j: f64, sim_time_s: f64) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+        self.batch_rows.lock().unwrap().push(n as f64);
         self.sim_energy_aj
             .fetch_add((sim_energy_j * 1e18) as u64, Ordering::Relaxed);
         self.sim_time_ps.fetch_add((sim_time_s * 1e12) as u64, Ordering::Relaxed);
@@ -100,6 +105,12 @@ impl Metrics {
 
     pub fn latency_summary(&self) -> Summary {
         summarize(self.latencies.lock().unwrap().samples())
+    }
+
+    /// Distribution of rows per executed flush (rolling window): the
+    /// continuous batcher's batch-size histogram (p50/p95 in particular).
+    pub fn batch_rows_summary(&self) -> Summary {
+        summarize(self.batch_rows.lock().unwrap().samples())
     }
 
     pub fn avg_batch_size(&self) -> f64 {
@@ -121,11 +132,14 @@ impl Metrics {
 
     pub fn report(&self) -> String {
         let s = self.latency_summary();
+        let rows = self.batch_rows_summary();
         format!(
-            "requests={} batches={} avg_batch={:.1} errors={} | wall p50={} p99={} | simulated: {} busy, {} ({}/inf)",
+            "requests={} batches={} avg_batch={:.1} rows/flush p50={:.0} p95={:.0} errors={} | wall p50={} p99={} | simulated: {} busy, {} ({}/inf)",
             self.requests.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.avg_batch_size(),
+            rows.p50,
+            rows.p95,
             self.errors.load(Ordering::Relaxed),
             crate::util::units::fmt_time(s.p50),
             crate::util::units::fmt_time(s.p99),
@@ -185,5 +199,19 @@ mod tests {
         m.record_batch(1, 2e-9, 1e-6);
         let r = m.report();
         assert!(r.contains("requests=1"));
+        assert!(r.contains("rows/flush"));
+    }
+
+    #[test]
+    fn batch_rows_histogram_tracks_flush_sizes() {
+        let m = Metrics::new();
+        for n in [1usize, 4, 4, 4, 32] {
+            m.record_batch(n, 0.0, 0.0);
+        }
+        let s = m.batch_rows_summary();
+        assert_eq!(s.n, 5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 32.0);
+        assert_eq!(s.p50, 4.0);
     }
 }

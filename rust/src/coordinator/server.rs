@@ -6,7 +6,12 @@
 //!
 //! Topology: N worker threads share one request channel (work-stealing by
 //! contention); each worker pulls batches via the `batcher`, executes,
-//! and answers each request on its private response channel. The engine
+//! and answers each request on its private response channel. On the
+//! engine backend the pull is *continuous batching*: every in-flight
+//! request is merged into one contiguous M-plane (M = total live rows,
+//! capped by `BatchPolicy::max_batch_rows`, **not** the manifest
+//! `batch`), the layer pipeline runs once at that M, and the logit rows
+//! scatter back to each request's reply channel. The engine
 //! backend is loaded **once** and shared by every worker through an
 //! `Arc` — one copy of the weights, one resident array pool, one
 //! persistent stripe-scheduled executor: server workers *submit* their
@@ -38,7 +43,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::backend::{BackendKind, EngineBackend, InferenceBackend, PjrtBackend};
-use super::batcher::{next_batch, BatchPolicy};
+use super::batcher::{form_merged_batch, next_batch, BatchPolicy};
 use super::metrics::Metrics;
 use crate::arch::{AccelConfig, Accelerator, Residency};
 use crate::array::area::Design;
@@ -304,25 +309,80 @@ fn worker_loop(
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
-    // Engine backend: serve through the shared model. PJRT: handles are
-    // created in-thread (they are not Send).
-    let backend: Box<dyn InferenceBackend> = match shared {
-        Some(model) => Box::new(model),
-        None => {
-            let manifest = match Manifest::load(&cfg.artifacts) {
-                Ok(m) => m,
-                Err(e) => {
-                    eprintln!("worker: manifest load failed: {e:#}");
-                    return;
-                }
-            };
-            match PjrtBackend::load(&manifest, cfg.kind) {
-                Ok(b) => Box::new(b),
-                Err(e) => {
-                    eprintln!("worker: PJRT backend load failed: {e:#}");
-                    return;
-                }
-            }
+    // Engine backend: continuous batching through the shared model.
+    // PJRT: handles are created in-thread (they are not Send) and the
+    // executable's batch dimension is a hard per-call cap.
+    match shared {
+        Some(model) => {
+            engine_worker_loop(model, cfg, rx, metrics, sim_e_per_inf, sim_t_per_inf)
+        }
+        None => pjrt_worker_loop(cfg, rx, metrics, sim_e_per_inf, sim_t_per_inf),
+    }
+}
+
+/// The continuous-batching loop: merge every in-flight request into one
+/// contiguous M-plane (`form_merged_batch` — one copy), run the whole
+/// layer pipeline once at M = total live rows via `run_batch_arc`
+/// (uncapped by the manifest `batch`), then scatter the logit rows back
+/// to each request's reply channel. New requests are admitted only at
+/// batch formation (flush at layer 0 — see `coordinator::batcher` for
+/// why mid-pipeline admission would forfeit the amortization).
+fn engine_worker_loop(
+    model: Arc<EngineBackend>,
+    cfg: ServerConfig,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    sim_e_per_inf: f64,
+    sim_t_per_inf: f64,
+) {
+    loop {
+        // Hold the queue lock only while forming the merged plane.
+        let merged = {
+            let guard = rx.lock().unwrap();
+            form_merged_batch(&guard, &cfg.policy, |r: &Request| r.input.as_slice())
+        };
+        let Some(merged) = merged else { return }; // channel closed: shutdown
+
+        let rows = merged.rows;
+        let plane = Arc::clone(&merged.plane);
+        // A panicking backend must not kill the worker: that would
+        // strand the in-flight batch and permanently shrink serving
+        // capacity. Catch it, answer the batch with an error, continue.
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.run_batch_arc(plane, rows)
+        }));
+        scatter_replies(
+            merged.items,
+            result,
+            model.out_dim(),
+            &metrics,
+            sim_e_per_inf,
+            sim_t_per_inf,
+        );
+    }
+}
+
+/// The fixed-batch PJRT loop: collect up to the executable's batch
+/// dimension, flatten, execute, scatter.
+fn pjrt_worker_loop(
+    cfg: ServerConfig,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    sim_e_per_inf: f64,
+    sim_t_per_inf: f64,
+) {
+    let manifest = match Manifest::load(&cfg.artifacts) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("worker: manifest load failed: {e:#}");
+            return;
+        }
+    };
+    let backend: PjrtBackend = match PjrtBackend::load(&manifest, cfg.kind) {
+        Ok(b) => b,
+        Err(e) => {
+            eprintln!("worker: PJRT backend load failed: {e:#}");
+            return;
         }
     };
 
@@ -343,41 +403,53 @@ fn worker_loop(
         for r in &batch {
             flat.extend_from_slice(&r.input);
         }
-        // A panicking backend must not kill the worker: that would
-        // strand the in-flight batch and permanently shrink serving
-        // capacity. Catch it, answer the batch with an error, continue.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             backend.run_batch(&flat, n)
         }));
-        match result {
-            Ok(Ok(logits)) => {
-                metrics.record_batch(n, sim_e_per_inf * n as f64, sim_t_per_inf * n as f64);
-                let out_dim = backend.out_dim();
-                for (i, req) in batch.into_iter().enumerate() {
-                    let row = &logits[i * out_dim..(i + 1) * out_dim];
-                    let pred = crate::runtime::executor::argmax_rows(row, out_dim)[0];
-                    let wall = req.enqueued.elapsed().as_secs_f64();
-                    metrics.record_request(wall);
-                    let _ = req.resp.send(Ok(InferReply {
-                        pred,
-                        logits: row.to_vec(),
-                        wall_latency_s: wall,
-                    }));
-                }
+        scatter_replies(batch, result, backend.out_dim(), &metrics, sim_e_per_inf, sim_t_per_inf);
+    }
+}
+
+/// Answer every request of an executed batch: on success, carve the
+/// logit plane into per-request rows (argmax + latency per request); on
+/// backend error or caught panic, report the failure to each request and
+/// keep the worker alive.
+fn scatter_replies(
+    batch: Vec<Request>,
+    result: std::thread::Result<Result<Vec<f32>>>,
+    out_dim: usize,
+    metrics: &Metrics,
+    sim_e_per_inf: f64,
+    sim_t_per_inf: f64,
+) {
+    let n = batch.len();
+    match result {
+        Ok(Ok(logits)) => {
+            metrics.record_batch(n, sim_e_per_inf * n as f64, sim_t_per_inf * n as f64);
+            for (i, req) in batch.into_iter().enumerate() {
+                let row = &logits[i * out_dim..(i + 1) * out_dim];
+                let pred = crate::runtime::executor::argmax_rows(row, out_dim)[0];
+                let wall = req.enqueued.elapsed().as_secs_f64();
+                metrics.record_request(wall);
+                let _ = req.resp.send(Ok(InferReply {
+                    pred,
+                    logits: row.to_vec(),
+                    wall_latency_s: wall,
+                }));
             }
-            Ok(Err(e)) => {
-                metrics.record_error();
-                let msg = format!("inference failed: {e:#}");
-                for req in batch {
-                    let _ = req.resp.send(Err(msg.clone()));
-                }
+        }
+        Ok(Err(e)) => {
+            metrics.record_error();
+            let msg = format!("inference failed: {e:#}");
+            for req in batch {
+                let _ = req.resp.send(Err(msg.clone()));
             }
-            Err(_) => {
-                metrics.record_error();
-                let msg = "inference worker caught a backend panic".to_string();
-                for req in batch {
-                    let _ = req.resp.send(Err(msg.clone()));
-                }
+        }
+        Err(_) => {
+            metrics.record_error();
+            let msg = "inference worker caught a backend panic".to_string();
+            for req in batch {
+                let _ = req.resp.send(Err(msg.clone()));
             }
         }
     }

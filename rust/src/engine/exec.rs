@@ -33,25 +33,31 @@
 //!   (`slot % n_workers`, probed via `TileCache::peek_slot` without
 //!   touching the second-chance bit), so steady-state serving sends each
 //!   array's work to the same thread. But affinity is no longer static:
-//!   submission (which already holds the queue lock) consults per-worker
-//!   queue depths and *spills* the item to the shallowest queue when the
-//!   preferred queue is `spill_depth_ratio` times deeper — a skewed
-//!   working set where a couple of hot arrays own most shards no longer
-//!   funnels everything through one worker. Unplaced/streaming items
+//!   submission consults per-worker queue depths and *spills* the item
+//!   to the shallowest queue when the preferred queue is
+//!   `spill_depth_ratio` times deeper — a skewed working set where a
+//!   couple of hot arrays own most shards no longer funnels everything
+//!   through one worker. On the hot path the depths are *approximate*:
+//!   relaxed atomic counters snapshotted once per submission before the
+//!   queue lock, with the submission's own pushes simulated locally, so
+//!   planning happens outside the critical section (continuous batching
+//!   made submission hot enough to care). Unplaced/streaming items
 //!   round-robin. The `spilled` / `queue_depth_max` counters in
 //!   [`ExecStatsSnapshot`] make the policy observable, and
 //!   [`AffinityMode`] lets the schedule-replay test harness force
-//!   degenerate orders (all-pinned, all-spill) deterministically.
+//!   degenerate orders (all-pinned, all-spill) or pin the exact
+//!   under-lock depth scan (`LoadAwareExact`) deterministically.
 //! - **Stripe-sharded merge, scratch-reused MACs.** Each job carries one
 //!   accumulator per n-stripe ([`GemmJob::merge`]); shards of different
 //!   stripes merge with no shared lock at all, shards within a stripe
 //!   serialize only on that stripe's mutex. `i32` addition commutes, so
 //!   any merge order is bit-identical to the sequential reference. Each
-//!   worker owns a [`WorkerScratch`] — weight-image, input-slice and
-//!   partial-sum buffers grown monotonically — so the steady-state
-//!   streaming path performs zero per-item heap allocations in the
-//!   executor data path (the CiM II region kernel still builds its
-//!   restricted stride masks per call; see `array::mac`).
+//!   worker owns a [`WorkerScratch`] — weight-image, input-slice,
+//!   partial-sum and region-kernel buffers grown monotonically — so the
+//!   steady-state data path performs zero per-item heap allocations:
+//!   CiM II's restricted stride masks and bit planes now live in the
+//!   worker's `RegionScratch` (cached per region row span) instead of
+//!   being rebuilt per call.
 //!
 //! Submitters block on the job's condvar until its last item completes,
 //! then assemble the stripes into the row-major output — so the public
@@ -78,8 +84,22 @@ use super::EngineCore;
 pub enum AffinityMode {
     /// Placed shards prefer the worker owning their array, spilling to
     /// the shallowest queue when the preferred queue is
-    /// `spill_depth_ratio` times deeper (the production default).
+    /// `spill_depth_ratio` times deeper (the production default). Depths
+    /// come from one relaxed-atomic snapshot taken per submission —
+    /// *before* the queue lock — with the submission's own pushes
+    /// simulated locally, so the hot submission path no longer scans
+    /// exact queue lengths inside the lock's critical section. Against
+    /// drained queues (serial submissions) the snapshot equals the exact
+    /// lengths, so the decisions match [`AffinityMode::LoadAwareExact`]
+    /// deterministically; under concurrent submission the depths are
+    /// approximate, which only shifts the affine/spilled *labels*, never
+    /// correctness.
     LoadAware,
+    /// Same policy as [`AffinityMode::LoadAware`] but with exact queue
+    /// lengths read under the submission lock — the spill decisions are
+    /// a pure function of the locked queue state. Deterministic
+    /// schedule-replay harness.
+    LoadAwareExact,
     /// Every item is enqueued to worker 0 regardless of placement; with
     /// more than one worker the rest serve purely by stealing. Schedule-
     /// replay harness: forces the all-steal order.
@@ -218,6 +238,9 @@ pub(crate) struct WorkerScratch {
     pub xbuf: Vec<Trit>,
     /// Partial-sum output of the region MAC.
     pub partial: Vec<i32>,
+    /// Region-kernel scratch: CiM II's cached restricted stride masks
+    /// and bit-plane buffers (see `array::mac::RegionScratch`).
+    pub region: crate::array::mac::RegionScratch,
 }
 
 struct QueueState {
@@ -230,6 +253,14 @@ struct ExecShared {
     state: Mutex<QueueState>,
     cv: Condvar,
     stats: ExecStats,
+    /// Approximate per-queue depths, maintained with relaxed atomics at
+    /// every push/pop/steal. `LoadAware` submissions snapshot these once
+    /// per submission instead of scanning the exact queue lengths under
+    /// the lock. May momentarily disagree with `queues[i].len()` by
+    /// in-flight pushes/pops; drained queues always read 0 to a
+    /// subsequent submitter (job completion hands the counters over with
+    /// acquire/release ordering).
+    depths: Vec<AtomicUsize>,
 }
 
 /// Cumulative executor counters.
@@ -293,6 +324,17 @@ fn shallowest(queues: &[VecDeque<WorkItem>]) -> usize {
     best
 }
 
+/// Same tie-break over a depth vector (the load-aware snapshot).
+fn shallowest_depth(depths: &[usize]) -> usize {
+    let mut best = 0;
+    for (i, &d) in depths.iter().enumerate() {
+        if d < depths[best] {
+            best = i;
+        }
+    }
+    best
+}
+
 impl Executor {
     /// Spawn `n_workers` threads over the core. Worker `w` owns pool
     /// slot `w` for streaming work, so `n_workers` must not exceed the
@@ -310,6 +352,7 @@ impl Executor {
             }),
             cv: Condvar::new(),
             stats: ExecStats::default(),
+            depths: (0..n_workers).map(|_| AtomicUsize::new(0)).collect(),
         });
         let workers = (0..n_workers)
             .map(|w| {
@@ -344,19 +387,66 @@ impl Executor {
         }
     }
 
+    /// Apply the load-aware rule to one item: spill to the shallowest
+    /// queue when the preferred queue holds at least
+    /// `spill_ratio × (shallowest + 1)` items.
+    fn load_aware_target(&self, preferred: usize, depths: &[usize]) -> (usize, bool) {
+        let shallow = shallowest_depth(depths);
+        let (pd, sd) = (depths[preferred], depths[shallow]);
+        if preferred != shallow && pd >= self.spill_ratio * (sd + 1) {
+            (shallow, true)
+        } else {
+            (preferred, false)
+        }
+    }
+
+    /// The preferred queue for a shard: the worker owning its placed
+    /// array, or round-robin when unplaced/streaming.
+    fn preferred_worker(&self, hint: &Option<usize>) -> usize {
+        match hint {
+            Some(slot) => slot % self.n_workers,
+            None => self.rr.fetch_add(1, Ordering::Relaxed) % self.n_workers,
+        }
+    }
+
     /// Enqueue one item per shard (`hints[i]` = the pool slot shard `i`
     /// is expected to execute on, when known), block until the job
     /// drains, and assemble the output. Errors if any item panicked.
     ///
-    /// The whole hint loop runs under the queue lock, so the spill
-    /// decisions within one submission are deterministic given the queue
-    /// depths at lock acquisition (workers cannot pop mid-submission).
+    /// `LoadAware` plans the whole submission *before* taking the queue
+    /// lock, from one relaxed snapshot of the approximate depth counters
+    /// with its own pushes simulated locally — the lock's critical
+    /// section is just the pushes. The exact modes (`LoadAwareExact`,
+    /// `ForceSpill`) still decide under the lock, where the decisions
+    /// are deterministic given the queue depths at lock acquisition
+    /// (workers cannot pop mid-submission).
     pub fn run(&self, job: GemmJob, hints: &[Option<usize>]) -> anyhow::Result<Vec<i32>> {
         let n_shards = job.shards().len();
         assert_eq!(hints.len(), n_shards);
         if n_shards == 0 {
             return Ok(job.assemble());
         }
+        // LoadAware plans outside the lock: one relaxed snapshot, own
+        // pushes simulated locally. Against drained queues this equals
+        // the exact under-lock scan (see `AffinityMode::LoadAware`).
+        let plan: Option<Vec<(usize, bool)>> = match self.mode {
+            AffinityMode::LoadAware => {
+                let mut depths: Vec<usize> =
+                    self.shared.depths.iter().map(|d| d.load(Ordering::Relaxed)).collect();
+                Some(
+                    hints
+                        .iter()
+                        .map(|hint| {
+                            let preferred = self.preferred_worker(hint);
+                            let (target, spilled) = self.load_aware_target(preferred, &depths);
+                            depths[target] += 1;
+                            (target, spilled)
+                        })
+                        .collect(),
+                )
+            }
+            _ => None,
+        };
         let job = Arc::new(job);
         {
             let mut st = self.shared.state.lock().unwrap_or_else(PoisonError::into_inner);
@@ -364,18 +454,11 @@ impl Executor {
                 let (target, spilled) = match self.mode {
                     AffinityMode::PinToZero => (0, false),
                     AffinityMode::ForceSpill => (shallowest(&st.queues), true),
-                    AffinityMode::LoadAware => {
-                        let preferred = match hint {
-                            Some(slot) => slot % self.n_workers,
-                            None => self.rr.fetch_add(1, Ordering::Relaxed) % self.n_workers,
-                        };
-                        let shallow = shallowest(&st.queues);
-                        let (pd, sd) = (st.queues[preferred].len(), st.queues[shallow].len());
-                        if preferred != shallow && pd >= self.spill_ratio * (sd + 1) {
-                            (shallow, true)
-                        } else {
-                            (preferred, false)
-                        }
+                    AffinityMode::LoadAware => plan.as_ref().expect("planned above")[i],
+                    AffinityMode::LoadAwareExact => {
+                        let preferred = self.preferred_worker(hint);
+                        let depths: Vec<usize> = st.queues.iter().map(VecDeque::len).collect();
+                        self.load_aware_target(preferred, &depths)
                     }
                 };
                 st.queues[target].push_back(WorkItem {
@@ -383,6 +466,7 @@ impl Executor {
                     shard: i,
                     spilled,
                 });
+                self.shared.depths[target].fetch_add(1, Ordering::Relaxed);
                 let depth = st.queues[target].len() as u64;
                 self.shared.stats.queue_depth_max.fetch_max(depth, Ordering::Relaxed);
             }
@@ -421,12 +505,15 @@ fn worker_loop(core: Arc<EngineCore>, shared: Arc<ExecShared>, w: usize) {
             let mut st = shared.state.lock().unwrap_or_else(PoisonError::into_inner);
             loop {
                 if let Some(it) = st.queues[w].pop_front() {
+                    shared.depths[w].fetch_sub(1, Ordering::Relaxed);
                     break (Some(it), true);
                 }
                 let n = st.queues.len();
                 let mut stolen = None;
                 for off in 1..n {
-                    if let Some(it) = st.queues[(w + off) % n].pop_back() {
+                    let victim = (w + off) % n;
+                    if let Some(it) = st.queues[victim].pop_back() {
+                        shared.depths[victim].fetch_sub(1, Ordering::Relaxed);
                         stolen = Some(it);
                         break;
                     }

@@ -403,7 +403,13 @@ impl EngineCore {
         slot.programmed.clear();
         slot.arr.write_region(0, 0, rect.rows, rect.cols, &scratch.wbuf);
         extract_batch_inputs(x, grid.k, shard, m, rect.rows, &mut scratch.xbuf);
-        slot.arr.dot_batch_region_into(&rect, &scratch.xbuf, m, &mut scratch.partial);
+        slot.arr.dot_batch_region_scratch_into(
+            &rect,
+            &scratch.xbuf,
+            m,
+            &mut scratch.region,
+            &mut scratch.partial,
+        );
         drop(slot);
         let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
         self.stats.tiles.fetch_add(1, Ordering::Relaxed);
@@ -450,7 +456,13 @@ impl EngineCore {
             self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
         }
         extract_batch_inputs(x, reg.grid.k, shard, m, rect.rows, &mut scratch.xbuf);
-        slot.arr.dot_batch_region_into(&rect, &scratch.xbuf, m, &mut scratch.partial);
+        slot.arr.dot_batch_region_scratch_into(
+            &rect,
+            &scratch.xbuf,
+            m,
+            &mut scratch.region,
+            &mut scratch.partial,
+        );
         drop(slot);
         let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
         self.stats.windows.fetch_add(windows, Ordering::Relaxed);
@@ -927,10 +939,12 @@ mod tests {
         // 8 small shards all placed on pool slots 0 and 1 of a 4-worker
         // engine (32×16 tiles pack 4 per 64×32 array). With spill ratio
         // 1 the warm submission — whose hints all point at workers 0/1 —
-        // must divert items to the idle queues. Spill decisions happen
-        // under the queue lock with empty queues between sequential
-        // calls, so the spilled count is deterministic at submission;
-        // execution classification (affine vs stolen) is not asserted.
+        // must divert items to the idle queues. The approximate policy's
+        // relaxed depth snapshot reads drained (zero) queues between
+        // sequential calls (job completion hands the counters over with
+        // acquire/release ordering), so the spill decisions are
+        // deterministic at submission; execution classification (affine
+        // vs stolen) is not asserted.
         let mut rng = Rng::new(54);
         let eng = TernaryGemmEngine::new(
             EngineConfig::new(Design::Cim1, Tech::Femfet3T)

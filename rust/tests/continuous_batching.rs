@@ -1,0 +1,234 @@
+//! Integration: continuous cross-request batching into the GEMM M
+//! dimension.
+//!
+//! The contract under test is the batcher's bit-exactness premise: GEMM
+//! rows are independent, so a merged `M × K` plane run once through the
+//! layer pipeline must equal the per-request serial executions row for
+//! row — across designs, thread counts, and M far above the manifest
+//! `batch`. On top sit the serving-side semantics: `max_batch_rows`
+//! bounds every flush, and shutdown still answers every merged
+//! in-flight request.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use sitecim::array::mac::Flavor;
+use sitecim::array::Design;
+use sitecim::coordinator::{BatchPolicy, EngineBackend, InferenceBackend, Server, ServerConfig};
+use sitecim::device::Tech;
+use sitecim::dnn::ternary::ternarize_acts_i32;
+use sitecim::engine::tiling::{reference_gemm, TileGrid};
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::runtime::Manifest;
+use sitecim::util::rng::Rng;
+
+/// A unique temp artifacts dir per test (tests run in parallel in one
+/// process, so the tag must differ per call site).
+fn synth_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sitecim-cbatch-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn trit_bytes(trits: &[i8]) -> Vec<u8> {
+    trits.iter().map(|&t| t as u8).collect()
+}
+
+/// Write a servable synthetic MLP: random ternary weights for each
+/// `dims` transition, activation thresholds between layers, and a tiny
+/// test set.
+fn write_synth_artifacts(dir: &Path, dims: &[usize], batch: usize, seed: u64) {
+    assert!(dims.len() >= 2);
+    let mut rng = Rng::new(seed);
+    let mut weights_json = String::new();
+    for i in 0..dims.len() - 1 {
+        let (k, n) = (dims[i], dims[i + 1]);
+        let w = rng.ternary_vec(k * n, 0.5);
+        std::fs::write(dir.join(format!("w{i}.bin")), trit_bytes(&w)).unwrap();
+        if i > 0 {
+            weights_json.push_str(", ");
+        }
+        weights_json.push_str(&format!("{{\"file\": \"w{i}.bin\", \"shape\": [{k}, {n}]}}"));
+    }
+    let in_dim = dims[0];
+    let test_n = 4usize;
+    let x = rng.ternary_vec(test_n * in_dim, 0.5);
+    std::fs::write(dir.join("test_x.bin"), trit_bytes(&x)).unwrap();
+    std::fs::write(dir.join("test_y.bin"), vec![0u8; test_n]).unwrap();
+    let thresholds = vec!["0.5"; dims.len() - 2].join(", ");
+    let dims_json = dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+    let manifest = format!(
+        "{{\n  \"batch\": {batch},\n  \"dims\": [{dims_json}],\n  \"act_thresholds\": [{thresholds}],\n  \"kernel_shape\": [8, 16, 16],\n  \"files\": {{}},\n  \"weights\": [{weights_json}],\n  \"scales\": [1.0],\n  \"test_set\": {{\"x\": \"test_x.bin\", \"y\": \"test_y.bin\", \"n\": {test_n}, \"in_dim\": {in_dim}}},\n  \"accuracy\": {{}}\n}}\n"
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+}
+
+/// The reference forward pass for `Design::Cim1` serving:
+/// `reference_gemm` over 256×256 tiles + the recorded thresholds.
+fn reference_forward(manifest: &Manifest, input: &[i8]) -> Vec<f32> {
+    let mut h = input.to_vec();
+    for i in 0..manifest.weights.len() {
+        let (w, (k, n)) = manifest.load_weight(i).unwrap();
+        let y = reference_gemm(&h, &w, 1, &TileGrid::new(k, n, 256, 256), Some(Flavor::Cim1));
+        if i + 1 < manifest.weights.len() {
+            h = ternarize_acts_i32(&y, manifest.act_thresholds[i]);
+        } else {
+            return y.iter().map(|&v| v as f32).collect();
+        }
+    }
+    unreachable!()
+}
+
+#[test]
+fn merged_plane_is_bit_exact_vs_serial_per_request_across_designs_and_threads() {
+    // The tentpole's correctness core: one merged M-plane (M = 12, 3×
+    // the manifest batch) through the pipeline equals 12 serial
+    // single-row executions, for every design and thread count.
+    let dir = synth_dir("bitexact");
+    write_synth_artifacts(&dir, &[48, 32, 8], 4, 20);
+    let manifest = Manifest::load(&dir).unwrap();
+    let rows = 12usize;
+    let mut rng = Rng::new(21);
+    let inputs: Vec<Vec<i8>> = (0..rows).map(|_| rng.ternary_vec(48, 0.5)).collect();
+    let plane: Arc<[i8]> = inputs.concat().into();
+    for design in Design::ALL {
+        for threads in [1usize, 4] {
+            let b = EngineBackend::load(&manifest, design, Tech::Femfet3T, threads, None).unwrap();
+            let mut serial = Vec::with_capacity(rows * 8);
+            for input in &inputs {
+                serial.extend(b.run_batch(input, 1).unwrap());
+            }
+            let merged = b.run_batch_arc(Arc::clone(&plane), rows).unwrap();
+            assert_eq!(merged, serial, "{design:?} threads={threads}");
+        }
+    }
+}
+
+#[test]
+fn tall_m_resident_gemm_grows_worker_scratch_and_stays_exact() {
+    // Arbitrary-M through `gemm_resident_arc` directly: the per-stripe
+    // accumulators and `WorkerScratch` buffers must grow for M far above
+    // any earlier call's batch (the same engine first serves M = 1, so
+    // scratch starts small and must expand, not truncate).
+    let mut rng = Rng::new(22);
+    for design in Design::ALL {
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(design, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_pool(4)
+                .with_threads(4),
+        );
+        let (k, n) = (150usize, 60usize);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let id = engine.register_weight(&w, k, n).unwrap();
+        for m in [1usize, 48] {
+            let x: Arc<[i8]> = rng.ternary_vec(m * k, 0.5).into();
+            let want = reference_gemm(&x, &w, m, &engine.grid(k, n), design.flavor());
+            let got = engine.gemm_resident_arc(id, Arc::clone(&x), m).unwrap();
+            assert_eq!(got, want, "{design:?} m={m}");
+        }
+        let s = engine.exec_stats();
+        assert_eq!(s.submitted, s.executed, "{design:?}: queues drained");
+        assert_eq!(s.panics, 0, "{design:?}");
+    }
+}
+
+#[test]
+fn merged_serving_matches_reference_forward_and_batches_above_manifest_batch() {
+    // Server-level: one worker, a generous deadline, and 24 queued
+    // requests against a manifest batch of 4 — the continuous batcher
+    // must form flushes taller than the manifest batch (up to
+    // max_batch_rows = 16) and every reply must equal the per-request
+    // reference forward.
+    let dir = synth_dir("serve");
+    write_synth_artifacts(&dir, &[32, 16, 8], 4, 23);
+    let mut cfg = ServerConfig::new(dir.clone()).with_engine_backend();
+    cfg.n_workers = 1;
+    cfg.engine_threads = 2;
+    // The wide deadline makes the merge deterministic even on a loaded
+    // CI machine: the first flush gathers rows until the 16-row cap.
+    cfg.policy = BatchPolicy {
+        max_batch: 4,
+        max_batch_rows: 16,
+        max_wait: Duration::from_millis(400),
+    };
+    let server = Server::start(cfg).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Rng::new(24);
+    let mut pending = Vec::new();
+    for _ in 0..24 {
+        let input = rng.ternary_vec(32, 0.5);
+        let want = reference_forward(&manifest, &input);
+        pending.push((want, server.infer_async(input).unwrap()));
+    }
+    for (want, rx) in pending {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.logits, want, "merged serving must match the reference forward");
+    }
+    assert_eq!(server.metrics.requests.load(Ordering::Relaxed), 24);
+    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+    let rows = server.metrics.batch_rows_summary();
+    assert!(rows.n > 0, "flush sizes were recorded");
+    assert!(rows.max <= 16.0, "no flush exceeds max_batch_rows: {rows:?}");
+    assert!(
+        rows.max > 4.0,
+        "a single busy worker must merge above the manifest batch: {rows:?}"
+    );
+    server.shutdown();
+}
+
+#[test]
+fn max_batch_rows_bounds_every_flush() {
+    // 10 pre-queued requests against max_batch_rows = 3 on one worker:
+    // at least ceil(10/3) = 4 flushes, none taller than 3 rows.
+    let dir = synth_dir("rowcap");
+    write_synth_artifacts(&dir, &[32, 16, 8], 8, 25);
+    let mut cfg = ServerConfig::new(dir).with_engine_backend();
+    cfg.n_workers = 1;
+    cfg.engine_threads = 1;
+    cfg.policy = BatchPolicy {
+        max_batch: 8,
+        max_batch_rows: 3,
+        max_wait: Duration::from_millis(10),
+    };
+    let server = Server::start(cfg).unwrap();
+    let mut rng = Rng::new(26);
+    let pending: Vec<_> =
+        (0..10).map(|_| server.infer_async(rng.ternary_vec(32, 0.5)).unwrap()).collect();
+    for rx in pending {
+        assert!(rx.recv().unwrap().is_ok());
+    }
+    let rows = server.metrics.batch_rows_summary();
+    assert!(rows.max <= 3.0, "row cap enforced per flush: {rows:?}");
+    assert!(server.metrics.batches.load(Ordering::Relaxed) >= 4);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_merged_in_flight_replies() {
+    // Close the queue with a pile of unanswered requests: the merged
+    // formers must flush everything already submitted and answer every
+    // reply channel before the workers exit.
+    let dir = synth_dir("mergeddrain");
+    write_synth_artifacts(&dir, &[32, 16, 8], 4, 27);
+    let mut cfg = ServerConfig::new(dir).with_engine_backend();
+    cfg.n_workers = 2;
+    cfg.engine_threads = 2;
+    cfg.policy = BatchPolicy {
+        max_batch: 4,
+        max_batch_rows: 8,
+        max_wait: Duration::from_millis(1),
+    };
+    let server = Server::start(cfg).unwrap();
+    let mut rng = Rng::new(28);
+    let pending: Vec<_> =
+        (0..30).map(|_| server.infer_async(rng.ternary_vec(32, 0.5)).unwrap()).collect();
+    server.shutdown();
+    for rx in pending {
+        let reply = rx.recv().expect("reply delivered before shutdown completed");
+        assert!(reply.is_ok());
+    }
+}

@@ -72,7 +72,8 @@ fn engine_server_config(dir: PathBuf, workers: usize) -> ServerConfig {
     let mut cfg = ServerConfig::new(dir).with_engine_backend();
     cfg.n_workers = workers;
     cfg.engine_threads = 2;
-    cfg.policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+    cfg.policy =
+        BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1), ..Default::default() };
     cfg
 }
 
@@ -180,11 +181,16 @@ fn engine_backend_rejects_bad_batches_as_errors() {
     let b = EngineBackend::load(&manifest, Design::Cim1, Tech::Femfet3T, 1, None).unwrap();
     assert_eq!((b.batch(), b.in_dim(), b.out_dim()), (4, 32, 8));
     assert!(b.run_batch(&[0i8; 32], 0).is_err(), "n_valid = 0");
-    assert!(b.run_batch(&[0i8; 32], 5).is_err(), "n_valid > batch");
+    assert!(b.run_batch(&[0i8; 32], 5).is_err(), "5 rows need 5 × in_dim trits");
     assert!(b.run_batch(&[0i8; 16], 1).is_err(), "length mismatch");
     // The backend still serves after rejecting bad batches.
     let ok = b.run_batch(&[0i8; 64], 2).unwrap();
     assert_eq!(ok.len(), 2 * 8);
+    // The manifest `batch` is no longer an engine cap: a correctly
+    // shaped plane taller than it (here 5 > 4) runs in one pipeline
+    // pass — the continuous batcher's whole premise.
+    let tall = b.run_batch(&[0i8; 5 * 32], 5).unwrap();
+    assert_eq!(tall.len(), 5 * 8, "M above manifest batch is served");
 }
 
 #[test]
@@ -254,7 +260,11 @@ fn serves_requests_with_batching() {
     let (x, y) = manifest.load_test_set().unwrap();
     let mut cfg = ServerConfig::new(default_dir());
     cfg.n_workers = 2;
-    cfg.policy = BatchPolicy { max_batch: 32, max_wait: std::time::Duration::from_millis(1) };
+    cfg.policy = BatchPolicy {
+        max_batch: 32,
+        max_wait: std::time::Duration::from_millis(1),
+        ..Default::default()
+    };
     let server = Server::start(cfg).unwrap();
 
     let n = 256;

@@ -120,6 +120,18 @@ fn forced_single_worker_fifo_is_exact_and_all_affine() {
 }
 
 #[test]
+fn exact_load_aware_replay_is_exact() {
+    // The under-lock depth-scan variant kept for deterministic replay:
+    // its spill decisions are a pure function of the locked queue state,
+    // and the replay must be bit-exact like every other mode.
+    for design in Design::ALL {
+        let engine = engine_with(design, 4, AffinityMode::LoadAwareExact);
+        let s = replay(&engine, design, "load-aware-exact");
+        assert_books(&s, "load-aware-exact");
+    }
+}
+
+#[test]
 fn forced_all_steal_order_is_exact() {
     // Every item lands on worker 0's queue; workers 1..4 are starved of
     // owned work and serve purely by stealing. Which worker executes a
@@ -159,6 +171,7 @@ fn forced_orders_agree_bit_for_bit() {
         for (threads, mode) in [
             (1usize, AffinityMode::LoadAware),
             (4, AffinityMode::LoadAware),
+            (4, AffinityMode::LoadAwareExact),
             (4, AffinityMode::PinToZero),
             (4, AffinityMode::ForceSpill),
         ] {

@@ -12,7 +12,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use sitecim::array::Design;
 use sitecim::device::Tech;
 use sitecim::engine::tiling::{reference_gemm, reference_gemm_sharded};
-use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::engine::{AffinityMode, EngineConfig, TernaryGemmEngine};
 use sitecim::util::rng::Rng;
 
 #[test]
@@ -114,32 +114,46 @@ fn skewed_working_set_redistributes_and_stays_bit_exact() {
     // adds), with results bit-exact throughout.
     let mut rng = Rng::new(702);
     for design in Design::ALL {
-        let engine = TernaryGemmEngine::new(
-            EngineConfig::new(design, Tech::Femfet3T)
-                .with_array_dims(64, 32)
-                .with_tile_dims(32, 16)
-                .with_pool(8)
-                .with_threads(8)
-                .with_spill_ratio(1),
-        );
-        let (m, k, n) = (2usize, 64usize, 64usize); // 2×4 grid = 8 shards
-        let x = rng.ternary_vec(m * k, 0.5);
-        let w = rng.ternary_vec(k * n, 0.5);
-        let want =
-            reference_gemm_sharded(&x, &w, m, &engine.grid(k, n), 64, 32, design.flavor());
-        let id = engine.register_weight(&w, k, n).unwrap();
-        assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "{design:?} cold");
-        for pass in 0..4 {
-            assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "{design:?} p{pass}");
+        // The approximate (relaxed-snapshot) policy and the exact
+        // under-lock scan must both redistribute: submissions here are
+        // serial against drained queues, where the snapshot equals the
+        // exact depths and the decisions coincide deterministically.
+        for mode in [AffinityMode::LoadAware, AffinityMode::LoadAwareExact] {
+            let engine = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_tile_dims(32, 16)
+                    .with_pool(8)
+                    .with_threads(8)
+                    .with_spill_ratio(1)
+                    .with_affinity(mode),
+            );
+            let (m, k, n) = (2usize, 64usize, 64usize); // 2×4 grid = 8 shards
+            let x = rng.ternary_vec(m * k, 0.5);
+            let w = rng.ternary_vec(k * n, 0.5);
+            let want =
+                reference_gemm_sharded(&x, &w, m, &engine.grid(k, n), 64, 32, design.flavor());
+            let id = engine.register_weight(&w, k, n).unwrap();
+            assert_eq!(engine.gemm_resident(id, &x, m).unwrap(), want, "{design:?} {mode:?} cold");
+            for pass in 0..4 {
+                assert_eq!(
+                    engine.gemm_resident(id, &x, m).unwrap(),
+                    want,
+                    "{design:?} {mode:?} p{pass}"
+                );
+            }
+            let s = engine.exec_stats();
+            assert!(
+                s.stolen + s.spilled > 0,
+                "{design:?} {mode:?}: a 2-hot-array working set must redistribute: {s:?}"
+            );
+            assert!(
+                s.spilled > 0,
+                "{design:?} {mode:?}: submission-side spills are deterministic: {s:?}"
+            );
+            assert_eq!(s.affine + s.stolen + s.spilled, s.executed, "{design:?} {mode:?}");
+            assert_eq!(s.panics, 0, "{design:?} {mode:?}");
         }
-        let s = engine.exec_stats();
-        assert!(
-            s.stolen + s.spilled > 0,
-            "{design:?}: a 2-hot-array working set must redistribute: {s:?}"
-        );
-        assert!(s.spilled > 0, "{design:?}: submission-side spills are deterministic: {s:?}");
-        assert_eq!(s.affine + s.stolen + s.spilled, s.executed, "{design:?}");
-        assert_eq!(s.panics, 0, "{design:?}");
     }
 }
 
