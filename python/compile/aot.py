@@ -15,11 +15,21 @@ Artifacts written to --out (default ../artifacts):
   test_x.bin test_y.bin  held-out synthetic-digit test set (int8 / uint8)
   manifest.json        shapes, files, scales, training log, accuracies
 
+Since PR 7 the manifest is *versioned* (schema version 2): it carries a
+``sha256`` map over every referenced data file (the runtime verifies
+them eagerly at load) and a ``placement`` plan — the shelf-packed
+resident layout computed analytically by ``placement.plan_layout``, the
+stdlib mirror of the engine's ``TileCache`` — so a serving cold start
+programs arrays straight from the artifact instead of discovering
+placement on first traffic. ``sitecim artifact verify <dir>`` checks all
+of it offline.
+
 Python runs ONCE (make artifacts); the rust binary is self-contained
 afterwards.
 """
 
 import argparse
+import hashlib
 import json
 import os
 
@@ -30,10 +40,28 @@ from jax._src.lib import xla_client as xc
 
 from .kernels.sitecim_mac import cim_matmul
 from .model import accuracy, mlp_infer, mlp_infer_exact
+from .placement import placement_manifest_entry
 from .train import train
 
 BATCH = 32
 KERNEL_SHAPE = (16, 64, 32)  # (M, K, N) for the standalone kernel artifact
+MANIFEST_VERSION = 2  # keep in sync with rust/src/runtime/artifact.rs
+
+# Placement plans target the paper's default engine geometry: 256×256
+# arrays, 2 Mword pool = 32 arrays (EngineConfig defaults on the rust
+# side). A plan is advisory — engines at other geometries just fall back
+# to discovery-on-first-traffic.
+PLAN_ARRAY_ROWS = 256
+PLAN_ARRAY_COLS = 256
+PLAN_SLOTS = 32
+
+
+def sha256_file(path):
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 def to_hlo_text(lowered) -> str:
@@ -117,18 +145,26 @@ def main():
     xte.astype(np.int8).tofile(os.path.join(args.out, "test_x.bin"))
     yte.astype(np.uint8).tofile(os.path.join(args.out, "test_y.bin"))
 
+    dims = [64, 256, 128, 10]
+    layers = [(dims[i], dims[i + 1]) for i in range(len(dims) - 1)]
+    placement = placement_manifest_entry(layers, PLAN_ARRAY_ROWS, PLAN_ARRAY_COLS, PLAN_SLOTS)
+    data_files = [wf["file"] for wf in wfiles] + ["test_x.bin", "test_y.bin"]
     manifest = {
+        "version": MANIFEST_VERSION,
         "batch": BATCH,
-        "dims": [64, 256, 128, 10],
+        "dims": dims,
         "act_thresholds": [6.0, 5.0],
         "kernel_shape": list(KERNEL_SHAPE),
         "files": files,
         "weights": wfiles,
         "scales": scales,
         "test_set": {"x": "test_x.bin", "y": "test_y.bin", "n": int(len(yte)), "in_dim": 64},
+        "sha256": {f: sha256_file(os.path.join(args.out, f)) for f in data_files},
         "accuracy": accs,
         "training": log,
     }
+    if placement is not None:
+        manifest["placement"] = placement
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
         json.dump(manifest, f, indent=2)
     print(f"[aot] wrote manifest.json; done.")

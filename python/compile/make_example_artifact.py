@@ -1,0 +1,103 @@
+"""Generate the committed example artifact under
+``rust/tests/data/example_artifact``.
+
+A tiny, fully deterministic version-2 artifact — seeded ternary weights,
+per-file SHA-256 checksums and a placement plan from the stdlib
+placement mirror — committed to the repo so CI can exercise the
+artifact contract end to end without jax/numpy:
+
+- ``sitecim artifact verify rust/tests/data/example_artifact`` checks
+  the schema version, re-hashes every file and replays the plan against
+  the Rust packing rules;
+- the ``multi_tenant`` test battery loads it, asserts the Python plan
+  equals ``plan_layout``'s Rust recomputation shard for shard, and
+  strict-replays it through ``TernaryGemmEngine::program_from_plan``.
+
+The pool geometry is deliberately small (64x32 arrays, 6 slots) so the
+Rust tests can instantiate a matching engine cheaply; the weights span
+multiple k- and n-shards so the plan is not trivial. Standard library
+only; regenerate with ``python3 -m compile.make_example_artifact`` from
+``python/`` (the output is byte-stable, so a regeneration diff means
+the placement rules changed).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+
+from .placement import placement_manifest_entry
+
+ARRAY_ROWS = 64
+ARRAY_COLS = 32
+SLOTS = 6
+DIMS = [150, 60, 10]
+TEST_N = 4
+OUT_DIR = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "data", "example_artifact"
+)
+
+
+def ternary_stream(seed: int):
+    """Deterministic trits via SHA-256 in counter mode (no RNG module
+    dependency, stable across Python versions)."""
+    counter = 0
+    while True:
+        block = hashlib.sha256(seed.to_bytes(8, "little") + counter.to_bytes(8, "little"))
+        for byte in block.digest():
+            # 0..255 -> {-1, 0, +1} with a mild bias toward zero.
+            yield (byte % 3) - 1 if byte % 2 == 0 else 0
+        counter += 1
+
+
+def take_bytes(stream, count: int) -> bytes:
+    """``count`` trits as the two's-complement bytes the runtime reads."""
+    return bytes((next(stream)) & 0xFF for _ in range(count))
+
+
+def main() -> None:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    files = {}
+    weights = []
+    for i in range(len(DIMS) - 1):
+        k, n = DIMS[i], DIMS[i + 1]
+        files[f"w{i}.bin"] = take_bytes(ternary_stream(100 + i), k * n)
+        weights.append({"file": f"w{i}.bin", "shape": [k, n]})
+    files["test_x.bin"] = take_bytes(ternary_stream(200), TEST_N * DIMS[0])
+    files["test_y.bin"] = bytes(i % DIMS[-1] for i in range(TEST_N))
+    for name, data in files.items():
+        with open(os.path.join(OUT_DIR, name), "wb") as f:
+            f.write(data)
+
+    layers = [(DIMS[i], DIMS[i + 1]) for i in range(len(DIMS) - 1)]
+    placement = placement_manifest_entry(layers, ARRAY_ROWS, ARRAY_COLS, SLOTS)
+    assert placement is not None, "example model must fit its plan pool"
+    manifest = {
+        "version": 2,
+        "batch": 4,
+        "dims": DIMS,
+        "act_thresholds": [0.5] * (len(DIMS) - 2),
+        "kernel_shape": [8, 16, 16],
+        "files": {},
+        "weights": weights,
+        "scales": [1.0],
+        "sha256": {name: hashlib.sha256(data).hexdigest() for name, data in files.items()},
+        "placement": placement,
+        "test_set": {
+            "x": "test_x.bin",
+            "y": "test_y.bin",
+            "n": TEST_N,
+            "in_dim": DIMS[0],
+        },
+        "accuracy": {},
+    }
+    path = os.path.join(OUT_DIR, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}: dims {DIMS}, {len(placement['shards'])} planned shards")
+
+
+if __name__ == "__main__":
+    main()

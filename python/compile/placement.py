@@ -1,0 +1,164 @@
+"""Analytic mirror of the engine's resident-weight placement rules.
+
+The AOT compiler emits, alongside the weights, a *placement plan*: the
+shelf/shard assignments the engine's ``TileCache`` would compute on an
+empty partition, so cold-start can program arrays straight from the
+artifact instead of discovering placement on first traffic. This module
+mirrors, line for line, the Rust side it must agree with:
+
+- shard decomposition and flat order: ``engine/tiling.rs``
+  (``TileGrid::tiles`` iterates n-tiles outer / k-tiles inner;
+  ``TileGrid::shards`` splits each tile with the n-offset outer and the
+  k-offset inner);
+- region allocation: ``engine/resident.rs`` (``SlotSpace::alloc``
+  first-fit shelf packing — reuse a free span of a tall-enough shelf,
+  else open a new shelf at the high-water mark — with all row counts
+  padded to whole 16-row MAC groups) over slots in ascending index
+  order, exactly what ``TileCache::place`` does when nothing is resident
+  and nothing needs evicting.
+
+``rust/src/engine/resident.rs::plan_layout`` is the same computation in
+Rust; the committed example artifact (generated here, strict-verified by
+``sitecim artifact verify`` and replayed by ``program_from_plan`` in the
+Rust tests) pins the two mirrors against each other in CI.
+
+Standard library only — importable without jax/numpy (unlike ``aot``).
+"""
+
+from __future__ import annotations
+
+GROUP_ROWS = 16
+
+
+def pad_rows(rows: int) -> int:
+    """Round ``rows`` up to whole 16-row MAC groups (``div_ceil * 16``)."""
+    return -(-rows // GROUP_ROWS) * GROUP_ROWS
+
+
+def grid_shards(k, n, tile_rows, tile_cols, array_rows, array_cols):
+    """Shards of a ``k x n`` weight in the engine's flat order.
+
+    Mirrors ``TileGrid::new(k, n, tile_rows, tile_cols)
+    .shards(array_rows, array_cols)``: tiles iterate n-outer/k-inner,
+    and each tile splits into array-fitting shards n-offset-outer /
+    k-offset-inner. Returns dicts with ``k0/k_len/n0/n_len``.
+    """
+    assert k > 0 and n > 0, "weights have positive dimensions"
+    assert tile_rows % GROUP_ROWS == 0, "tile rows keep whole MAC groups"
+    shards = []
+    n_tiles = -(-n // tile_cols)
+    k_tiles = -(-k // tile_rows)
+    for nt in range(n_tiles):
+        n0 = nt * tile_cols
+        n_len = min(tile_cols, n - n0)
+        for kt in range(k_tiles):
+            k0 = kt * tile_rows
+            k_len = min(tile_rows, k - k0)
+            for n_off in range(0, n_len, array_cols):
+                for k_off in range(0, k_len, array_rows):
+                    shards.append(
+                        {
+                            "k0": k0 + k_off,
+                            "k_len": min(array_rows, k_len - k_off),
+                            "n0": n0 + n_off,
+                            "n_len": min(array_cols, n_len - n_off),
+                        }
+                    )
+    return shards
+
+
+class SlotSpace:
+    """One pool array's free space: first-fit shelf packing.
+
+    Mirrors ``SlotSpace::alloc`` in ``engine/resident.rs``: reuse the
+    first free span of the first tall-enough shelf (``shelf.rows >=
+    rows``, splitting the span and keeping the leftover free), else open
+    a new shelf at the high-water mark. Rects carry the *requested*
+    padded row count even on a taller reused shelf.
+    """
+
+    def __init__(self):
+        # Shelves are dicts {row0, rows, segs}; segs are dicts
+        # {col0, cols, used} partitioning [0, slot_cols).
+        self.shelves = []
+        self.used_rows = 0
+
+    def alloc(self, slot_rows, slot_cols, rows, cols):
+        """Place a padded ``rows x cols`` region; None when it won't fit."""
+        for shelf in self.shelves:
+            if shelf["rows"] < rows:
+                continue
+            for i, seg in enumerate(shelf["segs"]):
+                if not seg["used"] and seg["cols"] >= cols:
+                    col0 = seg["col0"]
+                    extra = seg["cols"] - cols
+                    seg["cols"] = cols
+                    seg["used"] = True
+                    if extra > 0:
+                        shelf["segs"].insert(
+                            i + 1, {"col0": col0 + cols, "cols": extra, "used": False}
+                        )
+                    return {"row0": shelf["row0"], "rows": rows, "col0": col0, "cols": cols}
+        if self.used_rows + rows <= slot_rows and cols <= slot_cols:
+            row0 = self.used_rows
+            self.used_rows += rows
+            segs = [{"col0": 0, "cols": cols, "used": True}]
+            if cols < slot_cols:
+                segs.append({"col0": cols, "cols": slot_cols - cols, "used": False})
+            self.shelves.append({"row0": row0, "rows": rows, "segs": segs})
+            return {"row0": row0, "rows": rows, "col0": 0, "cols": cols}
+        return None
+
+
+def plan_layout(layers, array_rows, array_cols, n_slots):
+    """Placement plan for ``layers`` ([(k, n), ...]) on an empty
+    ``n_slots``-array partition, or None when the working set does not
+    fit without eviction (a plan is only meaningful if cold-start can
+    program it wholesale). Slots are scanned in ascending index order
+    per shard, exactly like ``TileCache::place`` on an empty cache; the
+    recorded ``slot`` is the partition-relative rank.
+    """
+    slots = [SlotSpace() for _ in range(n_slots)]
+    plan = []
+    for li, (k, n) in enumerate(layers):
+        shards = grid_shards(k, n, array_rows, array_cols, array_rows, array_cols)
+        for si, sh in enumerate(shards):
+            rows = pad_rows(sh["k_len"])
+            assert rows <= array_rows and sh["n_len"] <= array_cols
+            placed = None
+            for s, space in enumerate(slots):
+                rect = space.alloc(array_rows, array_cols, rows, sh["n_len"])
+                if rect is not None:
+                    placed = (s, rect)
+                    break
+            if placed is None:
+                return None
+            slot, rect = placed
+            plan.append(
+                {
+                    "layer": li,
+                    "shard": si,
+                    "k0": sh["k0"],
+                    "k_len": sh["k_len"],
+                    "n0": sh["n0"],
+                    "n_len": sh["n_len"],
+                    "slot": slot,
+                    "row0": rect["row0"],
+                    "col0": rect["col0"],
+                }
+            )
+    return plan
+
+
+def placement_manifest_entry(layers, array_rows, array_cols, n_slots):
+    """The manifest ``placement`` object for ``layers``, or None when no
+    eviction-free plan exists at this pool size."""
+    plan = plan_layout(layers, array_rows, array_cols, n_slots)
+    if plan is None:
+        return None
+    return {
+        "array_rows": array_rows,
+        "array_cols": array_cols,
+        "slots": n_slots,
+        "shards": plan,
+    }

@@ -17,6 +17,12 @@
 //! baseline. Serving throughput (`inf_per_s`) still comes from the real
 //! multi-threaded engine and is never gated.
 //!
+//! Each capacity also gets two per-tenant rows (`tenant:res` /
+//! `tenant:shared`) from a second replay in which the first FC layer
+//! hard-reserves half the pool as its own partition — the multi-tenant
+//! analogue of the shared sweep, recorded from the per-tenant stat
+//! books so the isolation of the reserved partition is gateable too.
+//!
 //! Emits `BENCH_capacity.json` (uploaded as a CI artifact alongside
 //! `BENCH_engine.json`).
 //!
@@ -83,8 +89,59 @@ fn proxy_hit_counters(
     (d.hits, d.misses, d.evictions, d.hit_rate())
 }
 
+/// Two-tenant variant of the deterministic replay: the first FC layer
+/// hard-reserves half the pool as its own partition while the remaining
+/// layers share the rest best-effort. Returns per-tenant
+/// `(arrays, hits, misses, evictions, hit_rate)` rows — reserved first,
+/// shared second — or `None` when the pool is too small to split.
+fn proxy_tenant_counters(
+    dims: &[(usize, usize)],
+    arrays: usize,
+    reps: usize,
+) -> Option<[(usize, u64, u64, u64, f64); 2]> {
+    if arrays < 2 {
+        return None;
+    }
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+            .with_array_dims(PROXY_ARRAY, PROXY_ARRAY)
+            .with_capacity_words((arrays * PROXY_ARRAY * PROXY_ARRAY) as u64)
+            .with_threads(1),
+    );
+    let reserve = arrays / 2;
+    let words = (reserve * PROXY_ARRAY * PROXY_ARRAY) as u64;
+    let res = engine.reserve_tenant(words).unwrap();
+    let ids: Vec<_> = dims
+        .iter()
+        .enumerate()
+        .map(|(i, &(k, n))| {
+            let (pk, pn) = (k / PROXY_SCALE, n / PROXY_SCALE);
+            let tenant = if i == 0 { res } else { 0 };
+            let w: Vec<i8> = vec![0; pk * pn];
+            engine.register_weight_arc_in(w.into(), pk, pn, tenant).unwrap()
+        })
+        .collect();
+    let xs: Vec<Vec<i8>> = dims.iter().map(|&(k, _)| vec![0i8; k / PROXY_SCALE]).collect();
+    let one_pass = || {
+        for (id, x) in ids.iter().zip(&xs) {
+            engine.gemm_resident(*id, x, 1).unwrap();
+        }
+    };
+    one_pass(); // warm
+    let before = [engine.tenant_stats(res), engine.tenant_stats(0)];
+    for _ in 0..reps {
+        one_pass();
+    }
+    let dr = engine.tenant_stats(res).since(&before[0]);
+    let ds = engine.tenant_stats(0).since(&before[1]);
+    Some([
+        (reserve, dr.hits, dr.misses, dr.evictions, dr.hit_rate()),
+        (arrays - reserve, ds.hits, ds.misses, ds.evictions, ds.hit_rate()),
+    ])
+}
+
 struct Entry {
-    design: Design,
+    design: String,
     capacity_words: u64,
     arrays: usize,
     hits: u64,
@@ -192,7 +249,7 @@ fn main() {
                 inf_per_s,
             );
             entries.push(Entry {
-                design,
+                design: format!("{design:?}"),
                 capacity_words: cap,
                 arrays: engine.pool_arrays(),
                 hits,
@@ -200,6 +257,43 @@ fn main() {
                 evictions,
                 hit_rate,
                 inf_per_s,
+            });
+        }
+    }
+
+    // Per-tenant hit-rate columns from the same deterministic replay,
+    // split two ways: layer 0 in a hard-reserved half-pool partition,
+    // layers 1.. in the shared remainder. Placement is design-
+    // independent, so one replay per capacity covers all designs; the
+    // rows carry no throughput figure (inf_per_s recorded as 0).
+    for &cap in &caps {
+        let arrays = ((cap / WORDS_PER_ARRAY) as usize).max(1);
+        let Some(tenants) = proxy_tenant_counters(&dims, arrays, reps) else {
+            println!("tenant replay skipped at cap {cap}: pool too small to split");
+            continue;
+        };
+        for (name, (t_arrays, hits, misses, evictions, hit_rate)) in
+            [("tenant:res", tenants[0]), ("tenant:shared", tenants[1])]
+        {
+            println!(
+                "{:<13} cap {:>10} words ({:>3} arrays): hit rate {:>5.1}%  ({} h / {} m / {} e, deterministic replay)",
+                name,
+                cap,
+                t_arrays,
+                100.0 * hit_rate,
+                hits,
+                misses,
+                evictions,
+            );
+            entries.push(Entry {
+                design: name.to_string(),
+                capacity_words: cap,
+                arrays: t_arrays,
+                hits,
+                misses,
+                evictions,
+                hit_rate,
+                inf_per_s: 0.0,
             });
         }
     }
@@ -213,7 +307,7 @@ fn main() {
     ));
     for (i, e) in entries.iter().enumerate() {
         json.push_str(&format!(
-            "    {{\"design\": \"{:?}\", \"capacity_words\": {}, \"arrays\": {}, \"hits\": {}, \"misses\": {}, \"evictions\": {}, \"hit_rate\": {:.4}, \"inf_per_s\": {:.3}}}{}\n",
+            "    {{\"design\": \"{}\", \"capacity_words\": {}, \"arrays\": {}, \"hits\": {}, \"misses\": {}, \"evictions\": {}, \"hit_rate\": {:.4}, \"inf_per_s\": {:.3}}}{}\n",
             e.design,
             e.capacity_words,
             e.arrays,

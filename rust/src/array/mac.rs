@@ -385,45 +385,99 @@ pub fn dot_region_cim2_scratch_into(
 ) {
     check_region(storage, rect, inputs.len(), m);
     let key = (storage.n_rows(), rect.row0, rect.rows);
-    if !scratch.cim2_masks.contains_key(&key) {
-        // Bounded cache: a pathological churn of region shapes (far
-        // beyond any real placement working set) resets it rather than
-        // growing without bound.
-        if scratch.cim2_masks.len() >= REGION_MASK_CACHE_CAP {
-            scratch.cim2_masks.clear();
-        }
-        scratch
-            .cim2_masks
-            .insert(key, Cim2RegionMasks::build(key.0, key.1, key.2));
-    }
-    let masks = &scratch.cim2_masks[&key];
-    cim2_region_kernel(storage, rect, inputs, m, masks, &mut scratch.bufs, out);
+    let (masks, bufs) = scratch.masks_and_bufs(key);
+    cim2_region_kernel(storage, rect, inputs, m, masks, bufs, out);
 }
 
-/// Entries retained in [`RegionScratch`]'s mask cache before it resets.
-/// Keys are (array row count, region row start, region row count) — a
-/// worker's steady-state working set is one entry per distinct placed
-/// region row-span it executes, typically a handful.
+/// Entries retained in [`RegionScratch`]'s mask cache. Keys are (array
+/// row count, region row start, region row count) — a worker's
+/// steady-state working set is one entry per distinct placed region
+/// row-span it executes, typically a handful. At capacity the cache
+/// evicts the single least-recently-used entry, so a pathological churn
+/// of region shapes costs one rebuild per new shape instead of
+/// flushing the whole resident working set.
 const REGION_MASK_CACHE_CAP: usize = 256;
+
+/// One cached mask set plus its last-use stamp for LRU eviction.
+struct MaskEntry {
+    last_use: u64,
+    masks: Cim2RegionMasks,
+}
 
 /// Per-worker scratch for the region kernels: the CiM II restricted
 /// stride-mask cache plus reusable bit-plane buffers. Owned by each
 /// executor worker (see `engine::exec::WorkerScratch`); the kernels
 /// never share one across threads.
-#[derive(Default)]
 pub struct RegionScratch {
     /// (n_rows, row0, rows) → restricted cycle masks. The masks depend
     /// only on the array's row count and the region's *row* span — not
     /// its columns and not the array's contents — so one entry serves
     /// every same-shaped placement on every array.
-    cim2_masks: std::collections::HashMap<(usize, usize, usize), Cim2RegionMasks>,
+    cim2_masks: std::collections::HashMap<(usize, usize, usize), MaskEntry>,
     bufs: Cim2PlaneBufs,
+    /// Mask-cache capacity; [`REGION_MASK_CACHE_CAP`] by default.
+    cap: usize,
+    /// Monotonic access stamp for the LRU policy.
+    clock: u64,
+    /// Calls served from the cache (no mask rebuild).
+    mask_hits: u64,
+}
+
+impl Default for RegionScratch {
+    fn default() -> RegionScratch {
+        RegionScratch::with_mask_cap(REGION_MASK_CACHE_CAP)
+    }
 }
 
 impl RegionScratch {
+    /// Scratch with a custom mask-cache capacity (tests exercise the
+    /// eviction path with tiny caps; production code uses `default()`).
+    pub fn with_mask_cap(cap: usize) -> RegionScratch {
+        RegionScratch {
+            cim2_masks: std::collections::HashMap::new(),
+            bufs: Cim2PlaneBufs::default(),
+            cap: cap.max(1),
+            clock: 0,
+            mask_hits: 0,
+        }
+    }
+
     /// Cached mask entries (observability for tests).
     pub fn cached_masks(&self) -> usize {
         self.cim2_masks.len()
+    }
+
+    /// Kernel calls served without rebuilding masks (observability for
+    /// tests).
+    pub fn mask_hits(&self) -> u64 {
+        self.mask_hits
+    }
+
+    /// The cache policy in one place: return `key`'s masks (building
+    /// them on a miss, evicting the least-recently-used entry when at
+    /// capacity) alongside the reusable plane buffers.
+    fn masks_and_bufs(
+        &mut self,
+        key: (usize, usize, usize),
+    ) -> (&Cim2RegionMasks, &mut Cim2PlaneBufs) {
+        self.clock += 1;
+        if let Some(e) = self.cim2_masks.get_mut(&key) {
+            e.last_use = self.clock;
+            self.mask_hits += 1;
+        } else {
+            if self.cim2_masks.len() >= self.cap {
+                let lru = self
+                    .cim2_masks
+                    .iter()
+                    .min_by_key(|(_, e)| e.last_use)
+                    .map(|(&k, _)| k)
+                    .expect("cap >= 1, so a full cache has an LRU entry");
+                self.cim2_masks.remove(&lru);
+            }
+            let masks = Cim2RegionMasks::build(key.0, key.1, key.2);
+            self.cim2_masks.insert(key, MaskEntry { last_use: self.clock, masks });
+        }
+        (&self.cim2_masks[&key].masks, &mut self.bufs)
     }
 }
 
@@ -824,7 +878,9 @@ mod tests {
             assert_eq!(got, dot_region_cim2(&s, rect, &inputs, m), "pass {pass} {rect:?}");
         }
         assert_eq!(scratch.cached_masks(), 4, "one entry per distinct row span");
-        // Steady state: repeating the working set adds no entries.
+        assert_eq!(scratch.mask_hits(), 1, "the span-sharing rect is the only first-pass hit");
+        // Steady state: repeating the working set adds no entries and
+        // every call is a cache hit.
         for rect in &rects {
             let inputs = rng.ternary_vec(m * rect.rows, 0.4);
             let mut got = vec![0i32; m * rect.cols];
@@ -832,6 +888,40 @@ mod tests {
             assert_eq!(got, dot_region_cim2(&s, rect, &inputs, m));
         }
         assert_eq!(scratch.cached_masks(), 4);
+        assert_eq!(scratch.mask_hits(), 6);
+    }
+
+    #[test]
+    fn mask_cache_evicts_one_lru_entry_not_the_working_set() {
+        let (s, _) = random_setup(35, 256, 8, 0.4);
+        let mut rng = Rng::new(36);
+        let mut scratch = RegionScratch::with_mask_cap(2);
+        let m = 2;
+        let rect_at = |row0: usize| Rect { row0, rows: 64, col0: 0, cols: 8 };
+        let run = |scratch: &mut RegionScratch, rng: &mut Rng, row0: usize| {
+            let rect = rect_at(row0);
+            let inputs = rng.ternary_vec(m * rect.rows, 0.4);
+            let mut got = vec![i32::MIN; m * rect.cols];
+            dot_region_cim2_scratch_into(&s, &rect, &inputs, m, scratch, &mut got);
+            assert_eq!(got, dot_region_cim2(&s, &rect, &inputs, m), "row0 {row0}");
+        };
+        let (a, b, c) = (0, 64, 128);
+        run(&mut scratch, &mut rng, a);
+        run(&mut scratch, &mut rng, b);
+        assert_eq!((scratch.cached_masks(), scratch.mask_hits()), (2, 0));
+        run(&mut scratch, &mut rng, b); // bump b: a is now the LRU entry
+        assert_eq!(scratch.mask_hits(), 1);
+        run(&mut scratch, &mut rng, c); // at cap: evicts a alone
+        assert_eq!((scratch.cached_masks(), scratch.mask_hits()), (2, 1));
+        // The rest of the working set survives the eviction — the old
+        // clear-wholesale policy would miss here.
+        run(&mut scratch, &mut rng, b);
+        assert_eq!(scratch.mask_hits(), 2);
+        run(&mut scratch, &mut rng, a); // miss; evicts c (b was just used)
+        assert_eq!((scratch.cached_masks(), scratch.mask_hits()), (2, 2));
+        run(&mut scratch, &mut rng, b); // still resident
+        run(&mut scratch, &mut rng, c); // miss again
+        assert_eq!((scratch.cached_masks(), scratch.mask_hits()), (2, 3));
     }
 
     #[test]

@@ -10,19 +10,22 @@
 //!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
 //!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine] [--threads T]
 //!            [--capacity-words W] [--max-batch-rows R]
+//!            multi-model: [--model a=dir1,b=dir2] [--reserve a=WORDS]
+//!   artifact verify <dir>   offline artifact check (schema, checksums, plan)
 
 mod bench_check;
 
+use std::path::PathBuf;
 use std::time::Instant;
 
 use anyhow::{Context, Result};
 
 use crate::array::area::Design;
 use crate::array::{mac, CimArray, SiTeCim1Array, SiTeCim2Array};
-use crate::coordinator::{BackendKind, Server, ServerConfig};
+use crate::coordinator::{BackendKind, MultiServer, MultiServerConfig, Server, ServerConfig};
 use crate::device::Tech;
 use crate::engine::tiling::reference_gemm;
-use crate::engine::{EngineConfig, TernaryGemmEngine};
+use crate::engine::{plan_layout, EngineConfig, TernaryGemmEngine};
 use crate::repro;
 use crate::runtime::{self, Manifest, ModelKind};
 use crate::util::cli::Args;
@@ -71,6 +74,18 @@ USAGE: sitecim <subcommand> [flags]
           it to the whole network; the report includes rows-per-flush
           p50/p95 and measured amortized residency costs from the
           engine's own counters)
+          multi-model: --model a=dir1,b=dir2 serves N models from one
+          engine pool (per-model continuous-batching lanes; requests
+          round-robin across models); --reserve a=WORDS[,b=WORDS] gives
+          a model a hard-reserved capacity partition of the pool —
+          everything else shares the rest best-effort; the report adds
+          per-tenant request counts, hit rates and plan/traffic write
+          rows
+  artifact verify <dir>
+          load the artifact at <dir> and check it offline: manifest
+          schema version, per-file sha256 checksums, and (when present)
+          that the placement plan validates and matches the engine's
+          own packing rules exactly; exits nonzero on any mismatch
   help    this message
 ";
 
@@ -83,6 +98,7 @@ pub fn run(args: Args) -> Result<i32> {
         Some("bench-check") => cmd_bench_check(&args),
         Some("infer") => cmd_infer(&args),
         Some("serve") => cmd_serve(&args),
+        Some("artifact") => cmd_artifact(&args),
         Some("help") | None => {
             print!("{USAGE}");
             Ok(0)
@@ -338,6 +354,11 @@ fn cmd_infer(args: &Args) -> Result<i32> {
 }
 
 fn cmd_serve(args: &Args) -> Result<i32> {
+    if let Some(spec) = args.get("model") {
+        if spec.contains('=') {
+            return cmd_serve_multi(args, spec);
+        }
+    }
     let dir = args
         .get("artifacts")
         .map(Into::into)
@@ -412,5 +433,128 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         );
     }
     server.shutdown();
+    Ok(0)
+}
+
+fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
+    let mut models: Vec<(String, PathBuf)> = Vec::new();
+    for part in spec.split(',') {
+        let (name, dir) = part
+            .split_once('=')
+            .with_context(|| format!("bad --model entry {part:?} (expected name=dir)"))?;
+        models.push((name.to_string(), PathBuf::from(dir)));
+    }
+    let n_requests = args.get_usize("requests", 512);
+    let capacity = args.get_u64("capacity-words", 2 * 1024 * 1024);
+    let mut cfg = MultiServerConfig::new(models.clone(), capacity);
+    cfg.n_workers = args.get_usize("workers", 1);
+    cfg.policy.max_batch = args.get_usize("batch", 32);
+    cfg.policy.max_batch_rows = args.get_usize("max-batch-rows", cfg.policy.max_batch_rows);
+    cfg.engine_threads = args.get_usize("threads", 2);
+    if let Some(rspec) = args.get("reserve") {
+        for part in rspec.split(',') {
+            let (name, words) = part
+                .split_once('=')
+                .with_context(|| format!("bad --reserve entry {part:?} (expected name=words)"))?;
+            let words: u64 =
+                words.parse().with_context(|| format!("bad --reserve words in {part:?}"))?;
+            cfg.reserves.insert(name.to_string(), words);
+        }
+    }
+
+    let mut sets = Vec::new();
+    for (name, dir) in &models {
+        let manifest = Manifest::load(dir)?;
+        let (x, y) = manifest.load_test_set()?;
+        sets.push((name.clone(), manifest.in_dim, manifest.test_n, x, y));
+    }
+    let server = MultiServer::start(cfg)?;
+    let t0 = Instant::now();
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let (name, in_dim, test_n, x, _) = &sets[i % sets.len()];
+        let s = (i / sets.len()) % test_n;
+        let input = x[s * in_dim..(s + 1) * in_dim].to_vec();
+        let rx = server.infer_async(name, input).map_err(anyhow::Error::msg)?;
+        pending.push((i % sets.len(), s, rx));
+    }
+    let mut correct = 0usize;
+    for (mi, s, rx) in pending {
+        let reply = rx.recv()?.map_err(anyhow::Error::msg)?;
+        if reply.pred == sets[mi].4[s] as usize {
+            correct += 1;
+        }
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "served {n_requests} requests across {} models in {dt:.2}s ({:.0} req/s), accuracy {:.2}%",
+        sets.len(),
+        n_requests as f64 / dt,
+        100.0 * correct as f64 / n_requests as f64
+    );
+    println!("{}", server.metrics.report());
+    for name in server.model_names() {
+        let gen = server.model_generation(&name).unwrap_or(0);
+        if let Some(m) = server.measured_residency(&name) {
+            println!(
+                "tenant {name} (v{gen}): {} requests, {:.1}% hit rate, {} plan + {} traffic write rows, {}/inf energy, {}/inf latency",
+                m.inferences,
+                100.0 * m.hit_rate,
+                m.plan_write_rows,
+                m.write_rows,
+                crate::util::units::fmt_energy(m.energy_per_inf_j),
+                crate::util::units::fmt_time(m.latency_per_inf_s),
+            );
+        }
+    }
+    server.shutdown();
+    Ok(0)
+}
+
+fn cmd_artifact(args: &Args) -> Result<i32> {
+    if args.positional.get(1).map(String::as_str) != Some("verify") {
+        eprintln!("usage: sitecim artifact verify <dir>");
+        return Ok(2);
+    }
+    let dir: PathBuf = args
+        .positional
+        .get(2)
+        .map(Into::into)
+        .unwrap_or_else(runtime::default_dir);
+    // Manifest::load already enforces the schema version and re-hashes
+    // every checksummed file — an error here IS a failed verification.
+    let manifest = Manifest::load(&dir)
+        .with_context(|| format!("artifact at {} failed verification", dir.display()))?;
+    println!(
+        "manifest v{}: {} weight layers, {} checksummed files — checksums OK",
+        manifest.version,
+        manifest.weights.len(),
+        manifest.sha256.len()
+    );
+    match &manifest.placement {
+        None => println!("no placement plan (serving will discover placements on first touch)"),
+        Some(plan) => {
+            let layers: Vec<(usize, usize)> =
+                manifest.dims.windows(2).map(|w| (w[0], w[1])).collect();
+            let recomputed = plan_layout(&layers, plan.array_rows, plan.array_cols, plan.slots)
+                .context("placement plan claims a pool the model does not fit")?;
+            if recomputed != plan.shards {
+                eprintln!(
+                    "FAILED: placement plan diverges from the engine's packing rules \
+                     ({} shards in plan, {} recomputed)",
+                    plan.shards.len(),
+                    recomputed.len()
+                );
+                return Ok(1);
+            }
+            println!(
+                "placement plan OK: {} shards over {} {}x{} arrays, matches engine packing",
+                plan.shards.len(),
+                plan.slots,
+                plan.array_rows,
+                plan.array_cols
+            );
+        }
+    }
     Ok(0)
 }

@@ -24,18 +24,32 @@
 //!
 //! Both present the same padded-batch trits → logits surface, so the
 //! server's worker loop is backend-agnostic.
+//!
+//! [`MultiTenantBackend`] extends the engine path to N models on **one**
+//! shared pool: each model is a [`TenantModel`] whose weights register
+//! into a cache partition (a hard reservation carved by
+//! `TernaryGemmEngine::reserve_tenant`, or the best-effort shared
+//! partition 0), cold-starts from the artifact's placement plan when one
+//! matches the engine geometry, and can be hot-swapped to a new artifact
+//! version — the new version registers fresh weight ids and programs
+//! into the partition's headroom, the old version keeps serving until
+//! the swap returns it for draining, and bit-exactness never depends on
+//! placement (content tags are authoritative).
 
-use std::sync::Arc;
+use std::collections::BTreeMap;
+use std::sync::{Arc, RwLock};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::array::area::Design;
 use crate::device::Tech;
 use crate::dnn::ternary;
-use crate::engine::resident::WeightId;
-use crate::engine::{EngineConfig, EngineStatsSnapshot, ExecStatsSnapshot, TernaryGemmEngine};
+use crate::engine::resident::{WeightId, SHARED_PARTITION};
+use crate::engine::{
+    EngineConfig, EngineStatsSnapshot, ExecStatsSnapshot, PlannedShard, TernaryGemmEngine,
+};
 use crate::runtime::executor::PjrtClient;
-use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind};
+use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind, PlacementPlan};
 
 /// Which execution backend serves inference.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -143,33 +157,7 @@ impl EngineBackend {
         n_threads: usize,
         capacity_words: Option<u64>,
     ) -> Result<EngineBackend> {
-        let mut weights = Vec::new();
-        for i in 0..manifest.weights.len() {
-            let (w, (k, n)) = manifest.load_weight(i)?;
-            weights.push((w, k, n));
-        }
-        if weights.is_empty() {
-            bail!("manifest describes no weight layers");
-        }
-        for pair in weights.windows(2) {
-            if pair[0].2 != pair[1].1 {
-                bail!(
-                    "layer shapes do not chain: {}×{} then {}×{}",
-                    pair[0].1,
-                    pair[0].2,
-                    pair[1].1,
-                    pair[1].2
-                );
-            }
-        }
-        if manifest.act_thresholds.len() + 1 < weights.len() {
-            bail!(
-                "manifest has {} activation thresholds for {} layers (need {})",
-                manifest.act_thresholds.len(),
-                weights.len(),
-                weights.len() - 1
-            );
-        }
+        let weights = load_layer_chain(manifest)?;
         let in_dim = weights[0].1;
         let out_dim = weights.last().unwrap().2;
 
@@ -284,6 +272,299 @@ impl InferenceBackend for EngineBackend {
     }
 }
 
+/// Load the manifest's weight layers and check that their shapes chain
+/// and the activation thresholds cover the layer boundaries. Shared by
+/// the single-model [`EngineBackend`] and [`MultiTenantBackend`].
+fn load_layer_chain(manifest: &Manifest) -> Result<Vec<(Vec<i8>, usize, usize)>> {
+    let mut weights = Vec::new();
+    for i in 0..manifest.weights.len() {
+        let (w, (k, n)) = manifest.load_weight(i)?;
+        weights.push((w, k, n));
+    }
+    if weights.is_empty() {
+        bail!("manifest describes no weight layers");
+    }
+    for pair in weights.windows(2) {
+        if pair[0].2 != pair[1].1 {
+            bail!(
+                "layer shapes do not chain: {}×{} then {}×{}",
+                pair[0].1,
+                pair[0].2,
+                pair[1].1,
+                pair[1].2
+            );
+        }
+    }
+    if manifest.act_thresholds.len() + 1 < weights.len() {
+        bail!(
+            "manifest has {} activation thresholds for {} layers (need {})",
+            manifest.act_thresholds.len(),
+            weights.len(),
+            weights.len() - 1
+        );
+    }
+    Ok(weights)
+}
+
+/// One loaded model version inside a [`MultiTenantBackend`]: its
+/// registered layer weights, the cache partition they place into, and
+/// the layer pipeline to run them. Immutable once built — hot-swap
+/// builds a *new* `TenantModel` (new weight ids, `generation + 1`) and
+/// atomically replaces the map entry, so a server flush that captured
+/// this `Arc` runs its whole pipeline on one version.
+pub struct TenantModel {
+    engine: Arc<TernaryGemmEngine>,
+    name: String,
+    /// Monotonic per-name version instance (1 on first load, +1 per
+    /// hot-swap). Replies can be attributed to the exact version that
+    /// served them.
+    generation: u64,
+    /// The cache partition the model's shards place into (0 = shared
+    /// best-effort partition).
+    partition: usize,
+    /// (registered weight handle, k, n) per layer.
+    layers: Vec<(WeightId, usize, usize)>,
+    thresholds: Vec<f64>,
+    batch: usize,
+    in_dim: usize,
+    out_dim: usize,
+}
+
+impl TenantModel {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// The cache partition this model's shards place into.
+    pub fn partition(&self) -> usize {
+        self.partition
+    }
+
+    /// The model's engine-side work book (see
+    /// [`TernaryGemmEngine::tenant_stats`]). Shared-partition models
+    /// share partition 0's book.
+    pub fn tenant_stats(&self) -> EngineStatsSnapshot {
+        self.engine.tenant_stats(self.partition)
+    }
+
+    /// Same continuous-batching surface as
+    /// [`EngineBackend::run_batch_arc`]: one merged `n_valid × in_dim`
+    /// plane through the layer pipeline, zero-copy.
+    pub fn run_batch_arc(&self, plane: Arc<[i8]>, n_valid: usize) -> Result<Vec<f32>> {
+        if n_valid == 0 {
+            bail!("n_valid must be >= 1");
+        }
+        if plane.len() != n_valid * self.in_dim {
+            bail!("expected {} trits, got {}", n_valid * self.in_dim, plane.len());
+        }
+        let mut h = plane;
+        for (li, (id, _k, _n)) in self.layers.iter().enumerate() {
+            let y = self
+                .engine
+                .gemm_resident_arc(*id, Arc::clone(&h), n_valid)
+                .with_context(|| format!("model {} layer {li} resident GEMM", self.name))?;
+            if li + 1 < self.layers.len() {
+                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]).into();
+            } else {
+                return Ok(y.iter().map(|&v| v as f32).collect());
+            }
+        }
+        unreachable!("layers is non-empty; the final layer returns")
+    }
+}
+
+impl InferenceBackend for TenantModel {
+    fn batch(&self) -> usize {
+        self.batch
+    }
+
+    fn in_dim(&self) -> usize {
+        self.in_dim
+    }
+
+    fn out_dim(&self) -> usize {
+        self.out_dim
+    }
+
+    fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>> {
+        self.run_batch_arc(Arc::from(trits), n_valid)
+    }
+}
+
+/// N models resident on **one** shared engine pool, each in its own
+/// capacity partition (hard reservation) or the best-effort shared
+/// partition, each hot-swappable to a new artifact version without a
+/// serving gap. See the module docs.
+pub struct MultiTenantBackend {
+    engine: Arc<TernaryGemmEngine>,
+    models: RwLock<BTreeMap<String, Arc<TenantModel>>>,
+}
+
+impl MultiTenantBackend {
+    /// An empty multi-tenant backend over a `capacity_words`-bounded
+    /// pool. Models are added with [`Self::add_model`].
+    pub fn new(
+        design: Design,
+        tech: Tech,
+        n_threads: usize,
+        capacity_words: u64,
+    ) -> MultiTenantBackend {
+        let cfg = EngineConfig::new(design, tech)
+            .with_threads(n_threads)
+            .with_capacity_words(capacity_words);
+        MultiTenantBackend {
+            engine: Arc::new(TernaryGemmEngine::new(cfg)),
+            models: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    pub fn engine(&self) -> &Arc<TernaryGemmEngine> {
+        &self.engine
+    }
+
+    /// Loaded model names, sorted.
+    pub fn model_names(&self) -> Vec<String> {
+        self.lock_models().keys().cloned().collect()
+    }
+
+    /// The current version of `name`, if loaded.
+    pub fn model(&self, name: &str) -> Option<Arc<TenantModel>> {
+        self.lock_models().get(name).cloned()
+    }
+
+    fn lock_models(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<TenantModel>>> {
+        self.models.read().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Load `manifest` as tenant `name`. With `reserve_words` the model
+    /// gets a hard-reserved partition of that many pool words (its
+    /// residency is isolated from every other tenant's traffic);
+    /// without, it shares the best-effort partition 0 under second-
+    /// chance eviction. When the manifest carries a placement plan
+    /// matching this engine's geometry, the weights are programmed from
+    /// the plan (strict replay on the empty partition — cold start does
+    /// no discovery).
+    pub fn add_model(
+        &self,
+        name: &str,
+        manifest: &Manifest,
+        reserve_words: Option<u64>,
+    ) -> Result<Arc<TenantModel>> {
+        ensure!(
+            self.model(name).is_none(),
+            "model {name:?} is already loaded (hot_swap replaces versions)"
+        );
+        let partition = match reserve_words {
+            Some(words) => self
+                .engine
+                .reserve_tenant(words)
+                .with_context(|| format!("reserving {words} pool words for model {name:?}"))?,
+            None => SHARED_PARTITION,
+        };
+        let model = self.build_version(name, manifest, partition, 1)?;
+        self.models
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(name.to_string(), Arc::clone(&model));
+        Ok(model)
+    }
+
+    /// Hot-swap `name` to a new artifact version: register the new
+    /// weights into the same partition, program them into its headroom
+    /// (plan-guided when available — non-strict, since the old version
+    /// is still resident), and atomically publish the new version.
+    /// Returns `(new, old)`; the caller keeps serving through `new`
+    /// immediately, drains in-flight work holding `old`, then calls
+    /// [`Self::retire`] on it to free its regions.
+    pub fn swap_model(
+        &self,
+        name: &str,
+        manifest: &Manifest,
+    ) -> Result<(Arc<TenantModel>, Arc<TenantModel>)> {
+        let old = self
+            .model(name)
+            .with_context(|| format!("model {name:?} is not loaded (add_model first)"))?;
+        let new = self.build_version(name, manifest, old.partition, old.generation + 1)?;
+        self.models
+            .write()
+            .unwrap_or_else(std::sync::PoisonError::into_inner)
+            .insert(name.to_string(), Arc::clone(&new));
+        Ok((new, old))
+    }
+
+    /// Free a drained model version's placed regions (content tags and
+    /// placements; the registration stays — weight ids are never
+    /// reused). Call after every in-flight batch holding the version has
+    /// completed.
+    pub fn retire(&self, old: &TenantModel) {
+        for (id, _, _) in &old.layers {
+            self.engine.invalidate_weight(*id);
+        }
+    }
+
+    fn build_version(
+        &self,
+        name: &str,
+        manifest: &Manifest,
+        partition: usize,
+        generation: u64,
+    ) -> Result<Arc<TenantModel>> {
+        let weights = load_layer_chain(manifest)
+            .with_context(|| format!("loading model {name:?} v{generation}"))?;
+        let in_dim = weights[0].1;
+        let out_dim = weights.last().unwrap().2;
+        let mut layers = Vec::new();
+        for (w, k, n) in weights {
+            let id = self
+                .engine
+                .register_weight_arc_in(w.into(), k, n, partition)
+                .with_context(|| format!("registering {k}×{n} weights for model {name:?}"))?;
+            layers.push((id, k, n));
+        }
+        if let Some(plan) = self.usable_plan(manifest, partition) {
+            for (li, (id, _, _)) in layers.iter().enumerate() {
+                let shards: Vec<PlannedShard> =
+                    plan.shards.iter().filter(|s| s.layer == li).copied().collect();
+                self.engine.program_from_plan(*id, &shards).with_context(|| {
+                    format!("programming model {name:?} v{generation} layer {li} from its plan")
+                })?;
+            }
+        }
+        Ok(Arc::new(TenantModel {
+            engine: Arc::clone(&self.engine),
+            name: name.to_string(),
+            generation,
+            partition,
+            layers,
+            thresholds: manifest.act_thresholds.clone(),
+            batch: manifest.batch,
+            in_dim,
+            out_dim,
+        }))
+    }
+
+    /// The manifest's placement plan, if it can drive this engine:
+    /// same array geometry, and every planned slot rank exists in the
+    /// model's partition. A mismatched plan is not an error — the model
+    /// just falls back to discovery-on-first-traffic.
+    fn usable_plan<'m>(
+        &self,
+        manifest: &'m Manifest,
+        partition: usize,
+    ) -> Option<&'m PlacementPlan> {
+        let plan = manifest.placement.as_ref()?;
+        let cfg = self.engine.cfg();
+        let fits = plan.array_rows == cfg.array_rows
+            && plan.array_cols == cfg.array_cols
+            && plan.shards.iter().all(|s| s.slot < self.engine.tenant_slots(partition));
+        fits.then_some(plan)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -294,5 +575,7 @@ mod tests {
         fn assert_sync_send<T: Sync + Send>() {}
         assert_sync_send::<EngineBackend>();
         assert_sync_send::<Arc<EngineBackend>>();
+        assert_sync_send::<MultiTenantBackend>();
+        assert_sync_send::<Arc<TenantModel>>();
     }
 }

@@ -1,9 +1,15 @@
 //! Service metrics: request/batch counters, wall-clock latency
 //! distribution, and the simulated-hardware accounting (what the SiTe
 //! CiM accelerator would have spent on the same work).
+//!
+//! Multi-tenant serving additionally keeps one [`TenantBook`] per model
+//! name: the `*_for` recording methods charge both the global counters
+//! and exactly one book, so across all tenants the books sum to the
+//! global counters by construction.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 
 use crate::util::stats::{summarize, Summary};
 
@@ -57,6 +63,57 @@ pub struct Metrics {
     /// integer attojoules to stay atomic) and busy time (picoseconds).
     sim_energy_aj: AtomicU64,
     sim_time_ps: AtomicU64,
+    /// Per-tenant books by model name (multi-tenant serving only; empty
+    /// unless the `*_for` methods are used).
+    tenants: RwLock<BTreeMap<String, Arc<TenantBook>>>,
+    /// Latency-window capacity handed to newly created tenant books.
+    window: usize,
+}
+
+/// One tenant's slice of the serving counters: requests, errors,
+/// flushes, and rolling latency / rows-per-flush windows. Charged only
+/// through [`Metrics::record_request_for`] /
+/// [`Metrics::record_batch_for`] / [`Metrics::record_error_for`], which
+/// also charge the global counters — books sum to the globals.
+#[derive(Debug)]
+pub struct TenantBook {
+    pub requests: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_items: AtomicU64,
+    pub errors: AtomicU64,
+    latencies: Mutex<LatencyRing>,
+    batch_rows: Mutex<LatencyRing>,
+}
+
+impl TenantBook {
+    fn new(window: usize) -> TenantBook {
+        TenantBook {
+            requests: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_items: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            latencies: Mutex::new(LatencyRing::new(window)),
+            batch_rows: Mutex::new(LatencyRing::new(window)),
+        }
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        summarize(self.latencies.lock().unwrap().samples())
+    }
+
+    /// Rows per executed flush for this tenant (rolling window).
+    pub fn batch_rows_summary(&self) -> Summary {
+        summarize(self.batch_rows.lock().unwrap().samples())
+    }
+
+    pub fn avg_batch_size(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_items.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
 }
 
 impl Default for Metrics {
@@ -82,7 +139,53 @@ impl Metrics {
             batch_rows: Mutex::new(LatencyRing::new(window)),
             sim_energy_aj: AtomicU64::new(0),
             sim_time_ps: AtomicU64::new(0),
+            tenants: RwLock::new(BTreeMap::new()),
+            window,
         }
+    }
+
+    /// The named tenant's book, created on first use (window matches the
+    /// global latency window).
+    pub fn tenant_book(&self, name: &str) -> Arc<TenantBook> {
+        if let Some(b) = self.tenants.read().unwrap().get(name) {
+            return Arc::clone(b);
+        }
+        let mut map = self.tenants.write().unwrap();
+        let book = map
+            .entry(name.to_string())
+            .or_insert_with(|| Arc::new(TenantBook::new(self.window)));
+        Arc::clone(book)
+    }
+
+    /// Names with a tenant book, sorted.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+
+    /// [`Self::record_request`] charged to both the globals and
+    /// `name`'s book.
+    pub fn record_request_for(&self, name: &str, latency_s: f64) {
+        self.record_request(latency_s);
+        let book = self.tenant_book(name);
+        book.requests.fetch_add(1, Ordering::Relaxed);
+        book.latencies.lock().unwrap().push(latency_s);
+    }
+
+    /// [`Self::record_batch`] charged to both the globals and `name`'s
+    /// book.
+    pub fn record_batch_for(&self, name: &str, n: usize, sim_energy_j: f64, sim_time_s: f64) {
+        self.record_batch(n, sim_energy_j, sim_time_s);
+        let book = self.tenant_book(name);
+        book.batches.fetch_add(1, Ordering::Relaxed);
+        book.batched_items.fetch_add(n as u64, Ordering::Relaxed);
+        book.batch_rows.lock().unwrap().push(n as f64);
+    }
+
+    /// [`Self::record_error`] charged to both the globals and `name`'s
+    /// book.
+    pub fn record_error_for(&self, name: &str) {
+        self.record_error();
+        self.tenant_book(name).errors.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn record_request(&self, latency_s: f64) {
@@ -200,6 +303,28 @@ mod tests {
         let r = m.report();
         assert!(r.contains("requests=1"));
         assert!(r.contains("rows/flush"));
+    }
+
+    #[test]
+    fn tenant_books_sum_to_the_global_counters() {
+        let m = Metrics::with_window(8);
+        m.record_request_for("a", 1e-3);
+        m.record_request_for("a", 2e-3);
+        m.record_request_for("b", 3e-3);
+        m.record_batch_for("a", 2, 1e-9, 1e-6);
+        m.record_batch_for("b", 1, 1e-9, 1e-6);
+        m.record_error_for("b");
+        assert_eq!(m.tenant_names(), vec!["a".to_string(), "b".to_string()]);
+        let (a, b) = (m.tenant_book("a"), m.tenant_book("b"));
+        let get = |x: &AtomicU64| x.load(Ordering::Relaxed);
+        assert_eq!(get(&m.requests), get(&a.requests) + get(&b.requests));
+        assert_eq!(get(&m.batches), get(&a.batches) + get(&b.batches));
+        assert_eq!(get(&m.batched_items), get(&a.batched_items) + get(&b.batched_items));
+        assert_eq!(get(&m.errors), get(&a.errors) + get(&b.errors));
+        assert_eq!((get(&a.requests), get(&b.requests)), (2, 1));
+        assert_eq!(a.avg_batch_size(), 2.0);
+        assert_eq!(a.latency_summary().n, 2);
+        assert_eq!(b.batch_rows_summary().max, 1.0);
     }
 
     #[test]

@@ -6,13 +6,26 @@
 //! request queue, dynamic batcher, N panic-isolated worker threads,
 //! request/latency metrics (rolling ring-buffer window) and
 //! simulated-accelerator accounting.
+//!
+//! Multi-tenant serving ([`MultiServer`] over a [`MultiTenantBackend`])
+//! loads N models onto **one** shared engine pool — each in a hard-
+//! reserved capacity partition or the best-effort shared one — routes
+//! requests by model name through per-model continuous-batching lanes
+//! (rows from different models never share an M-plane), keeps
+//! per-tenant metric books that sum to the global counters, and
+//! hot-swaps a model to a new artifact version without dropping
+//! in-flight requests.
 
 pub mod backend;
 pub mod batcher;
 pub mod metrics;
 pub mod server;
 
-pub use backend::{BackendKind, EngineBackend, InferenceBackend, PjrtBackend};
+pub use backend::{
+    BackendKind, EngineBackend, InferenceBackend, MultiTenantBackend, PjrtBackend, TenantModel,
+};
 pub use batcher::BatchPolicy;
-pub use metrics::Metrics;
-pub use server::{InferReply, MeasuredResidency, Server, ServerConfig};
+pub use metrics::{Metrics, TenantBook};
+pub use server::{
+    InferReply, MeasuredResidency, MultiServer, MultiServerConfig, Server, ServerConfig,
+};

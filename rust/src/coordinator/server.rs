@@ -33,16 +33,19 @@
 //! are caught, counted in the metrics, and reported to the affected
 //! requests; the worker keeps serving.
 
-use std::path::PathBuf;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
 use std::sync::atomic::Ordering;
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
-use super::backend::{BackendKind, EngineBackend, InferenceBackend, PjrtBackend};
+use super::backend::{
+    BackendKind, EngineBackend, InferenceBackend, MultiTenantBackend, PjrtBackend, TenantModel,
+};
 use super::batcher::{form_merged_batch, next_batch, BatchPolicy};
 use super::metrics::Metrics;
 use crate::arch::{AccelConfig, Accelerator, Residency};
@@ -137,12 +140,22 @@ pub struct Server {
 pub struct MeasuredResidency {
     /// Inferences actually served so far.
     pub inferences: u64,
-    /// Weight rows actually programmed by the engine.
+    /// Weight rows programmed by *traffic* (discovery misses, capacity-
+    /// pressure re-programs, streaming-trash refills) — the amortized
+    /// share below comes from these.
     pub write_rows: u64,
     /// Total simulated programming energy for those rows (J).
     pub write_energy_j: f64,
     /// Total simulated pool-parallel programming latency (s).
     pub write_latency_s: f64,
+    /// Weight rows programmed by placement-plan replay at load or
+    /// hot-swap — a one-time charge, reported separately and **not**
+    /// amortized into the per-inference numbers.
+    pub plan_write_rows: u64,
+    /// One-time simulated programming energy for the plan rows (J).
+    pub plan_write_energy_j: f64,
+    /// One-time simulated programming latency for the plan rows (s).
+    pub plan_write_latency_s: f64,
     /// Marginal compute/periphery energy per inference plus the
     /// amortized measured programming share (J).
     pub energy_per_inf_j: f64,
@@ -253,12 +266,17 @@ impl Server {
         // chip, so the measured charge uses the engine's pool size.
         let (write_latency_s, write_energy_j) =
             self.accel.write_charge(s.write_rows, model.pool_arrays());
+        let (plan_write_latency_s, plan_write_energy_j) =
+            self.accel.write_charge(s.plan_write_rows, model.pool_arrays());
         let denom = inferences.max(1) as f64;
         Some(MeasuredResidency {
             inferences,
             write_rows: s.write_rows,
             write_energy_j,
             write_latency_s,
+            plan_write_rows: s.plan_write_rows,
+            plan_write_energy_j,
+            plan_write_latency_s,
             energy_per_inf_j: self.sim_per_inf.0 + write_energy_j / denom,
             latency_per_inf_s: self.sim_per_inf.1 + write_latency_s / denom,
             hit_rate: s.hit_rate(),
@@ -352,6 +370,7 @@ fn engine_worker_loop(
             model.run_batch_arc(plane, rows)
         }));
         scatter_replies(
+            None,
             merged.items,
             result,
             model.out_dim(),
@@ -406,15 +425,25 @@ fn pjrt_worker_loop(
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             backend.run_batch(&flat, n)
         }));
-        scatter_replies(batch, result, backend.out_dim(), &metrics, sim_e_per_inf, sim_t_per_inf);
+        scatter_replies(
+            None,
+            batch,
+            result,
+            backend.out_dim(),
+            &metrics,
+            sim_e_per_inf,
+            sim_t_per_inf,
+        );
     }
 }
 
 /// Answer every request of an executed batch: on success, carve the
 /// logit plane into per-request rows (argmax + latency per request); on
 /// backend error or caught panic, report the failure to each request and
-/// keep the worker alive.
+/// keep the worker alive. With `tenant` set, every metric charge also
+/// lands in that tenant's book (multi-tenant serving).
 fn scatter_replies(
+    tenant: Option<&str>,
     batch: Vec<Request>,
     result: std::thread::Result<Result<Vec<f32>>>,
     out_dim: usize,
@@ -425,12 +454,19 @@ fn scatter_replies(
     let n = batch.len();
     match result {
         Ok(Ok(logits)) => {
-            metrics.record_batch(n, sim_e_per_inf * n as f64, sim_t_per_inf * n as f64);
+            let (e, t) = (sim_e_per_inf * n as f64, sim_t_per_inf * n as f64);
+            match tenant {
+                Some(name) => metrics.record_batch_for(name, n, e, t),
+                None => metrics.record_batch(n, e, t),
+            }
             for (i, req) in batch.into_iter().enumerate() {
                 let row = &logits[i * out_dim..(i + 1) * out_dim];
                 let pred = crate::runtime::executor::argmax_rows(row, out_dim)[0];
                 let wall = req.enqueued.elapsed().as_secs_f64();
-                metrics.record_request(wall);
+                match tenant {
+                    Some(name) => metrics.record_request_for(name, wall),
+                    None => metrics.record_request(wall),
+                }
                 let _ = req.resp.send(Ok(InferReply {
                     pred,
                     logits: row.to_vec(),
@@ -439,19 +475,320 @@ fn scatter_replies(
             }
         }
         Ok(Err(e)) => {
-            metrics.record_error();
+            match tenant {
+                Some(name) => metrics.record_error_for(name),
+                None => metrics.record_error(),
+            }
             let msg = format!("inference failed: {e:#}");
             for req in batch {
                 let _ = req.resp.send(Err(msg.clone()));
             }
         }
         Err(_) => {
-            metrics.record_error();
+            match tenant {
+                Some(name) => metrics.record_error_for(name),
+                None => metrics.record_error(),
+            }
             let msg = "inference worker caught a backend panic".to_string();
             for req in batch {
                 let _ = req.resp.send(Err(msg.clone()));
             }
         }
+    }
+}
+
+/// Configuration for a [`MultiServer`]: N models on one engine pool.
+#[derive(Clone, Debug)]
+pub struct MultiServerConfig {
+    /// (model name, artifact dir) pairs, loaded in order.
+    pub models: Vec<(String, PathBuf)>,
+    /// Hard per-tenant pool reservations in ternary words, by model
+    /// name. Models without an entry share the best-effort partition
+    /// under second-chance eviction.
+    pub reserves: BTreeMap<String, u64>,
+    /// Total engine pool bound in ternary words (reservations are
+    /// carved out of this).
+    pub capacity_words: u64,
+    /// Worker threads per model lane.
+    pub n_workers: usize,
+    pub policy: BatchPolicy,
+    pub sim_tech: Tech,
+    pub sim_design: Design,
+    /// Tile-worker threads inside the shared engine.
+    pub engine_threads: usize,
+}
+
+impl MultiServerConfig {
+    pub fn new(models: Vec<(String, PathBuf)>, capacity_words: u64) -> MultiServerConfig {
+        MultiServerConfig {
+            models,
+            reserves: BTreeMap::new(),
+            capacity_words,
+            n_workers: 1,
+            policy: BatchPolicy::default(),
+            sim_tech: Tech::Femfet3T,
+            sim_design: Design::Cim1,
+            engine_threads: 2,
+        }
+    }
+}
+
+/// One model's serving lane: a private request channel (so continuous
+/// batching only ever merges rows of the *same* model — rows from
+/// different tenants never share an M-plane), its workers, and the
+/// published current version.
+struct Lane {
+    tx: Option<Sender<Request>>,
+    workers: Vec<JoinHandle<()>>,
+    in_dim: usize,
+    /// The version new flushes pick up. A flush captures one `Arc` for
+    /// its whole pipeline, so a hot-swap mid-flight never mixes
+    /// versions inside a pipeline.
+    current: Arc<RwLock<Arc<TenantModel>>>,
+    /// Marginal simulated (energy J, latency s) per inference for this
+    /// model's network.
+    sim_per_inf: (f64, f64),
+}
+
+/// A multi-model inference service over one shared
+/// [`MultiTenantBackend`]: per-model request lanes route by model name
+/// through the same continuous batcher as the single-model [`Server`],
+/// per-tenant metrics books sum to the global counters, and
+/// [`MultiServer::hot_swap`] replaces a model's artifact version without
+/// dropping in-flight requests.
+pub struct MultiServer {
+    backend: Arc<MultiTenantBackend>,
+    pub metrics: Arc<Metrics>,
+    lanes: BTreeMap<String, Lane>,
+    accel: Accelerator,
+}
+
+impl MultiServer {
+    /// Load every configured model and start its serving lane. Fails
+    /// fast on unloadable artifacts, duplicate names, or a reservation
+    /// that does not fit the pool.
+    pub fn start(cfg: MultiServerConfig) -> Result<MultiServer> {
+        if cfg.models.is_empty() {
+            bail!("no models configured (need at least one name=dir pair)");
+        }
+        let backend = Arc::new(MultiTenantBackend::new(
+            cfg.sim_design,
+            cfg.sim_tech,
+            cfg.engine_threads,
+            cfg.capacity_words,
+        ));
+        let metrics = Arc::new(Metrics::new());
+        let accel = Accelerator::new(AccelConfig::sitecim(cfg.sim_tech, cfg.sim_design));
+        let mut lanes = BTreeMap::new();
+        for (name, dir) in &cfg.models {
+            if lanes.contains_key(name) {
+                bail!("model name {name:?} is configured twice");
+            }
+            let manifest = Manifest::load(dir)
+                .with_context(|| format!("loading artifacts for model {name:?}"))?;
+            let reserve = cfg.reserves.get(name).copied();
+            let model = backend.add_model(name, &manifest, reserve)?;
+            let marginal = accel.run_with_residency(
+                &manifest_network(&manifest),
+                Residency::Resident { inferences: 0 },
+            );
+            let sim_per_inf = (marginal.energy, marginal.latency);
+            let in_dim = model.in_dim();
+            let current = Arc::new(RwLock::new(model));
+            let (tx, rx) = channel::<Request>();
+            let rx = Arc::new(Mutex::new(rx));
+            let mut workers = Vec::new();
+            for wid in 0..cfg.n_workers.max(1) {
+                let (name, current, rx, metrics, policy) = (
+                    name.clone(),
+                    Arc::clone(&current),
+                    Arc::clone(&rx),
+                    Arc::clone(&metrics),
+                    cfg.policy.clone(),
+                );
+                workers.push(
+                    std::thread::Builder::new()
+                        .name(format!("sitecim-{name}-{wid}"))
+                        .spawn(move || {
+                            tenant_worker_loop(
+                                &name,
+                                current,
+                                policy,
+                                rx,
+                                metrics,
+                                sim_per_inf.0,
+                                sim_per_inf.1,
+                            )
+                        })
+                        .context("spawning tenant worker")?,
+                );
+            }
+            lanes.insert(
+                name.clone(),
+                Lane { tx: Some(tx), workers, in_dim, current, sim_per_inf },
+            );
+        }
+        Ok(MultiServer { backend, metrics, lanes, accel })
+    }
+
+    pub fn backend(&self) -> &Arc<MultiTenantBackend> {
+        &self.backend
+    }
+
+    /// Loaded model names, sorted.
+    pub fn model_names(&self) -> Vec<String> {
+        self.lanes.keys().cloned().collect()
+    }
+
+    /// The currently published version of `model`.
+    pub fn model_generation(&self, model: &str) -> Option<u64> {
+        self.backend.model(model).map(|m| m.generation())
+    }
+
+    /// Submit a request to `model`; returns the reply channel
+    /// immediately.
+    pub fn infer_async(
+        &self,
+        model: &str,
+        input: Vec<i8>,
+    ) -> Result<Receiver<Result<InferReply, String>>, String> {
+        let lane = self.lanes.get(model).ok_or_else(|| format!("unknown model {model:?}"))?;
+        if input.len() != lane.in_dim {
+            return Err(format!("input len {} != {}", input.len(), lane.in_dim));
+        }
+        let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
+        let req = Request { input, enqueued: Instant::now(), resp: rtx };
+        lane.tx
+            .as_ref()
+            .expect("lane running")
+            .send(req)
+            .map_err(|_| "server shut down".to_string())?;
+        Ok(rrx)
+    }
+
+    /// Submit a request to `model` and wait for the reply.
+    pub fn infer(&self, model: &str, input: Vec<i8>) -> Result<InferReply, String> {
+        let rx = self.infer_async(model, input)?;
+        rx.recv().map_err(|e| format!("server dropped request: {e}"))?
+    }
+
+    /// Replace `model`'s artifacts with the version at `artifacts`,
+    /// without a serving gap: the new version registers and programs
+    /// into the partition's headroom while the old one keeps serving,
+    /// the lane atomically switches to the new version (flushes capture
+    /// one version for their whole pipeline, so no reply ever mixes
+    /// versions), and the old version's regions are freed once every
+    /// in-flight flush holding it has drained. Returns the new
+    /// generation number.
+    pub fn hot_swap(&self, model: &str, artifacts: &Path) -> Result<u64> {
+        let lane = self.lanes.get(model).with_context(|| format!("unknown model {model:?}"))?;
+        let manifest = Manifest::load(artifacts)
+            .with_context(|| format!("loading swap artifacts for model {model:?}"))?;
+        if manifest.dims.first() != Some(&lane.in_dim) {
+            bail!(
+                "swap artifacts for model {model:?} change the input dimension ({:?} != {}) — \
+                 in-flight clients would break",
+                manifest.dims.first(),
+                lane.in_dim
+            );
+        }
+        let (new, old) = self.backend.swap_model(model, &manifest)?;
+        // Publish: flushes formed after this line run the new version.
+        *lane.current.write().unwrap_or_else(std::sync::PoisonError::into_inner) =
+            Arc::clone(&new);
+        // Drain: wait until no in-flight flush still holds the old
+        // version (we hold the only other strong reference), then free
+        // its regions. Requests queued before the swap are answered by
+        // whichever version their flush captured — never a mix.
+        while Arc::strong_count(&old) > 1 {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        self.backend.retire(&old);
+        Ok(new.generation())
+    }
+
+    /// Per-tenant measured residency (see [`MeasuredResidency`]): the
+    /// model's own engine book over the inferences its lane served.
+    /// Write charges serialize over the arrays the model's partition
+    /// actually owns.
+    pub fn measured_residency(&self, model: &str) -> Option<MeasuredResidency> {
+        let lane = self.lanes.get(model)?;
+        let tm = self.backend.model(model)?;
+        let s = tm.tenant_stats();
+        let book = self.metrics.tenant_book(model);
+        let inferences = book.requests.load(Ordering::Relaxed);
+        let arrays = self.backend.engine().tenant_slots(tm.partition()).max(1);
+        let (write_latency_s, write_energy_j) = self.accel.write_charge(s.write_rows, arrays);
+        let (plan_write_latency_s, plan_write_energy_j) =
+            self.accel.write_charge(s.plan_write_rows, arrays);
+        let denom = inferences.max(1) as f64;
+        Some(MeasuredResidency {
+            inferences,
+            write_rows: s.write_rows,
+            write_energy_j,
+            write_latency_s,
+            plan_write_rows: s.plan_write_rows,
+            plan_write_energy_j,
+            plan_write_latency_s,
+            energy_per_inf_j: lane.sim_per_inf.0 + write_energy_j / denom,
+            latency_per_inf_s: lane.sim_per_inf.1 + write_latency_s / denom,
+            hit_rate: s.hit_rate(),
+        })
+    }
+
+    /// Graceful shutdown: close every lane, join every worker (queued
+    /// requests are still answered).
+    pub fn shutdown(mut self) {
+        for lane in self.lanes.values_mut() {
+            drop(lane.tx.take());
+        }
+        for lane in self.lanes.values_mut() {
+            for w in lane.workers.drain(..) {
+                let _ = w.join();
+            }
+        }
+    }
+}
+
+/// One model lane's continuous-batching loop: identical to
+/// [`engine_worker_loop`] except the model is re-read from the lane's
+/// published slot at every flush (hot-swap) and metrics charge the
+/// tenant's book.
+fn tenant_worker_loop(
+    name: &str,
+    current: Arc<RwLock<Arc<TenantModel>>>,
+    policy: BatchPolicy,
+    rx: Arc<Mutex<Receiver<Request>>>,
+    metrics: Arc<Metrics>,
+    sim_e_per_inf: f64,
+    sim_t_per_inf: f64,
+) {
+    loop {
+        let merged = {
+            let guard = rx.lock().unwrap();
+            form_merged_batch(&guard, &policy, |r: &Request| r.input.as_slice())
+        };
+        let Some(merged) = merged else { return }; // lane closed: shutdown
+
+        // One version per flush: the whole pipeline (and its replies)
+        // runs on this Arc even if a hot-swap publishes a new version
+        // mid-flight.
+        let model =
+            Arc::clone(&current.read().unwrap_or_else(std::sync::PoisonError::into_inner));
+        let rows = merged.rows;
+        let plane = Arc::clone(&merged.plane);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            model.run_batch_arc(plane, rows)
+        }));
+        scatter_replies(
+            Some(name),
+            merged.items,
+            result,
+            model.out_dim(),
+            &metrics,
+            sim_e_per_inf,
+            sim_t_per_inf,
+        );
     }
 }
 

@@ -59,6 +59,23 @@
 //! steady-state streaming performs zero per-item heap allocations in
 //! the executor data path.
 //!
+//! # Multi-tenant pools and plan-programmed cold start
+//!
+//! Since PR 7 the pool can be partitioned between tenants
+//! ([`TernaryGemmEngine::reserve_tenant`] carves a hard reservation out
+//! of the shared partition; weights registered via
+//! [`TernaryGemmEngine::register_weight_arc_in`] place only inside
+//! their tenant's slots — see `resident`'s module docs), every
+//! placement/programming counter is additionally charged to a
+//! per-tenant book ([`TernaryGemmEngine::tenant_stats`], summing to the
+//! global [`EngineStats`]), and a registered weight can be programmed
+//! wholesale from an AOT placement plan
+//! ([`TernaryGemmEngine::program_from_plan`]) so cold start replays the
+//! artifact instead of discovering placement on first traffic —
+//! plan-programming is charged to the separate `plan_write_rows`
+//! counter so amortized-residency accounting can distinguish the
+//! one-time load from traffic-driven re-programming.
+//!
 //! The specification for both paths is [`tiling::reference_gemm`] (tile
 //! shape = array shape, the default) or the general
 //! [`tiling::reference_gemm_sharded`] — `mac::dot_ref` composed over
@@ -77,7 +94,7 @@ pub use self::exec::{AffinityMode, ExecStatsSnapshot};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use crate::array::area::Design;
 use crate::array::encoding::Trit;
@@ -85,7 +102,8 @@ use crate::array::mac::GROUP_ROWS;
 use crate::array::{make_array, CimArray};
 use crate::device::Tech;
 use self::exec::{Executor, GemmJob, JobKind, WorkItem, WorkerScratch};
-use self::resident::{RegisteredWeight, TileCache, TileKey, WeightId};
+use self::resident::{RegisteredWeight, TileCache, TileKey, WeightId, SHARED_PARTITION};
+pub use self::resident::{plan_layout, PlannedShard};
 use self::tiling::{Rect, Shard, TileGrid};
 
 /// Engine shape: which backend design/tech, the array geometry, the pool
@@ -236,9 +254,26 @@ pub struct EngineStats {
     windows: AtomicU64,
     macs: AtomicU64,
     write_rows: AtomicU64,
+    plan_write_rows: AtomicU64,
     hits: AtomicU64,
     misses: AtomicU64,
     evictions: AtomicU64,
+}
+
+impl EngineStats {
+    fn snapshot(&self) -> EngineStatsSnapshot {
+        EngineStatsSnapshot {
+            gemms: self.gemms.load(Ordering::Relaxed),
+            tiles: self.tiles.load(Ordering::Relaxed),
+            windows: self.windows.load(Ordering::Relaxed),
+            macs: self.macs.load(Ordering::Relaxed),
+            write_rows: self.write_rows.load(Ordering::Relaxed),
+            plan_write_rows: self.plan_write_rows.load(Ordering::Relaxed),
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+        }
+    }
 }
 
 /// Point-in-time copy of [`EngineStats`].
@@ -254,8 +289,13 @@ pub struct EngineStatsSnapshot {
     pub windows: u64,
     /// Useful multiply-accumulates covered (excludes padding).
     pub macs: u64,
-    /// Occupied weight rows programmed (matches mapper `write_rows`).
+    /// Occupied weight rows programmed by *traffic* (streaming calls and
+    /// resident discovery/re-programming; matches mapper `write_rows`).
     pub write_rows: u64,
+    /// Occupied weight rows programmed by [`TernaryGemmEngine::program_from_plan`]
+    /// — the one-time AOT cold-start charge, kept out of `write_rows` so
+    /// amortized-residency accounting is not polluted by plan replay.
+    pub plan_write_rows: u64,
     /// Resident-cache placement hits (shard already routed to a region).
     pub hits: u64,
     /// Resident-cache placement misses (shard had to be placed).
@@ -287,6 +327,7 @@ impl EngineStatsSnapshot {
             windows: self.windows - before.windows,
             macs: self.macs - before.macs,
             write_rows: self.write_rows - before.write_rows,
+            plan_write_rows: self.plan_write_rows - before.plan_write_rows,
             hits: self.hits - before.hits,
             misses: self.misses - before.misses,
             evictions: self.evictions - before.evictions,
@@ -328,6 +369,11 @@ pub(crate) struct EngineCore {
     cache: Mutex<TileCache>,
     /// Registered weights by id (ids are never reused).
     registry: RwLock<Vec<Arc<RegisteredWeight>>>,
+    /// Per-tenant work counter books, indexed by cache partition (entry
+    /// 0 = shared partition; grown by `reserve_tenant`). Every charge to
+    /// the global `stats` book is mirrored into exactly one tenant book,
+    /// so tenant books always sum to the global counters.
+    tenant_stats: RwLock<Vec<Arc<EngineStats>>>,
 }
 
 impl EngineCore {
@@ -351,6 +397,14 @@ impl EngineCore {
     /// by this).
     pub(crate) fn pool_len(&self) -> usize {
         self.pool.len()
+    }
+
+    /// The per-tenant stats book for `partition` (0 = shared). A book is
+    /// created before any weight can name its partition
+    /// (`reserve_tenant`), so the index is always present.
+    fn tenant(&self, partition: usize) -> Arc<EngineStats> {
+        let books = self.tenant_stats.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        Arc::clone(&books[partition])
     }
 
     /// Execute one queued work item: run its shard's region-scoped MAC
@@ -412,10 +466,15 @@ impl EngineCore {
         );
         drop(slot);
         let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
-        self.stats.tiles.fetch_add(1, Ordering::Relaxed);
-        self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
-        self.stats.windows.fetch_add(windows, Ordering::Relaxed);
-        self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
+        // Streaming work is tenant-less; it charges the shared book so
+        // tenant books still sum to the global counters.
+        let book = self.tenant(SHARED_PARTITION);
+        for s in [&self.stats, &*book] {
+            s.tiles.fetch_add(1, Ordering::Relaxed);
+            s.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
+            s.windows.fetch_add(windows, Ordering::Relaxed);
+            s.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
+        }
     }
 
     /// Resident shard: route through the placement cache to a region,
@@ -432,12 +491,15 @@ impl EngineCore {
         scratch: &mut WorkerScratch,
     ) {
         let key: TileKey = (reg.id, shard_idx);
-        let placement = self.lock_cache().place(key, shard.k_len, shard.n_len);
-        if placement.hit {
-            self.stats.hits.fetch_add(1, Ordering::Relaxed);
-        } else {
-            self.stats.misses.fetch_add(1, Ordering::Relaxed);
-            self.stats.evictions.fetch_add(placement.evicted, Ordering::Relaxed);
+        let book = self.tenant(reg.partition);
+        let placement = self.lock_cache().place_in(reg.partition, key, shard.k_len, shard.n_len);
+        for s in [&self.stats, &*book] {
+            if placement.hit {
+                s.hits.fetch_add(1, Ordering::Relaxed);
+            } else {
+                s.misses.fetch_add(1, Ordering::Relaxed);
+                s.evictions.fetch_add(placement.evicted, Ordering::Relaxed);
+            }
         }
         let rect = placement.rect;
         let mut slot = self.lock_slot(placement.slot);
@@ -452,8 +514,10 @@ impl EngineCore {
             slot.clear_overlapping(&rect);
             slot.arr.write_region(rect.row0, rect.col0, rect.rows, rect.cols, &scratch.wbuf);
             slot.programmed.push((rect, key));
-            self.stats.tiles.fetch_add(1, Ordering::Relaxed);
-            self.stats.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
+            for s in [&self.stats, &*book] {
+                s.tiles.fetch_add(1, Ordering::Relaxed);
+                s.write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
+            }
         }
         extract_batch_inputs(x, reg.grid.k, shard, m, rect.rows, &mut scratch.xbuf);
         slot.arr.dot_batch_region_scratch_into(
@@ -465,8 +529,10 @@ impl EngineCore {
         );
         drop(slot);
         let windows = (m * shard.k_len.div_ceil(GROUP_ROWS)) as u64;
-        self.stats.windows.fetch_add(windows, Ordering::Relaxed);
-        self.stats.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
+        for s in [&self.stats, &*book] {
+            s.windows.fetch_add(windows, Ordering::Relaxed);
+            s.macs.fetch_add((m * shard.k_len * shard.n_len) as u64, Ordering::Relaxed);
+        }
     }
 }
 
@@ -523,6 +589,7 @@ impl TernaryGemmEngine {
             cfg,
             pool,
             stats: EngineStats::default(),
+            tenant_stats: RwLock::new(vec![Arc::new(EngineStats::default())]),
         });
         let workers = core.cfg.n_threads.clamp(1, n_arrays);
         let exec = Executor::new(&core, workers);
@@ -549,17 +616,50 @@ impl TernaryGemmEngine {
     }
 
     pub fn stats(&self) -> EngineStatsSnapshot {
-        let stats = &self.core.stats;
-        EngineStatsSnapshot {
-            gemms: stats.gemms.load(Ordering::Relaxed),
-            tiles: stats.tiles.load(Ordering::Relaxed),
-            windows: stats.windows.load(Ordering::Relaxed),
-            macs: stats.macs.load(Ordering::Relaxed),
-            write_rows: stats.write_rows.load(Ordering::Relaxed),
-            hits: stats.hits.load(Ordering::Relaxed),
-            misses: stats.misses.load(Ordering::Relaxed),
-            evictions: stats.evictions.load(Ordering::Relaxed),
+        self.core.stats.snapshot()
+    }
+
+    /// Per-tenant work counters: the same books as [`Self::stats`],
+    /// charged by cache partition (0 = shared). Every global charge goes
+    /// to exactly one tenant book, so across all tenants the books sum
+    /// to the global counters.
+    pub fn tenant_stats(&self, tenant: usize) -> EngineStatsSnapshot {
+        self.core.tenant(tenant).snapshot()
+    }
+
+    /// Number of tenant partitions (≥ 1; partition 0 is the shared pool).
+    pub fn n_tenants(&self) -> usize {
+        self.core.lock_cache().n_partitions()
+    }
+
+    /// Pool arrays owned by tenant partition `tenant`.
+    pub fn tenant_slots(&self, tenant: usize) -> usize {
+        self.core.lock_cache().partition_slots(tenant).len()
+    }
+
+    /// Carve a hard-reserved tenant partition of ⌊`words` /
+    /// array_words⌋ (min 1 — the same rounding as
+    /// [`EngineConfig::pool_arrays`]) arrays out of the shared
+    /// partition, returning the tenant id for
+    /// [`Self::register_weight_arc_in`] / [`Self::tenant_stats`]. Takes
+    /// the highest-numbered shared slots (their residents are
+    /// invalidated, not moved) and fails when the reservation would
+    /// leave the shared pool empty.
+    pub fn reserve_tenant(&self, words: u64) -> Result<usize> {
+        let array_words = (self.core.cfg.array_rows * self.core.cfg.array_cols) as u64;
+        let slots = ((words / array_words) as usize).max(1);
+        let tenant = self.core.lock_cache().reserve_partition(slots).with_context(|| {
+            format!(
+                "cannot reserve {slots} of {} pool arrays (the shared partition keeps at least one)",
+                self.core.pool.len()
+            )
+        })?;
+        let mut books =
+            self.core.tenant_stats.write().unwrap_or_else(std::sync::PoisonError::into_inner);
+        while books.len() <= tenant {
+            books.push(Arc::new(EngineStats::default()));
         }
+        Ok(tenant)
     }
 
     /// Executor counters: items submitted/executed, the
@@ -589,15 +689,141 @@ impl TernaryGemmEngine {
     /// shares the caller's weight plane, and every resident job shares
     /// it in turn (the plane is only read, never re-cloned).
     pub fn register_weight_arc(&self, w: Arc<[Trit]>, k: usize, n: usize) -> Result<WeightId> {
+        self.register_weight_arc_in(w, k, n, SHARED_PARTITION)
+    }
+
+    /// [`Self::register_weight_arc`] into a tenant partition: the
+    /// weight's shards place only onto the partition's slots and its
+    /// work charges the partition's book. `tenant` must be 0 (shared) or
+    /// an id returned by [`Self::reserve_tenant`].
+    pub fn register_weight_arc_in(
+        &self,
+        w: Arc<[Trit]>,
+        k: usize,
+        n: usize,
+        tenant: usize,
+    ) -> Result<WeightId> {
         ensure!(k > 0 && n > 0, "empty weight matrix ({k}×{n})");
         ensure!(w.len() == k * n, "weights must be k×n = {k}×{n}, got {} trits", w.len());
+        ensure!(
+            tenant < self.n_tenants(),
+            "unknown tenant partition {tenant} (reserve_tenant first)"
+        );
         let grid = self.grid(k, n);
         let shards = grid.shards(self.core.cfg.array_rows, self.core.cfg.array_cols);
         let mut reg =
             self.core.registry.write().unwrap_or_else(std::sync::PoisonError::into_inner);
         let id = reg.len();
-        reg.push(Arc::new(RegisteredWeight { id, k, n, grid, shards, w }));
+        reg.push(Arc::new(RegisteredWeight { id, k, n, grid, shards, w, partition: tenant }));
         Ok(WeightId(id))
+    }
+
+    /// Drop every placed region of `id` (placements and content tags),
+    /// returning its space to its partition — the hot-swap path retires
+    /// a drained model version this way. The registration itself stays
+    /// (weight ids are never reused); a later resident call simply
+    /// re-places and re-programs.
+    pub fn invalidate_weight(&self, id: WeightId) {
+        self.core.lock_cache().invalidate_weight(id.0);
+        for s in 0..self.core.pool.len() {
+            self.core.lock_slot(s).programmed.retain(|(_, key)| key.0 != id.0);
+        }
+    }
+
+    /// Program a registered weight's shards straight from an AOT
+    /// placement plan — the cold-start path that replaces discovery
+    /// misses on first traffic. On an *empty* partition the replay is
+    /// strict: every placement must land exactly where the plan says
+    /// (partition-relative slot rank plus region origin), which pins the
+    /// artifact's analytically-mirrored packing against the live
+    /// allocator. On a non-empty partition (hot-swap programming a new
+    /// version into headroom) placements go wherever first-fit plus
+    /// eviction puts them — eager programming still avoids discovery
+    /// misses, and bit-exactness never depends on *where* regions land
+    /// (content tags are authoritative). Programming charges
+    /// `plan_write_rows` (and `tiles`), not `write_rows`/`misses`, so
+    /// amortized-residency accounting sees the one-time load separately
+    /// from traffic-driven programming.
+    pub fn program_from_plan(&self, id: WeightId, plan: &[PlannedShard]) -> Result<()> {
+        let reg = {
+            let registry =
+                self.core.registry.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+            match registry.get(id.0) {
+                Some(r) => Arc::clone(r),
+                None => bail!("unknown weight id {} (register_weight first)", id.0),
+            }
+        };
+        for p in plan {
+            ensure!(
+                p.shard < reg.shards.len(),
+                "plan shard index {} out of range for a {}-shard weight",
+                p.shard,
+                reg.shards.len()
+            );
+            let s = &reg.shards[p.shard];
+            ensure!(
+                (s.k0, s.k_len, s.n0, s.n_len) == (p.k0, p.k_len, p.n0, p.n_len),
+                "plan shard {} covers ({},{})+({},{}) but the engine decomposes it as \
+                 ({},{})+({},{}) — regenerate the artifact for this array geometry",
+                p.shard,
+                p.k0,
+                p.n0,
+                p.k_len,
+                p.n_len,
+                s.k0,
+                s.n0,
+                s.k_len,
+                s.n_len
+            );
+        }
+        let strict = self.core.lock_cache().partition_resident(reg.partition) == 0;
+        let book = self.core.tenant(reg.partition);
+        let mut wbuf: Vec<Trit> = Vec::new();
+        for p in plan {
+            let shard = &reg.shards[p.shard];
+            let key: TileKey = (reg.id, p.shard);
+            let (placement, rank) = {
+                let mut cache = self.core.lock_cache();
+                let pl = cache.place_in(reg.partition, key, shard.k_len, shard.n_len);
+                let rank = cache.slot_rank(reg.partition, pl.slot);
+                (pl, rank)
+            };
+            if strict {
+                ensure!(
+                    !placement.hit
+                        && placement.evicted == 0
+                        && rank == Some(p.slot)
+                        && placement.rect.row0 == p.row0
+                        && placement.rect.col0 == p.col0,
+                    "placement plan diverges at shard {}: plan says slot {} @ ({}, {}), engine \
+                     placed slot rank {:?} @ ({}, {}) — the artifact was built with different \
+                     packing rules",
+                    p.shard,
+                    p.slot,
+                    p.row0,
+                    p.col0,
+                    rank,
+                    placement.rect.row0,
+                    placement.rect.col0
+                );
+            }
+            let rect = placement.rect;
+            let mut slot = self.core.lock_slot(placement.slot);
+            if !slot.holds(&rect, key) {
+                wbuf.resize(rect.rows * rect.cols, 0);
+                tiling::extract_shard_weights(
+                    &reg.w, reg.grid.k, reg.grid.n, shard, rect.rows, rect.cols, &mut wbuf,
+                );
+                slot.clear_overlapping(&rect);
+                slot.arr.write_region(rect.row0, rect.col0, rect.rows, rect.cols, &wbuf);
+                slot.programmed.push((rect, key));
+                for s in [&self.core.stats, &*book] {
+                    s.tiles.fetch_add(1, Ordering::Relaxed);
+                    s.plan_write_rows.fetch_add(shard.k_len as u64, Ordering::Relaxed);
+                }
+            }
+        }
+        Ok(())
     }
 
     /// Shape (k, n) of a registered weight.
@@ -646,6 +872,7 @@ impl TernaryGemmEngine {
         let job = GemmJob::streaming(x, w, grid, shards, m, n);
         let out = self.exec.run(job, &hints)?;
         self.core.stats.gemms.fetch_add(1, Ordering::Relaxed);
+        self.core.tenant(SHARED_PARTITION).gemms.fetch_add(1, Ordering::Relaxed);
         Ok(out)
     }
 
@@ -690,9 +917,11 @@ impl TernaryGemmEngine {
             let cache = self.core.lock_cache();
             (0..reg.shards.len()).map(|i| cache.peek_slot((reg.id, i))).collect()
         };
+        let partition = reg.partition;
         let job = GemmJob::resident(reg, x, m);
         let out = self.exec.run(job, &hints)?;
         self.core.stats.gemms.fetch_add(1, Ordering::Relaxed);
+        self.core.tenant(partition).gemms.fetch_add(1, Ordering::Relaxed);
         Ok(out)
     }
 }
@@ -1050,5 +1279,122 @@ mod tests {
             assert_eq!(s.misses, 4, "{design:?} four shards placed");
             assert_eq!(s.hits, 4, "{design:?} four shard hits warm");
         }
+    }
+
+    #[test]
+    fn program_from_plan_cold_start_has_no_discovery_misses() {
+        let mut rng = Rng::new(57);
+        let (m, k, n) = (2usize, 150usize, 60usize); // 3×2 grid = 6 shards
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w = rng.ternary_vec(k * n, 0.5);
+        for design in Design::ALL {
+            let eng = TernaryGemmEngine::new(
+                EngineConfig::new(design, Tech::Femfet3T)
+                    .with_array_dims(64, 32)
+                    .with_pool(6)
+                    .with_threads(2),
+            );
+            let plan = plan_layout(&[(k, n)], 64, 32, 6).expect("6 shards fit 6 slots");
+            let id = eng.register_weight(&w, k, n).unwrap();
+            eng.program_from_plan(id, &plan).unwrap();
+            let s = eng.stats();
+            let planned_rows: u64 = plan.iter().map(|p| p.k_len as u64).sum();
+            assert_eq!(s.plan_write_rows, planned_rows, "{design:?} plan rows charged once");
+            assert_eq!(s.write_rows, 0, "{design:?} no traffic writes during load");
+            assert_eq!(s.misses, 0, "{design:?} plan replay is not a discovery miss");
+            assert_eq!(eng.resident_tiles(), plan.len());
+            // First traffic is all hits: cold start discovered nothing.
+            let want = tiling::reference_gemm(&x, &w, m, &eng.grid(k, n), design.flavor());
+            assert_eq!(eng.gemm_resident(id, &x, m).unwrap(), want, "{design:?}");
+            let s = eng.stats();
+            assert_eq!(s.hits, plan.len() as u64, "{design:?} first traffic all hits");
+            assert_eq!(s.misses, 0, "{design:?}");
+            assert_eq!(s.write_rows, 0, "{design:?} nothing re-programmed");
+            // Replaying the same plan is idempotent (tags already held).
+            eng.program_from_plan(id, &plan).unwrap();
+            assert_eq!(eng.stats().plan_write_rows, planned_rows, "{design:?} idempotent");
+        }
+    }
+
+    #[test]
+    fn tenant_partitions_isolate_and_account() {
+        let mut rng = Rng::new(58);
+        let (m, k, n) = (2usize, 60usize, 30usize); // one 64×32 shard per weight
+        let xa = rng.ternary_vec(m * k, 0.5);
+        let wa = rng.ternary_vec(k * n, 0.5);
+        let xb = rng.ternary_vec(m * k, 0.5);
+        let wb = rng.ternary_vec(k * n, 0.5);
+        let eng = TernaryGemmEngine::new(
+            EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_pool(3)
+                .with_threads(1),
+        );
+        let tenant = eng.reserve_tenant(64 * 32).unwrap();
+        assert_eq!(tenant, 1);
+        assert_eq!(eng.n_tenants(), 2);
+        assert_eq!(eng.tenant_slots(0), 2, "shared keeps the low slots");
+        assert_eq!(eng.tenant_slots(tenant), 1, "reservation took one array");
+        // A second reservation that would empty the shared pool fails.
+        assert!(eng.reserve_tenant(2 * 64 * 32).is_err());
+        let ida = eng.register_weight(&wa, k, n).unwrap();
+        let idb = eng.register_weight_arc_in(wb.clone().into(), k, n, tenant).unwrap();
+        assert!(
+            eng.register_weight_arc_in(wb.clone().into(), k, n, 9).is_err(),
+            "unknown tenant rejected"
+        );
+        let grid = eng.grid(k, n);
+        let want_a = tiling::reference_gemm(&xa, &wa, m, &grid, Flavor::Cim1);
+        let want_b = tiling::reference_gemm(&xb, &wb, m, &grid, Flavor::Cim1);
+        for _ in 0..2 {
+            assert_eq!(eng.gemm_resident(ida, &xa, m).unwrap(), want_a);
+            assert_eq!(eng.gemm_resident(idb, &xb, m).unwrap(), want_b);
+        }
+        let (g, s0, s1) = (eng.stats(), eng.tenant_stats(0), eng.tenant_stats(tenant));
+        for (name, global, parts) in [
+            ("hits", g.hits, s0.hits + s1.hits),
+            ("misses", g.misses, s0.misses + s1.misses),
+            ("write_rows", g.write_rows, s0.write_rows + s1.write_rows),
+            ("tiles", g.tiles, s0.tiles + s1.tiles),
+            ("gemms", g.gemms, s0.gemms + s1.gemms),
+            ("macs", g.macs, s0.macs + s1.macs),
+        ] {
+            assert_eq!(global, parts, "tenant books sum to global {name}");
+        }
+        // Per-tenant books: each tenant placed its one shard once and
+        // hit it once; neither evicted the other.
+        for (who, s) in [("shared", &s0), ("reserved", &s1)] {
+            assert_eq!(s.misses, 1, "{who} placed once");
+            assert_eq!(s.hits, 1, "{who} warm hit");
+            assert_eq!(s.evictions, 0, "{who} never evicted");
+            assert_eq!(s.write_rows, k as u64, "{who} programmed its rows once");
+        }
+    }
+
+    #[test]
+    fn invalidate_weight_forces_clean_replacement() {
+        let mut rng = Rng::new(59);
+        let (m, k, n) = (1usize, 60usize, 30usize);
+        let x = rng.ternary_vec(m * k, 0.5);
+        let w1 = rng.ternary_vec(k * n, 0.5);
+        let w2 = rng.ternary_vec(k * n, 0.5);
+        let eng = small_engine(Design::Cim1, 1);
+        let grid = eng.grid(k, n);
+        let id1 = eng.register_weight(&w1, k, n).unwrap();
+        let id2 = eng.register_weight(&w2, k, n).unwrap();
+        let want1 = tiling::reference_gemm(&x, &w1, m, &grid, Flavor::Cim1);
+        let want2 = tiling::reference_gemm(&x, &w2, m, &grid, Flavor::Cim1);
+        assert_eq!(eng.gemm_resident(id1, &x, m).unwrap(), want1);
+        assert_eq!(eng.gemm_resident(id2, &x, m).unwrap(), want2);
+        assert_eq!(eng.resident_tiles(), 2);
+        // Retiring id1 frees its region; id2 stays resident and correct,
+        // and a revived id1 re-places from its (kept) registration.
+        eng.invalidate_weight(id1);
+        assert_eq!(eng.resident_tiles(), 1);
+        assert_eq!(eng.gemm_resident(id2, &x, m).unwrap(), want2, "survivor intact");
+        assert_eq!(eng.gemm_resident(id1, &x, m).unwrap(), want1, "revived re-programs");
+        let s = eng.stats();
+        assert_eq!(s.misses, 3, "two cold places + one revival");
+        assert_eq!(s.hits, 1, "id2 warm hit");
     }
 }

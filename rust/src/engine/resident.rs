@@ -43,6 +43,24 @@
 //! *which* regions are resident — never correctness, which the content
 //! tags guarantee under any placement.
 //!
+//! # Tenant partitions
+//!
+//! Multi-model serving partitions the pool between tenants. Partition 0
+//! is the always-present **shared** pool: every slot starts there and
+//! best-effort tenants contend under one CLOCK. `reserve_partition`
+//! carves a **hard reservation** out of it — the highest-numbered shared
+//! slots move to a new partition with its own private victim queue, so a
+//! reserved tenant's hit rate cannot be disturbed by (or disturb) anyone
+//! else's traffic. `place_in` scans only the named partition's slots (in
+//! ascending physical index) and evicts only from its queue; the
+//! single-tenant `place` is exactly `place_in(0, ..)`, so a server that
+//! never reserves behaves identically to the pre-partition cache.
+//! Placement plans record a shard's **partition-relative slot rank**
+//! (index into the partition's slot list), which `plan_layout` computes
+//! by replaying the same first-fit on a scratch cache; the versioned
+//! artifact schema that carries such plans is documented in
+//! `runtime::artifact`.
+//!
 //! The cache only decides *routing*. Whether a rect's cells actually
 //! hold the shard is tracked by per-region `programmed` tags on the pool
 //! slot under the array mutex (see `engine::PoolSlot`): the streaming
@@ -85,6 +103,8 @@ pub(crate) struct RegisteredWeight {
     pub grid: TileGrid,
     pub shards: Vec<Shard>,
     pub w: Arc<[Trit]>,
+    /// Cache partition this weight's shards place into (0 = shared).
+    pub partition: usize,
 }
 
 /// Outcome of one placement lookup.
@@ -219,6 +239,20 @@ struct RegionInfo {
     referenced: bool,
 }
 
+/// Index of the always-present shared (best-effort) partition.
+pub(crate) const SHARED_PARTITION: usize = 0;
+
+/// One tenant's share of the pool: the physical slots it may place on
+/// (ascending array index — a plan's slot *rank* is the index into this
+/// list) and its private second-chance victim queue.
+#[derive(Debug)]
+struct Partition {
+    slots: Vec<usize>,
+    /// Victim queue: front = next eviction probe. New regions enter at
+    /// the front (probation); referenced regions recycle to the back.
+    order: VecDeque<TileKey>,
+}
+
 /// Second-chance (CLOCK) placement of shard keys onto sub-array regions
 /// of the pool. Purely bookkeeping — no array access happens here;
 /// callers hold the engine's cache mutex.
@@ -228,9 +262,10 @@ pub(crate) struct TileCache {
     slot_cols: usize,
     slots: Vec<SlotSpace>,
     map: HashMap<TileKey, RegionInfo>,
-    /// Victim queue: front = next eviction probe. New regions enter at
-    /// the front (probation); referenced regions recycle to the back.
-    order: VecDeque<TileKey>,
+    /// Tenant partitions of the pool (see module docs). Partition 0 is
+    /// the shared best-effort pool and always exists;
+    /// [`Self::reserve_partition`] carves hard reservations out of it.
+    partitions: Vec<Partition>,
 }
 
 impl TileCache {
@@ -246,7 +281,10 @@ impl TileCache {
             slot_cols,
             slots: vec![SlotSpace::default(); n_slots],
             map: HashMap::new(),
-            order: VecDeque::new(),
+            partitions: vec![Partition {
+                slots: (0..n_slots).collect(),
+                order: VecDeque::new(),
+            }],
         }
     }
 
@@ -263,10 +301,24 @@ impl TileCache {
     }
 
     /// Route `key` to a 16-row-aligned region of (at least) `rows × cols`
-    /// cells: reuse its mapping on a hit, otherwise claim free space
-    /// anywhere in the pool, evicting second-chance victims until some
-    /// slot fits the request.
+    /// cells in the shared partition: reuse its mapping on a hit,
+    /// otherwise claim free space, evicting second-chance victims until
+    /// some slot fits the request.
     pub fn place(&mut self, key: TileKey, rows: usize, cols: usize) -> Placement {
+        self.place_in(SHARED_PARTITION, key, rows, cols)
+    }
+
+    /// [`Self::place`], restricted to one tenant partition: only its
+    /// slots are scanned (ascending physical index) and only its victim
+    /// queue supplies evictions, so tenants with hard reservations never
+    /// disturb each other's residency.
+    pub fn place_in(
+        &mut self,
+        partition: usize,
+        key: TileKey,
+        rows: usize,
+        cols: usize,
+    ) -> Placement {
         let rows = rows.div_ceil(GROUP_ROWS) * GROUP_ROWS;
         assert!(
             rows <= self.slot_rows && cols <= self.slot_cols,
@@ -280,21 +332,27 @@ impl TileCache {
         }
         let mut evicted = 0u64;
         loop {
-            for s in 0..self.slots.len() {
+            let mut found = None;
+            for &s in &self.partitions[partition].slots {
                 if let Some(rect) = self.slots[s].alloc(self.slot_rows, self.slot_cols, rows, cols)
                 {
-                    self.map.insert(key, RegionInfo { slot: s, rect, referenced: false });
-                    self.order.push_front(key);
-                    return Placement { slot: s, rect, hit: false, evicted };
+                    found = Some((s, rect));
+                    break;
                 }
             }
-            // No free rect anywhere: run the second-chance scan from the
-            // probe and retry (each recycle clears a bit, so the scan
-            // terminates; evicting drains some slot to empty in the
-            // worst case, and any sharded request fits an empty array,
-            // so the outer loop ends too).
+            if let Some((s, rect)) = found {
+                self.map.insert(key, RegionInfo { slot: s, rect, referenced: false });
+                self.partitions[partition].order.push_front(key);
+                return Placement { slot: s, rect, hit: false, evicted };
+            }
+            // No free rect anywhere in the partition: run the second-
+            // chance scan from its probe and retry (each recycle clears
+            // a bit, so the scan terminates; evicting drains some slot
+            // to empty in the worst case, and any sharded request fits
+            // an empty array, so the outer loop ends too).
             loop {
                 let victim = self
+                    .partitions[partition]
                     .order
                     .pop_front()
                     .expect("an array-fitting request cannot fail with nothing resident");
@@ -302,7 +360,7 @@ impl TileCache {
                     self.map.get(&victim).expect("victim queue tracks the map").referenced;
                 if referenced {
                     self.map.get_mut(&victim).unwrap().referenced = false;
-                    self.order.push_back(victim);
+                    self.partitions[partition].order.push_back(victim);
                 } else {
                     let info = self.map.remove(&victim).unwrap();
                     self.slots[info.slot].free(&info.rect);
@@ -317,10 +375,131 @@ impl TileCache {
     /// the whole array, so no placement there matches its cells anymore).
     pub fn invalidate_slot(&mut self, slot: usize) {
         let map = &self.map;
-        self.order.retain(|key| map.get(key).is_some_and(|info| info.slot != slot));
+        for p in &mut self.partitions {
+            p.order.retain(|key| map.get(key).is_some_and(|info| info.slot != slot));
+        }
         self.map.retain(|_, info| info.slot != slot);
         self.slots[slot].clear();
     }
+
+    /// Forget every region belonging to registered weight `weight` and
+    /// free its space — the hot-swap path retires an old model version
+    /// this way once its in-flight GEMMs drain.
+    pub fn invalidate_weight(&mut self, weight: usize) {
+        let slots = &mut self.slots;
+        self.map.retain(|key, info| {
+            if key.0 == weight {
+                slots[info.slot].free(&info.rect);
+                false
+            } else {
+                true
+            }
+        });
+        for p in &mut self.partitions {
+            p.order.retain(|key| key.0 != weight);
+        }
+    }
+
+    /// Carve `n_slots` arrays out of the shared partition into a new
+    /// hard-reserved partition, returning its index. The highest-
+    /// numbered shared slots move (any residents they hold are
+    /// invalidated), so shared placements in low slots survive. `None`
+    /// when the reservation would leave the shared pool without a slot.
+    pub fn reserve_partition(&mut self, n_slots: usize) -> Option<usize> {
+        if n_slots == 0 || self.partitions[SHARED_PARTITION].slots.len() <= n_slots {
+            return None;
+        }
+        let taken = {
+            let shared = &mut self.partitions[SHARED_PARTITION].slots;
+            let keep = shared.len() - n_slots;
+            shared.split_off(keep)
+        };
+        for &s in &taken {
+            self.invalidate_slot(s);
+        }
+        self.partitions.push(Partition { slots: taken, order: VecDeque::new() });
+        Some(self.partitions.len() - 1)
+    }
+
+    /// Number of tenant partitions (≥ 1; partition 0 is the shared pool).
+    pub fn n_partitions(&self) -> usize {
+        self.partitions.len()
+    }
+
+    /// The physical slots `partition` owns, ascending — a plan's slot
+    /// rank indexes this list.
+    pub fn partition_slots(&self, partition: usize) -> &[usize] {
+        &self.partitions[partition].slots
+    }
+
+    /// Regions currently resident in `partition` (its victim-queue
+    /// length). Zero means plan replay can be verified strictly: nothing
+    /// placed, nothing to evict.
+    pub fn partition_resident(&self, partition: usize) -> usize {
+        self.partitions[partition].order.len()
+    }
+
+    /// Partition-relative rank of physical slot `slot` within
+    /// `partition` (the form placement plans record), if owned by it.
+    pub fn slot_rank(&self, partition: usize, slot: usize) -> Option<usize> {
+        self.partitions[partition].slots.iter().position(|&s| s == slot)
+    }
+}
+
+/// One shard's planned placement, as recorded in a versioned AOT
+/// artifact and replayed by `TernaryGemmEngine::program_from_plan`: the
+/// shard's coordinates inside its layer's weight matrix plus the
+/// partition-relative slot rank and region origin that first-fit shelf
+/// packing assigns it on an empty partition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlannedShard {
+    pub layer: usize,
+    pub shard: usize,
+    pub k0: usize,
+    pub k_len: usize,
+    pub n0: usize,
+    pub n_len: usize,
+    pub slot: usize,
+    pub row0: usize,
+    pub col0: usize,
+}
+
+/// Compute the placement plan an empty `n_slots`-array partition would
+/// assign a model's layers ((k, n) per layer, tiled at array shape), by
+/// replaying the engine's own first-fit shelf packing. Returns `None`
+/// when the working set does not fit without eviction — a plan is only
+/// meaningful if cold-start can program it wholesale.
+/// `python/compile/placement.py` mirrors this function analytically; the
+/// committed example artifact pins the two against each other.
+pub fn plan_layout(
+    layers: &[(usize, usize)],
+    array_rows: usize,
+    array_cols: usize,
+    n_slots: usize,
+) -> Option<Vec<PlannedShard>> {
+    let mut cache = TileCache::new(n_slots, array_rows, array_cols);
+    let mut plan = Vec::new();
+    for (li, &(k, n)) in layers.iter().enumerate() {
+        let grid = TileGrid::new(k, n, array_rows, array_cols);
+        for (si, shard) in grid.shards(array_rows, array_cols).iter().enumerate() {
+            let p = cache.place((li, si), shard.k_len, shard.n_len);
+            if p.evicted > 0 {
+                return None;
+            }
+            plan.push(PlannedShard {
+                layer: li,
+                shard: si,
+                k0: shard.k0,
+                k_len: shard.k_len,
+                n0: shard.n0,
+                n_len: shard.n_len,
+                slot: p.slot,
+                row0: p.rect.row0,
+                col0: p.rect.col0,
+            });
+        }
+    }
+    Some(plan)
 }
 
 /// Number of physical `slot_rows × slot_cols` arrays that first-fit
@@ -577,6 +756,75 @@ mod tests {
                 "{arrays}-array sweep diverged from the seeded baseline"
             );
         }
+    }
+
+    #[test]
+    fn reserve_takes_highest_slots_and_isolates_eviction_pressure() {
+        let mut c = TileCache::new(3, 64, 32);
+        full(&mut c, (0, 0)); // slot 0
+        full(&mut c, (0, 1)); // slot 1
+        full(&mut c, (0, 2)); // slot 2 — about to be reserved away
+        let p = c.reserve_partition(1).expect("2 shared slots remain");
+        assert_eq!(p, 1);
+        assert_eq!(c.partition_slots(1), &[2]);
+        assert_eq!(c.partition_slots(SHARED_PARTITION), &[0, 1]);
+        assert_eq!(c.resident_regions(), 2, "slot 2's resident was invalidated");
+        // A cyclic sweep inside the 1-slot reservation evicts only its
+        // own regions; the shared residents are untouched by it.
+        for t in 0..4 {
+            let q = c.place_in(p, (9, t), 64, 32);
+            assert_eq!(q.slot, 2);
+            assert!(!q.hit);
+        }
+        assert!(full(&mut c, (0, 0)).hit, "shared resident survived tenant churn");
+        assert!(full(&mut c, (0, 1)).hit);
+        // And shared pressure cannot spill into the reservation: a third
+        // shared region evicts a shared victim, never slot 2.
+        let q = full(&mut c, (0, 3));
+        assert!(q.slot < 2);
+        assert_eq!(c.peek_slot((9, 3)), Some(2), "tenant region still resident");
+    }
+
+    #[test]
+    fn reserve_partition_refuses_to_empty_the_shared_pool() {
+        let mut c = TileCache::new(2, 64, 32);
+        assert_eq!(c.reserve_partition(2), None);
+        assert_eq!(c.reserve_partition(0), None);
+        assert_eq!(c.reserve_partition(1), Some(1));
+        assert_eq!(c.n_partitions(), 2);
+        assert_eq!(c.slot_rank(1, 1), Some(0));
+        assert_eq!(c.slot_rank(1, 0), None);
+    }
+
+    #[test]
+    fn invalidate_weight_frees_only_that_weight() {
+        let mut c = TileCache::new(2, 64, 32);
+        c.place((3, 0), 32, 16);
+        c.place((3, 1), 32, 16);
+        c.place((4, 0), 32, 16);
+        assert_eq!(c.resident_regions(), 3);
+        c.invalidate_weight(3);
+        assert_eq!(c.resident_regions(), 1);
+        assert_eq!(c.peek_slot((4, 0)), Some(0));
+        // The freed shelf space is immediately reusable without eviction.
+        let p = c.place((5, 0), 32, 16);
+        assert_eq!((p.slot, p.evicted), (0, 0));
+    }
+
+    #[test]
+    fn plan_layout_matches_live_placement_and_detects_overflow() {
+        let dims = [(1152usize, 512usize), (512, 512), (512, 128)];
+        let plan = plan_layout(&dims, 256, 256, 16).expect("16 arrays fit the working set");
+        assert_eq!(plan.len(), 16, "10 + 4 + 2 shards");
+        // Replaying the plan's shards through a live cache reproduces
+        // slot rank and region origin exactly.
+        let mut c = TileCache::new(16, 256, 256);
+        for s in &plan {
+            let p = c.place((s.layer, s.shard), s.k_len, s.n_len);
+            assert!(!p.hit && p.evicted == 0);
+            assert_eq!((p.slot, p.rect.row0, p.rect.col0), (s.slot, s.row0, s.col0));
+        }
+        assert!(plan_layout(&dims, 256, 256, 4).is_none(), "4 arrays need evictions");
     }
 
     #[test]

@@ -49,15 +49,23 @@
 //!   (outputs *and* work counters).
 //! - [`dnn`] — the five benchmark workloads (AlexNet, ResNet34,
 //!   Inception, LSTM, GRU) as ternary GEMM workloads.
-//! - [`runtime`] — PJRT CPU executor for the AOT-compiled JAX/Pallas
-//!   artifacts (python never runs at inference time). Gated behind the
-//!   `pjrt` feature; the default build stubs it.
+//! - [`runtime`] — the versioned artifact contract
+//!   (`runtime::artifact`: manifest schema v2 with eagerly verified
+//!   per-file sha256 checksums and an optional placement plan; legacy
+//!   manifests still load) plus the PJRT CPU executor for the
+//!   AOT-compiled JAX/Pallas artifacts (python never runs at inference
+//!   time; gated behind the `pjrt` feature, stubbed by default).
 //! - [`coordinator`] — a thread-based inference service with two
 //!   servable backends: per-worker PJRT numerics, or one `Arc`-shared
 //!   engine model whose weights stay resident in a single array pool —
 //!   server workers submit to the engine's shared executor, and serving
 //!   reports *measured* amortized residency costs
 //!   (`Server::measured_residency`) from the engine's own counters.
+//!   `coordinator::MultiServer` serves N models from one pool:
+//!   per-model tenant partitions (hard reservations vs the shared
+//!   second-chance remainder), per-tenant metrics books that sum to the
+//!   global counters, plan-programmed cold start, and hot-swap that
+//!   drains in-flight batches before retiring the old version.
 //! - [`repro`] — one entry point per paper figure/table.
 
 pub mod arch;

@@ -1,12 +1,42 @@
 //! Artifact manifest: the contract between `python/compile/aot.py` and
 //! the rust runtime. Python runs once (`make artifacts`); everything the
 //! inference path needs is read from `artifacts/` via this module.
+//!
+//! # Versioned schema
+//!
+//! The manifest carries a schema `version` so producers and consumers
+//! can evolve independently; unknown versions are rejected with a
+//! pointed error instead of misparsed.
+//!
+//! - **Version 1** (legacy; an absent `version` field means 1): weights,
+//!   HLO file names, quantization scales, activation thresholds and the
+//!   held-out test set. No integrity or placement metadata.
+//! - **Version 2** adds two objects. `sha256` maps every emitted file
+//!   name to its lowercase-hex SHA-256; [`Manifest::load`] re-hashes the
+//!   files and refuses corrupt or stale artifacts. `placement`
+//!   (optional) is the AOT-computed placement plan — `array_rows`,
+//!   `array_cols`, `slots` and a `shards` list in the engine's flat
+//!   shard order, each with its partition-relative slot rank and region
+//!   origin — computed by `python/compile/placement.py` with the same
+//!   16-row-aligned first-fit shelf packing as `engine::resident`, so
+//!   cold-start can program arrays from the plan instead of discovering
+//!   placement on first traffic (`TernaryGemmEngine::program_from_plan`).
+//!
+//! `sitecim artifact verify <dir>` checks all of this offline:
+//! checksums, schema version, and that the plan both fits its declared
+//! pool and matches the Rust replay of the packing rules.
 
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::array::mac::GROUP_ROWS;
+use crate::engine::resident::PlannedShard;
 use crate::util::json::Json;
+use crate::util::sha256;
+
+/// Highest manifest schema version this build understands.
+pub const MANIFEST_VERSION: usize = 2;
 
 /// One weight tensor: row-major int8 trits.
 #[derive(Clone, Debug)]
@@ -15,10 +45,73 @@ pub struct WeightSpec {
     pub shape: (usize, usize),
 }
 
+/// AOT-computed placement plan (schema version 2, optional): the
+/// shelf/shard assignments an empty `slots`-array partition gives this
+/// model, in the engine's flat shard order.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlacementPlan {
+    pub array_rows: usize,
+    pub array_cols: usize,
+    pub slots: usize,
+    pub shards: Vec<PlannedShard>,
+}
+
+impl PlacementPlan {
+    /// Structural checks: every shard's region is 16-row aligned, fits
+    /// its array, and names a slot inside the plan's declared pool.
+    pub fn validate(&self) -> Result<()> {
+        if self.slots == 0 {
+            bail!("placement plan declares no slots");
+        }
+        if self.array_rows == 0 || self.array_rows % GROUP_ROWS != 0 || self.array_cols == 0 {
+            bail!(
+                "placement plan array shape {}×{} is not a legal pool array",
+                self.array_rows,
+                self.array_cols
+            );
+        }
+        for s in &self.shards {
+            if s.k_len == 0 || s.n_len == 0 {
+                bail!("placement shard {}/{} is empty", s.layer, s.shard);
+            }
+            if s.slot >= self.slots {
+                bail!(
+                    "placement shard {}/{} names slot {} of a {}-slot plan",
+                    s.layer,
+                    s.shard,
+                    s.slot,
+                    self.slots
+                );
+            }
+            let rows = s.k_len.div_ceil(GROUP_ROWS) * GROUP_ROWS;
+            if s.row0 % GROUP_ROWS != 0
+                || s.row0 + rows > self.array_rows
+                || s.col0 + s.n_len > self.array_cols
+            {
+                bail!(
+                    "placement shard {}/{} region ({}+{} rows, {}+{} cols) breaks the \
+                     16-row-aligned {}×{} array bound",
+                    s.layer,
+                    s.shard,
+                    s.row0,
+                    rows,
+                    s.col0,
+                    s.n_len,
+                    self.array_rows,
+                    self.array_cols
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
 /// Parsed manifest.
 #[derive(Clone, Debug)]
 pub struct Manifest {
     pub dir: PathBuf,
+    /// Schema version (1 when the field is absent — the legacy layout).
+    pub version: usize,
     pub batch: usize,
     pub dims: Vec<usize>,
     pub act_thresholds: Vec<f64>,
@@ -27,6 +120,11 @@ pub struct Manifest {
     pub hlo: std::collections::BTreeMap<String, PathBuf>,
     pub weights: Vec<WeightSpec>,
     pub scales: Vec<f64>,
+    /// Per-file SHA-256 (lowercase hex) keyed by file name, verified at
+    /// load. Empty for legacy (version 1) manifests.
+    pub sha256: std::collections::BTreeMap<String, String>,
+    /// AOT-computed placement plan, when the producer emitted one.
+    pub placement: Option<PlacementPlan>,
     pub test_x: PathBuf,
     pub test_y: PathBuf,
     pub test_n: usize,
@@ -42,6 +140,40 @@ impl Manifest {
         let text = std::fs::read_to_string(dir.join("manifest.json"))
             .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
         let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let version = match j.get("version") {
+            None => 1,
+            Some(v) => v.as_usize().context("manifest `version` must be a number")?,
+        };
+        if !(1..=MANIFEST_VERSION).contains(&version) {
+            bail!(
+                "unsupported manifest version {version} in {} (this build understands \
+                 1..={MANIFEST_VERSION}; re-run the AOT compiler or upgrade the runtime)",
+                dir.display()
+            );
+        }
+
+        let mut sha = std::collections::BTreeMap::new();
+        if let Some(map) = j.get("sha256").and_then(Json::as_obj) {
+            for (file, hexval) in map {
+                sha.insert(
+                    file.clone(),
+                    hexval
+                        .as_str()
+                        .with_context(|| format!("sha256[{file}] must be a hex string"))?
+                        .to_string(),
+                );
+            }
+        }
+
+        let placement = match j.get("placement") {
+            None => None,
+            Some(p) => {
+                let plan = parse_placement(p).context("parsing manifest placement plan")?;
+                plan.validate().context("validating manifest placement plan")?;
+                Some(plan)
+            }
+        };
 
         let usize_at = |p: &str| -> Result<usize> {
             j.path(p).and_then(Json::as_usize).with_context(|| format!("manifest missing {p}"))
@@ -95,7 +227,10 @@ impl Manifest {
             }
         }
 
-        Ok(Manifest {
+        let m = Manifest {
+            version,
+            sha256: sha,
+            placement,
             batch: usize_at("batch")?,
             dims,
             act_thresholds,
@@ -117,7 +252,30 @@ impl Manifest {
             in_dim: j.path("test_set/in_dim").and_then(Json::as_usize).context("in_dim")?,
             aot_accuracy,
             dir,
-        })
+        };
+        m.verify_checksums()?;
+        Ok(m)
+    }
+
+    /// Verify every per-file SHA-256 the manifest records against the
+    /// bytes on disk. Legacy manifests record none and pass vacuously;
+    /// [`Self::load`] calls this, so a version-2 artifact with a flipped
+    /// bit is refused before anything consumes it.
+    pub fn verify_checksums(&self) -> Result<()> {
+        for (file, want) in &self.sha256 {
+            let path = self.dir.join(file);
+            let bytes = std::fs::read(&path)
+                .with_context(|| format!("reading {} for checksum verification", path.display()))?;
+            let got = sha256::hex(&bytes);
+            if got != *want {
+                bail!(
+                    "sha256 mismatch for {}: manifest records {want}, file hashes to {got} \
+                     (artifact corrupt or stale — re-run the AOT compiler)",
+                    path.display()
+                );
+            }
+        }
+        Ok(())
     }
 
     /// Load a weight tensor as trits (row-major).
@@ -151,6 +309,40 @@ impl Manifest {
     }
 }
 
+/// Parse a manifest `placement` object into a [`PlacementPlan`].
+fn parse_placement(p: &Json) -> Result<PlacementPlan> {
+    let at = |q: &str| -> Result<usize> {
+        p.get(q).and_then(Json::as_usize).with_context(|| format!("placement missing {q}"))
+    };
+    let mut shards = Vec::new();
+    for (i, s) in
+        p.get("shards").and_then(Json::as_arr).context("placement.shards")?.iter().enumerate()
+    {
+        let f = |k: &str| -> Result<usize> {
+            s.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("placement shard {i} missing {k}"))
+        };
+        shards.push(PlannedShard {
+            layer: f("layer")?,
+            shard: f("shard")?,
+            k0: f("k0")?,
+            k_len: f("k_len")?,
+            n0: f("n0")?,
+            n_len: f("n_len")?,
+            slot: f("slot")?,
+            row0: f("row0")?,
+            col0: f("col0")?,
+        });
+    }
+    Ok(PlacementPlan {
+        array_rows: at("array_rows")?,
+        array_cols: at("array_cols")?,
+        slots: at("slots")?,
+        shards,
+    })
+}
+
 /// Default artifacts directory: `$SITECIM_ARTIFACTS` or `artifacts/`
 /// relative to the crate root (falling back to cwd).
 pub fn default_dir() -> PathBuf {
@@ -179,5 +371,88 @@ mod tests {
     #[test]
     fn default_dir_is_artifacts() {
         assert!(default_dir().to_string_lossy().contains("artifacts"));
+    }
+
+    /// A minimal on-disk artifact: one 2×4 ternary weight + a 2-sample
+    /// test set, optionally version-stamped and optionally with its
+    /// recorded checksum corrupted.
+    fn write_min_artifact(tag: &str, version: Option<usize>, corrupt: bool) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("sitecim-artifact-test-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let w0: Vec<u8> = vec![1, 0, 255, 1, 0, 255, 1, 0]; // 255 = -1 as i8
+        std::fs::write(dir.join("w0.bin"), &w0).unwrap();
+        std::fs::write(dir.join("test_x.bin"), [0u8; 4]).unwrap();
+        std::fs::write(dir.join("test_y.bin"), [0u8; 2]).unwrap();
+        let sha = crate::util::sha256::hex(if corrupt { b"not the file" } else { &w0 });
+        let version_line =
+            version.map(|v| format!("\"version\": {v},\n  ")).unwrap_or_default();
+        let manifest = format!(
+            r#"{{
+  {version_line}"batch": 1,
+  "dims": [2, 4],
+  "act_thresholds": [],
+  "kernel_shape": [8, 16, 16],
+  "files": {{}},
+  "weights": [{{"file": "w0.bin", "shape": [2, 4]}}],
+  "scales": [1.0],
+  "sha256": {{"w0.bin": "{sha}"}},
+  "test_set": {{"x": "test_x.bin", "y": "test_y.bin", "n": 2, "in_dim": 2}}
+}}"#
+        );
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        dir
+    }
+
+    #[test]
+    fn legacy_and_current_versions_load() {
+        let legacy = Manifest::load(write_min_artifact("legacy", None, false)).unwrap();
+        assert_eq!(legacy.version, 1);
+        let v2 = Manifest::load(write_min_artifact("v2", Some(2), false)).unwrap();
+        assert_eq!(v2.version, 2);
+        assert_eq!(v2.sha256.len(), 1);
+        let (trits, shape) = v2.load_weight(0).unwrap();
+        assert_eq!((trits.len(), shape), (8, (2, 4)));
+    }
+
+    #[test]
+    fn unknown_version_is_rejected_with_context() {
+        let err = Manifest::load(write_min_artifact("future", Some(99), false)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("unsupported manifest version 99"), "{msg}");
+        assert!(msg.contains("1..=2"), "{msg}");
+    }
+
+    #[test]
+    fn corrupt_sha256_is_rejected_naming_the_file() {
+        let err = Manifest::load(write_min_artifact("corrupt", Some(2), true)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("sha256 mismatch"), "{msg}");
+        assert!(msg.contains("w0.bin"), "{msg}");
+    }
+
+    #[test]
+    fn placement_plans_parse_and_validate() {
+        let p = Json::parse(
+            r#"{"array_rows": 32, "array_cols": 16, "slots": 2, "shards": [
+                {"layer": 0, "shard": 0, "k0": 0, "k_len": 20, "n0": 0, "n_len": 16,
+                 "slot": 1, "row0": 0, "col0": 0}]}"#,
+        )
+        .unwrap();
+        let plan = parse_placement(&p).unwrap();
+        plan.validate().unwrap();
+        assert_eq!(plan.shards[0].k_len, 20);
+        // A shard whose padded rows overflow the array fails validation.
+        let bad = PlacementPlan {
+            shards: vec![PlannedShard { row0: 16, ..plan.shards[0] }],
+            ..plan.clone()
+        };
+        assert!(bad.validate().unwrap_err().to_string().contains("array bound"));
+        // A slot rank outside the declared pool fails too.
+        let bad = PlacementPlan {
+            shards: vec![PlannedShard { slot: 2, ..plan.shards[0] }],
+            ..plan
+        };
+        assert!(bad.validate().unwrap_err().to_string().contains("2-slot plan"));
     }
 }

@@ -12,5 +12,5 @@ pub mod executor;
 #[cfg(not(feature = "pjrt"))]
 pub mod pjrt_stub;
 
-pub use artifact::{default_dir, Manifest};
+pub use artifact::{default_dir, Manifest, PlacementPlan, MANIFEST_VERSION};
 pub use executor::{cpu_client, KernelExecutor, MlpExecutor, ModelKind};

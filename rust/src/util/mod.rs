@@ -1,6 +1,6 @@
 //! Shared utilities: deterministic RNG, statistics, unit formatting,
-//! table rendering, a minimal JSON codec, CLI parsing, a property-test
-//! driver and a micro-benchmark harness.
+//! table rendering, a minimal JSON codec, SHA-256 (artifact checksums),
+//! CLI parsing, a property-test driver and a micro-benchmark harness.
 //!
 //! Everything here exists because the offline crate registry only carries
 //! the `xla` dependency tree — see DESIGN.md §2 for the constraint note.
@@ -10,6 +10,7 @@ pub mod cli;
 pub mod json;
 pub mod prop;
 pub mod rng;
+pub mod sha256;
 pub mod stats;
 pub mod table;
 pub mod units;

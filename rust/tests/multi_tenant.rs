@@ -1,0 +1,361 @@
+//! Integration: multi-tenant serving from versioned placement
+//! artifacts.
+//!
+//! The battery the PR's acceptance criteria name: two tenants (one
+//! hard-reserved, one best-effort) served interleaved and bit-exact
+//! against per-model reference forwards with per-tenant books summing
+//! to the global counters; a hot-swap under concurrent load that drains
+//! every in-flight reply bit-exactly and never serves a mixed-version
+//! pipeline; a plan-programmed cold start that does no discovery; and
+//! the committed example artifact (produced by
+//! `python/compile/make_example_artifact.py`) loading with verified
+//! checksums and replaying its placement plan strictly — the test that
+//! pins the Python placement mirror to the Rust packing rules.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+use sitecim::array::mac::Flavor;
+use sitecim::array::Design;
+use sitecim::coordinator::{MultiServer, MultiServerConfig};
+use sitecim::device::Tech;
+use sitecim::dnn::ternary::ternarize_acts_i32;
+use sitecim::engine::tiling::{reference_gemm, TileGrid};
+use sitecim::engine::{plan_layout, EngineConfig, PlannedShard, TernaryGemmEngine};
+use sitecim::runtime::Manifest;
+use sitecim::util::rng::Rng;
+use sitecim::util::sha256;
+
+/// A unique temp artifacts dir per test (tests run in parallel in one
+/// process, so the tag must differ per call site).
+fn synth_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sitecim-mt-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn trit_bytes(trits: &[i8]) -> Vec<u8> {
+    trits.iter().map(|&t| t as u8).collect()
+}
+
+fn shards_json(shards: &[PlannedShard]) -> String {
+    let rows: Vec<String> = shards
+        .iter()
+        .map(|s| {
+            format!(
+                "{{\"layer\": {}, \"shard\": {}, \"k0\": {}, \"k_len\": {}, \"n0\": {}, \
+                 \"n_len\": {}, \"slot\": {}, \"row0\": {}, \"col0\": {}}}",
+                s.layer, s.shard, s.k0, s.k_len, s.n0, s.n_len, s.slot, s.row0, s.col0
+            )
+        })
+        .collect();
+    rows.join(", ")
+}
+
+/// Write a servable synthetic MLP. `version2` adds per-file sha256
+/// checksums; `plan_geom = (rows, cols, slots)` additionally embeds a
+/// placement plan at that pool geometry (computed with the same
+/// `plan_layout` the engine replays, exactly as the AOT compiler's
+/// Python mirror does).
+fn write_artifacts(
+    dir: &Path,
+    dims: &[usize],
+    seed: u64,
+    version2: bool,
+    plan_geom: Option<(usize, usize, usize)>,
+) {
+    assert!(dims.len() >= 2);
+    let mut rng = Rng::new(seed);
+    let mut weights_json = String::new();
+    let mut files = Vec::new();
+    for i in 0..dims.len() - 1 {
+        let (k, n) = (dims[i], dims[i + 1]);
+        let w = rng.ternary_vec(k * n, 0.5);
+        std::fs::write(dir.join(format!("w{i}.bin")), trit_bytes(&w)).unwrap();
+        files.push(format!("w{i}.bin"));
+        if i > 0 {
+            weights_json.push_str(", ");
+        }
+        weights_json.push_str(&format!("{{\"file\": \"w{i}.bin\", \"shape\": [{k}, {n}]}}"));
+    }
+    let in_dim = dims[0];
+    let test_n = 4usize;
+    let x = rng.ternary_vec(test_n * in_dim, 0.5);
+    std::fs::write(dir.join("test_x.bin"), trit_bytes(&x)).unwrap();
+    std::fs::write(dir.join("test_y.bin"), vec![0u8; test_n]).unwrap();
+    files.push("test_x.bin".into());
+    files.push("test_y.bin".into());
+
+    let mut extra = String::new();
+    if version2 {
+        let sums: Vec<String> = files
+            .iter()
+            .map(|f| {
+                let bytes = std::fs::read(dir.join(f)).unwrap();
+                format!("\"{f}\": \"{}\"", sha256::hex(&bytes))
+            })
+            .collect();
+        extra.push_str(&format!("\"version\": 2,\n  \"sha256\": {{{}}},\n  ", sums.join(", ")));
+    }
+    if let Some((rows, cols, slots)) = plan_geom {
+        let layers: Vec<(usize, usize)> = dims.windows(2).map(|w| (w[0], w[1])).collect();
+        let plan = plan_layout(&layers, rows, cols, slots).expect("model must fit the plan pool");
+        extra.push_str(&format!(
+            "\"placement\": {{\"array_rows\": {rows}, \"array_cols\": {cols}, \
+             \"slots\": {slots}, \"shards\": [{}]}},\n  ",
+            shards_json(&plan)
+        ));
+    }
+    let thresholds = vec!["0.5"; dims.len() - 2].join(", ");
+    let dims_json = dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+    let manifest = format!(
+        "{{\n  {extra}\"batch\": 8,\n  \"dims\": [{dims_json}],\n  \"act_thresholds\": [{thresholds}],\n  \"kernel_shape\": [8, 16, 16],\n  \"files\": {{}},\n  \"weights\": [{weights_json}],\n  \"scales\": [1.0],\n  \"test_set\": {{\"x\": \"test_x.bin\", \"y\": \"test_y.bin\", \"n\": {test_n}, \"in_dim\": {in_dim}}},\n  \"accuracy\": {{}}\n}}\n"
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+}
+
+/// The reference forward pass every tenant must reproduce exactly:
+/// `reference_gemm` over the engine's tile grid + recorded thresholds.
+fn reference_forward(manifest: &Manifest, input: &[i8]) -> Vec<f32> {
+    let mut h = input.to_vec();
+    for i in 0..manifest.weights.len() {
+        let (w, (k, n)) = manifest.load_weight(i).unwrap();
+        let y = reference_gemm(&h, &w, 1, &TileGrid::new(k, n, 256, 256), Some(Flavor::Cim1));
+        if i + 1 < manifest.weights.len() {
+            h = ternarize_acts_i32(&y, manifest.act_thresholds[i]);
+        } else {
+            return y.iter().map(|&v| v as f32).collect();
+        }
+    }
+    unreachable!()
+}
+
+fn two_tenant_config(dir_a: &Path, dir_b: &Path) -> MultiServerConfig {
+    let models =
+        vec![("res".to_string(), dir_a.to_path_buf()), ("shared".to_string(), dir_b.to_path_buf())];
+    // 6 arrays of 256×256; "res" hard-reserves 2 of them.
+    let mut cfg = MultiServerConfig::new(models, 6 * 65536);
+    cfg.reserves.insert("res".to_string(), 2 * 65536);
+    cfg.n_workers = 2;
+    cfg.policy.max_batch = 8;
+    cfg.policy.max_wait = Duration::from_millis(1);
+    cfg.engine_threads = 2;
+    cfg
+}
+
+#[test]
+fn two_tenants_serve_interleaved_bit_exact_and_books_sum_to_global() {
+    let dir_a = synth_dir("twotenant-a");
+    let dir_b = synth_dir("twotenant-b");
+    // One legacy (v1) manifest and one checksummed v2 manifest: both
+    // schema versions must serve side by side.
+    write_artifacts(&dir_a, &[32, 16, 8], 21, false, None);
+    write_artifacts(&dir_b, &[48, 16, 8], 22, true, None);
+    let server = MultiServer::start(two_tenant_config(&dir_a, &dir_b)).unwrap();
+
+    let backend = server.backend();
+    let res = backend.model("res").unwrap();
+    let shared = backend.model("shared").unwrap();
+    assert_ne!(res.partition(), 0, "reserved tenant gets its own partition");
+    assert_eq!(shared.partition(), 0, "unreserved tenant shares partition 0");
+    let engine = backend.engine();
+    assert_eq!(engine.n_tenants(), 2);
+    assert_eq!(engine.tenant_slots(res.partition()), 2);
+    assert_eq!(engine.tenant_slots(0), 4, "the shared partition keeps the rest");
+
+    let manifest_a = Manifest::load(&dir_a).unwrap();
+    let manifest_b = Manifest::load(&dir_b).unwrap();
+    let mut rng = Rng::new(23);
+    let mut pending = Vec::new();
+    for i in 0..48 {
+        let (name, manifest, in_dim) =
+            if i % 2 == 0 { ("res", &manifest_a, 32) } else { ("shared", &manifest_b, 48) };
+        let input = rng.ternary_vec(in_dim, 0.5);
+        let want = reference_forward(manifest, &input);
+        pending.push((name, want, server.infer_async(name, input).unwrap()));
+    }
+    for (name, want, rx) in pending {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.logits, want, "tenant {name} must match its reference forward");
+    }
+
+    // Serving metrics: per-tenant books sum to the global counters.
+    let m = &server.metrics;
+    let (br, bs) = (m.tenant_book("res"), m.tenant_book("shared"));
+    assert_eq!(br.requests.load(Ordering::Relaxed), 24);
+    assert_eq!(bs.requests.load(Ordering::Relaxed), 24);
+    assert_eq!(m.requests.load(Ordering::Relaxed), 48);
+    assert_eq!(
+        br.batches.load(Ordering::Relaxed) + bs.batches.load(Ordering::Relaxed),
+        m.batches.load(Ordering::Relaxed)
+    );
+    assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+
+    // Engine books: every global charge landed in exactly one tenant
+    // book, so across tenants the books sum to the global counters.
+    let g = engine.stats();
+    let (s0, s1) = (engine.tenant_stats(0), engine.tenant_stats(1));
+    for (name, global, parts) in [
+        ("gemms", g.gemms, s0.gemms + s1.gemms),
+        ("tiles", g.tiles, s0.tiles + s1.tiles),
+        ("windows", g.windows, s0.windows + s1.windows),
+        ("macs", g.macs, s0.macs + s1.macs),
+        ("write_rows", g.write_rows, s0.write_rows + s1.write_rows),
+        ("plan_write_rows", g.plan_write_rows, s0.plan_write_rows + s1.plan_write_rows),
+        ("hits", g.hits, s0.hits + s1.hits),
+        ("misses", g.misses, s0.misses + s1.misses),
+        ("evictions", g.evictions, s0.evictions + s1.evictions),
+    ] {
+        assert_eq!(global, parts, "tenant books must sum to the global {name} counter");
+    }
+    // And the books are really per-tenant: each model's weights were
+    // discovered (not plan-programmed) in its own partition.
+    let (rs, ss) = (res.tenant_stats(), shared.tenant_stats());
+    assert_eq!(rs.write_rows, 32 + 16, "res: 2 single-tile layers programmed once");
+    assert_eq!(ss.write_rows, 48 + 16, "shared: 2 single-tile layers programmed once");
+    assert!(rs.hits > 0 && ss.hits > 0);
+    assert_eq!(g.evictions, 0, "both working sets fit their partitions");
+    server.shutdown();
+}
+
+#[test]
+fn hot_swap_under_load_drains_in_flight_bit_exact_and_switches_versions() {
+    let dir_v1 = synth_dir("swap-v1");
+    let dir_v2 = synth_dir("swap-v2");
+    // Same shape, different weights: replies tell the versions apart.
+    write_artifacts(&dir_v1, &[32, 16, 8], 31, true, None);
+    write_artifacts(&dir_v2, &[32, 16, 8], 32, true, None);
+    let models = vec![("m".to_string(), dir_v1.clone())];
+    let mut cfg = MultiServerConfig::new(models, 4 * 65536);
+    cfg.n_workers = 2;
+    cfg.policy.max_batch = 8;
+    cfg.policy.max_wait = Duration::from_millis(1);
+    let server = MultiServer::start(cfg).unwrap();
+    assert_eq!(server.model_generation("m"), Some(1));
+
+    let manifest_v1 = Manifest::load(&dir_v1).unwrap();
+    let manifest_v2 = Manifest::load(&dir_v2).unwrap();
+    let mut rng = Rng::new(33);
+    // In-flight load across the swap: these may be answered by either
+    // version, but every reply must be bit-exact against exactly one
+    // of them — a mixed-version pipeline would match neither.
+    let mut in_flight = Vec::new();
+    for _ in 0..40 {
+        let input = rng.ternary_vec(32, 0.5);
+        let v1 = reference_forward(&manifest_v1, &input);
+        let v2 = reference_forward(&manifest_v2, &input);
+        in_flight.push((v1, v2, server.infer_async("m", input).unwrap()));
+    }
+    let generation = server.hot_swap("m", &dir_v2).unwrap();
+    assert_eq!(generation, 2);
+    assert_eq!(server.model_generation("m"), Some(2));
+    // hot_swap returns only after every in-flight flush holding the old
+    // version drained, so everything submitted after it is pure v2.
+    let mut post_swap = Vec::new();
+    for _ in 0..40 {
+        let input = rng.ternary_vec(32, 0.5);
+        let want = reference_forward(&manifest_v2, &input);
+        post_swap.push((want, server.infer_async("m", input).unwrap()));
+    }
+    for (v1, v2, rx) in in_flight {
+        let reply = rx.recv().unwrap().expect("reply survives the swap");
+        assert!(
+            reply.logits == v1 || reply.logits == v2,
+            "reply matches neither version's reference — mixed-version pipeline"
+        );
+    }
+    for (want, rx) in post_swap {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.logits, want, "post-swap replies must come from the new version");
+    }
+    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+#[test]
+fn plan_programmed_cold_start_serves_with_no_discovery_misses() {
+    let dir = synth_dir("coldstart");
+    // 300×40 splits into two k-shards; the plan pool matches the
+    // serving engine exactly (256×256 arrays, 2-array capacity).
+    write_artifacts(&dir, &[300, 40, 8], 41, true, Some((256, 256, 2)));
+    let models = vec![("planned".to_string(), dir.clone())];
+    let mut cfg = MultiServerConfig::new(models, 2 * 65536);
+    cfg.n_workers = 1;
+    cfg.policy.max_wait = Duration::from_millis(1);
+    let server = MultiServer::start(cfg).unwrap();
+
+    // Cold start programmed exactly the plan: every occupied weight row
+    // charged as a plan write, zero discovery traffic.
+    let engine = server.backend().engine();
+    let s = engine.stats();
+    assert_eq!(s.plan_write_rows, (256 + 44) + 40, "Σ k_len over the plan's shards");
+    assert_eq!(s.write_rows, 0, "no traffic-driven programming at load");
+    assert_eq!(s.misses, 0, "no discovery");
+    assert_eq!(s.tiles, 3, "both layers' shards are already resident");
+
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Rng::new(42);
+    for _ in 0..6 {
+        let input = rng.ternary_vec(300, 0.5);
+        let want = reference_forward(&manifest, &input);
+        let reply = server.infer("planned", input).unwrap();
+        assert_eq!(reply.logits, want, "plan-programmed serving must stay bit-exact");
+    }
+    let s = engine.stats();
+    assert_eq!((s.misses, s.write_rows), (0, 0), "first traffic finds everything resident");
+    assert!(s.hits >= 6 * 3, "every shard lookup hits");
+
+    let m = server.measured_residency("planned").unwrap();
+    assert_eq!(m.inferences, 6);
+    assert_eq!(m.write_rows, 0);
+    assert_eq!(m.plan_write_rows, 340);
+    assert!(m.plan_write_energy_j > 0.0 && m.plan_write_latency_s > 0.0);
+    server.shutdown();
+}
+
+#[test]
+fn committed_example_artifact_verifies_and_replays_its_plan_strictly() {
+    // The committed fixture is produced by the *Python* placement
+    // mirror (`python/compile/make_example_artifact.py`); this test
+    // pins it to the Rust packing rules shard for shard. CI also runs
+    // `sitecim artifact verify` against the same directory.
+    let dir = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/data/example_artifact"));
+    let manifest = Manifest::load(dir)
+        .expect("committed example artifact must load with verified checksums");
+    assert_eq!(manifest.version, 2);
+    assert!(!manifest.sha256.is_empty(), "example artifact is checksummed");
+    let plan =
+        manifest.placement.as_ref().expect("example artifact carries a placement plan");
+
+    let layers: Vec<(usize, usize)> = manifest.dims.windows(2).map(|w| (w[0], w[1])).collect();
+    let recomputed =
+        plan_layout(&layers, plan.array_rows, plan.array_cols, plan.slots).unwrap();
+    assert_eq!(recomputed, plan.shards, "Python placement mirror diverged from the engine");
+
+    // Strict replay: an engine with the plan's exact pool geometry must
+    // accept every shard at its planned slot rank and region origin,
+    // with zero discovery.
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+            .with_array_dims(plan.array_rows, plan.array_cols)
+            .with_pool(plan.slots)
+            .with_threads(1),
+    );
+    let mut expected_rows = 0u64;
+    for (li, (k, n)) in layers.iter().enumerate() {
+        let (w, shape) = manifest.load_weight(li).unwrap();
+        assert_eq!(shape, (*k, *n));
+        let id = engine.register_weight_arc(w.into(), *k, *n).unwrap();
+        let shards: Vec<PlannedShard> =
+            plan.shards.iter().filter(|s| s.layer == li).copied().collect();
+        assert!(!shards.is_empty());
+        engine.program_from_plan(id, &shards).expect("strict plan replay");
+        expected_rows += shards.iter().map(|s| s.k_len as u64).sum::<u64>();
+    }
+    let s = engine.stats();
+    assert_eq!(s.plan_write_rows, expected_rows);
+    assert_eq!((s.misses, s.write_rows), (0, 0));
+    assert_eq!(s.tiles, plan.shards.len() as u64);
+}
