@@ -10,8 +10,10 @@
 //!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
 //!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine] [--threads T]
 //!            [--capacity-words W] [--max-batch-rows R]
+//!            ingress: [--rate R] [--burst B] [--shed-high H] [--shed-low L]
 //!            multi-model: [--model a=dir1,b=dir2] [--reserve a=WORDS]
-//!   artifact verify <dir>   offline artifact check (schema, checksums, plan)
+//!   metrics snapshot [--artifacts DIR] [--requests N] [--out PATH]   scrapeable MetricsReport JSON
+//!   artifact verify DIR   offline artifact check (schema, checksums, plan)
 
 mod bench_check;
 
@@ -22,7 +24,10 @@ use anyhow::{Context, Result};
 
 use crate::array::area::Design;
 use crate::array::{mac, CimArray, SiTeCim1Array, SiTeCim2Array};
-use crate::coordinator::{BackendKind, MultiServer, MultiServerConfig, Server, ServerConfig};
+use crate::coordinator::{
+    BackendKind, IngressConfig, MultiServer, MultiServerConfig, RateLimit, Server, ServerConfig,
+    Watermarks,
+};
 use crate::device::Tech;
 use crate::engine::tiling::reference_gemm;
 use crate::engine::{plan_layout, EngineConfig, TernaryGemmEngine};
@@ -65,6 +70,7 @@ USAGE: sitecim <subcommand> [flags]
           run the AOT-compiled ternary MLP on the held-out test set
   serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B] [--backend pjrt|engine]
           [--threads T] [--capacity-words W] [--max-batch-rows R]
+          [--rate R] [--burst B] [--shed-high H] [--shed-low L]
           start the serving coordinator and push synthetic traffic (the
           engine backend shares one resident-weight model and one
           persistent executor across workers, and merges all in-flight
@@ -81,6 +87,20 @@ USAGE: sitecim <subcommand> [flags]
           everything else shares the rest best-effort; the report adds
           per-tenant request counts, hit rates and plan/traffic write
           rows
+          ingress (both modes): --rate R admits R requests/s per tenant
+          (token bucket, --burst B, default B=R) and --shed-high H sheds
+          with an explicit 'overloaded' reply once H admitted requests
+          are in flight, recovering at --shed-low L (default H/2) —
+          rejected requests are counted, never queued
+  metrics snapshot [--artifacts DIR] [--requests N] [--workers W] [--threads T]
+          [--capacity-words W] [--max-batch-rows R]
+          [--rate R] [--burst B] [--shed-high H] [--shed-low L] [--out PATH]
+          serve the test set through the engine backend, then emit the
+          scrapeable MetricsReport as one JSON object (p50/p95/p99
+          latency, rows-per-flush histogram, admission ledger with
+          per-tenant rows summing to the globals, engine cache and
+          executor counters, live queue depth); --out also writes the
+          JSON to a file
   artifact verify <dir>
           load the artifact at <dir> and check it offline: manifest
           schema version, per-file sha256 checksums, and (when present)
@@ -98,6 +118,7 @@ pub fn run(args: Args) -> Result<i32> {
         Some("bench-check") => cmd_bench_check(&args),
         Some("infer") => cmd_infer(&args),
         Some("serve") => cmd_serve(&args),
+        Some("metrics") => cmd_metrics(&args),
         Some("artifact") => cmd_artifact(&args),
         Some("help") | None => {
             print!("{USAGE}");
@@ -371,6 +392,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     cfg.engine_threads = args.get_usize("threads", 2);
     let capacity = args.get_u64("capacity-words", 0);
     cfg.capacity_words = if capacity > 0 { Some(capacity) } else { None };
+    cfg.ingress = ingress_from_args(args);
     cfg.backend = match args.get_or("backend", "pjrt").as_str() {
         "pjrt" => BackendKind::Pjrt,
         "engine" => BackendKind::Engine,
@@ -385,11 +407,18 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let server = Server::start(cfg)?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
+    let mut rejected = 0usize;
     for i in 0..n_requests {
         let s = i % manifest.test_n;
         let input = x[s * manifest.in_dim..(s + 1) * manifest.in_dim].to_vec();
-        pending.push((s, server.infer_async(input).map_err(anyhow::Error::msg)?));
+        // With an ingress policy armed, rejections (rate limit, shed)
+        // are expected behavior, not driver failures: count and go on.
+        match server.infer_async(input) {
+            Ok(rx) => pending.push((s, rx)),
+            Err(_) => rejected += 1,
+        }
     }
+    let answered = pending.len();
     let mut correct = 0usize;
     for (s, rx) in pending {
         let reply = rx.recv()?.map_err(anyhow::Error::msg)?;
@@ -399,11 +428,22 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {n_requests} requests in {dt:.2}s ({:.0} req/s), accuracy {:.2}%",
-        n_requests as f64 / dt,
-        100.0 * correct as f64 / n_requests as f64
+        "served {answered}/{n_requests} requests in {dt:.2}s ({:.0} req/s), accuracy {:.2}%",
+        answered as f64 / dt,
+        100.0 * correct as f64 / answered.max(1) as f64
     );
     println!("{}", server.metrics.report());
+    let ing = server.ingress().snapshot();
+    if rejected > 0 || ing.offered() > ing.admitted {
+        println!(
+            "ingress: {} offered, {} admitted, {} bad shape, {} rate limited, {} shed",
+            ing.offered(),
+            ing.admitted,
+            ing.rejected_shape,
+            ing.rate_limited,
+            ing.shed
+        );
+    }
     if let Some(model) = server.engine_model() {
         let s = model.engine_stats();
         println!(
@@ -451,6 +491,7 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
     cfg.policy.max_batch = args.get_usize("batch", 32);
     cfg.policy.max_batch_rows = args.get_usize("max-batch-rows", cfg.policy.max_batch_rows);
     cfg.engine_threads = args.get_usize("threads", 2);
+    cfg.ingress = ingress_from_args(args);
     if let Some(rspec) = args.get("reserve") {
         for part in rspec.split(',') {
             let (name, words) = part
@@ -471,13 +512,17 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
     let server = MultiServer::start(cfg)?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
+    let mut rejected = 0usize;
     for i in 0..n_requests {
         let (name, in_dim, test_n, x, _) = &sets[i % sets.len()];
         let s = (i / sets.len()) % test_n;
         let input = x[s * in_dim..(s + 1) * in_dim].to_vec();
-        let rx = server.infer_async(name, input).map_err(anyhow::Error::msg)?;
-        pending.push((i % sets.len(), s, rx));
+        match server.infer_async(name, input) {
+            Ok(rx) => pending.push((i % sets.len(), s, rx)),
+            Err(_) => rejected += 1,
+        }
     }
+    let answered = pending.len();
     let mut correct = 0usize;
     for (mi, s, rx) in pending {
         let reply = rx.recv()?.map_err(anyhow::Error::msg)?;
@@ -487,12 +532,24 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
     }
     let dt = t0.elapsed().as_secs_f64();
     println!(
-        "served {n_requests} requests across {} models in {dt:.2}s ({:.0} req/s), accuracy {:.2}%",
+        "served {answered}/{n_requests} requests across {} models in {dt:.2}s ({:.0} req/s), accuracy {:.2}%",
         sets.len(),
-        n_requests as f64 / dt,
-        100.0 * correct as f64 / n_requests as f64
+        answered as f64 / dt,
+        100.0 * correct as f64 / answered.max(1) as f64
     );
     println!("{}", server.metrics.report());
+    if rejected > 0 {
+        let ing = server.ingress().snapshot();
+        println!(
+            "ingress: {} offered, {} admitted, {} bad shape, {} rate limited, {} shed, {} unknown model",
+            ing.offered(),
+            ing.admitted,
+            ing.rejected_shape,
+            ing.rate_limited,
+            ing.shed,
+            ing.unknown_model
+        );
+    }
     for name in server.model_names() {
         let gen = server.model_generation(&name).unwrap_or(0);
         if let Some(m) = server.measured_residency(&name) {
@@ -506,6 +563,69 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
                 crate::util::units::fmt_time(m.latency_per_inf_s),
             );
         }
+    }
+    server.shutdown();
+    Ok(0)
+}
+
+/// Shared ingress flags: `--rate R [--burst B]` arms the per-tenant
+/// token bucket, `--shed-high H [--shed-low L]` arms the load-shedding
+/// watermarks (L defaults to H/2). Absent flags leave the gate open.
+fn ingress_from_args(args: &Args) -> IngressConfig {
+    let mut cfg = IngressConfig::default();
+    let rate = args.get_f64("rate", 0.0);
+    if rate > 0.0 {
+        cfg.rate = Some(RateLimit { per_s: rate, burst: args.get_f64("burst", rate).max(1.0) });
+    }
+    let high = args.get_u64("shed-high", 0);
+    if high > 0 {
+        let low = args.get_u64("shed-low", high / 2);
+        cfg.shed = Some(Watermarks { high, low: low.min(high - 1) });
+    }
+    cfg
+}
+
+/// `metrics snapshot`: serve the artifact's test set through the engine
+/// backend under the requested ingress policy, then emit the full
+/// scrapeable [`crate::coordinator::MetricsReport`] as one JSON object
+/// (optionally also written to `--out`).
+fn cmd_metrics(args: &Args) -> Result<i32> {
+    if args.positional.get(1).map(String::as_str) != Some("snapshot") {
+        eprintln!("usage: sitecim metrics snapshot [--artifacts DIR] [--requests N] [--out PATH]");
+        return Ok(2);
+    }
+    let dir = args
+        .get("artifacts")
+        .map(Into::into)
+        .unwrap_or_else(runtime::default_dir);
+    let n_requests = args.get_usize("requests", 256);
+    let mut cfg = ServerConfig::new(dir.clone()).with_engine_backend();
+    cfg.n_workers = args.get_usize("workers", 2);
+    cfg.policy.max_batch_rows = args.get_usize("max-batch-rows", cfg.policy.max_batch_rows);
+    cfg.engine_threads = args.get_usize("threads", 2);
+    let capacity = args.get_u64("capacity-words", 0);
+    cfg.capacity_words = if capacity > 0 { Some(capacity) } else { None };
+    cfg.ingress = ingress_from_args(args);
+    let manifest = Manifest::load(&dir)?;
+    let (x, _) = manifest.load_test_set()?;
+
+    let server = Server::start(cfg)?;
+    let mut pending = Vec::new();
+    for i in 0..n_requests {
+        let s = i % manifest.test_n;
+        let input = x[s * manifest.in_dim..(s + 1) * manifest.in_dim].to_vec();
+        if let Ok(rx) = server.infer_async(input) {
+            pending.push(rx);
+        }
+    }
+    for rx in pending {
+        let _ = rx.recv()?; // backend errors still count in the report
+    }
+    let report = server.metrics_report();
+    let json = report.to_json().to_string();
+    println!("{json}");
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, &json).with_context(|| format!("writing {path}"))?;
     }
     server.shutdown();
     Ok(0)

@@ -202,6 +202,12 @@ impl EngineBackend {
         self.engine.exec_stats()
     }
 
+    /// Live executor backlog (see `TernaryGemmEngine::exec_queue_depth`):
+    /// the watermark signal scraped into `MetricsReport`.
+    pub fn exec_queue_depth(&self) -> u64 {
+        self.engine.exec_queue_depth()
+    }
+
     /// Physical arrays in the serving pool.
     pub fn pool_arrays(&self) -> usize {
         self.engine.pool_arrays()

@@ -29,6 +29,13 @@
 //! therefore admits requests only when a merged batch *starts* (flush at
 //! layer 0); requests arriving mid-pipeline seed the next merge, whose
 //! deadline is already bounded by `max_wait`.
+//!
+//! The batcher only ever sees pre-screened work: requests reach the
+//! channel through the `coordinator::ingress` admission chain, so
+//! malformed planes never enter a merge and, under overload, excess
+//! requests are shed at the front door instead of growing the queue this
+//! module drains (the queue the shed watermarks bound is exactly the
+//! in-flight population these formers merge from).
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::Arc;

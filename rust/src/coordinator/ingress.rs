@@ -1,0 +1,630 @@
+//! Gateway-grade admission control in front of the serving queues.
+//!
+//! Everything the batcher and workers see has passed through one
+//! [`Ingress`] — a small middleware chain applied *before* enqueue, so
+//! malformed, excessive or unserviceable work is refused at the front
+//! door instead of occupying queue slots and flush capacity:
+//!
+//! 1. **Shape validation** ([`Rejection::BadShape`]) — the request's
+//!    trit plane must match the loaded manifest's input dimension and
+//!    carry only signed-ternary values (−1/0/+1). A malformed request is
+//!    a deterministic client bug: it is rejected first and never charges
+//!    the client's rate bucket or flaps the shedder.
+//! 2. **Per-tenant rate limiting** ([`Rejection::RateLimited`]) — a
+//!    classic [`TokenBucket`] per tenant (model name; the single-model
+//!    server uses one bucket), refilled continuously at `per_s` up to a
+//!    `burst` ceiling. Time comes from an injected [`IngressClock`], so
+//!    tests (and the doctest below) drive refill deterministically with
+//!    a [`ManualClock`].
+//! 3. **Watermark load shedding** ([`Rejection::Overloaded`]) — the
+//!    ingress tracks admitted-but-unanswered requests in a live
+//!    `inflight` gauge (the workers decrement it as replies scatter).
+//!    When the gauge reaches the high-water mark the ingress *sheds*:
+//!    excess requests get an immediate explicit `Overloaded` reply
+//!    instead of a queue slot, so the latency of admitted work stays
+//!    bounded by the watermark instead of growing with offered load.
+//!    Shedding clears only once the gauge drains to the low-water mark
+//!    (hysteresis — a queue hovering at the threshold does not flap
+//!    between admitting and shedding on every reply). The executor's
+//!    live backlog is scrapeable alongside
+//!    (`TernaryGemmEngine::exec_queue_depth`), and its high-water mark
+//!    is `ExecStatsSnapshot::queue_depth_max`.
+//!
+//! Every verdict is counted — globally and per tenant, with the same
+//! books-sum-to-global construction as `coordinator::metrics` — and the
+//! counters surface in the scrapeable
+//! [`MetricsReport`](super::metrics::MetricsReport) (`sitecim metrics
+//! snapshot`).
+//!
+//! # Deterministic rate limiting
+//!
+//! ```
+//! use sitecim::coordinator::ingress::{IngressClock, ManualClock, TokenBucket};
+//!
+//! let clock = ManualClock::default();
+//! let bucket = TokenBucket::new(2.0, 2.0); // 2 req/s, burst of 2, starts full
+//! assert!(bucket.try_take(clock.now_ns()));
+//! assert!(bucket.try_take(clock.now_ns()));
+//! assert!(!bucket.try_take(clock.now_ns()), "burst exhausted");
+//! clock.advance_ms(500); // at 2 tokens/s this refills exactly one token
+//! assert!(bucket.try_take(clock.now_ns()));
+//! assert!(!bucket.try_take(clock.now_ns()));
+//! ```
+//!
+//! # Shed / recover hysteresis
+//!
+//! ```
+//! use sitecim::coordinator::ingress::{Ingress, IngressConfig, Rejection, Watermarks};
+//!
+//! let cfg = IngressConfig { shed: Some(Watermarks { high: 2, low: 1 }), ..Default::default() };
+//! let ingress = Ingress::new(3, cfg); // serving a 3-trit input dimension
+//! assert!(ingress.admit("m", &[1, 0, -1]).is_ok());
+//! assert!(ingress.admit("m", &[0, 1, 1]).is_ok());
+//! // Two requests in flight reach the high-water mark: shed.
+//! assert!(matches!(ingress.admit("m", &[0, 0, 0]), Err(Rejection::Overloaded { .. })));
+//! // One reply drains the gauge to the low-water mark: recovered.
+//! ingress.request_done();
+//! assert!(ingress.admit("m", &[0, 0, 0]).is_ok());
+//! // Malformed shapes are refused outright — wrong length or non-trit values.
+//! assert!(matches!(ingress.admit("m", &[1, 0]), Err(Rejection::BadShape { .. })));
+//! assert!(matches!(ingress.admit("m", &[2, 0, 0]), Err(Rejection::BadShape { .. })));
+//! assert_eq!(ingress.snapshot().rejected_shape, 2);
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// Time source for the rate limiter: monotonic nanoseconds since an
+/// arbitrary origin. Injected so tests advance time explicitly instead
+/// of sleeping (see [`ManualClock`]); production uses [`MonotonicClock`].
+pub trait IngressClock: Send + Sync {
+    fn now_ns(&self) -> u64;
+}
+
+/// The production clock: `Instant`-based monotonic nanoseconds.
+#[derive(Debug)]
+pub struct MonotonicClock {
+    origin: Instant,
+}
+
+impl Default for MonotonicClock {
+    fn default() -> MonotonicClock {
+        MonotonicClock { origin: Instant::now() }
+    }
+}
+
+impl IngressClock for MonotonicClock {
+    fn now_ns(&self) -> u64 {
+        self.origin.elapsed().as_nanos() as u64
+    }
+}
+
+/// A hand-cranked clock for deterministic tests: time only moves when
+/// the test calls [`ManualClock::advance_ns`] / [`ManualClock::advance_ms`].
+#[derive(Debug, Default)]
+pub struct ManualClock {
+    now_ns: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn advance_ns(&self, ns: u64) {
+        self.now_ns.fetch_add(ns, Ordering::Relaxed);
+    }
+
+    pub fn advance_ms(&self, ms: u64) {
+        self.advance_ns(ms * 1_000_000);
+    }
+}
+
+impl IngressClock for ManualClock {
+    fn now_ns(&self) -> u64 {
+        self.now_ns.load(Ordering::Relaxed)
+    }
+}
+
+/// Continuous token-bucket rate limiter: capacity `burst` tokens,
+/// refilled at `per_s` tokens per second, one token per admission. The
+/// bucket starts full, so a cold client gets its full burst immediately.
+#[derive(Debug)]
+pub struct TokenBucket {
+    per_s: f64,
+    burst: f64,
+    state: Mutex<BucketState>,
+}
+
+#[derive(Debug)]
+struct BucketState {
+    tokens: f64,
+    last_ns: u64,
+}
+
+impl TokenBucket {
+    /// A full bucket of `burst` tokens refilling at `per_s` per second.
+    /// Both must be positive (a zero rate would never refill; callers
+    /// expressing "unlimited" simply skip the bucket).
+    pub fn new(per_s: f64, burst: f64) -> TokenBucket {
+        assert!(per_s > 0.0 && burst > 0.0, "rate and burst must be positive");
+        TokenBucket {
+            per_s,
+            burst,
+            state: Mutex::new(BucketState { tokens: burst, last_ns: 0 }),
+        }
+    }
+
+    /// Take one token at time `now_ns` (from the injected clock).
+    /// Returns `false` — rate limited — when less than a whole token has
+    /// accumulated.
+    pub fn try_take(&self, now_ns: u64) -> bool {
+        let mut st = self.state.lock().unwrap();
+        let dt_ns = now_ns.saturating_sub(st.last_ns);
+        st.last_ns = st.last_ns.max(now_ns);
+        st.tokens = (st.tokens + dt_ns as f64 * 1e-9 * self.per_s).min(self.burst);
+        if st.tokens >= 1.0 {
+            st.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Tokens currently available at `now_ns` (diagnostic; does not take).
+    pub fn available(&self, now_ns: u64) -> f64 {
+        let st = self.state.lock().unwrap();
+        (st.tokens + now_ns.saturating_sub(st.last_ns) as f64 * 1e-9 * self.per_s).min(self.burst)
+    }
+}
+
+/// Per-tenant rate-limit knob: sustained `per_s` admissions per second
+/// with transient bursts up to `burst`.
+#[derive(Clone, Copy, Debug)]
+pub struct RateLimit {
+    pub per_s: f64,
+    pub burst: f64,
+}
+
+/// Load-shedding watermarks over the in-flight gauge: shed at
+/// `inflight ≥ high`, recover at `inflight ≤ low` (hysteresis).
+#[derive(Clone, Copy, Debug)]
+pub struct Watermarks {
+    pub high: u64,
+    pub low: u64,
+}
+
+/// Ingress policy. `Default` is fully open: no rate limit, no shedding,
+/// shape validation always on (a malformed plane can never be served
+/// correctly, so there is no knob to admit one).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IngressConfig {
+    /// Per-tenant token-bucket rate limit; `None` admits any rate.
+    pub rate: Option<RateLimit>,
+    /// Load-shedding watermarks over the in-flight gauge; `None` never
+    /// sheds.
+    pub shed: Option<Watermarks>,
+}
+
+/// Why the ingress refused a request. Every variant is an *immediate*
+/// reply — a rejected request never occupies a queue slot.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Rejection {
+    /// The request plane does not match the loaded manifest (wrong
+    /// length, or a value outside {−1, 0, +1}).
+    BadShape { reason: String },
+    /// The tenant's token bucket is empty — retry after `retry_in_s`.
+    RateLimited { tenant: String, retry_in_s: f64 },
+    /// The in-flight gauge crossed the high-water mark; the server sheds
+    /// until it drains to `low` (hysteresis).
+    Overloaded { inflight: u64, high: u64, low: u64 },
+    /// No model lane with that name is loaded (multi-tenant serving).
+    UnknownModel { model: String },
+}
+
+impl fmt::Display for Rejection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Rejection::BadShape { reason } => write!(f, "bad request shape: {reason}"),
+            Rejection::RateLimited { tenant, retry_in_s } => {
+                write!(f, "rate limited (tenant {tenant:?}): retry in {retry_in_s:.3}s")
+            }
+            Rejection::Overloaded { inflight, high, low } => write!(
+                f,
+                "overloaded: {inflight} requests in flight ≥ high water {high} \
+                 (shedding until ≤ {low})"
+            ),
+            Rejection::UnknownModel { model } => write!(f, "unknown model {model:?}"),
+        }
+    }
+}
+
+/// Cumulative admission counters (one global set plus one per tenant).
+#[derive(Debug, Default)]
+struct Counters {
+    admitted: AtomicU64,
+    rejected_shape: AtomicU64,
+    rate_limited: AtomicU64,
+    shed: AtomicU64,
+    unknown_model: AtomicU64,
+}
+
+impl Counters {
+    fn snapshot(&self) -> IngressSnapshot {
+        IngressSnapshot {
+            admitted: self.admitted.load(Ordering::Relaxed),
+            rejected_shape: self.rejected_shape.load(Ordering::Relaxed),
+            rate_limited: self.rate_limited.load(Ordering::Relaxed),
+            shed: self.shed.load(Ordering::Relaxed),
+            unknown_model: self.unknown_model.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Point-in-time copy of the admission counters. `offered()` is the
+/// total work presented to the front door; every offered request lands
+/// in exactly one column, and each per-tenant snapshot sums into the
+/// global one.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct IngressSnapshot {
+    /// Requests that passed the whole chain and were enqueued.
+    pub admitted: u64,
+    /// Refused by shape/size validation (wrong plane length, non-trit
+    /// values).
+    pub rejected_shape: u64,
+    /// Refused by the per-tenant token bucket.
+    pub rate_limited: u64,
+    /// Refused by watermark load shedding (explicit `Overloaded` reply).
+    pub shed: u64,
+    /// Refused because no such model lane is loaded.
+    pub unknown_model: u64,
+}
+
+impl IngressSnapshot {
+    /// Total requests offered to the ingress (admitted + every rejection).
+    pub fn offered(&self) -> u64 {
+        self.admitted + self.rejected_shape + self.rate_limited + self.shed + self.unknown_model
+    }
+}
+
+/// The admission gate: one per server, shared by every caller of
+/// `infer_async`. See the module docs for the middleware chain and the
+/// doctests for the contract.
+pub struct Ingress {
+    cfg: IngressConfig,
+    clock: Arc<dyn IngressClock>,
+    in_dim: usize,
+    /// Admitted-but-unanswered requests. Incremented on admission,
+    /// decremented by the workers as replies scatter — the live signal
+    /// the shed watermarks act on.
+    inflight: AtomicU64,
+    /// Latched shed state (the hysteresis bit).
+    shedding: AtomicBool,
+    buckets: RwLock<BTreeMap<String, Arc<TokenBucket>>>,
+    global: Counters,
+    tenants: RwLock<BTreeMap<String, Arc<Counters>>>,
+}
+
+impl Ingress {
+    /// An ingress validating against input dimension `in_dim`, using the
+    /// production monotonic clock.
+    pub fn new(in_dim: usize, cfg: IngressConfig) -> Ingress {
+        Ingress::with_clock(in_dim, cfg, Arc::new(MonotonicClock::default()))
+    }
+
+    /// [`Ingress::new`] with an injected clock (tests pass a
+    /// [`ManualClock`] to drive token refill deterministically).
+    pub fn with_clock(in_dim: usize, cfg: IngressConfig, clock: Arc<dyn IngressClock>) -> Ingress {
+        if let Some(w) = cfg.shed {
+            assert!(w.high >= 1, "a zero high-water mark would shed everything");
+            assert!(w.low < w.high, "hysteresis needs low < high");
+        }
+        Ingress {
+            cfg,
+            clock,
+            in_dim,
+            inflight: AtomicU64::new(0),
+            shedding: AtomicBool::new(false),
+            buckets: RwLock::new(BTreeMap::new()),
+            global: Counters::default(),
+            tenants: RwLock::new(BTreeMap::new()),
+        }
+    }
+
+    /// The policy this ingress enforces.
+    pub fn config(&self) -> &IngressConfig {
+        &self.cfg
+    }
+
+    /// Run the admission chain for one request of `tenant`. `Ok` means
+    /// the caller may enqueue (and the in-flight gauge was charged —
+    /// every admitted request must eventually be balanced by
+    /// [`Ingress::request_done`]); `Err` carries the explicit rejection
+    /// reply.
+    pub fn admit(&self, tenant: &str, input: &[i8]) -> Result<(), Rejection> {
+        self.admit_shaped(tenant, self.in_dim, input)
+    }
+
+    /// [`Ingress::admit`] validating against a caller-supplied input
+    /// dimension — the multi-tenant router passes each lane's manifest
+    /// dimension through one shared gate.
+    pub fn admit_shaped(&self, tenant: &str, in_dim: usize, input: &[i8]) -> Result<(), Rejection> {
+        // 1. Shape: deterministic client bugs, refused before they touch
+        //    the client's budget or the shed state.
+        if input.len() != in_dim {
+            return Err(self.reject_shape(
+                tenant,
+                format!("input len {} != manifest in_dim {}", input.len(), in_dim),
+            ));
+        }
+        if let Some(bad) = input.iter().find(|&&t| !(-1..=1).contains(&t)) {
+            return Err(self.reject_shape(
+                tenant,
+                format!("input holds non-trit value {bad} (want -1, 0 or +1)"),
+            ));
+        }
+        // 2. Rate: one token per admission from the tenant's bucket.
+        if let Some(rl) = self.cfg.rate {
+            let bucket = self.bucket(tenant, rl);
+            if !bucket.try_take(self.clock.now_ns()) {
+                self.charge(tenant, |c| &c.rate_limited);
+                // Time until a whole token has accumulated at `per_s`.
+                let deficit = 1.0 - bucket.available(self.clock.now_ns());
+                return Err(Rejection::RateLimited {
+                    tenant: tenant.to_string(),
+                    retry_in_s: (deficit / rl.per_s).max(0.0),
+                });
+            }
+        }
+        // 3. Load: shed above the high-water mark, recover at the low one.
+        if let Some(w) = self.cfg.shed {
+            let inflight = self.inflight.load(Ordering::Relaxed);
+            let was_shedding = self.shedding.load(Ordering::Relaxed);
+            let shedding = if was_shedding { inflight > w.low } else { inflight >= w.high };
+            if shedding != was_shedding {
+                self.shedding.store(shedding, Ordering::Relaxed);
+            }
+            if shedding {
+                self.charge(tenant, |c| &c.shed);
+                return Err(Rejection::Overloaded { inflight, high: w.high, low: w.low });
+            }
+        }
+        self.inflight.fetch_add(1, Ordering::Relaxed);
+        self.charge(tenant, |c| &c.admitted);
+        Ok(())
+    }
+
+    /// Balance one admission: a reply (success *or* backend error) was
+    /// delivered for an admitted request. Drives shed recovery.
+    pub fn request_done(&self) {
+        self.requests_done(1);
+    }
+
+    /// [`Ingress::request_done`] for a whole scattered batch.
+    pub fn requests_done(&self, n: u64) {
+        let prev = self.inflight.fetch_sub(n, Ordering::Relaxed);
+        debug_assert!(prev >= n, "more replies than admissions");
+        if let Some(w) = self.cfg.shed {
+            if prev - n <= w.low && self.shedding.load(Ordering::Relaxed) {
+                self.shedding.store(false, Ordering::Relaxed);
+            }
+        }
+    }
+
+    /// Record an unknown-model rejection (the multi-tenant router fails
+    /// the lane lookup before any lane-specific validation can run).
+    pub fn reject_unknown_model(&self, model: &str) -> Rejection {
+        self.charge(model, |c| &c.unknown_model);
+        Rejection::UnknownModel { model: model.to_string() }
+    }
+
+    /// Admitted-but-unanswered requests right now.
+    pub fn inflight(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed)
+    }
+
+    /// Whether the shed latch is currently set (between watermarks this
+    /// reflects the direction the gauge last crossed — hysteresis).
+    pub fn is_shedding(&self) -> bool {
+        self.shedding.load(Ordering::Relaxed)
+    }
+
+    /// Global admission counters.
+    pub fn snapshot(&self) -> IngressSnapshot {
+        self.global.snapshot()
+    }
+
+    /// One tenant's admission counters (zeros if the tenant never
+    /// appeared).
+    pub fn tenant_snapshot(&self, tenant: &str) -> IngressSnapshot {
+        self.tenants
+            .read()
+            .unwrap()
+            .get(tenant)
+            .map(|c| c.snapshot())
+            .unwrap_or_default()
+    }
+
+    /// Tenants with at least one counted verdict, sorted.
+    pub fn tenant_names(&self) -> Vec<String> {
+        self.tenants.read().unwrap().keys().cloned().collect()
+    }
+
+    fn reject_shape(&self, tenant: &str, reason: String) -> Rejection {
+        self.charge(tenant, |c| &c.rejected_shape);
+        Rejection::BadShape { reason }
+    }
+
+    /// Charge one counter globally and in `tenant`'s book (created on
+    /// first use) — books sum to the globals by construction.
+    fn charge(&self, tenant: &str, which: impl Fn(&Counters) -> &AtomicU64) {
+        which(&self.global).fetch_add(1, Ordering::Relaxed);
+        if let Some(book) = self.tenants.read().unwrap().get(tenant) {
+            which(book).fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        let mut map = self.tenants.write().unwrap();
+        let book = map.entry(tenant.to_string()).or_default();
+        which(book).fetch_add(1, Ordering::Relaxed);
+    }
+
+    fn bucket(&self, tenant: &str, rl: RateLimit) -> Arc<TokenBucket> {
+        if let Some(b) = self.buckets.read().unwrap().get(tenant) {
+            return Arc::clone(b);
+        }
+        let mut map = self.buckets.write().unwrap();
+        let bucket = map
+            .entry(tenant.to_string())
+            .or_insert_with(|| Arc::new(TokenBucket::new(rl.per_s, rl.burst)));
+        Arc::clone(bucket)
+    }
+}
+
+impl fmt::Debug for Ingress {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Ingress")
+            .field("cfg", &self.cfg)
+            .field("in_dim", &self.in_dim)
+            .field("inflight", &self.inflight)
+            .field("shedding", &self.shedding)
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn manual() -> Arc<ManualClock> {
+        Arc::new(ManualClock::default())
+    }
+
+    #[test]
+    fn token_bucket_burst_then_deterministic_refill() {
+        let clock = manual();
+        let b = TokenBucket::new(10.0, 3.0);
+        // Full burst up front, then empty.
+        for _ in 0..3 {
+            assert!(b.try_take(clock.now_ns()));
+        }
+        assert!(!b.try_take(clock.now_ns()));
+        // 99 ms at 10/s is 0.99 tokens: still limited. One more ms tips it.
+        clock.advance_ms(99);
+        assert!(!b.try_take(clock.now_ns()));
+        clock.advance_ms(1);
+        assert!(b.try_take(clock.now_ns()));
+        // Refill caps at the burst: a long idle stretch grants 3, not 100.
+        clock.advance_ms(10_000);
+        for _ in 0..3 {
+            assert!(b.try_take(clock.now_ns()));
+        }
+        assert!(!b.try_take(clock.now_ns()));
+    }
+
+    #[test]
+    fn rate_limit_is_per_tenant_and_reports_retry() {
+        let clock = manual();
+        let cfg = IngressConfig {
+            rate: Some(RateLimit { per_s: 1.0, burst: 1.0 }),
+            ..Default::default()
+        };
+        let ing = Ingress::with_clock(2, cfg, clock.clone());
+        assert!(ing.admit("a", &[1, -1]).is_ok());
+        // `a` is out of tokens; `b` has its own untouched bucket.
+        let r = ing.admit("a", &[1, -1]).unwrap_err();
+        match r {
+            Rejection::RateLimited { ref tenant, retry_in_s } => {
+                assert_eq!(tenant, "a");
+                assert!(retry_in_s > 0.0 && retry_in_s <= 1.0, "retry {retry_in_s}");
+            }
+            other => panic!("expected RateLimited, got {other:?}"),
+        }
+        assert!(ing.admit("b", &[0, 0]).is_ok());
+        // Refill admits `a` again.
+        clock.advance_ms(1_000);
+        assert!(ing.admit("a", &[1, 1]).is_ok());
+        assert_eq!(ing.tenant_snapshot("a").rate_limited, 1);
+        assert_eq!(ing.tenant_snapshot("b").rate_limited, 0);
+    }
+
+    #[test]
+    fn malformed_shapes_are_rejected_with_reasons() {
+        let ing = Ingress::new(3, IngressConfig::default());
+        let short = ing.admit("m", &[1, 0]).unwrap_err();
+        assert!(matches!(short, Rejection::BadShape { ref reason } if reason.contains("len 2")));
+        let bad = ing.admit("m", &[1, 2, 0]).unwrap_err();
+        assert!(matches!(bad, Rejection::BadShape { ref reason } if reason.contains("2")));
+        assert!(ing.admit("m", &[1, 0, -1]).is_ok());
+        let s = ing.snapshot();
+        assert_eq!((s.rejected_shape, s.admitted), (2, 1));
+        // Rejections never charge the in-flight gauge.
+        assert_eq!(ing.inflight(), 1);
+    }
+
+    #[test]
+    fn shed_hysteresis_recovers_only_at_low_water() {
+        let cfg = IngressConfig {
+            shed: Some(Watermarks { high: 3, low: 1 }),
+            ..Default::default()
+        };
+        let ing = Ingress::new(1, cfg);
+        for _ in 0..3 {
+            assert!(ing.admit("m", &[1]).is_ok());
+        }
+        // Gauge at high water: shedding starts and latches.
+        assert!(matches!(ing.admit("m", &[1]), Err(Rejection::Overloaded { .. })));
+        assert!(ing.is_shedding());
+        // Draining to 2 (> low) keeps shedding — no flapping between the
+        // watermarks.
+        ing.request_done();
+        assert_eq!(ing.inflight(), 2);
+        assert!(matches!(ing.admit("m", &[1]), Err(Rejection::Overloaded { .. })));
+        // Draining to the low-water mark recovers.
+        ing.request_done();
+        assert!(!ing.is_shedding(), "request_done at low water clears the latch");
+        assert!(ing.admit("m", &[1]).is_ok());
+        let s = ing.snapshot();
+        assert_eq!(s.shed, 2);
+        assert_eq!(s.admitted, 4);
+    }
+
+    #[test]
+    fn counters_sum_to_global_across_tenants_and_conserve_offered() {
+        let cfg = IngressConfig {
+            rate: Some(RateLimit { per_s: 1.0, burst: 3.0 }),
+            shed: Some(Watermarks { high: 2, low: 0 }),
+        };
+        let ing = Ingress::with_clock(1, cfg, manual());
+        // a: 2 admitted (fills the gauge), then 1 shed (burst 3 keeps
+        // a's bucket from emptying first — rate runs before shed). b:
+        // 1 bad shape + 1 shed (b's own fresh bucket). Unknown model too.
+        assert!(ing.admit("a", &[1]).is_ok());
+        assert!(ing.admit("a", &[0]).is_ok());
+        assert!(matches!(ing.admit("a", &[1]), Err(Rejection::Overloaded { .. })));
+        assert!(matches!(ing.admit("b", &[1, 1]), Err(Rejection::BadShape { .. })));
+        assert!(matches!(ing.admit("b", &[1]), Err(Rejection::Overloaded { .. })));
+        let _ = ing.reject_unknown_model("ghost");
+        let (g, a, b, ghost) = (
+            ing.snapshot(),
+            ing.tenant_snapshot("a"),
+            ing.tenant_snapshot("b"),
+            ing.tenant_snapshot("ghost"),
+        );
+        assert_eq!(g.offered(), 6);
+        assert_eq!(g.admitted, a.admitted + b.admitted + ghost.admitted);
+        assert_eq!(g.shed, a.shed + b.shed + ghost.shed);
+        assert_eq!(g.rejected_shape, a.rejected_shape + b.rejected_shape + ghost.rejected_shape);
+        assert_eq!(g.unknown_model, a.unknown_model + b.unknown_model + ghost.unknown_model);
+        assert_eq!(g.offered(), a.offered() + b.offered() + ghost.offered());
+        assert_eq!(ing.tenant_names(), vec!["a", "b", "ghost"]);
+    }
+
+    #[test]
+    fn default_config_admits_everything_wellformed() {
+        let ing = Ingress::new(2, IngressConfig::default());
+        for _ in 0..10_000 {
+            assert!(ing.admit("m", &[1, -1]).is_ok());
+        }
+        assert_eq!(ing.snapshot().admitted, 10_000);
+        assert!(!ing.is_shedding());
+    }
+}

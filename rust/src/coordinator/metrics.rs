@@ -6,11 +6,20 @@
 //! name: the `*_for` recording methods charge both the global counters
 //! and exactly one book, so across all tenants the books sum to the
 //! global counters by construction.
+//!
+//! For scraping, [`MetricsReport::gather`] freezes the whole picture —
+//! these counters, the ingress admission counters, and the engine /
+//! executor snapshots — into one serializable [`MetricsReport`] whose
+//! `Display` is its JSON rendering (`sitecim metrics snapshot`).
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 
+use super::ingress::{Ingress, IngressSnapshot};
+use crate::engine::{EngineStatsSnapshot, ExecStatsSnapshot};
+use crate::util::json::Json;
 use crate::util::stats::{summarize, Summary};
 
 /// Retained latency samples (most recent N; see [`LatencyRing`]).
@@ -255,6 +264,236 @@ impl Metrics {
     }
 }
 
+/// One tenant's slice of a [`MetricsReport`]: the tenant book's
+/// counters and windows plus the tenant's ingress verdicts. Tenants
+/// appear if they have either a metrics book or an ingress entry; both
+/// sum to the report's global columns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TenantReport {
+    pub name: String,
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub errors: u64,
+    pub avg_batch_rows: f64,
+    /// End-to-end wall-clock latency (seconds), rolling window.
+    pub latency_s: Summary,
+    /// Rows per executed flush, rolling window.
+    pub rows_per_flush: Summary,
+    pub ingress: IngressSnapshot,
+}
+
+/// Point-in-time serialization of everything an operator scrapes: the
+/// serving counters and rolling windows, the ingress admission ledger,
+/// the live in-flight gauge and shed latch, and (on the engine backend)
+/// the engine / executor snapshots. Produced by
+/// [`MetricsReport::gather`] (the servers wrap it as
+/// `Server::metrics_report`); `Display` renders the JSON from
+/// [`MetricsReport::to_json`].
+///
+/// ```
+/// use sitecim::coordinator::ingress::{Ingress, IngressConfig};
+/// use sitecim::coordinator::metrics::{Metrics, MetricsReport};
+///
+/// let metrics = Metrics::new();
+/// let ingress = Ingress::new(2, IngressConfig::default());
+/// ingress.admit("default", &[1, -1]).unwrap();
+/// metrics.record_request_for("default", 1.5e-3);
+/// let report = MetricsReport::gather(&metrics, &ingress, None, None, None);
+/// assert_eq!((report.requests, report.ingress.admitted), (1, 1));
+/// assert_eq!(report.tenants[0].name, "default");
+/// let json = report.to_json().to_string();
+/// assert!(json.contains("\"admitted\""));
+/// ```
+#[derive(Clone, Debug, PartialEq)]
+pub struct MetricsReport {
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_items: u64,
+    pub errors: u64,
+    pub avg_batch_rows: f64,
+    /// End-to-end wall-clock latency (seconds), rolling window.
+    pub latency_s: Summary,
+    /// Rows per executed flush, rolling window.
+    pub rows_per_flush: Summary,
+    /// Simulated accelerator spend for the served work.
+    pub sim_energy_j: f64,
+    pub sim_time_s: f64,
+    /// Global admission ledger (per-tenant slices sum to this).
+    pub ingress: IngressSnapshot,
+    /// Admitted-but-unanswered requests at snapshot time.
+    pub inflight: u64,
+    /// Whether the shed latch was set at snapshot time.
+    pub shedding: bool,
+    /// Engine counters (`None` on the PJRT backend).
+    pub engine: Option<EngineStatsSnapshot>,
+    /// Executor counters (`None` on the PJRT backend).
+    pub exec: Option<ExecStatsSnapshot>,
+    /// Live executor backlog at snapshot time (`None` on PJRT).
+    pub exec_queue_depth: Option<u64>,
+    pub tenants: Vec<TenantReport>,
+}
+
+impl MetricsReport {
+    /// Freeze `metrics` + `ingress` (and, on the engine backend, the
+    /// engine/executor snapshots) into one report. Tenant rows cover the
+    /// union of metrics books and ingress ledgers.
+    pub fn gather(
+        metrics: &Metrics,
+        ingress: &Ingress,
+        engine: Option<EngineStatsSnapshot>,
+        exec: Option<ExecStatsSnapshot>,
+        exec_queue_depth: Option<u64>,
+    ) -> MetricsReport {
+        let mut names = metrics.tenant_names();
+        for n in ingress.tenant_names() {
+            if !names.contains(&n) {
+                names.push(n);
+            }
+        }
+        names.sort();
+        let tenants = names
+            .into_iter()
+            .map(|name| {
+                let book = metrics.tenant_book(&name);
+                TenantReport {
+                    requests: book.requests.load(Ordering::Relaxed),
+                    batches: book.batches.load(Ordering::Relaxed),
+                    batched_items: book.batched_items.load(Ordering::Relaxed),
+                    errors: book.errors.load(Ordering::Relaxed),
+                    avg_batch_rows: book.avg_batch_size(),
+                    latency_s: book.latency_summary(),
+                    rows_per_flush: book.batch_rows_summary(),
+                    ingress: ingress.tenant_snapshot(&name),
+                    name,
+                }
+            })
+            .collect();
+        MetricsReport {
+            requests: metrics.requests.load(Ordering::Relaxed),
+            batches: metrics.batches.load(Ordering::Relaxed),
+            batched_items: metrics.batched_items.load(Ordering::Relaxed),
+            errors: metrics.errors.load(Ordering::Relaxed),
+            avg_batch_rows: metrics.avg_batch_size(),
+            latency_s: metrics.latency_summary(),
+            rows_per_flush: metrics.batch_rows_summary(),
+            sim_energy_j: metrics.sim_energy_j(),
+            sim_time_s: metrics.sim_time_s(),
+            ingress: ingress.snapshot(),
+            inflight: ingress.inflight(),
+            shedding: ingress.is_shedding(),
+            engine,
+            exec,
+            exec_queue_depth,
+            tenants,
+        }
+    }
+
+    /// The scrape format: one JSON object, stable keys, numbers only
+    /// (plus `null` for backend-absent sections) — see
+    /// `docs/OPERATIONS.md` for the field-by-field reference.
+    pub fn to_json(&self) -> Json {
+        let mut o = BTreeMap::new();
+        o.insert("requests".into(), num(self.requests));
+        o.insert("batches".into(), num(self.batches));
+        o.insert("batched_items".into(), num(self.batched_items));
+        o.insert("errors".into(), num(self.errors));
+        o.insert("avg_batch_rows".into(), Json::Num(self.avg_batch_rows));
+        o.insert("latency_s".into(), summary_json(&self.latency_s));
+        o.insert("rows_per_flush".into(), summary_json(&self.rows_per_flush));
+        o.insert("sim_energy_j".into(), Json::Num(self.sim_energy_j));
+        o.insert("sim_time_s".into(), Json::Num(self.sim_time_s));
+        o.insert("ingress".into(), ingress_json(&self.ingress));
+        o.insert("inflight".into(), num(self.inflight));
+        o.insert("shedding".into(), Json::Bool(self.shedding));
+        o.insert("engine".into(), self.engine.as_ref().map_or(Json::Null, engine_json));
+        o.insert("exec".into(), self.exec.as_ref().map_or(Json::Null, exec_json));
+        o.insert(
+            "exec_queue_depth".into(),
+            self.exec_queue_depth.map_or(Json::Null, num),
+        );
+        let tenants = self
+            .tenants
+            .iter()
+            .map(|t| {
+                let mut to = BTreeMap::new();
+                to.insert("name".into(), Json::Str(t.name.clone()));
+                to.insert("requests".into(), num(t.requests));
+                to.insert("batches".into(), num(t.batches));
+                to.insert("batched_items".into(), num(t.batched_items));
+                to.insert("errors".into(), num(t.errors));
+                to.insert("avg_batch_rows".into(), Json::Num(t.avg_batch_rows));
+                to.insert("latency_s".into(), summary_json(&t.latency_s));
+                to.insert("rows_per_flush".into(), summary_json(&t.rows_per_flush));
+                to.insert("ingress".into(), ingress_json(&t.ingress));
+                Json::Obj(to)
+            })
+            .collect();
+        o.insert("tenants".into(), Json::Arr(tenants));
+        Json::Obj(o)
+    }
+}
+
+impl fmt::Display for MetricsReport {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.to_json())
+    }
+}
+
+fn num(x: u64) -> Json {
+    Json::Num(x as f64)
+}
+
+fn summary_json(s: &Summary) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("n".into(), Json::Num(s.n as f64));
+    o.insert("mean".into(), Json::Num(s.mean));
+    o.insert("min".into(), Json::Num(s.min));
+    o.insert("max".into(), Json::Num(s.max));
+    o.insert("p50".into(), Json::Num(s.p50));
+    o.insert("p95".into(), Json::Num(s.p95));
+    o.insert("p99".into(), Json::Num(s.p99));
+    Json::Obj(o)
+}
+
+fn ingress_json(s: &IngressSnapshot) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("admitted".into(), num(s.admitted));
+    o.insert("rejected_shape".into(), num(s.rejected_shape));
+    o.insert("rate_limited".into(), num(s.rate_limited));
+    o.insert("shed".into(), num(s.shed));
+    o.insert("unknown_model".into(), num(s.unknown_model));
+    o.insert("offered".into(), num(s.offered()));
+    Json::Obj(o)
+}
+
+fn engine_json(s: &EngineStatsSnapshot) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("gemms".into(), num(s.gemms));
+    o.insert("tiles".into(), num(s.tiles));
+    o.insert("windows".into(), num(s.windows));
+    o.insert("macs".into(), num(s.macs));
+    o.insert("write_rows".into(), num(s.write_rows));
+    o.insert("plan_write_rows".into(), num(s.plan_write_rows));
+    o.insert("hits".into(), num(s.hits));
+    o.insert("misses".into(), num(s.misses));
+    o.insert("evictions".into(), num(s.evictions));
+    o.insert("hit_rate".into(), Json::Num(s.hit_rate()));
+    Json::Obj(o)
+}
+
+fn exec_json(s: &ExecStatsSnapshot) -> Json {
+    let mut o = BTreeMap::new();
+    o.insert("submitted".into(), num(s.submitted));
+    o.insert("executed".into(), num(s.executed));
+    o.insert("affine".into(), num(s.affine));
+    o.insert("stolen".into(), num(s.stolen));
+    o.insert("spilled".into(), num(s.spilled));
+    o.insert("queue_depth_max".into(), num(s.queue_depth_max));
+    o.insert("panics".into(), num(s.panics));
+    Json::Obj(o)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -325,6 +564,44 @@ mod tests {
         assert_eq!(a.avg_batch_size(), 2.0);
         assert_eq!(a.latency_summary().n, 2);
         assert_eq!(b.batch_rows_summary().max, 1.0);
+    }
+
+    #[test]
+    fn report_gathers_union_of_books_and_ledgers_and_sums_to_global() {
+        use crate::coordinator::ingress::{Ingress, IngressConfig};
+        let m = Metrics::with_window(8);
+        let ing = Ingress::new(2, IngressConfig::default());
+        // "a" has both a book and a ledger; "b" only an ingress ledger
+        // (admitted then rejected before any batch completed); "c" only
+        // a metrics book (PJRT-style recording without ingress).
+        ing.admit("a", &[1, -1]).unwrap();
+        m.record_request_for("a", 1e-3);
+        m.record_batch_for("a", 1, 0.0, 0.0);
+        assert!(ing.admit("b", &[0, 1]).is_ok());
+        assert!(ing.admit("b", &[9, 1]).is_err());
+        m.record_request_for("c", 2e-3);
+        let r = MetricsReport::gather(&m, &ing, None, None, None);
+        let names: Vec<&str> = r.tenants.iter().map(|t| t.name.as_str()).collect();
+        assert_eq!(names, vec!["a", "b", "c"]);
+        let sum = |f: fn(&TenantReport) -> u64| r.tenants.iter().map(f).sum::<u64>();
+        assert_eq!(r.requests, sum(|t| t.requests));
+        assert_eq!(r.batches, sum(|t| t.batches));
+        assert_eq!(r.ingress.admitted, sum(|t| t.ingress.admitted));
+        assert_eq!(r.ingress.rejected_shape, sum(|t| t.ingress.rejected_shape));
+        assert_eq!(r.ingress.offered(), sum(|t| t.ingress.offered()));
+        assert_eq!(r.inflight, 2);
+        assert!(!r.shedding);
+        assert_eq!(r.engine, None);
+        // JSON round-trips through the crate's own parser with the
+        // expected columns in place.
+        let json = crate::util::json::Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(json.get("requests").and_then(|j| j.as_f64()), Some(2.0));
+        assert_eq!(
+            json.get("ingress").and_then(|j| j.get("offered")).and_then(|j| j.as_f64()),
+            Some(3.0)
+        );
+        assert_eq!(json.get("exec_queue_depth"), Some(&crate::util::json::Json::Null));
+        assert_eq!(json.get("tenants").and_then(|j| j.as_arr()).map(|a| a.len()), Some(3));
     }
 
     #[test]

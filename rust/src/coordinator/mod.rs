@@ -15,9 +15,18 @@
 //! per-tenant metric books that sum to the global counters, and
 //! hot-swaps a model to a new artifact version without dropping
 //! in-flight requests.
+//!
+//! The front door is guarded: every `infer_async` passes the
+//! [`ingress`] admission chain (manifest shape validation, per-tenant
+//! token-bucket rate limiting, watermark load shedding with hysteresis)
+//! *before* enqueue, so malformed or excess work is answered with an
+//! explicit rejection instead of a queue slot. The whole picture —
+//! serving counters, admission ledger, engine/executor snapshots — is
+//! scrapeable as one [`MetricsReport`] (`sitecim metrics snapshot`).
 
 pub mod backend;
 pub mod batcher;
+pub mod ingress;
 pub mod metrics;
 pub mod server;
 
@@ -25,7 +34,8 @@ pub use backend::{
     BackendKind, EngineBackend, InferenceBackend, MultiTenantBackend, PjrtBackend, TenantModel,
 };
 pub use batcher::BatchPolicy;
-pub use metrics::{Metrics, TenantBook};
+pub use ingress::{Ingress, IngressConfig, IngressSnapshot, RateLimit, Rejection, Watermarks};
+pub use metrics::{Metrics, MetricsReport, TenantBook, TenantReport};
 pub use server::{
     InferReply, MeasuredResidency, MultiServer, MultiServerConfig, Server, ServerConfig,
 };

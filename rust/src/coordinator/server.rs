@@ -47,12 +47,17 @@ use super::backend::{
     BackendKind, EngineBackend, InferenceBackend, MultiTenantBackend, PjrtBackend, TenantModel,
 };
 use super::batcher::{form_merged_batch, next_batch, BatchPolicy};
-use super::metrics::Metrics;
+use super::ingress::{Ingress, IngressConfig};
+use super::metrics::{Metrics, MetricsReport};
 use crate::arch::{AccelConfig, Accelerator, Residency};
 use crate::array::area::Design;
 use crate::device::Tech;
 use crate::dnn::{Layer, Network};
 use crate::runtime::{Manifest, ModelKind};
+
+/// Tenant key the single-model [`Server`] charges its ingress ledger
+/// under (the multi-tenant ledger keys by model name).
+pub const DEFAULT_TENANT: &str = "default";
 
 /// One inference request.
 pub struct Request {
@@ -90,6 +95,10 @@ pub struct ServerConfig {
     /// serves under second-chance eviction pressure — bit-exact, measured hit
     /// rates in the serve report.
     pub capacity_words: Option<u64>,
+    /// Admission policy applied before enqueue (rate limit, load-shed
+    /// watermarks; shape validation is always on). Default admits
+    /// everything well-formed.
+    pub ingress: IngressConfig,
 }
 
 impl ServerConfig {
@@ -104,6 +113,7 @@ impl ServerConfig {
             sim_design: Design::Cim1,
             engine_threads: 2,
             capacity_words: None,
+            ingress: IngressConfig::default(),
         }
     }
 
@@ -118,8 +128,9 @@ impl ServerConfig {
 pub struct Server {
     tx: Option<Sender<Request>>,
     pub metrics: Arc<Metrics>,
+    /// Admission gate every `infer_async` passes before enqueue.
+    ingress: Arc<Ingress>,
     workers: Vec<JoinHandle<()>>,
-    in_dim: usize,
     /// The shared engine model (engine backend only; exposes cache stats).
     engine_model: Option<Arc<EngineBackend>>,
     /// The simulated hardware the accounting reflects (write-charge
@@ -181,6 +192,7 @@ impl Server {
         }
         let in_dim = manifest.dims[0];
         let metrics = Arc::new(Metrics::new());
+        let ingress = Arc::new(Ingress::new(in_dim, cfg.ingress));
         let (tx, rx) = channel::<Request>();
         let rx = Arc::new(Mutex::new(rx));
 
@@ -228,24 +240,47 @@ impl Server {
         for wid in 0..cfg.n_workers.max(1) {
             let rx = Arc::clone(&rx);
             let metrics = Arc::clone(&metrics);
+            let ingress = Arc::clone(&ingress);
             let cfg = cfg.clone();
             let shared = engine_model.clone();
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("sitecim-worker-{wid}"))
-                    .spawn(move || worker_loop(wid, cfg, shared, rx, metrics, sim_e, sim_t))
+                    .spawn(move || {
+                        worker_loop(wid, cfg, shared, rx, metrics, ingress, sim_e, sim_t)
+                    })
                     .context("spawning worker")?,
             );
         }
         Ok(Server {
             tx: Some(tx),
             metrics,
+            ingress,
             workers,
-            in_dim,
             engine_model,
             accel,
             sim_per_inf: (sim_e, sim_t),
         })
+    }
+
+    /// The admission gate (live in-flight gauge, shed latch, and the
+    /// per-verdict counters behind [`Server::metrics_report`]).
+    pub fn ingress(&self) -> &Arc<Ingress> {
+        &self.ingress
+    }
+
+    /// Freeze everything scrapeable — serving metrics, admission
+    /// ledger, and (on the engine backend) the engine/executor
+    /// counters plus the live executor backlog — into one
+    /// [`MetricsReport`] (`Display` = JSON).
+    pub fn metrics_report(&self) -> MetricsReport {
+        let (engine, exec, depth) = match &self.engine_model {
+            Some(m) => {
+                (Some(m.engine_stats()), Some(m.exec_stats()), Some(m.exec_queue_depth()))
+            }
+            None => (None, None, None),
+        };
+        MetricsReport::gather(&self.metrics, &self.ingress, engine, exec, depth)
     }
 
     /// The shared engine model, when serving through the engine backend.
@@ -289,21 +324,24 @@ impl Server {
         rx.recv().map_err(|e| format!("server dropped request: {e}"))?
     }
 
-    /// Submit a request; returns the reply channel immediately.
+    /// Submit a request; returns the reply channel immediately. The
+    /// request passes the [`Ingress`] chain first — a
+    /// [`Rejection`](super::ingress::Rejection) (bad shape, rate limit,
+    /// overload shed) comes back as an immediate `Err` without ever
+    /// occupying a queue slot.
     pub fn infer_async(
         &self,
         input: Vec<i8>,
     ) -> Result<Receiver<Result<InferReply, String>>, String> {
-        if input.len() != self.in_dim {
-            return Err(format!("input len {} != {}", input.len(), self.in_dim));
-        }
+        self.ingress
+            .admit(DEFAULT_TENANT, &input)
+            .map_err(|r| r.to_string())?;
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
         let req = Request { input, enqueued: Instant::now(), resp: rtx };
-        self.tx
-            .as_ref()
-            .expect("server running")
-            .send(req)
-            .map_err(|_| "server shut down".to_string())?;
+        self.tx.as_ref().expect("server running").send(req).map_err(|_| {
+            self.ingress.request_done(); // balance the admission
+            "server shut down".to_string()
+        })?;
         Ok(rrx)
     }
 
@@ -324,6 +362,7 @@ fn worker_loop(
     shared: Option<Arc<EngineBackend>>,
     rx: Arc<Mutex<Receiver<Request>>>,
     metrics: Arc<Metrics>,
+    ingress: Arc<Ingress>,
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
@@ -332,9 +371,9 @@ fn worker_loop(
     // executable's batch dimension is a hard per-call cap.
     match shared {
         Some(model) => {
-            engine_worker_loop(model, cfg, rx, metrics, sim_e_per_inf, sim_t_per_inf)
+            engine_worker_loop(model, cfg, rx, metrics, ingress, sim_e_per_inf, sim_t_per_inf)
         }
-        None => pjrt_worker_loop(cfg, rx, metrics, sim_e_per_inf, sim_t_per_inf),
+        None => pjrt_worker_loop(cfg, rx, metrics, ingress, sim_e_per_inf, sim_t_per_inf),
     }
 }
 
@@ -350,6 +389,7 @@ fn engine_worker_loop(
     cfg: ServerConfig,
     rx: Arc<Mutex<Receiver<Request>>>,
     metrics: Arc<Metrics>,
+    ingress: Arc<Ingress>,
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
@@ -375,6 +415,7 @@ fn engine_worker_loop(
             result,
             model.out_dim(),
             &metrics,
+            &ingress,
             sim_e_per_inf,
             sim_t_per_inf,
         );
@@ -387,6 +428,7 @@ fn pjrt_worker_loop(
     cfg: ServerConfig,
     rx: Arc<Mutex<Receiver<Request>>>,
     metrics: Arc<Metrics>,
+    ingress: Arc<Ingress>,
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
@@ -431,6 +473,7 @@ fn pjrt_worker_loop(
             result,
             backend.out_dim(),
             &metrics,
+            &ingress,
             sim_e_per_inf,
             sim_t_per_inf,
         );
@@ -441,13 +484,16 @@ fn pjrt_worker_loop(
 /// logit plane into per-request rows (argmax + latency per request); on
 /// backend error or caught panic, report the failure to each request and
 /// keep the worker alive. With `tenant` set, every metric charge also
-/// lands in that tenant's book (multi-tenant serving).
+/// lands in that tenant's book (multi-tenant serving). Every reply —
+/// success or failure — balances one ingress admission, draining the
+/// in-flight gauge the shed watermarks act on.
 fn scatter_replies(
     tenant: Option<&str>,
     batch: Vec<Request>,
     result: std::thread::Result<Result<Vec<f32>>>,
     out_dim: usize,
     metrics: &Metrics,
+    ingress: &Ingress,
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
@@ -495,6 +541,7 @@ fn scatter_replies(
             }
         }
     }
+    ingress.requests_done(n as u64);
 }
 
 /// Configuration for a [`MultiServer`]: N models on one engine pool.
@@ -516,6 +563,9 @@ pub struct MultiServerConfig {
     pub sim_design: Design,
     /// Tile-worker threads inside the shared engine.
     pub engine_threads: usize,
+    /// Admission policy shared by every lane: per-model token buckets,
+    /// one pool-wide in-flight gauge for the shed watermarks.
+    pub ingress: IngressConfig,
 }
 
 impl MultiServerConfig {
@@ -529,6 +579,7 @@ impl MultiServerConfig {
             sim_tech: Tech::Femfet3T,
             sim_design: Design::Cim1,
             engine_threads: 2,
+            ingress: IngressConfig::default(),
         }
     }
 }
@@ -559,6 +610,9 @@ struct Lane {
 pub struct MultiServer {
     backend: Arc<MultiTenantBackend>,
     pub metrics: Arc<Metrics>,
+    /// One admission gate for all lanes: per-model buckets and ledgers,
+    /// a pool-wide in-flight gauge for the shed watermarks.
+    ingress: Arc<Ingress>,
     lanes: BTreeMap<String, Lane>,
     accel: Accelerator,
 }
@@ -578,6 +632,10 @@ impl MultiServer {
             cfg.capacity_words,
         ));
         let metrics = Arc::new(Metrics::new());
+        // Lanes have different input dimensions, so the shared gate
+        // validates with the per-lane dimension at admit time
+        // (`admit_shaped`); the constructor dimension is unused here.
+        let ingress = Arc::new(Ingress::new(0, cfg.ingress));
         let accel = Accelerator::new(AccelConfig::sitecim(cfg.sim_tech, cfg.sim_design));
         let mut lanes = BTreeMap::new();
         for (name, dir) in &cfg.models {
@@ -599,11 +657,12 @@ impl MultiServer {
             let rx = Arc::new(Mutex::new(rx));
             let mut workers = Vec::new();
             for wid in 0..cfg.n_workers.max(1) {
-                let (name, current, rx, metrics, policy) = (
+                let (name, current, rx, metrics, ingress, policy) = (
                     name.clone(),
                     Arc::clone(&current),
                     Arc::clone(&rx),
                     Arc::clone(&metrics),
+                    Arc::clone(&ingress),
                     cfg.policy.clone(),
                 );
                 workers.push(
@@ -616,6 +675,7 @@ impl MultiServer {
                                 policy,
                                 rx,
                                 metrics,
+                                ingress,
                                 sim_per_inf.0,
                                 sim_per_inf.1,
                             )
@@ -628,7 +688,27 @@ impl MultiServer {
                 Lane { tx: Some(tx), workers, in_dim, current, sim_per_inf },
             );
         }
-        Ok(MultiServer { backend, metrics, lanes, accel })
+        Ok(MultiServer { backend, metrics, ingress, lanes, accel })
+    }
+
+    /// The shared admission gate (per-model ledgers, pool-wide gauge).
+    pub fn ingress(&self) -> &Arc<Ingress> {
+        &self.ingress
+    }
+
+    /// Freeze the whole multi-tenant picture — global + per-model
+    /// serving metrics, the admission ledger, and the shared engine /
+    /// executor counters — into one [`MetricsReport`] (`Display` =
+    /// JSON). Per-tenant rows sum to the global columns.
+    pub fn metrics_report(&self) -> MetricsReport {
+        let engine = self.backend.engine();
+        MetricsReport::gather(
+            &self.metrics,
+            &self.ingress,
+            Some(engine.stats()),
+            Some(engine.exec_stats()),
+            Some(engine.exec_queue_depth()),
+        )
     }
 
     pub fn backend(&self) -> &Arc<MultiTenantBackend> {
@@ -646,23 +726,27 @@ impl MultiServer {
     }
 
     /// Submit a request to `model`; returns the reply channel
-    /// immediately.
+    /// immediately. The request passes the shared [`Ingress`] chain
+    /// first: an unknown model name, a plane not matching the lane's
+    /// manifest, an empty token bucket, or a shedding pool all come back
+    /// as an immediate `Err` without ever occupying a queue slot.
     pub fn infer_async(
         &self,
         model: &str,
         input: Vec<i8>,
     ) -> Result<Receiver<Result<InferReply, String>>, String> {
-        let lane = self.lanes.get(model).ok_or_else(|| format!("unknown model {model:?}"))?;
-        if input.len() != lane.in_dim {
-            return Err(format!("input len {} != {}", input.len(), lane.in_dim));
-        }
+        let Some(lane) = self.lanes.get(model) else {
+            return Err(self.ingress.reject_unknown_model(model).to_string());
+        };
+        self.ingress
+            .admit_shaped(model, lane.in_dim, &input)
+            .map_err(|r| r.to_string())?;
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
         let req = Request { input, enqueued: Instant::now(), resp: rtx };
-        lane.tx
-            .as_ref()
-            .expect("lane running")
-            .send(req)
-            .map_err(|_| "server shut down".to_string())?;
+        lane.tx.as_ref().expect("lane running").send(req).map_err(|_| {
+            self.ingress.request_done(); // balance the admission
+            "server shut down".to_string()
+        })?;
         Ok(rrx)
     }
 
@@ -760,6 +844,7 @@ fn tenant_worker_loop(
     policy: BatchPolicy,
     rx: Arc<Mutex<Receiver<Request>>>,
     metrics: Arc<Metrics>,
+    ingress: Arc<Ingress>,
     sim_e_per_inf: f64,
     sim_t_per_inf: f64,
 ) {
@@ -786,6 +871,7 @@ fn tenant_worker_loop(
             result,
             model.out_dim(),
             &metrics,
+            &ingress,
             sim_e_per_inf,
             sim_t_per_inf,
         );

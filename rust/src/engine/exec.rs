@@ -387,6 +387,15 @@ impl Executor {
         }
     }
 
+    /// Live backlog: work items currently queued across all workers,
+    /// from the same relaxed per-queue depth counters the load-aware
+    /// submission policy reads. Approximate by a few items under
+    /// concurrent submission — a watermark signal, not an exact census
+    /// (the high-water record is `ExecStatsSnapshot::queue_depth_max`).
+    pub fn queue_depth(&self) -> u64 {
+        self.shared.depths.iter().map(|d| d.load(Ordering::Relaxed) as u64).sum()
+    }
+
     /// Apply the load-aware rule to one item: spill to the shallowest
     /// queue when the preferred queue holds at least
     /// `spill_ratio × (shallowest + 1)` items.

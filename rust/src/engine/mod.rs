@@ -668,6 +668,15 @@ impl TernaryGemmEngine {
         self.exec.stats()
     }
 
+    /// Live executor backlog: work items currently queued across all
+    /// executor workers (relaxed counters — approximate under
+    /// concurrent submission). This is the scrapeable companion to
+    /// [`ExecStatsSnapshot::queue_depth_max`], and the signal ingress
+    /// load-shedding watermarks are tuned against.
+    pub fn exec_queue_depth(&self) -> u64 {
+        self.exec.queue_depth()
+    }
+
     /// The tile grid a GEMM of this shape maps to on this engine's
     /// placement granularity (the array shape unless decoupled).
     pub fn grid(&self, k: usize, n: usize) -> TileGrid {

@@ -759,6 +759,86 @@ mod tests {
     }
 
     #[test]
+    fn fast_mode_tenant_split_matches_seeded_baseline() {
+        // The two-tenant placement sequence benches/capacity_bench.rs
+        // replays in fast mode (`proxy_tenant_counters`): layer 0 of the
+        // AlexNet-FC/8 stack hard-reserves half the pool, layers 1..
+        // share the remainder, one warm pass then two measured passes.
+        // Pinned against the `tenant:res` / `tenant:shared` hit-rate
+        // seeds committed in BENCH_capacity_baseline.json — if these
+        // counts move, the partitioned policy changed: update the seeds
+        // deliberately, not accidentally.
+        let dims = [(1152usize, 512usize), (512, 512), (512, 128)];
+        let shapes: Vec<Vec<(usize, usize)>> = dims
+            .iter()
+            .map(|&(k, n)| {
+                TileGrid::new(k, n, 256, 256)
+                    .shards(256, 256)
+                    .iter()
+                    .map(|s| (s.k_len, s.n_len))
+                    .collect()
+            })
+            .collect();
+        let mut keys: Vec<Vec<usize>> = Vec::new();
+        let mut next = 0usize;
+        for lt in &shapes {
+            keys.push((next..next + lt.len()).collect());
+            next += lt.len();
+        }
+        // (pool arrays, reserved (h, m, e), shared (h, m, e)) over the
+        // two measured passes; reserve = pool/2 slots, layer 0 places
+        // into the reservation (20 lookups), layers 1+2 into the shared
+        // remainder (12 lookups).
+        let expect = [
+            (4usize, (2u64, 18u64, 18u64), (2u64, 10u64, 10u64)),
+            (8, (6, 14, 14), (6, 6, 6)),
+            (12, (10, 10, 10), (12, 0, 0)),
+            (16, (14, 6, 6), (12, 0, 0)),
+            (32, (20, 0, 0), (12, 0, 0)),
+        ];
+        for (arrays, want_res, want_shared) in expect {
+            let mut c = TileCache::new(arrays, 256, 256);
+            let res = c.reserve_partition(arrays / 2).expect("half-pool reservation fits");
+            let pass = |c: &mut TileCache| {
+                // Per-partition (hits, misses, evictions), reserved then
+                // shared — the per-tenant stat books of the real engine.
+                let mut counts = [(0u64, 0u64, 0u64); 2];
+                for (li, (ks, lt)) in keys.iter().zip(&shapes).enumerate() {
+                    let (part, book) = if li == 0 { (res, 0) } else { (SHARED_PARTITION, 1) };
+                    for (&key, &(rows, cols)) in ks.iter().zip(lt) {
+                        let p = c.place_in(part, (0, key), rows, cols);
+                        if p.hit {
+                            counts[book].0 += 1;
+                        } else {
+                            counts[book].1 += 1;
+                        }
+                        counts[book].2 += p.evicted;
+                    }
+                }
+                counts
+            };
+            pass(&mut c); // warm
+            let mut total = [(0u64, 0u64, 0u64); 2];
+            for _ in 0..2 {
+                let d = pass(&mut c);
+                for (t, dt) in total.iter_mut().zip(d) {
+                    t.0 += dt.0;
+                    t.1 += dt.1;
+                    t.2 += dt.2;
+                }
+            }
+            assert_eq!(
+                total[0], want_res,
+                "{arrays}-array reserved tenant diverged from the seeded baseline"
+            );
+            assert_eq!(
+                total[1], want_shared,
+                "{arrays}-array shared tenant diverged from the seeded baseline"
+            );
+        }
+    }
+
+    #[test]
     fn reserve_takes_highest_slots_and_isolates_eviction_pressure() {
         let mut c = TileCache::new(3, 64, 32);
         full(&mut c, (0, 0)); // slot 0

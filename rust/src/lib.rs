@@ -65,7 +65,12 @@
 //!   per-model tenant partitions (hard reservations vs the shared
 //!   second-chance remainder), per-tenant metrics books that sum to the
 //!   global counters, plan-programmed cold start, and hot-swap that
-//!   drains in-flight batches before retiring the old version.
+//!   drains in-flight batches before retiring the old version. The
+//!   front door is the [`coordinator::ingress`] admission chain (shape
+//!   validation, per-tenant token-bucket rate limiting, watermark load
+//!   shedding with hysteresis — all *before* enqueue), and the whole
+//!   observable surface freezes into one scrapeable
+//!   [`coordinator::MetricsReport`] (`sitecim metrics snapshot`).
 //! - [`repro`] — one entry point per paper figure/table.
 
 pub mod arch;
