@@ -13,15 +13,55 @@
 //! of `streaming` or `resident`, plus the per-design resident and
 //! region speedups).
 //!
+//! The `pipelined_speedup` section replays a staggered-arrival serving
+//! trace against a resident multi-layer model two ways — layer-0-only
+//! admission (one full-pipeline flush per arrival wave) vs boundary
+//! admission (`run_pipelined_flush`, late waves merged into the
+//! in-flight M-plane at layer boundaries) — equality-checked before
+//! timing.
+//!
 //! `SITECIM_BENCH_FAST=1` shrinks the GEMMs to smoke sizes for CI.
-use std::sync::Arc;
+use std::path::Path;
+use std::sync::mpsc::{channel, sync_channel};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
 
 use sitecim::array::mac::{dot_fast, dot_fast_cim1, dot_ref, Flavor};
 use sitecim::array::{make_array, CimArray, Design, Rect, SiTeCim1Array, TernaryStorage};
+use sitecim::coordinator::server::Request;
+use sitecim::coordinator::{run_pipelined_flush, BatchPolicy, EngineBackend, Metrics};
 use sitecim::device::Tech;
 use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::runtime::Manifest;
 use sitecim::util::bench::{config_from_env, run, BenchResult};
 use sitecim::util::rng::Rng;
+
+/// Write a servable synthetic MLP (ternary weights per `dims`
+/// transition, thresholds, a tiny test set) so the pipelined-batching
+/// replay can load a real `EngineBackend`.
+fn write_synth_artifacts(dir: &Path, dims: &[usize], rng: &mut Rng) {
+    let trit_bytes = |trits: &[i8]| trits.iter().map(|&t| t as u8).collect::<Vec<u8>>();
+    let mut weights_json = String::new();
+    for i in 0..dims.len() - 1 {
+        let (k, n) = (dims[i], dims[i + 1]);
+        let w = rng.ternary_vec(k * n, 0.5);
+        std::fs::write(dir.join(format!("w{i}.bin")), trit_bytes(&w)).unwrap();
+        if i > 0 {
+            weights_json.push_str(", ");
+        }
+        weights_json.push_str(&format!("{{\"file\": \"w{i}.bin\", \"shape\": [{k}, {n}]}}"));
+    }
+    let in_dim = dims[0];
+    let x = rng.ternary_vec(4 * in_dim, 0.5);
+    std::fs::write(dir.join("test_x.bin"), trit_bytes(&x)).unwrap();
+    std::fs::write(dir.join("test_y.bin"), vec![0u8; 4]).unwrap();
+    let thresholds = vec!["0.5"; dims.len() - 2].join(", ");
+    let dims_json = dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+    let manifest = format!(
+        "{{\n  \"batch\": 4,\n  \"dims\": [{dims_json}],\n  \"act_thresholds\": [{thresholds}],\n  \"kernel_shape\": [8, 16, 16],\n  \"files\": {{}},\n  \"weights\": [{weights_json}],\n  \"scales\": [1.0],\n  \"test_set\": {{\"x\": \"test_x.bin\", \"y\": \"test_y.bin\", \"n\": 4, \"in_dim\": {in_dim}}},\n  \"accuracy\": {{}}\n}}\n"
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+}
 
 struct EngineEntry {
     design: Design,
@@ -377,6 +417,112 @@ fn main() {
         batched_speedups.push((design, speedup));
     }
 
+    // ---- layer-pipelined batching: boundary admission vs layer-0-only ----
+    // Staggered-arrival replay over a resident multi-layer MLP: `waves`
+    // waves of rows, the first present at flush formation, the rest
+    // arriving while the flush is mid-pipeline. Layer-0-only admission
+    // (the pre-pipelined engine loop) runs one full-pipeline flush per
+    // wave; boundary admission merges each late wave into the in-flight
+    // M-plane at the next layer boundary (catch-up GEMMs through the
+    // layers it missed, against the same resident weights) and finishes
+    // in a single flush. Equality-checked before timing;
+    // `pipelined_speedup` is the throughput ratio and
+    // `pipelined_rows_per_flush` the rows-per-flush ratio (exactly
+    // `waves`, by construction).
+    let pdims: Vec<usize> =
+        if fast_mode { vec![256, 128, 64, 8] } else { vec![1024, 512, 256, 8] };
+    let pr = if fast_mode { 8usize } else { 32 };
+    let waves = pdims.len() - 1;
+    println!(
+        "\n== engine_bench layer-pipelined batching ({waves} waves x {pr} rows, {}-layer MLP) ==",
+        pdims.len() - 1
+    );
+    let pdir = std::env::temp_dir().join(format!("sitecim-bench-pipelined-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&pdir);
+    std::fs::create_dir_all(&pdir).unwrap();
+    write_synth_artifacts(&pdir, &pdims, &mut rng);
+    let pmanifest = Manifest::load(&pdir).unwrap();
+    let wave_inputs: Vec<Vec<Vec<i8>>> = (0..waves)
+        .map(|_| (0..pr).map(|_| rng.ternary_vec(pdims[0], 0.5)).collect())
+        .collect();
+    let wave_planes: Vec<Arc<[i8]>> = wave_inputs.iter().map(|w| w.concat().into()).collect();
+    // One wave per boundary: each interior boundary admits exactly the
+    // wave that "arrived" while the previous layer ran.
+    let policy = BatchPolicy {
+        max_batch_rows: waves * pr,
+        max_stage_admit_rows: pr,
+        ..Default::default()
+    };
+    let request = |input: &Vec<i8>| {
+        let (rtx, _) = sync_channel(1);
+        Request { input: input.clone(), enqueued: Instant::now(), resp: rtx }
+    };
+    let mut pipelined_speedups: Vec<(Design, f64)> = Vec::new();
+    for design in [Design::Cim1, Design::Cim2, Design::NearMemory] {
+        let backend =
+            EngineBackend::load(&pmanifest, design, Tech::Femfet3T, threads, None).unwrap();
+        // Layer-0-only reference: every wave is its own flush.
+        let serial: Vec<f32> = wave_planes
+            .iter()
+            .flat_map(|p| backend.run_batch_arc(Arc::clone(p), pr).unwrap())
+            .collect();
+        // One pipelined flush: wave 0 forms it, later waves sit in the
+        // queue and are admitted at successive layer boundaries.
+        let pipelined = || {
+            let (qtx, qrx) = channel::<Request>();
+            for wave in &wave_inputs[1..] {
+                for input in wave {
+                    qtx.send(request(input)).unwrap();
+                }
+            }
+            let rx = Mutex::new(qrx);
+            let metrics = Metrics::new();
+            let mut items: Vec<Request> = wave_inputs[0].iter().map(&request).collect();
+            let logits = run_pipelined_flush(
+                &backend,
+                &policy,
+                &rx,
+                &metrics,
+                &mut items,
+                Arc::clone(&wave_planes[0]),
+            )
+            .unwrap();
+            (logits, metrics)
+        };
+        // Equality first, and every interior boundary must actually have
+        // admitted its wave — otherwise the comparison silently
+        // degenerates to two layer-0-only runs.
+        let (plogits, pmetrics) = pipelined();
+        assert_eq!(plogits, serial, "{design:?}: pipelined flush diverged from layer-0-only");
+        let hist = pmetrics.stage_admit_histogram();
+        for li in 1..waves {
+            assert_eq!(
+                hist[li].rows, pr as u64,
+                "{design:?}: boundary {li} admitted a full wave"
+            );
+        }
+        let name = format!("pipelined {:<11} layer0-only", format!("{design:?}"));
+        let r0 = run(&name, &cfg, || {
+            let mut acc = 0f64;
+            for p in &wave_planes {
+                acc += backend.run_batch_arc(Arc::clone(p), pr).unwrap()[0] as f64;
+            }
+            acc
+        });
+        let name = format!("pipelined {:<11} boundary", format!("{design:?}"));
+        let rp = run(&name, &cfg, || pipelined().0.len());
+        let speedup = r0.mean_s / rp.mean_s;
+        println!(
+            "{:?}: boundary admission {speedup:.2}x layer-0-only ({} vs {} rows/flush){}",
+            design,
+            waves * pr,
+            pr,
+            if speedup > 1.0 { "" } else { "  ** pipelined NOT faster **" }
+        );
+        pipelined_speedups.push((design, speedup));
+    }
+    let _ = std::fs::remove_dir_all(&pdir);
+
     // ---- perf-trajectory record ----
     let mut json = String::from("{\n");
     json.push_str(&format!(
@@ -423,6 +569,21 @@ fn main() {
         json.push_str(&format!(
             "    \"{design:?}\": {s:.3}{}\n",
             if i + 1 < batched_speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"pipelined_speedup\": {\n");
+    for (i, (design, s)) in pipelined_speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{design:?}\": {s:.3}{}\n",
+            if i + 1 < pipelined_speedups.len() { "," } else { "" }
+        ));
+    }
+    json.push_str("  },\n  \"pipelined_rows_per_flush\": {\n");
+    for (i, (design, _)) in pipelined_speedups.iter().enumerate() {
+        json.push_str(&format!(
+            "    \"{design:?}\": {:.3}{}\n",
+            waves as f64,
+            if i + 1 < pipelined_speedups.len() { "," } else { "" }
         ));
     }
     json.push_str("  }\n}\n");

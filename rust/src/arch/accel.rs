@@ -84,6 +84,40 @@ pub fn sweep_miss_fraction(packed: u64, capacity: u64) -> f64 {
     }
 }
 
+/// Size-weighted [`sweep_miss_fraction`] for **non-uniform** region
+/// sizes: the fraction of the total *write rows* (not regions) that
+/// re-program per steady-state pass when `region_rows` (sizes in rows,
+/// listed in sweep order) cycle through a pool of `capacity` arrays.
+///
+/// Mechanism, not hand-waving: at region granularity the second-chance
+/// steady state is the same as the uniform case — the scan keeps the
+/// *first* `capacity − 1` regions of the sweep resident (their
+/// referenced bits are always set when the probe reaches them) while
+/// every later region churns through the remaining space — so the rows
+/// missed per pass are `S − Σ(first C−1 sizes)` where `S` is the total.
+/// With uniform sizes this is `(W − C + 1)/W` of the rows, reducing
+/// *exactly* (same real quotient, same IEEE rounding) to the uniform
+/// closed form. Pinned against the engine's measured per-pass
+/// `write_rows` on a ragged tile grid (seven full tiles plus a tail
+/// tile) in `tests/eviction_pressure.rs`.
+///
+/// Valid for the placement class the engine's weight tiles occupy: one
+/// region per array (each region taller than half an array), so region
+/// count is the capacity currency. Smaller regions that shelf-pack two
+/// to an array can churn inside packing holes and miss *more* than
+/// this form — it is a lower bound there, with `1.0` (streaming) the
+/// universal worst case. `0` when the set fits (`W ≤ capacity`).
+pub fn sweep_miss_fraction_weighted(region_rows: &[u64], capacity: u64) -> f64 {
+    let w = region_rows.len() as u64;
+    let total: u64 = region_rows.iter().sum();
+    if w <= capacity || total == 0 {
+        return 0.0;
+    }
+    let resident: u64 =
+        region_rows.iter().take(capacity.saturating_sub(1) as usize).sum();
+    (((total - resident) as f64) / total as f64).min(1.0)
+}
+
 /// [`Residency`] resolved against a concrete working set: what
 /// `layer_cost` actually charges for weight programming.
 #[derive(Clone, Copy, Debug)]
@@ -677,6 +711,51 @@ mod tests {
         for c in 2..8 {
             assert!(sweep_miss_fraction(8, c) > sweep_miss_fraction(8, c + 1));
         }
+    }
+
+    #[test]
+    fn weighted_sweep_miss_fraction_closed_form() {
+        // Uniform sizes reduce *exactly* to the region-count form: the
+        // weighted quotient (W−C+1)s / Ws and the uniform (W−C+1)/W are
+        // the same real number, so IEEE division rounds them to the
+        // same f64 — `==`, not ≈.
+        for s in [1u64, 64, 256, 300] {
+            for c in 0..10 {
+                assert_eq!(
+                    sweep_miss_fraction_weighted(&[s; 8], c),
+                    sweep_miss_fraction(8, c),
+                    "uniform reduction s={s} c={c}"
+                );
+            }
+        }
+        // Ragged tile grid (seven full 256-row tiles + a 128-row tail):
+        // the first C − 1 sweep regions stay resident, everything after
+        // churns — the values the measured cross-check in
+        // tests/eviction_pressure.rs pins against the engine.
+        let tail: Vec<u64> = [[256u64; 7].as_slice(), &[128]].concat();
+        assert_eq!(sweep_miss_fraction_weighted(&tail, 8), 0.0);
+        assert_eq!(sweep_miss_fraction_weighted(&tail, 100), 0.0);
+        for cap in 2..8u64 {
+            let resident = (cap - 1) * 256;
+            assert_eq!(
+                sweep_miss_fraction_weighted(&tail, cap),
+                (1920 - resident) as f64 / 1920.0,
+                "cap {cap}"
+            );
+        }
+        // Floor-less capacities are the streaming worst case, and the
+        // fraction is monotone non-increasing in capacity.
+        assert_eq!(sweep_miss_fraction_weighted(&tail, 0), 1.0);
+        assert_eq!(sweep_miss_fraction_weighted(&tail, 1), 1.0);
+        for c in 1..8u64 {
+            assert!(
+                sweep_miss_fraction_weighted(&tail, c)
+                    >= sweep_miss_fraction_weighted(&tail, c + 1)
+            );
+        }
+        // Degenerate inputs stay in range.
+        assert_eq!(sweep_miss_fraction_weighted(&[], 0), 0.0);
+        assert_eq!(sweep_miss_fraction_weighted(&[0, 0], 1), 0.0);
     }
 
     #[test]

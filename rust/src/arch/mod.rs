@@ -13,6 +13,7 @@ pub mod config;
 pub mod mapper;
 
 pub use accel::{
-    sweep_miss_fraction, Accelerator, CosimConfig, CosimReport, Residency, SystemReport,
+    sweep_miss_fraction, sweep_miss_fraction_weighted, Accelerator, CosimConfig, CosimReport,
+    Residency, SystemReport,
 };
 pub use config::AccelConfig;

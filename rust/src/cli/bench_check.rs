@@ -3,7 +3,8 @@
 //! Compares a freshly-written `BENCH_engine.json` against the committed
 //! `BENCH_baseline.json`: per-entry throughput (`gmacs_per_s`, keyed by
 //! design/mode/threads/shape) and the per-design `resident_speedup` /
-//! `region_speedup` / `arc_speedup` / `batched_speedup` ratios, each
+//! `region_speedup` / `arc_speedup` / `batched_speedup` /
+//! `pipelined_speedup` ratios, each
 //! within a relative tolerance. Only
 //! *regressions* fail — a fresh value above baseline always passes —
 //! and a baseline metric recorded as `null` is treated as unseeded
@@ -140,7 +141,13 @@ pub fn compare(baseline: &Json, fresh: &Json, tol_pct: f64) -> (String, bool) {
         ]);
     }
 
-    for section in ["resident_speedup", "region_speedup", "arc_speedup", "batched_speedup"] {
+    for section in [
+        "resident_speedup",
+        "region_speedup",
+        "arc_speedup",
+        "batched_speedup",
+        "pipelined_speedup",
+    ] {
         if let Some(base_sp) = baseline.get(section).and_then(Json::as_obj) {
             for (design, bv) in base_sp {
                 let base_v = bv.as_f64();
@@ -407,6 +414,31 @@ mod tests {
         let (report, ok) = compare(&base, &bad, 20.0);
         assert!(!ok, "batched speedup regression must fail: {report}");
         // Null-seeded batched entries pass as unseeded, per convention.
+        let unseeded = parse_doc("{\"Cim1\": null}");
+        let (report, ok) = compare(&unseeded, &good, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("unseeded"));
+    }
+
+    #[test]
+    fn pipelined_speedup_section_is_gated_like_the_others() {
+        let parse_doc = |pipelined: &str| {
+            Json::parse(&format!(
+                "{{\"results\": [{}], \"resident_speedup\": {{\"Cim1\": 4.0}}, \
+                 \"pipelined_speedup\": {pipelined}}}",
+                entry("Cim1", "10.0")
+            ))
+            .unwrap()
+        };
+        let base = parse_doc("{\"Cim1\": 1.5}");
+        let good = parse_doc("{\"Cim1\": 1.8}");
+        let (report, ok) = compare(&base, &good, 20.0);
+        assert!(ok, "{report}");
+        assert!(report.contains("pipelined_speedup Cim1"));
+        let bad = parse_doc("{\"Cim1\": 0.7}");
+        let (report, ok) = compare(&base, &bad, 20.0);
+        assert!(!ok, "pipelined speedup regression must fail: {report}");
+        // Null-seeded pipelined entries pass as unseeded, per convention.
         let unseeded = parse_doc("{\"Cim1\": null}");
         let (report, ok) = compare(&unseeded, &good, 20.0);
         assert!(ok, "{report}");

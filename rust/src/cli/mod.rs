@@ -10,7 +10,8 @@
 //!   infer    [--artifacts DIR] [--model cim1|cim2|exact] [--n N]
 //!   serve    [--artifacts DIR] [--requests N] [--workers W] [--backend pjrt|engine] [--threads T]
 //!            [--capacity-words W] [--max-batch-rows R]
-//!            ingress: [--rate R] [--burst B] [--shed-high H] [--shed-low L]
+//!            pipelining: [--no-pipeline-admission] [--max-stage-admit-rows R] [--max-catchup-frac F]
+//!            ingress: [--rate R] [--burst B] [--shed-high H] [--shed-low L] [--shed-exec-weight W]
 //!            multi-model: [--model a=dir1,b=dir2] [--reserve a=WORDS]
 //!   metrics snapshot [--artifacts DIR] [--requests N] [--out PATH]   scrapeable MetricsReport JSON
 //!   artifact verify DIR   offline artifact check (schema, checksums, plan)
@@ -62,7 +63,7 @@ USAGE: sitecim <subcommand> [flags]
               [--capacity-baseline PATH] [--capacity-fresh PATH]
           compare a fresh BENCH_engine.json against the committed
           baseline (default BENCH_baseline.json): per-design throughput,
-          resident/region/arc/batched speedups, ±20% by default; also gates the
+          resident/region/arc/batched/pipelined speedups, ±20% by default; also gates the
           machine-independent hit-rate columns of BENCH_capacity.json
           against BENCH_capacity_baseline.json when present; exits
           nonzero and prints per-metric delta tables on regression
@@ -70,16 +71,22 @@ USAGE: sitecim <subcommand> [flags]
           run the AOT-compiled ternary MLP on the held-out test set
   serve   [--artifacts DIR] [--requests N] [--workers W] [--batch B] [--backend pjrt|engine]
           [--threads T] [--capacity-words W] [--max-batch-rows R]
-          [--rate R] [--burst B] [--shed-high H] [--shed-low L]
+          [--no-pipeline-admission] [--max-stage-admit-rows R] [--max-catchup-frac F]
+          [--rate R] [--burst B] [--shed-high H] [--shed-low L] [--shed-exec-weight W]
           start the serving coordinator and push synthetic traffic (the
           engine backend shares one resident-weight model and one
           persistent executor across workers, and merges all in-flight
           requests into one GEMM M-plane per flush — --max-batch-rows
           caps the rows per merged flush, --batch caps the PJRT path;
-          --capacity-words serves from a bounded pool instead of sizing
-          it to the whole network; the report includes rows-per-flush
-          p50/p95 and measured amortized residency costs from the
-          engine's own counters)
+          newly arrived rows join an in-flight flush at layer boundaries
+          unless --no-pipeline-admission; --max-stage-admit-rows caps
+          rows admitted per boundary and --max-catchup-frac bounds how
+          deep a boundary may still admit late rows (1.0 = every
+          boundary); --capacity-words serves from a bounded pool instead
+          of sizing it to the whole network; the report includes
+          rows-per-flush p50/p95, the per-stage admission histogram and
+          measured amortized residency costs from the engine's own
+          counters)
           multi-model: --model a=dir1,b=dir2 serves N models from one
           engine pool (per-model continuous-batching lanes; requests
           round-robin across models); --reserve a=WORDS[,b=WORDS] gives
@@ -91,7 +98,10 @@ USAGE: sitecim <subcommand> [flags]
           (token bucket, --burst B, default B=R) and --shed-high H sheds
           with an explicit 'overloaded' reply once H admitted requests
           are in flight, recovering at --shed-low L (default H/2) —
-          rejected requests are counted, never queued
+          rejected requests are counted, never queued; rate-limited
+          replies carry the bucket's computed earliest-retry time;
+          --shed-exec-weight W folds the engine executor's queue backlog
+          into the shed signal (load = in-flight + W x backlog)
   metrics snapshot [--artifacts DIR] [--requests N] [--workers W] [--threads T]
           [--capacity-words W] [--max-batch-rows R]
           [--rate R] [--burst B] [--shed-high H] [--shed-low L] [--out PATH]
@@ -389,6 +399,7 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     cfg.n_workers = args.get_usize("workers", 2);
     cfg.policy.max_batch = args.get_usize("batch", 32);
     cfg.policy.max_batch_rows = args.get_usize("max-batch-rows", cfg.policy.max_batch_rows);
+    apply_pipeline_flags(args, &mut cfg.policy);
     cfg.engine_threads = args.get_usize("threads", 2);
     let capacity = args.get_u64("capacity-words", 0);
     cfg.capacity_words = if capacity > 0 { Some(capacity) } else { None };
@@ -490,6 +501,7 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
     cfg.n_workers = args.get_usize("workers", 1);
     cfg.policy.max_batch = args.get_usize("batch", 32);
     cfg.policy.max_batch_rows = args.get_usize("max-batch-rows", cfg.policy.max_batch_rows);
+    apply_pipeline_flags(args, &mut cfg.policy);
     cfg.engine_threads = args.get_usize("threads", 2);
     cfg.ingress = ingress_from_args(args);
     if let Some(rspec) = args.get("reserve") {
@@ -570,7 +582,10 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
 
 /// Shared ingress flags: `--rate R [--burst B]` arms the per-tenant
 /// token bucket, `--shed-high H [--shed-low L]` arms the load-shedding
-/// watermarks (L defaults to H/2). Absent flags leave the gate open.
+/// watermarks (L defaults to H/2), and `--shed-exec-weight W` folds the
+/// engine executor's queue backlog into the shed signal (load =
+/// in-flight + W × backlog; 0 keeps the backlog gauge-only). Absent
+/// flags leave the gate open.
 fn ingress_from_args(args: &Args) -> IngressConfig {
     let mut cfg = IngressConfig::default();
     let rate = args.get_f64("rate", 0.0);
@@ -582,7 +597,22 @@ fn ingress_from_args(args: &Args) -> IngressConfig {
         let low = args.get_u64("shed-low", high / 2);
         cfg.shed = Some(Watermarks { high, low: low.min(high - 1) });
     }
+    cfg.exec_backlog_weight = args.get_f64("shed-exec-weight", cfg.exec_backlog_weight);
     cfg
+}
+
+/// Shared layer-pipelined batching flags (engine backend):
+/// `--no-pipeline-admission` reverts to layer-0-only flush formation,
+/// `--max-stage-admit-rows R` caps rows admitted at any single layer
+/// boundary, and `--max-catchup-frac F` bounds how deep a boundary may
+/// still admit (the late-admission cost model; 1.0 = every boundary).
+fn apply_pipeline_flags(args: &Args, policy: &mut crate::coordinator::BatchPolicy) {
+    if args.has("no-pipeline-admission") {
+        policy.pipeline_admission = false;
+    }
+    policy.max_stage_admit_rows =
+        args.get_usize("max-stage-admit-rows", policy.max_stage_admit_rows);
+    policy.max_catchup_frac = args.get_f64("max-catchup-frac", policy.max_catchup_frac);
 }
 
 /// `metrics snapshot`: serve the artifact's test set through the engine

@@ -46,7 +46,8 @@ use crate::device::Tech;
 use crate::dnn::ternary;
 use crate::engine::resident::{WeightId, SHARED_PARTITION};
 use crate::engine::{
-    EngineConfig, EngineStatsSnapshot, ExecStatsSnapshot, PlannedShard, TernaryGemmEngine,
+    EngineConfig, EngineStatsSnapshot, ExecStatsSnapshot, PlannedShard, StageFlushSnapshot,
+    TernaryGemmEngine,
 };
 use crate::runtime::executor::PjrtClient;
 use crate::runtime::{cpu_client, Manifest, MlpExecutor, ModelKind, PlacementPlan};
@@ -72,6 +73,37 @@ pub trait InferenceBackend {
     /// Run `n_valid` row-major input rows; returns `n_valid × out_dim`
     /// row-major logits.
     fn run_batch(&self, trits: &[i8], n_valid: usize) -> Result<Vec<f32>>;
+}
+
+/// What one layer stage of a resident pipeline produced: either the
+/// next stage's input plane (hidden activations, already ternarized at
+/// the recorded threshold) or the final logits.
+pub enum LayerOutput {
+    /// Hidden activations for layer `li + 1`, shared zero-copy.
+    Hidden(Arc<[i8]>),
+    /// Final-layer logits, row-major `m × out_dim`.
+    Logits(Vec<f32>),
+}
+
+/// A backend whose forward pass can be driven one layer at a time —
+/// the surface the layer-pipelined server loop batches against. Each
+/// layer boundary is an admission point: the caller may concatenate
+/// newly arrived rows onto the plane between `run_layer_arc` calls
+/// (after catching those rows up through stages `0..li`), and because
+/// GEMM rows are independent in M the result stays bit-exact against
+/// serial per-request execution.
+///
+/// Implemented by [`EngineBackend`] and [`TenantModel`]; `run_batch_arc`
+/// on both is literally a fold over this trait.
+pub trait LayerPipeline {
+    /// Number of layer stages (≥ 1).
+    fn n_layers(&self) -> usize;
+    /// Input width of stage `li` (= `in_dim` at stage 0, the previous
+    /// layer's output width after that). A plane entering stage `li`
+    /// must hold `m × layer_in_dim(li)` trits.
+    fn layer_in_dim(&self, li: usize) -> usize;
+    /// Run stage `li` on a merged `m × layer_in_dim(li)` plane.
+    fn run_layer_arc(&self, li: usize, plane: Arc<[i8]>, m: usize) -> Result<LayerOutput>;
 }
 
 /// Shared backends serve through an `Arc` without a wrapper type.
@@ -218,6 +250,12 @@ impl EngineBackend {
         self.engine.capacity_words()
     }
 
+    /// Per-stage flush counters charged by the per-layer resident path
+    /// (see [`TernaryGemmEngine::stage_flush_stats`]).
+    pub fn stage_flush_stats(&self) -> Vec<StageFlushSnapshot> {
+        self.engine.stage_flush_stats()
+    }
+
     /// The continuous-batching entry point: run an already-merged
     /// `n_valid × in_dim` activation plane through the layer pipeline.
     ///
@@ -229,31 +267,21 @@ impl EngineBackend {
     /// batcher forms is served in one pipeline pass. The plane is handed
     /// to every layer by reference count (zero-copy).
     pub fn run_batch_arc(&self, plane: Arc<[i8]>, n_valid: usize) -> Result<Vec<f32>> {
-        if n_valid == 0 {
-            bail!("n_valid must be >= 1");
-        }
-        if plane.len() != n_valid * self.in_dim {
-            bail!("expected {} trits, got {}", n_valid * self.in_dim, plane.len());
-        }
-        let m = n_valid;
-        // One shared activation plane per layer boundary: the engine's
-        // zero-copy resident path hands it to every shard's work item by
-        // reference count, never by cloning trits.
-        let mut h = plane;
-        for (li, (id, _k, _n)) in self.layers.iter().enumerate() {
-            let y = self
-                .engine
-                .gemm_resident_arc(*id, Arc::clone(&h), m)
-                .with_context(|| format!("layer {li} resident GEMM"))?;
-            if li + 1 < self.layers.len() {
-                // Ternarize hidden activations at the recorded threshold
-                // (length validated at load).
-                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]).into();
-            } else {
-                return Ok(y.iter().map(|&v| v as f32).collect());
-            }
-        }
-        unreachable!("layers is non-empty; the final layer returns")
+        run_pipeline_serial(self, plane, n_valid)
+    }
+}
+
+impl LayerPipeline for EngineBackend {
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn layer_in_dim(&self, li: usize) -> usize {
+        self.layers[li].1
+    }
+
+    fn run_layer_arc(&self, li: usize, plane: Arc<[i8]>, m: usize) -> Result<LayerOutput> {
+        run_layer_resident(&self.engine, &self.layers, &self.thresholds, li, plane, m, None)
     }
 }
 
@@ -276,6 +304,89 @@ impl InferenceBackend for EngineBackend {
         // policy defaults.
         self.run_batch_arc(Arc::from(trits), n_valid)
     }
+}
+
+impl<T: LayerPipeline> LayerPipeline for Arc<T> {
+    fn n_layers(&self) -> usize {
+        (**self).n_layers()
+    }
+
+    fn layer_in_dim(&self, li: usize) -> usize {
+        (**self).layer_in_dim(li)
+    }
+
+    fn run_layer_arc(&self, li: usize, plane: Arc<[i8]>, m: usize) -> Result<LayerOutput> {
+        (**self).run_layer_arc(li, plane, m)
+    }
+}
+
+/// One layer stage of a resident chain, shared by [`EngineBackend`] and
+/// [`TenantModel`]: validate the plane, run the merged GEMM zero-copy
+/// against the registered weights, charge the engine's per-stage flush
+/// book, then ternarize at the recorded threshold (hidden layers) or
+/// widen to logits (final layer).
+fn run_layer_resident(
+    engine: &TernaryGemmEngine,
+    layers: &[(WeightId, usize, usize)],
+    thresholds: &[f64],
+    li: usize,
+    plane: Arc<[i8]>,
+    m: usize,
+    model: Option<&str>,
+) -> Result<LayerOutput> {
+    if m == 0 {
+        bail!("m must be >= 1");
+    }
+    let Some(&(id, k, _n)) = layers.get(li) else {
+        bail!("layer index {li} out of range ({} layers)", layers.len());
+    };
+    if plane.len() != m * k {
+        bail!("layer {li} expects {} trits ({m}×{k}), got {}", m * k, plane.len());
+    }
+    let y = engine.gemm_resident_arc(id, plane, m).with_context(|| match model {
+        Some(name) => format!("model {name} layer {li} resident GEMM"),
+        None => format!("layer {li} resident GEMM"),
+    })?;
+    engine.note_stage_flush(li, m);
+    if li + 1 < layers.len() {
+        // Ternarize hidden activations at the recorded threshold
+        // (threshold coverage validated at load).
+        Ok(LayerOutput::Hidden(ternary::ternarize_acts_i32(&y, thresholds[li]).into()))
+    } else {
+        Ok(LayerOutput::Logits(y.iter().map(|&v| v as f32).collect()))
+    }
+}
+
+/// Fold a [`LayerPipeline`] serially over one merged plane — the
+/// monolithic (no mid-pipeline admission) execution both backends'
+/// `run_batch_arc` delegates to, and the reference the pipelined server
+/// loop must match bit-for-bit.
+fn run_pipeline_serial<P: LayerPipeline + ?Sized>(
+    pipeline: &P,
+    plane: Arc<[i8]>,
+    n_valid: usize,
+) -> Result<Vec<f32>> {
+    if n_valid == 0 {
+        bail!("n_valid must be >= 1");
+    }
+    if plane.len() != n_valid * pipeline.layer_in_dim(0) {
+        bail!(
+            "expected {} trits, got {}",
+            n_valid * pipeline.layer_in_dim(0),
+            plane.len()
+        );
+    }
+    // One shared activation plane per layer boundary: the engine's
+    // zero-copy resident path hands it to every shard's work item by
+    // reference count, never by cloning trits.
+    let mut h = plane;
+    for li in 0..pipeline.n_layers() {
+        match pipeline.run_layer_arc(li, h, n_valid)? {
+            LayerOutput::Hidden(next) => h = next,
+            LayerOutput::Logits(y) => return Ok(y),
+        }
+    }
+    unreachable!("layers is non-empty; the final layer returns Logits")
 }
 
 /// Load the manifest's weight layers and check that their shapes chain
@@ -361,25 +472,29 @@ impl TenantModel {
     /// [`EngineBackend::run_batch_arc`]: one merged `n_valid × in_dim`
     /// plane through the layer pipeline, zero-copy.
     pub fn run_batch_arc(&self, plane: Arc<[i8]>, n_valid: usize) -> Result<Vec<f32>> {
-        if n_valid == 0 {
-            bail!("n_valid must be >= 1");
-        }
-        if plane.len() != n_valid * self.in_dim {
-            bail!("expected {} trits, got {}", n_valid * self.in_dim, plane.len());
-        }
-        let mut h = plane;
-        for (li, (id, _k, _n)) in self.layers.iter().enumerate() {
-            let y = self
-                .engine
-                .gemm_resident_arc(*id, Arc::clone(&h), n_valid)
-                .with_context(|| format!("model {} layer {li} resident GEMM", self.name))?;
-            if li + 1 < self.layers.len() {
-                h = ternary::ternarize_acts_i32(&y, self.thresholds[li]).into();
-            } else {
-                return Ok(y.iter().map(|&v| v as f32).collect());
-            }
-        }
-        unreachable!("layers is non-empty; the final layer returns")
+        run_pipeline_serial(self, plane, n_valid)
+    }
+}
+
+impl LayerPipeline for TenantModel {
+    fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    fn layer_in_dim(&self, li: usize) -> usize {
+        self.layers[li].1
+    }
+
+    fn run_layer_arc(&self, li: usize, plane: Arc<[i8]>, m: usize) -> Result<LayerOutput> {
+        run_layer_resident(
+            &self.engine,
+            &self.layers,
+            &self.thresholds,
+            li,
+            plane,
+            m,
+            Some(&self.name),
+        )
     }
 }
 

@@ -15,20 +15,33 @@
 //!   engine's zero-copy resident surface (`gemm_resident_arc`) threads
 //!   the plane through every layer by reference count.
 //!
-//! # Why flush at layer 0 only
+//! # Admission at every layer boundary
 //!
 //! GEMM rows are independent, so merging any set of requests into one
 //! M-plane is *always* bit-exact — each row's outputs equal its
-//! single-request execution regardless of what shares the batch.
-//! Admitting a late-arriving request *between layer boundaries* of an
-//! in-flight merged batch is a different matter: the newcomer has not
-//! been through layers `0..i`, so it would need catch-up GEMMs through
-//! the earlier layers before its row could join the plane — exactly the
-//! per-request small-M executions the merge exists to amortize away,
-//! plus ragged per-row bookkeeping in the scatter path. The batcher
-//! therefore admits requests only when a merged batch *starts* (flush at
-//! layer 0); requests arriving mid-pipeline seed the next merge, whose
-//! deadline is already bounded by `max_wait`.
+//! single-request execution regardless of what shares the batch. That
+//! holds *between layers* too: a request arriving while a merged batch
+//! is mid-pipeline can be caught up through the layers it missed
+//! (small-M GEMMs against the already-resident weights — no
+//! re-programming, so the expensive amortization is untouched) and its
+//! rows concatenated onto the in-flight plane before the next layer's
+//! merged GEMM. Every layer boundary is therefore an admission point:
+//! [`stage_admit_budget`] decides how many rows a boundary may admit
+//! (bounded by the plane cap and by the late-admission cost model
+//! below), [`drain_ready`] collects that many without ever stalling the
+//! pipeline, and the server runs the catch-up and keeps the row→request
+//! map per stage.
+//!
+//! **Late-admission cost model.** A row admitted at boundary `li` first
+//! redoes `li` layers at small M — exactly the per-request work merging
+//! exists to amortize — to then share the remaining `n_layers - li`
+//! merged layers. The catch-up is worth paying while `li / n_layers ≤`
+//! [`BatchPolicy::max_catchup_frac`]: beyond that fraction the row
+//! would redo most of the network for little shared tail, so deeper
+//! boundaries admit nothing and the row seeds the next flush (whose
+//! deadline `max_wait` already bounds its wait). The default of 1.0
+//! admits at every boundary — catch-up runs on resident arrays, so even
+//! the last boundary still beats waiting a full network traversal.
 //!
 //! The batcher only ever sees pre-screened work: requests reach the
 //! channel through the `coordinator::ingress` admission chain, so
@@ -37,7 +50,7 @@
 //! module drains (the queue the shed watermarks bound is exactly the
 //! in-flight population these formers merge from).
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
@@ -52,6 +65,19 @@ pub struct BatchPolicy {
     pub max_batch_rows: usize,
     /// Max time the first request in a batch may wait for company.
     pub max_wait: Duration,
+    /// Admit newly arrived rows at layer boundaries of an in-flight
+    /// merged batch (the layer-pipelined path). Off = classic layer-0-
+    /// only admission; mid-pipeline arrivals seed the next flush.
+    pub pipeline_admission: bool,
+    /// Cap on rows admitted at any *single* layer boundary (the plane
+    /// total is still capped by `max_batch_rows`).
+    pub max_stage_admit_rows: usize,
+    /// Late-admission cost model knob: boundary `li` admits only while
+    /// `li / n_layers ≤ max_catchup_frac` — the fraction of the network
+    /// a late row is allowed to redo as small-M catch-up GEMMs for the
+    /// privilege of sharing the remaining merged layers. 1.0 admits at
+    /// every boundary; 0.0 is equivalent to `pipeline_admission: false`.
+    pub max_catchup_frac: f64,
 }
 
 impl Default for BatchPolicy {
@@ -60,6 +86,9 @@ impl Default for BatchPolicy {
             max_batch: 32,
             max_batch_rows: 256,
             max_wait: Duration::from_millis(2),
+            pipeline_admission: true,
+            max_stage_admit_rows: 256,
+            max_catchup_frac: 1.0,
         }
     }
 }
@@ -100,6 +129,70 @@ pub fn form_merged_batch<T>(
         plane.extend_from_slice(row(it));
     }
     Some(MergedBatch { items, plane: plane.into(), rows })
+}
+
+/// How many rows the admission point at layer boundary `li` (the
+/// boundary *entering* layer `li`; `li ≥ 1` — layer 0 is the initial
+/// former's job) may admit into an in-flight plane already carrying
+/// `in_flight_rows` rows of a `n_layers`-deep network. Applies the
+/// late-admission cost model (see the module docs): 0 when pipelined
+/// admission is off, when the boundary is deeper than
+/// `max_catchup_frac` of the network, or when the plane is already at
+/// `max_batch_rows`.
+pub fn stage_admit_budget(
+    policy: &BatchPolicy,
+    li: usize,
+    n_layers: usize,
+    in_flight_rows: usize,
+) -> usize {
+    if !policy.pipeline_admission || li == 0 || li >= n_layers {
+        return 0;
+    }
+    if (li as f64) / (n_layers as f64) > policy.max_catchup_frac {
+        return 0;
+    }
+    policy
+        .max_stage_admit_rows
+        .min(policy.max_batch_rows.saturating_sub(in_flight_rows))
+}
+
+/// Collect up to `cap` already-queued items without blocking — the
+/// boundary-admission drain. Unlike [`form_merged_batch`]'s deadline
+/// drain this never waits: a layer boundary admits whoever is *there*
+/// and moves on, so pipelined admission can only shorten latency, never
+/// stall the in-flight batch.
+pub fn drain_ready<T>(rx: &Receiver<T>, cap: usize) -> Vec<T> {
+    let mut items = Vec::new();
+    while items.len() < cap {
+        match rx.try_recv() {
+            Ok(item) => items.push(item),
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    items
+}
+
+/// Concatenate each item's activation row into one shared plane — the
+/// same single-copy merge [`form_merged_batch`] performs, exposed for
+/// the boundary-admission path (late rows merge into their own catch-up
+/// plane first, then join the in-flight plane via [`concat_planes`]).
+pub fn merge_rows<T>(items: &[T], row: impl Fn(&T) -> &[i8]) -> Arc<[i8]> {
+    let mut plane = Vec::with_capacity(items.iter().map(|it| row(it).len()).sum());
+    for it in items {
+        plane.extend_from_slice(row(it));
+    }
+    plane.into()
+}
+
+/// Row-major concatenation of two same-width planes: the in-flight rows
+/// followed by the caught-up late rows. Item order and plane row order
+/// stay aligned, so the scatter path needs no per-row index map beyond
+/// the ordered item list.
+pub fn concat_planes(resident: &[i8], late: &[i8]) -> Arc<[i8]> {
+    let mut plane = Vec::with_capacity(resident.len() + late.len());
+    plane.extend_from_slice(resident);
+    plane.extend_from_slice(late);
+    plane.into()
 }
 
 /// Shared drain loop: block for the first item, then greedily collect
@@ -195,12 +288,80 @@ mod tests {
             max_batch: 2,
             max_batch_rows: 4,
             max_wait: Duration::from_millis(5),
+            ..Default::default()
         };
         let mb = form_merged_batch(&rx, &policy, |v| v.as_slice()).unwrap();
         assert_eq!(mb.rows, 4, "exactly the row cap");
         assert_eq!(&mb.plane[..], &[0, 1, 2, 3]);
         let mb2 = form_merged_batch(&rx, &policy, |v| v.as_slice()).unwrap();
         assert_eq!(&mb2.plane[..], &[4, 5, 6, 7], "FIFO across flushes");
+    }
+
+    #[test]
+    fn stage_budget_respects_caps_and_catchup_frac() {
+        let policy = BatchPolicy {
+            max_batch_rows: 8,
+            max_stage_admit_rows: 3,
+            max_catchup_frac: 0.5,
+            ..Default::default()
+        };
+        // Boundary 1 of 4 (25% catch-up): admits up to the stage cap.
+        assert_eq!(stage_admit_budget(&policy, 1, 4, 0), 3);
+        // Plane headroom tightens the budget below the stage cap.
+        assert_eq!(stage_admit_budget(&policy, 1, 4, 6), 2);
+        assert_eq!(stage_admit_budget(&policy, 1, 4, 8), 0, "plane already full");
+        // Boundary 2 of 4 is exactly at the 0.5 fraction: still admits.
+        assert_eq!(stage_admit_budget(&policy, 2, 4, 0), 3);
+        // Boundary 3 of 4 (75% catch-up) exceeds the allowed fraction.
+        assert_eq!(stage_admit_budget(&policy, 3, 4, 0), 0);
+        // Layer 0 belongs to the initial former, never stage admission;
+        // past-the-end boundaries admit nothing.
+        assert_eq!(stage_admit_budget(&policy, 0, 4, 0), 0);
+        assert_eq!(stage_admit_budget(&policy, 4, 4, 0), 0);
+    }
+
+    #[test]
+    fn stage_budget_is_zero_when_pipelining_is_off() {
+        let policy = BatchPolicy { pipeline_admission: false, ..Default::default() };
+        for li in 0..4 {
+            assert_eq!(stage_admit_budget(&policy, li, 4, 0), 0);
+        }
+        // max_catchup_frac = 0.0 is the same switch spelled differently.
+        let frac_zero = BatchPolicy { max_catchup_frac: 0.0, ..Default::default() };
+        assert_eq!(stage_admit_budget(&frac_zero, 1, 4, 0), 0);
+    }
+
+    #[test]
+    fn default_policy_admits_at_every_interior_boundary() {
+        let policy = BatchPolicy::default();
+        for li in 1..4 {
+            assert!(
+                stage_admit_budget(&policy, li, 4, 1) > 0,
+                "default must admit at boundary {li}"
+            );
+        }
+    }
+
+    #[test]
+    fn drain_ready_never_blocks_and_respects_cap() {
+        let (tx, rx) = channel::<u32>();
+        assert!(drain_ready(&rx, 4).is_empty(), "empty queue admits nobody");
+        for i in 0..6 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(drain_ready(&rx, 4), vec![0, 1, 2, 3]);
+        assert_eq!(drain_ready(&rx, 4), vec![4, 5], "FIFO remainder");
+        drop(tx);
+        assert!(drain_ready(&rx, 4).is_empty(), "closed channel admits nobody");
+    }
+
+    #[test]
+    fn merge_and_concat_preserve_row_order() {
+        let late = [vec![1i8, -1], vec![0i8, 1]];
+        let late_plane = merge_rows(&late, |v| v.as_slice());
+        assert_eq!(&late_plane[..], &[1, -1, 0, 1]);
+        let joined = concat_planes(&[7, 7, 8, 8], &late_plane);
+        assert_eq!(&joined[..], &[7, 7, 8, 8, 1, -1, 0, 1], "in-flight rows first");
     }
 
     #[test]

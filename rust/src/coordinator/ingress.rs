@@ -25,10 +25,15 @@
 //!    bounded by the watermark instead of growing with offered load.
 //!    Shedding clears only once the gauge drains to the low-water mark
 //!    (hysteresis — a queue hovering at the threshold does not flap
-//!    between admitting and shedding on every reply). The executor's
-//!    live backlog is scrapeable alongside
-//!    (`TernaryGemmEngine::exec_queue_depth`), and its high-water mark
-//!    is `ExecStatsSnapshot::queue_depth_max`.
+//!    between admitting and shedding on every reply). The watermark
+//!    signal is *composite* when wired: with a positive
+//!    [`IngressConfig::exec_backlog_weight`] and a backlog source
+//!    ([`Ingress::set_backlog_source`] — the servers wire the engine's
+//!    live `TernaryGemmEngine::exec_queue_depth`), the compared load is
+//!    `inflight + weight × exec_backlog`, so shedding triggers early
+//!    when flushes are large but few — a handful of giant merged
+//!    batches can swamp the executor while the request-level gauge
+//!    still looks calm. The weight defaults to 0 (request gauge only).
 //!
 //! Every verdict is counted — globally and per tenant, with the same
 //! books-sum-to-global construction as `coordinator::metrics` — and the
@@ -203,6 +208,12 @@ pub struct IngressConfig {
     /// Load-shedding watermarks over the in-flight gauge; `None` never
     /// sheds.
     pub shed: Option<Watermarks>,
+    /// Weight of the executor's live queue depth in the shed signal:
+    /// the watermarks compare `inflight + weight × exec_backlog` once a
+    /// backlog source is wired ([`Ingress::set_backlog_source`]). 0
+    /// (default) watches the request-level gauge alone; positive values
+    /// trigger shedding early when flushes are large but few.
+    pub exec_backlog_weight: f64,
 }
 
 /// Why the ingress refused a request. Every variant is an *immediate*
@@ -214,12 +225,32 @@ pub enum Rejection {
     BadShape { reason: String },
     /// The tenant's token bucket is empty — retry after `retry_in_s`.
     RateLimited { tenant: String, retry_in_s: f64 },
-    /// The in-flight gauge crossed the high-water mark; the server sheds
-    /// until it drains to `low` (hysteresis).
-    Overloaded { inflight: u64, high: u64, low: u64 },
+    /// The shed load crossed the high-water mark; the server sheds
+    /// until it drains to `low` (hysteresis). `load` is the compared
+    /// signal: the in-flight gauge alone, or the composite
+    /// `inflight + weight × exec_backlog` when a backlog source is
+    /// wired ([`Ingress::set_backlog_source`]).
+    Overloaded { load: u64, high: u64, low: u64 },
     /// No model lane with that name is loaded (multi-tenant serving).
     UnknownModel { model: String },
 }
+
+impl Rejection {
+    /// Seconds until a retry can succeed, for refusals with a clock
+    /// behind them: the rate limiter's own refill arithmetic
+    /// ([`Rejection::RateLimited`]'s `retry_in_s`). `None` otherwise —
+    /// shed and shape refusals clear on load or on a client fix, not on
+    /// a timer. The servers surface this through
+    /// `InferError::retry_after_s` as a Retry-After-style hint.
+    pub fn retry_after_s(&self) -> Option<f64> {
+        match self {
+            Rejection::RateLimited { retry_in_s, .. } => Some(*retry_in_s),
+            _ => None,
+        }
+    }
+}
+
+impl std::error::Error for Rejection {}
 
 impl fmt::Display for Rejection {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -228,9 +259,9 @@ impl fmt::Display for Rejection {
             Rejection::RateLimited { tenant, retry_in_s } => {
                 write!(f, "rate limited (tenant {tenant:?}): retry in {retry_in_s:.3}s")
             }
-            Rejection::Overloaded { inflight, high, low } => write!(
+            Rejection::Overloaded { load, high, low } => write!(
                 f,
-                "overloaded: {inflight} requests in flight ≥ high water {high} \
+                "overloaded: shed load {load} ≥ high water {high} \
                  (shedding until ≤ {low})"
             ),
             Rejection::UnknownModel { model } => write!(f, "unknown model {model:?}"),
@@ -299,6 +330,10 @@ pub struct Ingress {
     inflight: AtomicU64,
     /// Latched shed state (the hysteresis bit).
     shedding: AtomicBool,
+    /// Live executor-backlog source for the composite shed signal
+    /// (wired by the servers after the engine backend exists; `None`
+    /// until then, and on the PJRT backend).
+    backlog: RwLock<Option<Arc<dyn Fn() -> u64 + Send + Sync>>>,
     buckets: RwLock<BTreeMap<String, Arc<TokenBucket>>>,
     global: Counters,
     tenants: RwLock<BTreeMap<String, Arc<Counters>>>,
@@ -324,6 +359,7 @@ impl Ingress {
             in_dim,
             inflight: AtomicU64::new(0),
             shedding: AtomicBool::new(false),
+            backlog: RwLock::new(None),
             buckets: RwLock::new(BTreeMap::new()),
             global: Counters::default(),
             tenants: RwLock::new(BTreeMap::new()),
@@ -333,6 +369,37 @@ impl Ingress {
     /// The policy this ingress enforces.
     pub fn config(&self) -> &IngressConfig {
         &self.cfg
+    }
+
+    /// Wire the live executor-backlog source for the composite shed
+    /// signal. Only meaningful with a positive
+    /// [`IngressConfig::exec_backlog_weight`]; the servers pass the
+    /// engine backend's `exec_queue_depth` once it exists (the ingress
+    /// is built before the backend, so this is a post-construction
+    /// hook).
+    pub fn set_backlog_source(&self, source: impl Fn() -> u64 + Send + Sync + 'static) {
+        *self.backlog.write().unwrap_or_else(std::sync::PoisonError::into_inner) =
+            Some(Arc::new(source));
+    }
+
+    /// The load the shed watermarks compare: the in-flight request
+    /// gauge, plus `exec_backlog_weight × backlog` when a source is
+    /// wired. With the default weight of 0 this *is* the gauge.
+    pub fn shed_load(&self) -> u64 {
+        self.inflight.load(Ordering::Relaxed) + self.backlog_load()
+    }
+
+    /// The weighted executor-backlog contribution to the shed signal
+    /// (0 without a source or with a zero weight).
+    fn backlog_load(&self) -> u64 {
+        if self.cfg.exec_backlog_weight <= 0.0 {
+            return 0;
+        }
+        let source = self.backlog.read().unwrap_or_else(std::sync::PoisonError::into_inner);
+        match source.as_ref() {
+            Some(f) => (self.cfg.exec_backlog_weight * f() as f64).round() as u64,
+            None => 0,
+        }
     }
 
     /// Run the admission chain for one request of `tenant`. `Ok` means
@@ -375,17 +442,20 @@ impl Ingress {
                 });
             }
         }
-        // 3. Load: shed above the high-water mark, recover at the low one.
+        // 3. Load: shed above the high-water mark, recover at the low
+        //    one. The compared load is composite when a backlog source
+        //    is wired: `inflight + weight × exec_backlog` triggers
+        //    early when flushes are large but few.
         if let Some(w) = self.cfg.shed {
-            let inflight = self.inflight.load(Ordering::Relaxed);
+            let load = self.shed_load();
             let was_shedding = self.shedding.load(Ordering::Relaxed);
-            let shedding = if was_shedding { inflight > w.low } else { inflight >= w.high };
+            let shedding = if was_shedding { load > w.low } else { load >= w.high };
             if shedding != was_shedding {
                 self.shedding.store(shedding, Ordering::Relaxed);
             }
             if shedding {
                 self.charge(tenant, |c| &c.shed);
-                return Err(Rejection::Overloaded { inflight, high: w.high, low: w.low });
+                return Err(Rejection::Overloaded { load, high: w.high, low: w.low });
             }
         }
         self.inflight.fetch_add(1, Ordering::Relaxed);
@@ -404,7 +474,12 @@ impl Ingress {
         let prev = self.inflight.fetch_sub(n, Ordering::Relaxed);
         debug_assert!(prev >= n, "more replies than admissions");
         if let Some(w) = self.cfg.shed {
-            if prev - n <= w.low && self.shedding.load(Ordering::Relaxed) {
+            // Recovery watches the same composite load admission sheds
+            // on: a drained request gauge with a still-swamped executor
+            // keeps the latch set.
+            if (prev - n) + self.backlog_load() <= w.low
+                && self.shedding.load(Ordering::Relaxed)
+            {
                 self.shedding.store(false, Ordering::Relaxed);
             }
         }
@@ -592,6 +667,7 @@ mod tests {
         let cfg = IngressConfig {
             rate: Some(RateLimit { per_s: 1.0, burst: 3.0 }),
             shed: Some(Watermarks { high: 2, low: 0 }),
+            ..Default::default()
         };
         let ing = Ingress::with_clock(1, cfg, manual());
         // a: 2 admitted (fills the gauge), then 1 shed (burst 3 keeps
@@ -616,6 +692,70 @@ mod tests {
         assert_eq!(g.unknown_model, a.unknown_model + b.unknown_model + ghost.unknown_model);
         assert_eq!(g.offered(), a.offered() + b.offered() + ghost.offered());
         assert_eq!(ing.tenant_names(), vec!["a", "b", "ghost"]);
+    }
+
+    #[test]
+    fn composite_shed_signal_weighs_exec_backlog() {
+        let cfg = IngressConfig {
+            shed: Some(Watermarks { high: 4, low: 1 }),
+            exec_backlog_weight: 0.5,
+            ..Default::default()
+        };
+        let ing = Ingress::new(1, cfg);
+        let depth = Arc::new(AtomicU64::new(0));
+        let d = Arc::clone(&depth);
+        ing.set_backlog_source(move || d.load(Ordering::Relaxed));
+        // Backlog 0: the request gauge alone drives the signal.
+        assert!(ing.admit("m", &[1]).is_ok());
+        assert_eq!(ing.shed_load(), 1);
+        // A deep executor backlog (few but giant flushes) pushes the
+        // composite load over the high-water mark while the request
+        // gauge sits at 1.
+        depth.store(6, Ordering::Relaxed);
+        assert_eq!(ing.shed_load(), 1 + 3);
+        let r = ing.admit("m", &[1]).unwrap_err();
+        assert!(
+            matches!(r, Rejection::Overloaded { load: 4, high: 4, .. }),
+            "expected composite overload, got {r:?}"
+        );
+        assert!(ing.is_shedding());
+        // Draining the request gauge alone does not recover while the
+        // executor stays swamped...
+        ing.request_done();
+        assert_eq!(ing.inflight(), 0);
+        assert!(ing.is_shedding(), "latch holds: backlog still above low water");
+        assert!(matches!(ing.admit("m", &[1]), Err(Rejection::Overloaded { .. })));
+        // ...and clears once the backlog does.
+        depth.store(0, Ordering::Relaxed);
+        assert!(ing.admit("m", &[1]).is_ok());
+        assert!(!ing.is_shedding());
+    }
+
+    #[test]
+    fn zero_weight_ignores_backlog_source() {
+        let cfg = IngressConfig { shed: Some(Watermarks { high: 2, low: 0 }), ..Default::default() };
+        let ing = Ingress::new(1, cfg);
+        ing.set_backlog_source(|| 1_000_000);
+        assert_eq!(ing.shed_load(), 0, "weight 0 keeps the gauge-only signal");
+        assert!(ing.admit("m", &[1]).is_ok());
+    }
+
+    #[test]
+    fn retry_after_surfaces_only_for_rate_limits() {
+        let clock = manual();
+        let cfg = IngressConfig {
+            rate: Some(RateLimit { per_s: 2.0, burst: 1.0 }),
+            ..Default::default()
+        };
+        let ing = Ingress::with_clock(1, cfg, clock);
+        assert!(ing.admit("a", &[1]).is_ok());
+        let limited = ing.admit("a", &[1]).unwrap_err();
+        let retry = limited.retry_after_s().expect("rate limit carries a retry hint");
+        // An empty bucket at 2 tokens/s refills a whole token in 0.5 s.
+        assert!(retry > 0.0 && retry <= 0.5, "retry {retry}");
+        assert!(format!("{limited}").contains("retry in"), "Display renders the hint");
+        let bad = ing.admit("a", &[9]).unwrap_err();
+        assert_eq!(bad.retry_after_s(), None, "shape bugs have no retry clock");
     }
 
     #[test]

@@ -75,8 +75,26 @@ pub struct Metrics {
     /// Per-tenant books by model name (multi-tenant serving only; empty
     /// unless the `*_for` methods are used).
     tenants: RwLock<BTreeMap<String, Arc<TenantBook>>>,
+    /// Per-layer-boundary admission histogram: `(admissions, rows)`
+    /// charged at stage boundary `li`, grown on first use. Stage 0 is
+    /// the initial merged former; stages ≥ 1 are mid-pipeline admission
+    /// points (the layer-pipelined path).
+    stage_admits: Mutex<Vec<(u64, u64)>>,
+    /// Pipeline occupancy gauge: merged flushes currently mid-pipeline
+    /// (between enter and exit of the layer loop) across all workers.
+    pipeline_active: AtomicU64,
     /// Latency-window capacity handed to newly created tenant books.
     window: usize,
+}
+
+/// One row of the per-stage admission histogram: how many times the
+/// admission point at layer boundary `stage` admitted rows, and how many
+/// rows in total. Stage 0 counts initial flush formation.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageAdmits {
+    pub stage: usize,
+    pub admissions: u64,
+    pub rows: u64,
 }
 
 /// One tenant's slice of the serving counters: requests, errors,
@@ -149,8 +167,52 @@ impl Metrics {
             sim_energy_aj: AtomicU64::new(0),
             sim_time_ps: AtomicU64::new(0),
             tenants: RwLock::new(BTreeMap::new()),
+            stage_admits: Mutex::new(Vec::new()),
+            pipeline_active: AtomicU64::new(0),
             window,
         }
+    }
+
+    /// Charge `rows` admitted rows to stage boundary `stage`'s
+    /// histogram bucket (0 = initial flush formation, ≥ 1 = mid-pipeline
+    /// admission points).
+    pub fn record_stage_admission(&self, stage: usize, rows: usize) {
+        let mut book = self.stage_admits.lock().unwrap();
+        if book.len() <= stage {
+            book.resize(stage + 1, (0, 0));
+        }
+        book[stage].0 += 1;
+        book[stage].1 += rows as u64;
+    }
+
+    /// The per-stage admission histogram, one entry per stage boundary
+    /// charged so far (empty before any flush).
+    pub fn stage_admit_histogram(&self) -> Vec<StageAdmits> {
+        self.stage_admits
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .map(|(stage, &(admissions, rows))| StageAdmits { stage, admissions, rows })
+            .collect()
+    }
+
+    /// A merged flush entered its layer loop (pipeline occupancy +1).
+    pub fn pipeline_enter(&self) {
+        self.pipeline_active.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A merged flush left its layer loop (pipeline occupancy −1;
+    /// saturating, so an unbalanced exit can never wrap the gauge).
+    pub fn pipeline_exit(&self) {
+        let _ = self.pipeline_active.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(1))
+        });
+    }
+
+    /// Merged flushes currently mid-pipeline across all workers.
+    pub fn pipeline_active(&self) -> u64 {
+        self.pipeline_active.load(Ordering::Relaxed)
     }
 
     /// The named tenant's book, created on first use (window matches the
@@ -331,6 +393,11 @@ pub struct MetricsReport {
     pub exec: Option<ExecStatsSnapshot>,
     /// Live executor backlog at snapshot time (`None` on PJRT).
     pub exec_queue_depth: Option<u64>,
+    /// Per-layer-boundary admission histogram (empty before any flush;
+    /// stage 0 = initial formation, ≥ 1 = mid-pipeline admissions).
+    pub stage_admits: Vec<StageAdmits>,
+    /// Merged flushes mid-pipeline at snapshot time.
+    pub pipeline_active: u64,
     pub tenants: Vec<TenantReport>,
 }
 
@@ -385,6 +452,8 @@ impl MetricsReport {
             engine,
             exec,
             exec_queue_depth,
+            stage_admits: metrics.stage_admit_histogram(),
+            pipeline_active: metrics.pipeline_active(),
             tenants,
         }
     }
@@ -412,6 +481,19 @@ impl MetricsReport {
             "exec_queue_depth".into(),
             self.exec_queue_depth.map_or(Json::Null, num),
         );
+        let stages = self
+            .stage_admits
+            .iter()
+            .map(|s| {
+                let mut so = BTreeMap::new();
+                so.insert("stage".into(), Json::Num(s.stage as f64));
+                so.insert("admissions".into(), num(s.admissions));
+                so.insert("rows".into(), num(s.rows));
+                Json::Obj(so)
+            })
+            .collect();
+        o.insert("stage_admits".into(), Json::Arr(stages));
+        o.insert("pipeline_active".into(), num(self.pipeline_active));
         let tenants = self
             .tenants
             .iter()
@@ -602,6 +684,39 @@ mod tests {
         );
         assert_eq!(json.get("exec_queue_depth"), Some(&crate::util::json::Json::Null));
         assert_eq!(json.get("tenants").and_then(|j| j.as_arr()).map(|a| a.len()), Some(3));
+    }
+
+    #[test]
+    fn stage_histogram_and_pipeline_gauge_track_the_layer_loop() {
+        use crate::coordinator::ingress::{Ingress, IngressConfig};
+        let m = Metrics::new();
+        assert!(m.stage_admit_histogram().is_empty(), "no flushes yet");
+        // One flush forms 4 rows at stage 0, admits 2 at boundary 1 and
+        // 1 at boundary 2.
+        m.pipeline_enter();
+        m.record_stage_admission(0, 4);
+        m.record_stage_admission(1, 2);
+        m.record_stage_admission(2, 1);
+        assert_eq!(m.pipeline_active(), 1);
+        m.pipeline_exit();
+        assert_eq!(m.pipeline_active(), 0);
+        m.pipeline_exit();
+        assert_eq!(m.pipeline_active(), 0, "gauge saturates, never wraps");
+        let h = m.stage_admit_histogram();
+        assert_eq!(h.len(), 3);
+        assert_eq!(h[0], StageAdmits { stage: 0, admissions: 1, rows: 4 });
+        assert_eq!(h[1], StageAdmits { stage: 1, admissions: 1, rows: 2 });
+        assert_eq!(h[2], StageAdmits { stage: 2, admissions: 1, rows: 1 });
+        // The report serializes both: stage rows and the gauge.
+        let ing = Ingress::new(2, IngressConfig::default());
+        let r = MetricsReport::gather(&m, &ing, None, None, None);
+        assert_eq!(r.stage_admits, h);
+        assert_eq!(r.pipeline_active, 0);
+        let json = crate::util::json::Json::parse(&r.to_json().to_string()).unwrap();
+        let stages = json.get("stage_admits").and_then(|j| j.as_arr()).unwrap();
+        assert_eq!(stages.len(), 3);
+        assert_eq!(stages[1].get("rows").and_then(|j| j.as_f64()), Some(2.0));
+        assert_eq!(json.get("pipeline_active").and_then(|j| j.as_f64()), Some(0.0));
     }
 
     #[test]

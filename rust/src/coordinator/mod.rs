@@ -31,11 +31,13 @@ pub mod metrics;
 pub mod server;
 
 pub use backend::{
-    BackendKind, EngineBackend, InferenceBackend, MultiTenantBackend, PjrtBackend, TenantModel,
+    BackendKind, EngineBackend, InferenceBackend, LayerOutput, LayerPipeline, MultiTenantBackend,
+    PjrtBackend, TenantModel,
 };
 pub use batcher::BatchPolicy;
 pub use ingress::{Ingress, IngressConfig, IngressSnapshot, RateLimit, Rejection, Watermarks};
-pub use metrics::{Metrics, MetricsReport, TenantBook, TenantReport};
+pub use metrics::{Metrics, MetricsReport, StageAdmits, TenantBook, TenantReport};
 pub use server::{
-    InferReply, MeasuredResidency, MultiServer, MultiServerConfig, Server, ServerConfig,
+    run_pipelined_flush, InferError, InferReply, MeasuredResidency, MultiServer,
+    MultiServerConfig, Server, ServerConfig,
 };

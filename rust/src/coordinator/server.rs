@@ -10,7 +10,10 @@
 //! engine backend the pull is *continuous batching*: every in-flight
 //! request is merged into one contiguous M-plane (M = total live rows,
 //! capped by `BatchPolicy::max_batch_rows`, **not** the manifest
-//! `batch`), the layer pipeline runs once at that M, and the logit rows
+//! `batch`), the layer pipeline runs at that M **admitting newly
+//! arrived rows at every layer boundary** ([`run_pipelined_flush`] —
+//! late rows are caught up through the layers they missed against the
+//! resident weights, then ride the merged plane), and the logit rows
 //! scatter back to each request's reply channel. The engine
 //! backend is loaded **once** and shared by every worker through an
 //! `Arc` — one copy of the weights, one resident array pool, one
@@ -44,10 +47,14 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use super::backend::{
-    BackendKind, EngineBackend, InferenceBackend, MultiTenantBackend, PjrtBackend, TenantModel,
+    BackendKind, EngineBackend, InferenceBackend, LayerOutput, LayerPipeline, MultiTenantBackend,
+    PjrtBackend, TenantModel,
 };
-use super::batcher::{form_merged_batch, next_batch, BatchPolicy};
-use super::ingress::{Ingress, IngressConfig};
+use super::batcher::{
+    concat_planes, drain_ready, form_merged_batch, merge_rows, next_batch, stage_admit_budget,
+    BatchPolicy,
+};
+use super::ingress::{Ingress, IngressConfig, Rejection};
 use super::metrics::{Metrics, MetricsReport};
 use crate::arch::{AccelConfig, Accelerator, Residency};
 use crate::array::area::Design;
@@ -72,6 +79,58 @@ pub struct InferReply {
     pub pred: usize,
     pub logits: Vec<f32>,
     pub wall_latency_s: f64,
+}
+
+/// Why `infer_async` refused a request before it ever reached the
+/// queue. Carries the full ingress verdict so clients can react to the
+/// *kind* of refusal — in particular [`InferError::retry_after_s`]
+/// surfaces the rate limiter's already-computed earliest-retry time as
+/// a Retry-After-style backoff hint instead of a bare terminal error.
+#[derive(Clone, Debug, PartialEq)]
+pub enum InferError {
+    /// Refused by the ingress admission chain (bad shape, rate limit,
+    /// overload shed, unknown model).
+    Rejected(Rejection),
+    /// The server (or this model's lane) has shut down.
+    ShutDown,
+}
+
+impl InferError {
+    /// Seconds until a retry can succeed, when the refusal is a rate
+    /// limit (the token bucket's own refill arithmetic — the same
+    /// number its `Display` renders). `None` for every other refusal:
+    /// shed/overload clears on load, not on a clock.
+    pub fn retry_after_s(&self) -> Option<f64> {
+        match self {
+            InferError::Rejected(r) => r.retry_after_s(),
+            InferError::ShutDown => None,
+        }
+    }
+
+    /// The ingress verdict behind the refusal, if there is one.
+    pub fn rejection(&self) -> Option<&Rejection> {
+        match self {
+            InferError::Rejected(r) => Some(r),
+            InferError::ShutDown => None,
+        }
+    }
+}
+
+impl std::fmt::Display for InferError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            InferError::Rejected(r) => write!(f, "{r}"),
+            InferError::ShutDown => write!(f, "server shut down"),
+        }
+    }
+}
+
+impl std::error::Error for InferError {}
+
+impl From<Rejection> for InferError {
+    fn from(r: Rejection) -> InferError {
+        InferError::Rejected(r)
+    }
 }
 
 /// Server configuration.
@@ -236,6 +295,16 @@ impl Server {
             BackendKind::Pjrt => None,
         };
 
+        // Composite shed signal: on the engine backend, the ingress
+        // watermarks weigh the live executor backlog alongside the
+        // in-flight request gauge (`exec_backlog_weight`), so a few
+        // giant flushes saturating the executor shed load just like
+        // many small queued requests would.
+        if let Some(model) = &engine_model {
+            let model = Arc::clone(model);
+            ingress.set_backlog_source(move || model.exec_queue_depth());
+        }
+
         let mut workers = Vec::new();
         for wid in 0..cfg.n_workers.max(1) {
             let rx = Arc::clone(&rx);
@@ -320,27 +389,28 @@ impl Server {
 
     /// Submit a request and wait for the reply.
     pub fn infer(&self, input: Vec<i8>) -> Result<InferReply, String> {
-        let rx = self.infer_async(input)?;
+        let rx = self.infer_async(input).map_err(|e| e.to_string())?;
         rx.recv().map_err(|e| format!("server dropped request: {e}"))?
     }
 
     /// Submit a request; returns the reply channel immediately. The
     /// request passes the [`Ingress`] chain first — a
     /// [`Rejection`](super::ingress::Rejection) (bad shape, rate limit,
-    /// overload shed) comes back as an immediate `Err` without ever
-    /// occupying a queue slot.
+    /// overload shed) comes back as an immediate typed [`InferError`]
+    /// without ever occupying a queue slot; a rate-limited refusal
+    /// carries the Retry-After hint ([`InferError::retry_after_s`]).
     pub fn infer_async(
         &self,
         input: Vec<i8>,
-    ) -> Result<Receiver<Result<InferReply, String>>, String> {
+    ) -> Result<Receiver<Result<InferReply, String>>, InferError> {
         self.ingress
             .admit(DEFAULT_TENANT, &input)
-            .map_err(|r| r.to_string())?;
+            .map_err(InferError::Rejected)?;
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
         let req = Request { input, enqueued: Instant::now(), resp: rtx };
         self.tx.as_ref().expect("server running").send(req).map_err(|_| {
             self.ingress.request_done(); // balance the admission
-            "server shut down".to_string()
+            InferError::ShutDown
         })?;
         Ok(rrx)
     }
@@ -377,13 +447,95 @@ fn worker_loop(
     }
 }
 
+/// Run one merged batch through the layer pipeline **with admission at
+/// every layer boundary**: before each layer `li ≥ 1`, up to
+/// [`stage_admit_budget`] newly queued requests are drained (without
+/// blocking — `try_lock`, so an in-flight batch never stalls behind a
+/// worker that holds the queue while forming its own batch), caught up
+/// through layers `0..li` as a small-M side pipeline against the same
+/// resident weights, and concatenated onto the in-flight plane. Rows
+/// are independent in M, so the result is bit-exact against serial
+/// per-request execution; see `coordinator::batcher`'s module docs for
+/// the cost model.
+///
+/// `items` is updated **in place** and late arrivals join it *before*
+/// their catch-up GEMMs run, so on error — or a panic unwinding through
+/// this frame — the caller still holds every request this flush
+/// absorbed and can answer (and ingress-balance) all of them. On
+/// success the returned logits hold `items.len()` rows in item order.
+///
+/// Public so the conformance battery can drive a flush
+/// boundary-by-boundary against a pre-filled queue; servers call it
+/// from their worker loops.
+pub fn run_pipelined_flush<P: LayerPipeline>(
+    pipeline: &P,
+    policy: &BatchPolicy,
+    rx: &Mutex<Receiver<Request>>,
+    metrics: &Metrics,
+    items: &mut Vec<Request>,
+    mut plane: Arc<[i8]>,
+) -> Result<Vec<f32>> {
+    let n_layers = pipeline.n_layers();
+    let mut m = items.len();
+    if m == 0 {
+        bail!("a flush needs at least one request");
+    }
+    if plane.len() != m * pipeline.layer_in_dim(0) {
+        bail!(
+            "expected {} trits, got {}",
+            m * pipeline.layer_in_dim(0),
+            plane.len()
+        );
+    }
+    for li in 0..n_layers {
+        if li > 0 {
+            let budget = stage_admit_budget(policy, li, n_layers, m);
+            let late = if budget > 0 {
+                match rx.try_lock() {
+                    Ok(guard) => drain_ready(&guard, budget),
+                    // Another worker is forming a batch on this queue;
+                    // its deadline bounds the skipped rows' wait.
+                    Err(_) => Vec::new(),
+                }
+            } else {
+                Vec::new()
+            };
+            if !late.is_empty() {
+                let first = items.len();
+                let late_n = late.len();
+                items.extend(late);
+                // Catch the late rows up through the layers they missed
+                // (small-M GEMMs on the already-resident weights), then
+                // join the in-flight plane for the remaining layers.
+                let mut catchup = merge_rows(&items[first..], |r| r.input.as_slice());
+                for cli in 0..li {
+                    match pipeline.run_layer_arc(cli, catchup, late_n)? {
+                        LayerOutput::Hidden(h) => catchup = h,
+                        LayerOutput::Logits(_) => {
+                            unreachable!("catch-up stages precede the final layer")
+                        }
+                    }
+                }
+                plane = concat_planes(&plane, &catchup);
+                m += late_n;
+                metrics.record_stage_admission(li, late_n);
+            }
+        }
+        match pipeline.run_layer_arc(li, plane, m)? {
+            LayerOutput::Hidden(next) => plane = next,
+            LayerOutput::Logits(y) => return Ok(y),
+        }
+    }
+    unreachable!("layers is non-empty; the final layer returns Logits")
+}
+
 /// The continuous-batching loop: merge every in-flight request into one
-/// contiguous M-plane (`form_merged_batch` — one copy), run the whole
-/// layer pipeline once at M = total live rows via `run_batch_arc`
-/// (uncapped by the manifest `batch`), then scatter the logit rows back
-/// to each request's reply channel. New requests are admitted only at
-/// batch formation (flush at layer 0 — see `coordinator::batcher` for
-/// why mid-pipeline admission would forfeit the amortization).
+/// contiguous M-plane (`form_merged_batch` — one copy), then run the
+/// layer pipeline at M = total live rows via [`run_pipelined_flush`],
+/// which admits newly arrived rows at every layer boundary (catch-up
+/// GEMMs against the resident weights — bit-exact, see the batcher's
+/// module docs for the cost model), and scatter the logit rows back to
+/// each request's reply channel.
 fn engine_worker_loop(
     model: Arc<EngineBackend>,
     cfg: ServerConfig,
@@ -401,17 +553,22 @@ fn engine_worker_loop(
         };
         let Some(merged) = merged else { return }; // channel closed: shutdown
 
-        let rows = merged.rows;
+        let mut items = merged.items;
         let plane = Arc::clone(&merged.plane);
+        metrics.record_stage_admission(0, merged.rows);
+        metrics.pipeline_enter();
         // A panicking backend must not kill the worker: that would
         // strand the in-flight batch and permanently shrink serving
-        // capacity. Catch it, answer the batch with an error, continue.
+        // capacity. Catch it, answer the batch (including any rows
+        // admitted mid-pipeline — `items` is updated in place before
+        // any catch-up work) with an error, continue.
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            model.run_batch_arc(plane, rows)
+            run_pipelined_flush(model.as_ref(), &cfg.policy, &rx, &metrics, &mut items, plane)
         }));
+        metrics.pipeline_exit();
         scatter_replies(
             None,
-            merged.items,
+            items,
             result,
             model.out_dim(),
             &metrics,
@@ -637,6 +794,13 @@ impl MultiServer {
         // (`admit_shaped`); the constructor dimension is unused here.
         let ingress = Arc::new(Ingress::new(0, cfg.ingress));
         let accel = Accelerator::new(AccelConfig::sitecim(cfg.sim_tech, cfg.sim_design));
+        // Composite shed signal over the one shared engine: every
+        // lane's flushes land in the same executor, so its backlog is
+        // the pool-wide pressure term for the shared watermarks.
+        {
+            let engine = Arc::clone(backend.engine());
+            ingress.set_backlog_source(move || engine.exec_queue_depth());
+        }
         let mut lanes = BTreeMap::new();
         for (name, dir) in &cfg.models {
             if lanes.contains_key(name) {
@@ -734,25 +898,25 @@ impl MultiServer {
         &self,
         model: &str,
         input: Vec<i8>,
-    ) -> Result<Receiver<Result<InferReply, String>>, String> {
+    ) -> Result<Receiver<Result<InferReply, String>>, InferError> {
         let Some(lane) = self.lanes.get(model) else {
-            return Err(self.ingress.reject_unknown_model(model).to_string());
+            return Err(InferError::Rejected(self.ingress.reject_unknown_model(model)));
         };
         self.ingress
             .admit_shaped(model, lane.in_dim, &input)
-            .map_err(|r| r.to_string())?;
+            .map_err(InferError::Rejected)?;
         let (rtx, rrx) = std::sync::mpsc::sync_channel(1);
         let req = Request { input, enqueued: Instant::now(), resp: rtx };
         lane.tx.as_ref().expect("lane running").send(req).map_err(|_| {
             self.ingress.request_done(); // balance the admission
-            "server shut down".to_string()
+            InferError::ShutDown
         })?;
         Ok(rrx)
     }
 
     /// Submit a request to `model` and wait for the reply.
     pub fn infer(&self, model: &str, input: Vec<i8>) -> Result<InferReply, String> {
-        let rx = self.infer_async(model, input)?;
+        let rx = self.infer_async(model, input).map_err(|e| e.to_string())?;
         rx.recv().map_err(|e| format!("server dropped request: {e}"))?
     }
 
@@ -837,7 +1001,9 @@ impl MultiServer {
 /// One model lane's continuous-batching loop: identical to
 /// [`engine_worker_loop`] except the model is re-read from the lane's
 /// published slot at every flush (hot-swap) and metrics charge the
-/// tenant's book.
+/// tenant's book. Boundary admission only ever drains this lane's own
+/// queue, so late rows always belong to the same model — and the same
+/// captured version — as the plane they join.
 fn tenant_worker_loop(
     name: &str,
     current: Arc<RwLock<Arc<TenantModel>>>,
@@ -855,19 +1021,22 @@ fn tenant_worker_loop(
         };
         let Some(merged) = merged else { return }; // lane closed: shutdown
 
-        // One version per flush: the whole pipeline (and its replies)
-        // runs on this Arc even if a hot-swap publishes a new version
-        // mid-flight.
+        // One version per flush: the whole pipeline (and its replies,
+        // including rows admitted at layer boundaries) runs on this Arc
+        // even if a hot-swap publishes a new version mid-flight.
         let model =
             Arc::clone(&current.read().unwrap_or_else(std::sync::PoisonError::into_inner));
-        let rows = merged.rows;
+        let mut items = merged.items;
         let plane = Arc::clone(&merged.plane);
+        metrics.record_stage_admission(0, merged.rows);
+        metrics.pipeline_enter();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            model.run_batch_arc(plane, rows)
+            run_pipelined_flush(model.as_ref(), &policy, &rx, &metrics, &mut items, plane)
         }));
+        metrics.pipeline_exit();
         scatter_replies(
             Some(name),
-            merged.items,
+            items,
             result,
             model.out_dim(),
             &metrics,

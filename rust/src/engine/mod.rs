@@ -304,6 +304,34 @@ pub struct EngineStatsSnapshot {
     pub evictions: u64,
 }
 
+/// Per-pipeline-stage flush accounting: how many merged flushes touched
+/// a given layer stage and how many activation rows they carried in
+/// total. The layer-pipelined serving path admits rows at every layer
+/// boundary, so under continuous arrivals `rows / flushes` *grows* with
+/// the stage index relative to layer-0-only admission — that growth is
+/// the utilization the pipeline exists to buy, and this counter is how
+/// benches and the metrics report observe it.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageFlushSnapshot {
+    /// Layer index the stage executed.
+    pub stage: usize,
+    /// Merged GEMM flushes that ran this stage.
+    pub flushes: u64,
+    /// Total activation rows those flushes carried (M summed).
+    pub rows: u64,
+}
+
+impl StageFlushSnapshot {
+    /// Mean merged rows per flush at this stage (0 before any flush).
+    pub fn rows_per_flush(&self) -> f64 {
+        if self.flushes == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.flushes as f64
+        }
+    }
+}
+
 impl EngineStatsSnapshot {
     /// Resident placement hit rate over all lookups so far (0 when no
     /// resident lookup has happened).
@@ -374,6 +402,12 @@ pub(crate) struct EngineCore {
     /// the global `stats` book is mirrored into exactly one tenant book,
     /// so tenant books always sum to the global counters.
     tenant_stats: RwLock<Vec<Arc<EngineStats>>>,
+    /// Per-layer-stage `(flushes, rows)` flush counters, indexed by
+    /// stage and grown on first use (the engine does not know network
+    /// depth up front). Charged by the coordinator's per-layer resident
+    /// path; a plain mutex is fine — one charge per layer per merged
+    /// flush, not per work item.
+    stage_flushes: Mutex<Vec<(u64, u64)>>,
 }
 
 impl EngineCore {
@@ -590,6 +624,7 @@ impl TernaryGemmEngine {
             pool,
             stats: EngineStats::default(),
             tenant_stats: RwLock::new(vec![Arc::new(EngineStats::default())]),
+            stage_flushes: Mutex::new(Vec::new()),
         });
         let workers = core.cfg.n_threads.clamp(1, n_arrays);
         let exec = Executor::new(&core, workers);
@@ -660,6 +695,32 @@ impl TernaryGemmEngine {
             books.push(Arc::new(EngineStats::default()));
         }
         Ok(tenant)
+    }
+
+    /// Charge one merged flush of `rows` activation rows to layer stage
+    /// `stage`'s flush book. Called by the coordinator's per-layer
+    /// resident path (serial and pipelined alike), so
+    /// [`Self::stage_flush_stats`] reports real per-stage M regardless
+    /// of admission policy.
+    pub fn note_stage_flush(&self, stage: usize, rows: usize) {
+        let mut book =
+            self.core.stage_flushes.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        if book.len() <= stage {
+            book.resize(stage + 1, (0, 0));
+        }
+        book[stage].0 += 1;
+        book[stage].1 += rows as u64;
+    }
+
+    /// Per-stage flush counters charged via [`Self::note_stage_flush`],
+    /// one entry per layer stage seen so far (empty before any charge).
+    pub fn stage_flush_stats(&self) -> Vec<StageFlushSnapshot> {
+        let book =
+            self.core.stage_flushes.lock().unwrap_or_else(std::sync::PoisonError::into_inner);
+        book.iter()
+            .enumerate()
+            .map(|(stage, &(flushes, rows))| StageFlushSnapshot { stage, flushes, rows })
+            .collect()
     }
 
     /// Executor counters: items submitted/executed, the

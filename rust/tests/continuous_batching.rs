@@ -154,6 +154,7 @@ fn merged_serving_matches_reference_forward_and_batches_above_manifest_batch() {
         max_batch: 4,
         max_batch_rows: 16,
         max_wait: Duration::from_millis(400),
+        ..Default::default()
     };
     let server = Server::start(cfg).unwrap();
     let manifest = Manifest::load(&dir).unwrap();
@@ -193,6 +194,7 @@ fn max_batch_rows_bounds_every_flush() {
         max_batch: 8,
         max_batch_rows: 3,
         max_wait: Duration::from_millis(10),
+        ..Default::default()
     };
     let server = Server::start(cfg).unwrap();
     let mut rng = Rng::new(26);
@@ -221,6 +223,7 @@ fn shutdown_drains_merged_in_flight_replies() {
         max_batch: 4,
         max_batch_rows: 8,
         max_wait: Duration::from_millis(1),
+        ..Default::default()
     };
     let server = Server::start(cfg).unwrap();
     let mut rng = Rng::new(28);

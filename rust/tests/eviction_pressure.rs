@@ -8,7 +8,9 @@
 //! analytic `Residency::Bounded` charge must equal the engine's
 //! *measured* steady-state write rows exactly across a capacity sweep.
 
-use sitecim::arch::{sweep_miss_fraction, AccelConfig, Accelerator, Residency};
+use sitecim::arch::{
+    sweep_miss_fraction, sweep_miss_fraction_weighted, AccelConfig, Accelerator, Residency,
+};
 use sitecim::array::Design;
 use sitecim::device::Tech;
 use sitecim::dnn::{Layer, Network};
@@ -211,6 +213,57 @@ fn bounded_analytic_charge_matches_measured_sweep_write_rows() {
         // never exceeds the old streaming worst case.
         assert_eq!(bounded.compute_latency, streaming.compute_latency);
         assert!(bounded.write_energy <= streaming.write_energy, "cap {cap}");
+    }
+}
+
+#[test]
+fn weighted_sweep_closed_form_matches_measured_ragged_tile_counters() {
+    // Non-uniform region sizes: k = 7·256 + 128 shards into seven full
+    // 256-row tiles plus a 128-row tail (all full-width, one region per
+    // array), S = 1920 write rows per full pass. The size-weighted
+    // closed form says the second-chance steady state keeps the *first*
+    // C − 1 sweep regions resident, so S − (C−1)·256 rows re-program
+    // per pass — verified region-by-region in a Python port of
+    // `SlotSpace`/`TileCache::place` (repo convention) before pinning
+    // the `==` here, and cross-checked against the engine's measured
+    // per-pass `write_rows` across the whole capacity sweep.
+    let (m, k, n) = (1usize, 7 * 256 + 128, 256usize);
+    let sizes: Vec<u64> = [[256u64; 7].as_slice(), &[128]].concat();
+    let total: u64 = sizes.iter().sum();
+    assert_eq!(total, 1920);
+    let mut rng = Rng::new(501);
+    let x = rng.ternary_vec(m * k, 0.5);
+    let w = rng.ternary_vec(k * n, 0.5);
+    for cap in 2..=8u64 {
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+                .with_capacity_words(cap * 256 * 256)
+                .with_threads(1),
+        );
+        assert_eq!(engine.pool_arrays(), cap as usize);
+        let grid = engine.grid(k, n);
+        assert_eq!(grid.n_tiles_total() as u64, 8, "7 full + 1 tail tile");
+        let id = engine.register_weight(&w, k, n).unwrap();
+        engine.gemm_resident(id, &x, m).unwrap(); // cold pass
+        engine.gemm_resident(id, &x, m).unwrap(); // reach steady state
+        let before = engine.stats();
+        engine.gemm_resident(id, &x, m).unwrap(); // one steady pass
+        let measured = engine.stats().since(&before).write_rows;
+        let want_rows = if cap >= 8 { 0 } else { total - (cap - 1) * 256 };
+        assert_eq!(measured, want_rows, "cap {cap}: steady ragged-sweep miss rows");
+        // The closed form equals the measured fraction exactly (both
+        // are the same integer ratio), and the uniform function applied
+        // to the region *count* would misprice the ragged set — the
+        // weighted form exists precisely for this gap.
+        let frac = sweep_miss_fraction_weighted(&sizes, cap);
+        assert_eq!(frac, measured as f64 / total as f64, "cap {cap}: weighted fraction");
+        if cap < 8 {
+            assert_ne!(
+                frac,
+                sweep_miss_fraction(8, cap),
+                "cap {cap}: ragged sizes must not price like uniform regions"
+            );
+        }
     }
 }
 

@@ -104,6 +104,7 @@ fn overload_sheds_excess_load_and_keeps_admitted_latency_bounded() {
         max_batch: 8,
         max_batch_rows: 64,
         max_wait: Duration::from_millis(20),
+        ..Default::default()
     };
     cfg.ingress =
         IngressConfig { shed: Some(Watermarks { high: 4, low: 1 }), ..Default::default() };
@@ -117,8 +118,9 @@ fn overload_sheds_excess_load_and_keeps_admitted_latency_bounded() {
         let input = rng.ternary_vec(24, 0.5);
         match server.infer_async(input) {
             Ok(rx) => pending.push(rx),
-            Err(msg) => {
-                assert!(msg.contains("overloaded"), "unexpected rejection: {msg}");
+            Err(e) => {
+                assert!(e.to_string().contains("overloaded"), "unexpected rejection: {e}");
+                assert_eq!(e.retry_after_s(), None, "shed clears on load, not a clock");
                 shed_replies += 1;
             }
         }
@@ -183,8 +185,13 @@ fn rate_limit_refuses_before_enqueue_at_server_level() {
     for _ in 0..6 {
         match server.infer_async(rng.ternary_vec(24, 0.5)) {
             Ok(rx) => pending.push(rx),
-            Err(msg) => {
-                assert!(msg.contains("rate limited"), "unexpected rejection: {msg}");
+            Err(e) => {
+                assert!(e.to_string().contains("rate limited"), "unexpected rejection: {e}");
+                // The Retry-After hint: at 0.001 tokens/s an empty
+                // bucket refills one token in ~1000 s — the typed error
+                // carries the bucket's own estimate.
+                let retry = e.retry_after_s().expect("rate limits carry a retry hint");
+                assert!(retry > 900.0, "retry hint {retry}s must reflect the slow refill");
                 limited += 1;
             }
         }
@@ -212,11 +219,11 @@ fn malformed_requests_never_reach_the_batcher() {
     write_synth_artifacts(&dir, &[24, 12, 8], 8, 9);
     let server = Server::start(engine_server_config(dir, 1)).unwrap();
 
-    let short = server.infer_async(vec![1i8; 23]).unwrap_err();
+    let short = server.infer_async(vec![1i8; 23]).unwrap_err().to_string();
     assert!(short.contains("bad request shape") && short.contains("23"), "{short}");
     let mut bad = vec![0i8; 24];
     bad[7] = 7;
-    let nontrit = server.infer_async(bad).unwrap_err();
+    let nontrit = server.infer_async(bad).unwrap_err().to_string();
     assert!(nontrit.contains("bad request shape") && nontrit.contains("non-trit"), "{nontrit}");
 
     let mut rng = Rng::new(2);
@@ -246,6 +253,7 @@ fn shed_latch_recovers_at_low_water_after_drain() {
         max_batch: 8,
         max_batch_rows: 64,
         max_wait: Duration::from_millis(100),
+        ..Default::default()
     };
     cfg.ingress =
         IngressConfig { shed: Some(Watermarks { high: 2, low: 1 }), ..Default::default() };
@@ -254,7 +262,7 @@ fn shed_latch_recovers_at_low_water_after_drain() {
     let mut rng = Rng::new(4);
     let a = server.infer_async(rng.ternary_vec(24, 0.5)).unwrap();
     let b = server.infer_async(rng.ternary_vec(24, 0.5)).unwrap();
-    let rejected = server.infer_async(rng.ternary_vec(24, 0.5)).unwrap_err();
+    let rejected = server.infer_async(rng.ternary_vec(24, 0.5)).unwrap_err().to_string();
     assert!(rejected.contains("overloaded"), "{rejected}");
     assert!(server.ingress().is_shedding(), "high water latches the shedder");
 
@@ -296,11 +304,11 @@ fn multi_server_report_sums_tenant_ledgers_including_unknown_models() {
     for _ in 0..2 {
         pending.push(server.infer_async("beta", rng.ternary_vec(16, 0.5)).unwrap());
     }
-    let ghost = server.infer_async("ghost", rng.ternary_vec(24, 0.5)).unwrap_err();
+    let ghost = server.infer_async("ghost", rng.ternary_vec(24, 0.5)).unwrap_err().to_string();
     assert!(ghost.contains("unknown model"), "{ghost}");
     // A plane shaped for beta offered to alpha: rejected by alpha's
     // manifest dimension through the shared gate.
-    let cross = server.infer_async("alpha", rng.ternary_vec(16, 0.5)).unwrap_err();
+    let cross = server.infer_async("alpha", rng.ternary_vec(16, 0.5)).unwrap_err().to_string();
     assert!(cross.contains("bad request shape"), "{cross}");
     for rx in &pending {
         rx.recv().unwrap().expect("admitted request must be served");

@@ -1,0 +1,353 @@
+//! Integration: layer-pipelined continuous batching — admission at
+//! every layer boundary, not just layer 0.
+//!
+//! The hard invariant is bit-exactness: rows are independent in the
+//! GEMM M dimension and late rows are caught up through the layers they
+//! missed against the *same resident weights*, so a flush that absorbs
+//! rows mid-pipeline must produce, for every request, exactly the
+//! logits a serial per-request execution produces — across all three
+//! designs and thread counts. On top sit the serving semantics: late
+//! admission happens at every interior boundary (observable in the
+//! per-stage metrics histogram), deadline-partial flushes stay correct,
+//! and shutdown drains rows no matter which stage admitted them.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use sitecim::array::mac::Flavor;
+use sitecim::array::Design;
+use sitecim::coordinator::server::Request;
+use sitecim::coordinator::{
+    run_pipelined_flush, BatchPolicy, EngineBackend, InferenceBackend, LayerPipeline, Metrics,
+    Server, ServerConfig,
+};
+use sitecim::device::Tech;
+use sitecim::dnn::ternary::ternarize_acts_i32;
+use sitecim::engine::tiling::{reference_gemm, TileGrid};
+use sitecim::runtime::Manifest;
+use sitecim::util::rng::Rng;
+
+/// A unique temp artifacts dir per test (tests run in parallel in one
+/// process, so the tag must differ per call site).
+fn synth_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("sitecim-pbatch-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+fn trit_bytes(trits: &[i8]) -> Vec<u8> {
+    trits.iter().map(|&t| t as u8).collect()
+}
+
+/// Write a servable synthetic MLP: random ternary weights for each
+/// `dims` transition, activation thresholds between layers, and a tiny
+/// test set.
+fn write_synth_artifacts(dir: &Path, dims: &[usize], batch: usize, seed: u64) {
+    assert!(dims.len() >= 2);
+    let mut rng = Rng::new(seed);
+    let mut weights_json = String::new();
+    for i in 0..dims.len() - 1 {
+        let (k, n) = (dims[i], dims[i + 1]);
+        let w = rng.ternary_vec(k * n, 0.5);
+        std::fs::write(dir.join(format!("w{i}.bin")), trit_bytes(&w)).unwrap();
+        if i > 0 {
+            weights_json.push_str(", ");
+        }
+        weights_json.push_str(&format!("{{\"file\": \"w{i}.bin\", \"shape\": [{k}, {n}]}}"));
+    }
+    let in_dim = dims[0];
+    let test_n = 4usize;
+    let x = rng.ternary_vec(test_n * in_dim, 0.5);
+    std::fs::write(dir.join("test_x.bin"), trit_bytes(&x)).unwrap();
+    std::fs::write(dir.join("test_y.bin"), vec![0u8; test_n]).unwrap();
+    let thresholds = vec!["0.5"; dims.len() - 2].join(", ");
+    let dims_json = dims.iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ");
+    let manifest = format!(
+        "{{\n  \"batch\": {batch},\n  \"dims\": [{dims_json}],\n  \"act_thresholds\": [{thresholds}],\n  \"kernel_shape\": [8, 16, 16],\n  \"files\": {{}},\n  \"weights\": [{weights_json}],\n  \"scales\": [1.0],\n  \"test_set\": {{\"x\": \"test_x.bin\", \"y\": \"test_y.bin\", \"n\": {test_n}, \"in_dim\": {in_dim}}},\n  \"accuracy\": {{}}\n}}\n"
+    );
+    std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+}
+
+/// The reference forward pass for `Design::Cim1` serving:
+/// `reference_gemm` over 256×256 tiles + the recorded thresholds.
+fn reference_forward(manifest: &Manifest, input: &[i8]) -> Vec<f32> {
+    let mut h = input.to_vec();
+    for i in 0..manifest.weights.len() {
+        let (w, (k, n)) = manifest.load_weight(i).unwrap();
+        let y = reference_gemm(&h, &w, 1, &TileGrid::new(k, n, 256, 256), Some(Flavor::Cim1));
+        if i + 1 < manifest.weights.len() {
+            h = ternarize_acts_i32(&y, manifest.act_thresholds[i]);
+        } else {
+            return y.iter().map(|&v| v as f32).collect();
+        }
+    }
+    unreachable!()
+}
+
+/// Wrap `input` as a queued request. The direct-drive tests never send
+/// replies (that is the worker loop's scatter, not the flush), so the
+/// reply receiver can drop immediately.
+fn request(input: Vec<i8>) -> Request {
+    let (rtx, _) = std::sync::mpsc::sync_channel(1);
+    Request { input, enqueued: Instant::now(), resp: rtx }
+}
+
+/// Drive one pipelined flush by hand: `initial` rows form the plane,
+/// `late` rows wait in the queue and are admitted at layer boundaries
+/// under `policy`. Returns the flush logits in final item order plus
+/// the per-stage admissions histogram.
+fn drive_flush(
+    backend: &EngineBackend,
+    policy: &BatchPolicy,
+    initial: &[Vec<i8>],
+    late: &[Vec<i8>],
+) -> (Vec<Vec<f32>>, Vec<(usize, u64, u64)>) {
+    let (tx, rx) = channel::<Request>();
+    for input in late {
+        tx.send(request(input.clone())).unwrap();
+    }
+    let rx = Mutex::new(rx);
+    let metrics = Metrics::new();
+    let mut items: Vec<Request> = initial.iter().map(|i| request(i.clone())).collect();
+    let plane: Arc<[i8]> = initial.concat().into();
+    let logits =
+        run_pipelined_flush(backend, policy, &rx, &metrics, &mut items, plane).unwrap();
+    let out_dim = backend.out_dim();
+    assert_eq!(logits.len(), items.len() * out_dim, "one logit row per absorbed request");
+    assert_eq!(items.len(), initial.len() + late.len(), "every queued row was absorbed");
+    // Final item order must be initial rows first, then late rows in
+    // queue order — the scatter relies on it.
+    for (i, want) in initial.iter().chain(late.iter()).enumerate() {
+        assert_eq!(&items[i].input, want, "row {i} out of order");
+    }
+    let rows = logits.chunks(out_dim).map(|c| c.to_vec()).collect();
+    let hist = metrics
+        .stage_admit_histogram()
+        .into_iter()
+        .map(|s| (s.stage, s.admissions, s.rows))
+        .collect();
+    (rows, hist)
+}
+
+#[test]
+fn boundary_admission_is_bit_exact_vs_serial_across_designs_and_threads() {
+    // The tentpole's headline invariant. 3 layers → interior boundaries
+    // at layers 1 and 2; with `max_stage_admit_rows: 1` exactly one of
+    // the two queued late rows is admitted at each boundary, so both
+    // catch-up depths (1 layer missed, 2 layers missed) are exercised.
+    // Every absorbed row must equal its own serial single-row run.
+    let dir = synth_dir("bitexact");
+    write_synth_artifacts(&dir, &[48, 32, 16, 8], 4, 40);
+    let manifest = Manifest::load(&dir).unwrap();
+    let policy = BatchPolicy { max_stage_admit_rows: 1, ..Default::default() };
+    let mut rng = Rng::new(41);
+    let initial: Vec<Vec<i8>> = (0..3).map(|_| rng.ternary_vec(48, 0.5)).collect();
+    let late: Vec<Vec<i8>> = (0..2).map(|_| rng.ternary_vec(48, 0.5)).collect();
+    for design in Design::ALL {
+        for threads in [1usize, 4] {
+            let b = EngineBackend::load(&manifest, design, Tech::Femfet3T, threads, None).unwrap();
+            assert_eq!(b.n_layers(), 3);
+            let (rows, hist) = drive_flush(&b, &policy, &initial, &late);
+            for (i, input) in initial.iter().chain(late.iter()).enumerate() {
+                let serial = b.run_batch(input, 1).unwrap();
+                assert_eq!(rows[i], serial, "{design:?} threads={threads} row {i}");
+            }
+            // One single-row admission at each interior boundary.
+            assert_eq!(
+                hist,
+                vec![(0, 0, 0), (1, 1, 1), (2, 1, 1)],
+                "{design:?} threads={threads}: every interior boundary admits"
+            );
+        }
+    }
+}
+
+#[test]
+fn pipelined_flush_without_arrivals_equals_serial_batch_path() {
+    // With an empty queue the stage loop must degenerate to exactly the
+    // serial `run_batch_arc` composition — same plane, same result.
+    let dir = synth_dir("degenerate");
+    write_synth_artifacts(&dir, &[40, 24, 8], 4, 42);
+    let manifest = Manifest::load(&dir).unwrap();
+    let policy = BatchPolicy::default();
+    let mut rng = Rng::new(43);
+    let inputs: Vec<Vec<i8>> = (0..5).map(|_| rng.ternary_vec(40, 0.5)).collect();
+    for design in Design::ALL {
+        let b = EngineBackend::load(&manifest, design, Tech::Femfet3T, 2, None).unwrap();
+        let (rows, hist) = drive_flush(&b, &policy, &inputs, &[]);
+        let serial = b.run_batch_arc(inputs.concat().into(), inputs.len()).unwrap();
+        let flat: Vec<f32> = rows.concat();
+        assert_eq!(flat, serial, "{design:?}");
+        assert!(
+            hist.iter().all(|&(_, admissions, rows)| admissions == 0 && rows == 0),
+            "{design:?}: nothing to admit"
+        );
+    }
+}
+
+#[test]
+fn stage_budget_respects_row_cap_and_catchup_cutoff_in_flight() {
+    // `max_batch_rows` caps the whole in-flight plane, not just layer
+    // 0: with 4 resident rows and a cap of 5, only one late row fits —
+    // the second stays queued. A `max_catchup_frac` of 0 turns
+    // boundary admission off entirely even with budget available.
+    let dir = synth_dir("budget");
+    write_synth_artifacts(&dir, &[32, 16, 8], 4, 44);
+    let manifest = Manifest::load(&dir).unwrap();
+    let b = EngineBackend::load(&manifest, Design::Cim1, Tech::Femfet3T, 1, None).unwrap();
+    let mut rng = Rng::new(45);
+    let initial: Vec<Vec<i8>> = (0..4).map(|_| rng.ternary_vec(32, 0.5)).collect();
+    let late: Vec<Vec<i8>> = (0..2).map(|_| rng.ternary_vec(32, 0.5)).collect();
+
+    let capped = BatchPolicy { max_batch_rows: 5, ..Default::default() };
+    let (tx, rx) = channel::<Request>();
+    for input in &late {
+        tx.send(request(input.clone())).unwrap();
+    }
+    let rx = Mutex::new(rx);
+    let metrics = Metrics::new();
+    let mut items: Vec<Request> = initial.iter().map(|i| request(i.clone())).collect();
+    let logits =
+        run_pipelined_flush(&b, &capped, &rx, &metrics, &mut items, initial.concat().into())
+            .unwrap();
+    assert_eq!(items.len(), 5, "row cap admits exactly one late row");
+    assert_eq!(logits.len(), 5 * b.out_dim());
+    assert_eq!(
+        rx.lock().unwrap().try_recv().unwrap().input,
+        late[1],
+        "the over-cap row stays queued for the next flush"
+    );
+    for (i, input) in initial.iter().chain(late.iter().take(1)).enumerate() {
+        let serial = b.run_batch(input, 1).unwrap();
+        assert_eq!(&logits[i * b.out_dim()..(i + 1) * b.out_dim()], serial, "row {i}");
+    }
+
+    let frozen = BatchPolicy { max_catchup_frac: 0.0, ..Default::default() };
+    let (rows, hist) = drive_flush_partial(&b, &frozen, &initial);
+    assert_eq!(rows.len(), initial.len());
+    assert!(hist.iter().all(|&(_, a, r)| a == 0 && r == 0), "cutoff 0 admits nowhere");
+}
+
+/// `drive_flush` against an empty queue, for policies that must not
+/// admit anything.
+fn drive_flush_partial(
+    backend: &EngineBackend,
+    policy: &BatchPolicy,
+    initial: &[Vec<i8>],
+) -> (Vec<Vec<f32>>, Vec<(usize, u64, u64)>) {
+    drive_flush(backend, policy, initial, &[])
+}
+
+#[test]
+fn served_replies_match_reference_forward_with_boundary_admission_on() {
+    // Server-level end-to-end: boundary admission is on by default and
+    // a continuous request stream (no barriers between submissions)
+    // gives flushes every chance to absorb rows mid-pipeline. Every
+    // reply must equal the per-request reference forward regardless of
+    // which flush, and which stage of it, served the row.
+    let dir = synth_dir("serve");
+    write_synth_artifacts(&dir, &[32, 24, 16, 8], 4, 46);
+    let mut cfg = ServerConfig::new(dir.clone()).with_engine_backend();
+    cfg.n_workers = 2;
+    cfg.engine_threads = 2;
+    cfg.policy = BatchPolicy {
+        max_batch: 4,
+        max_batch_rows: 16,
+        max_wait: Duration::from_millis(5),
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Rng::new(47);
+    let mut pending = Vec::new();
+    for _ in 0..48 {
+        let input = rng.ternary_vec(32, 0.5);
+        let want = reference_forward(&manifest, &input);
+        pending.push((want, server.infer_async(input).unwrap()));
+    }
+    for (want, rx) in pending {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.logits, want, "pipelined serving must match the reference forward");
+    }
+    assert_eq!(server.metrics.requests.load(Ordering::Relaxed), 48);
+    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+    let hist = server.metrics.stage_admit_histogram();
+    assert!(!hist.is_empty() && hist[0].rows > 0, "layer-0 admissions recorded");
+    assert_eq!(
+        hist.iter().map(|s| s.rows).sum::<u64>(),
+        48,
+        "every request admitted at exactly one stage"
+    );
+    assert_eq!(server.metrics.pipeline_active(), 0, "no flush left in flight");
+    server.shutdown();
+}
+
+#[test]
+fn deadline_partial_flushes_stay_correct_under_trickled_load() {
+    // A 1 ms deadline with requests trickled in one at a time forces
+    // deadline-partial flushes (and gives late rows a real chance to
+    // land mid-pipeline on the busy worker). Correctness must not
+    // depend on how the rows happened to be cut into flushes.
+    let dir = synth_dir("deadline");
+    write_synth_artifacts(&dir, &[32, 16, 8], 4, 48);
+    let mut cfg = ServerConfig::new(dir.clone()).with_engine_backend();
+    cfg.n_workers = 1;
+    cfg.engine_threads = 1;
+    cfg.policy = BatchPolicy {
+        max_batch: 8,
+        max_batch_rows: 8,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut rng = Rng::new(49);
+    let mut pending = Vec::new();
+    for i in 0..12 {
+        let input = rng.ternary_vec(32, 0.5);
+        let want = reference_forward(&manifest, &input);
+        pending.push((want, server.infer_async(input).unwrap()));
+        if i % 3 == 0 {
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+    for (want, rx) in pending {
+        let reply = rx.recv().unwrap().unwrap();
+        assert_eq!(reply.logits, want);
+    }
+    assert_eq!(server.metrics.requests.load(Ordering::Relaxed), 12);
+    assert_eq!(server.metrics.errors.load(Ordering::Relaxed), 0);
+    server.shutdown();
+}
+
+#[test]
+fn shutdown_drains_rows_admitted_at_any_stage() {
+    // Close the queue with a pile of unanswered requests on workers
+    // whose flushes admit at every boundary: every reply channel must
+    // still be answered — rows absorbed mid-pipeline included — before
+    // the workers exit.
+    let dir = synth_dir("drain");
+    write_synth_artifacts(&dir, &[32, 24, 16, 8], 4, 50);
+    let mut cfg = ServerConfig::new(dir).with_engine_backend();
+    cfg.n_workers = 2;
+    cfg.engine_threads = 2;
+    cfg.policy = BatchPolicy {
+        max_batch: 4,
+        max_batch_rows: 8,
+        max_wait: Duration::from_millis(1),
+        ..Default::default()
+    };
+    let server = Server::start(cfg).unwrap();
+    let mut rng = Rng::new(51);
+    let pending: Vec<_> =
+        (0..30).map(|_| server.infer_async(rng.ternary_vec(32, 0.5)).unwrap()).collect();
+    server.shutdown();
+    for rx in pending {
+        let reply = rx.recv().expect("reply delivered before shutdown completed");
+        assert!(reply.is_ok());
+    }
+}
