@@ -23,6 +23,12 @@
 //! analogue of the shared sweep, recorded from the per-tenant stat
 //! books so the isolation of the reserved partition is gateable too.
 //!
+//! A separate `conv:mix` sweep replays the im2col GEMM shapes of
+//! AlexNet's conv layers at full array size: their ragged K tails and
+//! sub-half-width N columns shelf-pack several regions per array, so
+//! those rows put the CLOCK pool under pressure on the *packing*
+//! capacity currency that the uniform FC stack never exercises.
+//!
 //! Emits `BENCH_capacity.json` (uploaded as a CI artifact alongside
 //! `BENCH_engine.json`).
 //!
@@ -138,6 +144,51 @@ fn proxy_tenant_counters(
         (reserve, dr.hits, dr.misses, dr.evictions, dr.hit_rate()),
         (arrays - reserve, ds.hits, ds.misses, ds.evictions, ds.hit_rate()),
     ])
+}
+
+/// Conv-shaped tile mix: the im2col GEMM shapes of AlexNet's five conv
+/// layers (k = cin·ksize², n = cout). Their ragged K edges (363, 2400,
+/// 2304, 3456) and the narrow first-layer N shard into a mix of full
+/// 256-row tiles, short tails and sub-half-width regions — exactly the
+/// class where shelf *packing* (not region count) is the capacity
+/// currency — so sweeping them through an undersized pool exercises the
+/// CLOCK scan's packing path the uniform FC stack never touches.
+const CONV_DIMS: [(usize, usize); 5] =
+    [(363, 96), (2400, 256), (2304, 384), (3456, 384), (3456, 256)];
+
+/// Deterministic replay of the conv-shaped mix. The 1/8 proxy cannot
+/// represent these edges (363 % 128 ≠ 0 would shift the padded 16-row
+/// group fractions), so this replay runs at full array size with zero
+/// weights: still single-threaded, bit-reproducible on any machine, and
+/// the m=1 MAC cost is negligible.
+fn conv_replay_counters(
+    dims: &[(usize, usize)],
+    arrays: usize,
+    reps: usize,
+) -> (u64, u64, u64, f64) {
+    let engine = TernaryGemmEngine::new(
+        EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+            .with_capacity_words(arrays as u64 * WORDS_PER_ARRAY)
+            .with_threads(1),
+    );
+    assert_eq!(engine.pool_arrays(), arrays);
+    let ids: Vec<_> = dims
+        .iter()
+        .map(|&(k, n)| engine.register_weight(&vec![0i8; k * n], k, n).unwrap())
+        .collect();
+    let xs: Vec<Vec<i8>> = dims.iter().map(|&(k, _)| vec![0i8; k]).collect();
+    let one_pass = || {
+        for (id, x) in ids.iter().zip(&xs) {
+            engine.gemm_resident(*id, x, 1).unwrap();
+        }
+    };
+    one_pass(); // warm
+    let before = engine.stats();
+    for _ in 0..reps {
+        one_pass();
+    }
+    let d = engine.stats().since(&before);
+    (d.hits, d.misses, d.evictions, d.hit_rate())
 }
 
 struct Entry {
@@ -296,6 +347,34 @@ fn main() {
                 inf_per_s: 0.0,
             });
         }
+    }
+
+    // Conv-shaped tile-mix sweep (`conv:mix` rows): the im2col GEMM
+    // shapes replayed at full array size (see `conv_replay_counters`),
+    // from 1/4 of the one-array-per-tile budget up to fully resident.
+    // Ragged short-tail and sub-half-width regions shelf-pack several
+    // per array here, so these rows pressure the CLOCK pool on the
+    // packing currency the uniform FC stack never exercises. The rows
+    // carry no throughput figure (inf_per_s recorded as 0).
+    let conv_tiles: u64 = CONV_DIMS.iter().map(|&(k, n)| tiles(k, n)).sum();
+    let conv_fit = conv_tiles * WORDS_PER_ARRAY;
+    for cap in [conv_fit / 4, conv_fit / 2, 3 * conv_fit / 4, conv_fit] {
+        let arrays = ((cap / WORDS_PER_ARRAY) as usize).max(1);
+        let (hits, misses, evictions, hit_rate) = conv_replay_counters(&CONV_DIMS, arrays, reps);
+        println!(
+            "{:<13} cap {:>10} words ({:>3} arrays): hit rate {:>5.1}%  ({} h / {} m / {} e, deterministic replay)",
+            "conv:mix", cap, arrays, 100.0 * hit_rate, hits, misses, evictions,
+        );
+        entries.push(Entry {
+            design: "conv:mix".to_string(),
+            capacity_words: cap,
+            arrays,
+            hits,
+            misses,
+            evictions,
+            hit_rate,
+            inf_per_s: 0.0,
+        });
     }
 
     let mut json = String::from("{\n");

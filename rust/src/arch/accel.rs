@@ -20,12 +20,17 @@
 //! resident modes on the functional engine and cross-checks the
 //! engine's tile/window/write-row counters against [`map_layer`] exactly.
 
+use std::sync::Arc;
+
 use super::config::AccelConfig;
 use super::mapper::{map_layer, LayerWork};
 use crate::array::area::Design;
+use crate::array::encoding::Trit;
 use crate::array::metrics::{all_designs, DesignMetrics};
+use crate::array::Rect;
 use crate::device::{PeriphParams, TechParams};
-use crate::dnn::{Layer, Network};
+use crate::dnn::{lower, Layer, Network};
+use crate::engine::resident::TileCache;
 use crate::engine::tiling::reference_gemm;
 use crate::engine::{EngineConfig, EngineStatsSnapshot, TernaryGemmEngine};
 use crate::util::rng::Rng;
@@ -104,9 +109,13 @@ pub fn sweep_miss_fraction(packed: u64, capacity: u64) -> f64 {
 /// Valid for the placement class the engine's weight tiles occupy: one
 /// region per array (each region taller than half an array), so region
 /// count is the capacity currency. Smaller regions that shelf-pack two
-/// to an array can churn inside packing holes and miss *more* than
-/// this form — it is a lower bound there, with `1.0` (streaming) the
-/// universal worst case. `0` when the set fits (`W ≤ capacity`).
+/// (or more) to an array — exactly the mix conv-shaped shard grids
+/// produce — live on a different capacity currency (packed rows, not
+/// regions) and this form is only a bound there; use
+/// [`sweep_miss_fraction_packed`], which replays the real shelf packer
+/// and CLOCK scan and is exact for every mix (and bitwise-equal to
+/// this closed form on the one-region-per-array class). `0` when the
+/// set fits (`W ≤ capacity`).
 pub fn sweep_miss_fraction_weighted(region_rows: &[u64], capacity: u64) -> f64 {
     let w = region_rows.len() as u64;
     let total: u64 = region_rows.iter().sum();
@@ -116,6 +125,133 @@ pub fn sweep_miss_fraction_weighted(region_rows: &[u64], capacity: u64) -> f64 {
     let resident: u64 =
         region_rows.iter().take(capacity.saturating_sub(1) as usize).sum();
     (((total - resident) as f64) / total as f64).min(1.0)
+}
+
+/// Steady-state outcome of [`packed_sweep_model`]: the second-chance
+/// cache's periodic orbit on a cyclic sweep of shelf-packed regions.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PackedSweepModel {
+    /// Passes from cold start until the cache state enters the cycle.
+    pub warmup_passes: u64,
+    /// Cycle length in passes (1 for the classic one-region-per-array
+    /// steady state; packing holes can produce longer orbits).
+    pub period: u64,
+    /// Weight rows re-programmed over one full cycle — the engine's
+    /// measured `write_rows` delta over any `period` consecutive
+    /// steady-state passes, content-tag reuse included.
+    pub miss_rows_per_cycle: u64,
+    /// Total true rows across all regions (one cold pass programs
+    /// exactly this).
+    pub total_rows: u64,
+}
+
+impl PackedSweepModel {
+    /// Fraction of the total write rows that re-program per pass,
+    /// averaged over the cycle. Bitwise-equal to
+    /// [`sweep_miss_fraction_weighted`] on one-region-per-array mixes
+    /// (period 1, same integer quotient).
+    pub fn miss_fraction(&self) -> f64 {
+        if self.total_rows == 0 {
+            return 0.0;
+        }
+        (self.miss_rows_per_cycle as f64 / (self.period * self.total_rows) as f64).min(1.0)
+    }
+}
+
+/// Upper bound on replay passes before the model gives up looking for a
+/// cycle (the CLOCK state space is finite so a cycle always exists;
+/// this is a safety valve, not an expected path).
+const PACKED_SWEEP_MAX_PASSES: usize = 1024;
+
+/// Packing-aware sweep-miss model: replays a cyclic sweep of `regions`
+/// (true `(rows, cols)` per region, in sweep order) against the
+/// engine's *actual* placement machinery — the same shelf packer,
+/// second-chance victim scan, and content-tag reuse rule the resident
+/// path runs — on a pool of `capacity_arrays` arrays of
+/// `array_rows × array_cols` cells (floored at one array, like the
+/// engine pool), then detects the steady-state cycle of the cache
+/// state and returns its period and per-cycle re-programmed rows.
+///
+/// Two effects make this exact where the closed forms are only bounds:
+/// regions at most half an array tall **shelf-pack two (or more) per
+/// array**, so the capacity currency is packed rows rather than region
+/// count, and programming charges follow the engine's **content tags**
+/// — a region evicted and later re-placed at its old rect with the tag
+/// intact (nothing overwrote those cells in between) re-programs zero
+/// rows despite the placement miss. Both are replayed, not
+/// approximated, so the result matches the engine's measured per-pass
+/// `write_rows` exactly (cross-checked in `tests/eviction_pressure.rs`
+/// on a conv-shaped ragged grid).
+pub fn packed_sweep_model(
+    regions: &[(usize, usize)],
+    capacity_arrays: u64,
+    array_rows: usize,
+    array_cols: usize,
+) -> PackedSweepModel {
+    let total_rows: u64 = regions.iter().map(|&(r, _)| r as u64).sum();
+    if regions.is_empty() || total_rows == 0 {
+        return PackedSweepModel { warmup_passes: 0, period: 1, miss_rows_per_cycle: 0, total_rows };
+    }
+    let n_slots = capacity_arrays.max(1) as usize;
+    let mut cache = TileCache::new(n_slots, array_rows, array_cols);
+    // Mirror of each pool slot's content tags (`PoolSlot::programmed`):
+    // programming a rect clobbers every overlapping tag; cache eviction
+    // leaves tags alone, which is what lets an exact re-placement skip
+    // the write.
+    let mut tags: Vec<Vec<(Rect, usize)>> = vec![Vec::new(); n_slots];
+    let mut signatures = Vec::new();
+    let mut miss_rows: Vec<u64> = Vec::new();
+    loop {
+        let mut pass_rows = 0u64;
+        for (i, &(rows, cols)) in regions.iter().enumerate() {
+            let p = cache.place((0, i), rows, cols);
+            let slot_tags = &mut tags[p.slot];
+            let programmed = slot_tags.iter().any(|(r, key)| *r == p.rect && *key == i);
+            if !programmed {
+                slot_tags.retain(|(r, _)| !r.overlaps(&p.rect));
+                slot_tags.push((p.rect, i));
+                pass_rows += rows as u64;
+            }
+        }
+        miss_rows.push(pass_rows);
+        let sig = (cache.clock_signature(), tags.clone());
+        if let Some(first) = signatures.iter().position(|s| *s == sig) {
+            // The state after this pass equals the state after pass
+            // `first`: passes `first+1 ..= now` form the cycle.
+            return PackedSweepModel {
+                warmup_passes: first as u64 + 1,
+                period: (signatures.len() - first) as u64,
+                miss_rows_per_cycle: miss_rows[first + 1..].iter().sum(),
+                total_rows,
+            };
+        }
+        signatures.push(sig);
+        if signatures.len() >= PACKED_SWEEP_MAX_PASSES {
+            // Safety valve: charge the last observed pass as if it were
+            // the steady state.
+            return PackedSweepModel {
+                warmup_passes: signatures.len() as u64 - 1,
+                period: 1,
+                miss_rows_per_cycle: *miss_rows.last().unwrap(),
+                total_rows,
+            };
+        }
+    }
+}
+
+/// Packing-aware [`sweep_miss_fraction_weighted`]: the fraction of the
+/// total write rows that re-program per steady-state pass when
+/// `regions` (true `(rows, cols)` sizes, in sweep order) cycle through
+/// a pool of `capacity_arrays` arrays. Exact for shelf-packed mixes
+/// (replayed, not closed-form) and bitwise-equal to the weighted
+/// closed form on one-region-per-array mixes.
+pub fn sweep_miss_fraction_packed(
+    regions: &[(usize, usize)],
+    capacity_arrays: u64,
+    array_rows: usize,
+    array_cols: usize,
+) -> f64 {
+    packed_sweep_model(regions, capacity_arrays, array_rows, array_cols).miss_fraction()
 }
 
 /// [`Residency`] resolved against a concrete working set: what
@@ -366,6 +502,15 @@ impl Accelerator {
     /// exactly. In resident mode the weights are registered once, the
     /// pool is sized to the working set, and repeated passes must hit the
     /// tile cache instead of re-programming.
+    ///
+    /// Layers carrying lowering metadata execute through [`crate::dnn::lower`]:
+    /// conv layers run on a true im2col plane extracted from a random
+    /// activation image (and are additionally cross-checked against the
+    /// direct-convolution reference, window by window), and recurrent
+    /// layers run step by step against resident gate weights with the
+    /// hidden state threaded through the deterministic ternary cell
+    /// update — in *both* residency modes, since recurrent weights are
+    /// stationary by construction.
     pub fn run_cosim(&self, net: &Network, ccfg: &CosimConfig) -> CosimReport {
         let flavor = self.cfg.design.flavor();
         let repeats = ccfg.repeats.max(1);
@@ -373,12 +518,18 @@ impl Accelerator {
 
         // Pool sizing: resident mode must hold every tile of the slice at
         // once so the expected accounting is exact (no evictions).
+        // Recurrent layers take the resident path even in streaming mode,
+        // so the streaming pool must still hold every recurrent tile.
         let (rows, cols) = (self.cfg.geom.n_rows, self.cfg.geom.n_cols);
-        let total_tiles: usize = slice
-            .iter()
-            .map(|l| l.gemm.k.div_ceil(rows) * l.gemm.n.div_ceil(cols))
-            .sum();
-        let n_arrays = if ccfg.resident { total_tiles.max(1) } else { self.cfg.n_arrays };
+        let tiles_of = |l: &Layer| l.gemm.k.div_ceil(rows) * l.gemm.n.div_ceil(cols);
+        let total_tiles: usize = slice.iter().map(|l| tiles_of(l)).sum();
+        let recurrent_tiles: usize =
+            slice.iter().filter(|l| l.rnn.is_some()).map(|l| tiles_of(l)).sum();
+        let n_arrays = if ccfg.resident {
+            total_tiles.max(1)
+        } else {
+            self.cfg.n_arrays.max(recurrent_tiles).max(1)
+        };
         let engine = self.engine_sized(ccfg.n_threads, n_arrays);
 
         let mut rng = Rng::new(ccfg.seed);
@@ -386,10 +537,71 @@ impl Accelerator {
         let mut expected = EngineStatsSnapshot::default();
         for layer in &slice {
             let g = &layer.gemm;
-            let m = g.m.min(ccfg.max_vectors).max(1);
-            let x = rng.ternary_vec(m * g.k, 1.0 - layer.act_nz);
             let w = rng.ternary_vec(g.k * g.n, 1.0 - layer.w_nz);
-            let want = reference_gemm(&x, &w, m, &engine.grid(g.k, g.n), flavor);
+            let grid = engine.grid(g.k, g.n);
+
+            if let Some(spec) = layer.rnn {
+                let steps_run = spec.steps.min(ccfg.max_steps).max(1);
+                let xs = rng.ternary_vec(spec.steps * spec.input, 1.0 - layer.act_nz);
+                let want =
+                    lower::reference_recurrent_trace(&xs, &w, &spec, &grid, flavor, steps_run);
+
+                // Mapper accounting for exactly the steps this cosim
+                // runs: each step is one m=1 GEMM over the full gate
+                // block, weights programmed once and hit ever after.
+                let mut probe = (*layer).clone();
+                probe.repeats = steps_run;
+                let lw = map_layer(&self.cfg, &probe);
+                let calls = (repeats * steps_run) as u64;
+                expected.gemms += calls;
+                expected.windows += repeats as u64 * lw.windows;
+                expected.macs += calls * (g.k * g.n) as u64;
+                expected.tiles += lw.tiles;
+                expected.write_rows += lw.write_rows;
+                expected.misses += lw.tiles;
+                expected.hits += (calls - 1) * lw.tiles;
+
+                let id = engine.register_weight(&w, g.k, g.n).expect("cosim weight is valid");
+                let mut mismatches = 0u64;
+                for _ in 0..repeats {
+                    let got = lower::run_recurrent_resident(&engine, id, &xs, &spec, steps_run);
+                    for (gs, ws) in got.iter().zip(&want) {
+                        mismatches += gs.iter().zip(ws).filter(|(a, b)| a != b).count() as u64;
+                    }
+                }
+                layers.push(CosimLayerReport {
+                    name: layer.name.clone(),
+                    m: 1,
+                    m_full: 1,
+                    k: g.k,
+                    n: g.n,
+                    steps: steps_run,
+                    steps_full: spec.steps,
+                    truncated: steps_run < spec.steps,
+                    outputs: (g.n * steps_run * repeats) as u64,
+                    mismatches,
+                });
+                continue;
+            }
+
+            let m = g.m.min(ccfg.max_vectors).max(1);
+            let mut direct = None;
+            let x: Arc<[Trit]> = match layer.conv {
+                Some(geom) => {
+                    let image =
+                        rng.ternary_vec(geom.cin * geom.in_hw * geom.in_hw, 1.0 - layer.act_nz);
+                    direct = Some(lower::conv_ref_direct(&image, &w, &geom, m, &grid, flavor));
+                    lower::im2col_plane(&image, &geom, m)
+                }
+                None => Arc::from(rng.ternary_vec(m * g.k, 1.0 - layer.act_nz)),
+            };
+            let want = reference_gemm(&x, &w, m, &grid, flavor);
+            let mut mismatches = 0u64;
+            if let Some(d) = &direct {
+                // The im2col lowering itself: the direct-convolution
+                // reference must agree with the GEMM-plane reference.
+                mismatches += d.iter().zip(&want).filter(|(a, b)| a != b).count() as u64;
+            }
 
             // Mapper accounting for exactly the work this cosim runs.
             let mut probe = (*layer).clone();
@@ -410,24 +622,33 @@ impl Accelerator {
                 expected.write_rows += repeats as u64 * lw.write_rows;
             }
 
-            let mut mismatches = 0u64;
+            let w_arc: Arc<[Trit]> = Arc::from(w);
             if ccfg.resident {
-                let id = engine.register_weight(&w, g.k, g.n).expect("cosim weight is valid");
+                let id =
+                    engine.register_weight_arc(w_arc, g.k, g.n).expect("cosim weight is valid");
                 for _ in 0..repeats {
-                    let got = engine.gemm_resident(id, &x, m).expect("cosim shapes are valid");
+                    let got = engine
+                        .gemm_resident_arc(id, x.clone(), m)
+                        .expect("cosim shapes are valid");
                     mismatches += got.iter().zip(&want).filter(|(a, b)| a != b).count() as u64;
                 }
             } else {
                 for _ in 0..repeats {
-                    let got = engine.gemm(&x, &w, m, g.k, g.n).expect("cosim shapes are valid");
+                    let got = engine
+                        .gemm_arc(x.clone(), w_arc.clone(), m, g.k, g.n)
+                        .expect("cosim shapes are valid");
                     mismatches += got.iter().zip(&want).filter(|(a, b)| a != b).count() as u64;
                 }
             }
             layers.push(CosimLayerReport {
                 name: layer.name.clone(),
                 m,
+                m_full: g.m,
                 k: g.k,
                 n: g.n,
+                steps: 1,
+                steps_full: 1,
+                truncated: m < g.m,
                 outputs: (m * g.n * repeats) as u64,
                 mismatches,
             });
@@ -462,6 +683,10 @@ pub struct CosimConfig {
     /// Passes over the layer slice (>1 exercises the steady-state cache
     /// hit path in resident mode).
     pub repeats: usize,
+    /// Recurrent steps to execute per recurrent layer (the full unroll
+    /// by default; lower it to bound RNN cosim runtime the same way
+    /// `max_vectors` bounds conv/FC layers).
+    pub max_steps: usize,
 }
 
 impl Default for CosimConfig {
@@ -473,6 +698,7 @@ impl Default for CosimConfig {
             n_threads: std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4),
             resident: false,
             repeats: 1,
+            max_steps: usize::MAX,
         }
     }
 }
@@ -481,9 +707,19 @@ impl Default for CosimConfig {
 #[derive(Clone, Debug)]
 pub struct CosimLayerReport {
     pub name: String,
+    /// Vectors actually executed (after the `max_vectors` bound).
     pub m: usize,
+    /// The layer's full M (conv: whole output plane).
+    pub m_full: usize,
     pub k: usize,
     pub n: usize,
+    /// Recurrent steps actually executed (1 for non-recurrent layers).
+    pub steps: usize,
+    /// The layer's full unroll length (1 for non-recurrent layers).
+    pub steps_full: usize,
+    /// True when `max_vectors`/`max_steps` bounded this layer below its
+    /// full workload.
+    pub truncated: bool,
     pub outputs: u64,
     pub mismatches: u64,
 }
@@ -516,6 +752,12 @@ impl CosimReport {
     /// True when the engine reproduced the reference bit-for-bit.
     pub fn all_match(&self) -> bool {
         self.total_mismatches() == 0
+    }
+
+    /// Layers whose executed slice was bounded below the full workload
+    /// by `max_vectors` / `max_steps`.
+    pub fn truncated_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.truncated).count()
     }
 
     /// True when the engine's work counters equal the mapper accounting
@@ -798,6 +1040,7 @@ mod tests {
             n_threads: 2,
             resident: true,
             repeats: 3,
+            ..Default::default()
         };
         for design in [Design::Cim1, Design::NearMemory] {
             let accel = accel_for(design, Tech::Femfet3T);
@@ -847,5 +1090,106 @@ mod tests {
         let net = benchmarks::lstm();
         let r = run(Tech::Sram8T, Design::Cim1, &net);
         assert!(r.total_windows > 100_000);
+    }
+
+    #[test]
+    fn cosim_recurrent_layers_step_with_exact_per_step_accounting() {
+        // The LSTM suite entry under a bounded unroll: the stepped
+        // recurrent path must thread hidden state deterministically
+        // (the engine trace equals the serial reference bit-for-bit),
+        // charge per-step work — one m=1 GEMM per step per pass, gate
+        // weights programmed once and hit on every later call — and
+        // report the truncated unroll honestly.
+        let net = benchmarks::lstm();
+        for design in [Design::Cim1, Design::NearMemory] {
+            for resident in [false, true] {
+                let ccfg = CosimConfig {
+                    max_vectors: 1,
+                    max_layers: 2,
+                    seed: 13,
+                    n_threads: 2,
+                    resident,
+                    repeats: 2,
+                    max_steps: 3,
+                };
+                let accel = accel_for(design, Tech::Sram8T);
+                let r = accel.run_cosim(&net, &ccfg);
+                assert!(
+                    r.all_match(),
+                    "{design:?} resident={resident}: {} mismatches",
+                    r.total_mismatches()
+                );
+                assert!(
+                    r.accounting_matches(),
+                    "{design:?} resident={resident}: engine {:?} != mapper {:?}",
+                    r.engine,
+                    r.expected
+                );
+                assert_eq!(r.layers.len(), 2);
+                for l in &r.layers {
+                    assert_eq!((l.m, l.steps, l.steps_full), (1, 3, 35), "{}", l.name);
+                    assert!(l.truncated, "{}: 3 of 35 steps is a truncated unroll", l.name);
+                }
+                assert_eq!(r.truncated_layers(), 2);
+                // 2 layers × 2 passes × 3 steps of m=1 GEMM calls.
+                assert_eq!(r.engine.gemms, 12);
+                // Stationary gate weights hit in *both* residency modes,
+                // and the pool is sized so nothing ever churns.
+                assert!(r.engine.hits > 0, "{design:?} resident={resident}");
+                assert_eq!(r.engine.evictions, 0, "{design:?} resident={resident}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_sweep_model_degenerates_to_weighted_closed_form() {
+        // One-region-per-array mixes: the replayed model must reproduce
+        // the closed forms *bitwise* — same integer miss rows, same IEEE
+        // quotient — across the capacity range the measured
+        // eviction-pressure battery pins against the engine.
+        let uniform = vec![(256usize, 256usize); 8];
+        for cap in [0u64, 1, 2, 3, 5, 7, 8, 100] {
+            let m = packed_sweep_model(&uniform, cap, 256, 256);
+            assert_eq!(m.total_rows, 2048);
+            assert_eq!(m.miss_fraction(), sweep_miss_fraction(8, cap), "uniform cap {cap}");
+        }
+        // Ragged tail (seven full tiles + a half-height tail, all full
+        // width so still one region per array): the size-weighted form.
+        let ragged: Vec<(usize, usize)> =
+            [[(256usize, 256usize); 7].as_slice(), &[(128, 256)]].concat();
+        let rows: Vec<u64> = ragged.iter().map(|&(r, _)| r as u64).collect();
+        for cap in 2..=8u64 {
+            assert_eq!(
+                sweep_miss_fraction_packed(&ragged, cap, 256, 256),
+                sweep_miss_fraction_weighted(&rows, cap),
+                "ragged cap {cap}"
+            );
+        }
+        // Degenerate inputs stay in range.
+        let empty = packed_sweep_model(&[], 4, 256, 256);
+        assert_eq!((empty.miss_fraction(), empty.miss_rows_per_cycle), (0.0, 0));
+    }
+
+    #[test]
+    fn packed_sweep_model_accounts_shelf_packed_small_regions() {
+        // Four half-array regions shelf-pack two per array, so a 2-array
+        // pool holds all four resident: the exact model reports zero
+        // steady-state misses where the region-count closed form (4
+        // regions through 2 arrays) would charge 75% of the rows every
+        // pass. This gap is precisely the conv-shaped-shard mispricing
+        // the packed model exists to close.
+        let regions = [(128usize, 256usize); 4];
+        let m = packed_sweep_model(&regions, 2, 256, 256);
+        assert_eq!(m.total_rows, 512);
+        assert_eq!(m.miss_rows_per_cycle, 0);
+        assert_eq!(m.miss_fraction(), 0.0);
+        assert!(m.warmup_passes >= 1);
+        assert_eq!(sweep_miss_fraction_weighted(&[128; 4], 2), 0.75);
+        // Under genuine pressure the currency is packed *shelves*, not
+        // arrays: the same four regions through one array (two shelves)
+        // behave exactly like 4 uniform regions through capacity 2 —
+        // one proven region stays resident, three churn.
+        assert_eq!(sweep_miss_fraction_packed(&regions, 1, 256, 256), 0.75);
+        assert_eq!(sweep_miss_fraction_weighted(&[128; 4], 1), 1.0);
     }
 }

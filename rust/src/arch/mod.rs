@@ -13,7 +13,8 @@ pub mod config;
 pub mod mapper;
 
 pub use accel::{
-    sweep_miss_fraction, sweep_miss_fraction_weighted, Accelerator, CosimConfig, CosimReport,
-    Residency, SystemReport,
+    packed_sweep_model, sweep_miss_fraction, sweep_miss_fraction_packed,
+    sweep_miss_fraction_weighted, Accelerator, CosimConfig, CosimLayerReport, CosimReport,
+    PackedSweepModel, Residency, SystemReport,
 };
 pub use config::AccelConfig;

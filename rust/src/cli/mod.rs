@@ -12,6 +12,7 @@
 //!            [--capacity-words W] [--max-batch-rows R]
 //!            pipelining: [--no-pipeline-admission] [--max-stage-admit-rows R] [--max-catchup-frac F]
 //!            ingress: [--rate R] [--burst B] [--shed-high H] [--shed-low L] [--shed-exec-weight W]
+//!            client retry: [--retries N] (backoff on Retry-After hints, goodput report)
 //!            multi-model: [--model a=dir1,b=dir2] [--reserve a=WORDS]
 //!   metrics snapshot [--artifacts DIR] [--requests N] [--out PATH]   scrapeable MetricsReport JSON
 //!   artifact verify DIR   offline artifact check (schema, checksums, plan)
@@ -26,8 +27,8 @@ use anyhow::{Context, Result};
 use crate::array::area::Design;
 use crate::array::{mac, CimArray, SiTeCim1Array, SiTeCim2Array};
 use crate::coordinator::{
-    BackendKind, IngressConfig, MultiServer, MultiServerConfig, RateLimit, Server, ServerConfig,
-    Watermarks,
+    BackendKind, InferError, IngressConfig, MultiServer, MultiServerConfig, RateLimit, Server,
+    ServerConfig, Watermarks,
 };
 use crate::device::Tech;
 use crate::engine::tiling::reference_gemm;
@@ -73,6 +74,7 @@ USAGE: sitecim <subcommand> [flags]
           [--threads T] [--capacity-words W] [--max-batch-rows R]
           [--no-pipeline-admission] [--max-stage-admit-rows R] [--max-catchup-frac F]
           [--rate R] [--burst B] [--shed-high H] [--shed-low L] [--shed-exec-weight W]
+          [--retries N]
           start the serving coordinator and push synthetic traffic (the
           engine backend shares one resident-weight model and one
           persistent executor across workers, and merges all in-flight
@@ -101,7 +103,11 @@ USAGE: sitecim <subcommand> [flags]
           rejected requests are counted, never queued; rate-limited
           replies carry the bucket's computed earliest-retry time;
           --shed-exec-weight W folds the engine executor's queue backlog
-          into the shed signal (load = in-flight + W x backlog)
+          into the shed signal (load = in-flight + W x backlog);
+          --retries N (default 3) re-submits rate-limited requests after
+          sleeping out the reply's Retry-After hint and reports measured
+          goodput (answered vs offered req/s) — refusals without a clock
+          (shed, bad shape) are terminal and never retried
   metrics snapshot [--artifacts DIR] [--requests N] [--workers W] [--threads T]
           [--capacity-words W] [--max-batch-rows R]
           [--rate R] [--burst B] [--shed-high H] [--shed-low L] [--out PATH]
@@ -415,16 +421,24 @@ fn cmd_serve(args: &Args) -> Result<i32> {
     let manifest = Manifest::load(&dir)?;
     let (x, y) = manifest.load_test_set()?;
 
+    let retries = args.get_usize("retries", 3);
     let server = Server::start(cfg)?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut rejected = 0usize;
+    let mut retry_attempts = 0usize;
+    let mut retried_requests = 0usize;
     for i in 0..n_requests {
         let s = i % manifest.test_n;
         let input = x[s * manifest.in_dim..(s + 1) * manifest.in_dim].to_vec();
-        // With an ingress policy armed, rejections (rate limit, shed)
-        // are expected behavior, not driver failures: count and go on.
-        match server.infer_async(input) {
+        // With an ingress policy armed, refusals are expected behavior,
+        // not driver failures: rate limits carry a Retry-After hint and
+        // get re-submitted after backoff; everything else (shed, bad
+        // shape) is counted and skipped.
+        let (res, spent) = submit_with_retry(|| server.infer_async(input.clone()), retries);
+        retry_attempts += spent;
+        retried_requests += usize::from(spent > 0);
+        match res {
             Ok(rx) => pending.push((s, rx)),
             Err(_) => rejected += 1,
         }
@@ -443,6 +457,15 @@ fn cmd_serve(args: &Args) -> Result<i32> {
         answered as f64 / dt,
         100.0 * correct as f64 / answered.max(1) as f64
     );
+    if retry_attempts > 0 || rejected > 0 {
+        println!(
+            "client retry: {retry_attempts} backoff retries across {retried_requests} requests \
+             (budget {retries} each), {rejected} refused for good; \
+             measured goodput {:.0} of {:.0} offered req/s",
+            answered as f64 / dt,
+            n_requests as f64 / dt
+        );
+    }
     println!("{}", server.metrics.report());
     let ing = server.ingress().snapshot();
     if rejected > 0 || ing.offered() > ing.admitted {
@@ -521,15 +544,21 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
         let (x, y) = manifest.load_test_set()?;
         sets.push((name.clone(), manifest.in_dim, manifest.test_n, x, y));
     }
+    let retries = args.get_usize("retries", 3);
     let server = MultiServer::start(cfg)?;
     let t0 = Instant::now();
     let mut pending = Vec::new();
     let mut rejected = 0usize;
+    let mut retry_attempts = 0usize;
+    let mut retried_requests = 0usize;
     for i in 0..n_requests {
         let (name, in_dim, test_n, x, _) = &sets[i % sets.len()];
         let s = (i / sets.len()) % test_n;
         let input = x[s * in_dim..(s + 1) * in_dim].to_vec();
-        match server.infer_async(name, input) {
+        let (res, spent) = submit_with_retry(|| server.infer_async(name, input.clone()), retries);
+        retry_attempts += spent;
+        retried_requests += usize::from(spent > 0);
+        match res {
             Ok(rx) => pending.push((i % sets.len(), s, rx)),
             Err(_) => rejected += 1,
         }
@@ -549,6 +578,15 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
         answered as f64 / dt,
         100.0 * correct as f64 / answered.max(1) as f64
     );
+    if retry_attempts > 0 || rejected > 0 {
+        println!(
+            "client retry: {retry_attempts} backoff retries across {retried_requests} requests \
+             (budget {retries} each), {rejected} refused for good; \
+             measured goodput {:.0} of {:.0} offered req/s",
+            answered as f64 / dt,
+            n_requests as f64 / dt
+        );
+    }
     println!("{}", server.metrics.report());
     if rejected > 0 {
         let ing = server.ingress().snapshot();
@@ -578,6 +616,32 @@ fn cmd_serve_multi(args: &Args, spec: &str) -> Result<i32> {
     }
     server.shutdown();
     Ok(0)
+}
+
+/// Client-side retry with backoff: re-submit a refused request when the
+/// refusal carries the rate limiter's Retry-After hint
+/// ([`InferError::retry_after_s`]), sleeping out the hint (bounded, so a
+/// misconfigured limiter cannot stall the driver) up to `retries`
+/// times. Refusals without a clock — shed, bad shape, shutdown — are
+/// terminal: sleeping cannot clear them from the client side. Returns
+/// the final outcome plus the retries actually spent.
+fn submit_with_retry<T>(
+    mut submit: impl FnMut() -> Result<T, InferError>,
+    retries: usize,
+) -> (Result<T, InferError>, usize) {
+    let mut spent = 0usize;
+    loop {
+        match submit() {
+            Ok(v) => return (Ok(v), spent),
+            Err(e) => match e.retry_after_s() {
+                Some(t) if spent < retries => {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(t.clamp(0.0005, 0.25)));
+                    spent += 1;
+                }
+                _ => return (Err(e), spent),
+            },
+        }
+    }
 }
 
 /// Shared ingress flags: `--rate R [--burst B]` arms the per-tenant

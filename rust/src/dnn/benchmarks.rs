@@ -12,11 +12,11 @@ use super::layer::{Layer, Network};
 /// AlexNet (5 conv + 3 FC).
 pub fn alexnet() -> Network {
     let layers = vec![
-        Layer::conv("conv1", 55, 3, 11, 96).with_sparsity(0.7, 0.5),
-        Layer::conv("conv2", 27, 96, 5, 256),
-        Layer::conv("conv3", 13, 256, 3, 384),
-        Layer::conv("conv4", 13, 384, 3, 384),
-        Layer::conv("conv5", 13, 384, 3, 256),
+        Layer::conv2d("conv1", 227, 3, 11, 4, 0, 96).with_sparsity(0.7, 0.5),
+        Layer::conv2d("conv2", 27, 96, 5, 1, 2, 256),
+        Layer::conv2d("conv3", 13, 256, 3, 1, 1, 384),
+        Layer::conv2d("conv4", 13, 384, 3, 1, 1, 384),
+        Layer::conv2d("conv5", 13, 384, 3, 1, 1, 256),
         Layer::linear("fc6", 1, 9216, 4096),
         Layer::linear("fc7", 1, 4096, 4096),
         Layer::linear("fc8", 1, 4096, 1000),
@@ -26,17 +26,18 @@ pub fn alexnet() -> Network {
 
 /// ResNet-34 (grouped by stage; basic blocks = two 3×3 convs each).
 pub fn resnet34() -> Network {
-    let mut layers = vec![Layer::conv("conv1", 112, 3, 7, 64).with_sparsity(0.7, 0.5)];
+    let mut layers = vec![Layer::conv2d("conv1", 224, 3, 7, 2, 3, 64).with_sparsity(0.7, 0.5)];
     // (stage output size, channels, #basic blocks)
     let stages = [(56usize, 64usize, 3usize), (28, 128, 4), (14, 256, 6), (7, 512, 3)];
     let mut cin = 64;
     for (si, (hw, ch, blocks)) in stages.into_iter().enumerate() {
         for b in 0..blocks {
             let in_ch = if b == 0 { cin } else { ch };
-            layers.push(Layer::conv(&format!("s{}b{}_conv1", si + 2, b), hw, in_ch, 3, ch));
-            layers.push(Layer::conv(&format!("s{}b{}_conv2", si + 2, b), hw, ch, 3, ch));
+            layers.push(Layer::conv2d(&format!("s{}b{}_conv1", si + 2, b), hw, in_ch, 3, 1, 1, ch));
+            layers.push(Layer::conv2d(&format!("s{}b{}_conv2", si + 2, b), hw, ch, 3, 1, 1, ch));
             if b == 0 && in_ch != ch {
-                layers.push(Layer::conv(&format!("s{}b{}_down", si + 2, b), hw, in_ch, 1, ch));
+                layers
+                    .push(Layer::conv2d(&format!("s{}b{}_down", si + 2, b), hw, in_ch, 1, 1, 0, ch));
             }
         }
         cin = ch;
@@ -48,9 +49,9 @@ pub fn resnet34() -> Network {
 /// Inception (GoogLeNet-style): stem + representative inception blocks.
 pub fn inception() -> Network {
     let mut layers = vec![
-        Layer::conv("stem_conv1", 112, 3, 7, 64).with_sparsity(0.7, 0.5),
-        Layer::conv("stem_conv2", 56, 64, 1, 64),
-        Layer::conv("stem_conv3", 56, 64, 3, 192),
+        Layer::conv2d("stem_conv1", 224, 3, 7, 2, 3, 64).with_sparsity(0.7, 0.5),
+        Layer::conv2d("stem_conv2", 56, 64, 1, 1, 0, 64),
+        Layer::conv2d("stem_conv3", 56, 64, 3, 1, 1, 192),
     ];
     // Each inception block: 1×1, 3×3 (with reduce), 5×5 (with reduce),
     // pool-proj. (hw, cin, [b1, b3r, b3, b5r, b5, pp])
@@ -67,12 +68,12 @@ pub fn inception() -> Network {
     ];
     for (i, (hw, cin, b)) in blocks.into_iter().enumerate() {
         let tag = format!("inc{}", i + 3);
-        layers.push(Layer::conv(&format!("{tag}_1x1"), hw, cin, 1, b[0]));
-        layers.push(Layer::conv(&format!("{tag}_3x3r"), hw, cin, 1, b[1]));
-        layers.push(Layer::conv(&format!("{tag}_3x3"), hw, b[1], 3, b[2]));
-        layers.push(Layer::conv(&format!("{tag}_5x5r"), hw, cin, 1, b[3]));
-        layers.push(Layer::conv(&format!("{tag}_5x5"), hw, b[3], 5, b[4]));
-        layers.push(Layer::conv(&format!("{tag}_pp"), hw, cin, 1, b[5]));
+        layers.push(Layer::conv2d(&format!("{tag}_1x1"), hw, cin, 1, 1, 0, b[0]));
+        layers.push(Layer::conv2d(&format!("{tag}_3x3r"), hw, cin, 1, 1, 0, b[1]));
+        layers.push(Layer::conv2d(&format!("{tag}_3x3"), hw, b[1], 3, 1, 1, b[2]));
+        layers.push(Layer::conv2d(&format!("{tag}_5x5r"), hw, cin, 1, 1, 0, b[3]));
+        layers.push(Layer::conv2d(&format!("{tag}_5x5"), hw, b[3], 5, 1, 2, b[4]));
+        layers.push(Layer::conv2d(&format!("{tag}_pp"), hw, cin, 1, 1, 0, b[5]));
     }
     layers.push(Layer::linear("fc", 1, 1024, 1000));
     Network { name: "Inception".into(), layers }
@@ -144,6 +145,28 @@ mod tests {
         // Weights fit in a few M words even though MACs are ~0.8 G.
         assert!(l.total_weight_words() < 15_000_000);
         assert!(l.total_macs() > 0.3e9 as u64);
+    }
+
+    #[test]
+    fn every_suite_layer_carries_executable_lowering_metadata() {
+        // Every conv layer's spatial geometry must fold back to exactly
+        // the GEMM shape the mapper sees, and every recurrent layer's
+        // spec must match its per-step GEMM — the functional lowering
+        // path (dnn::lower) relies on this.
+        for net in suite() {
+            for l in &net.layers {
+                if let Some(g) = l.conv {
+                    assert_eq!(g.out_hw() * g.out_hw(), l.gemm.m, "{}/{}", net.name, l.name);
+                    assert_eq!(g.patch_k(), l.gemm.k, "{}/{}", net.name, l.name);
+                    assert_eq!(g.cout, l.gemm.n, "{}/{}", net.name, l.name);
+                }
+                if let Some(s) = l.rnn {
+                    assert_eq!(s.input + s.hidden, l.gemm.k, "{}/{}", net.name, l.name);
+                    assert_eq!(s.gates * s.hidden, l.gemm.n, "{}/{}", net.name, l.name);
+                    assert_eq!(s.steps, l.repeats, "{}/{}", net.name, l.name);
+                }
+            }
+        }
     }
 
     #[test]

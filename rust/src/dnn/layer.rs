@@ -27,6 +27,52 @@ impl Gemm {
     }
 }
 
+/// Spatial geometry of a convolution, kept alongside the folded GEMM view
+/// so the functional engine can lower the layer via real im2col (patch
+/// extraction from an activation plane) rather than a flat random GEMM.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ConvGeom {
+    /// Input plane height = width (square planes throughout the suite).
+    pub in_hw: usize,
+    /// Square kernel size.
+    pub ksize: usize,
+    /// Stride (same in both dimensions).
+    pub stride: usize,
+    /// Zero padding on every edge.
+    pub pad: usize,
+    /// Input channels.
+    pub cin: usize,
+    /// Output channels.
+    pub cout: usize,
+}
+
+impl ConvGeom {
+    /// Output plane height = width.
+    pub fn out_hw(&self) -> usize {
+        (self.in_hw + 2 * self.pad - self.ksize) / self.stride + 1
+    }
+
+    /// im2col reduction dimension: one column per (channel, kernel row,
+    /// kernel col) tap.
+    pub fn patch_k(&self) -> usize {
+        self.cin * self.ksize * self.ksize
+    }
+}
+
+/// Step structure of a recurrent cell, kept alongside the per-step GEMM
+/// view so the functional engine can thread hidden state `h_t → h_{t+1}`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecurrentSpec {
+    /// Time steps per inference (weights are shared across steps).
+    pub steps: usize,
+    /// Input feature width per step.
+    pub input: usize,
+    /// Hidden state width.
+    pub hidden: usize,
+    /// Gate count (4 for LSTM, 3 for GRU).
+    pub gates: usize,
+}
+
 /// A network layer as the accelerator sees it.
 #[derive(Clone, Debug)]
 pub struct Layer {
@@ -40,18 +86,45 @@ pub struct Layer {
     pub act_nz: f64,
     /// Probability a weight is non-zero (ternary weight sparsity).
     pub w_nz: f64,
+    /// Spatial geometry when this layer is a convolution; `None` for
+    /// layers constructed without it (the GEMM view is still complete).
+    pub conv: Option<ConvGeom>,
+    /// Step structure when this layer is a recurrent cell.
+    pub rnn: Option<RecurrentSpec>,
 }
 
 impl Layer {
-    pub fn conv(name: &str, out_hw: usize, cin: usize, ksize: usize, cout: usize) -> Layer {
+    /// A convolution with explicit spatial geometry. The folded GEMM is
+    /// `m = out_hw²`, `k = cin·ksize²`, `n = cout`.
+    pub fn conv2d(
+        name: &str,
+        in_hw: usize,
+        cin: usize,
+        ksize: usize,
+        stride: usize,
+        pad: usize,
+        cout: usize,
+    ) -> Layer {
+        let geom = ConvGeom { in_hw, ksize, stride, pad, cin, cout };
+        let out_hw = geom.out_hw();
         Layer {
             name: name.to_string(),
             kind: LayerKind::Conv,
-            gemm: Gemm { m: out_hw * out_hw, k: cin * ksize * ksize, n: cout },
+            gemm: Gemm { m: out_hw * out_hw, k: geom.patch_k(), n: cout },
             repeats: 1,
             act_nz: 0.5,
             w_nz: 0.5,
+            conv: Some(geom),
+            rnn: None,
         }
+    }
+
+    /// Back-compat conv constructor from the folded output size. A valid
+    /// stride-1 / pad-0 geometry is synthesized (`in_hw = out_hw + ksize
+    /// − 1`), so the layer is always executable via im2col even when the
+    /// caller only specified the GEMM fold.
+    pub fn conv(name: &str, out_hw: usize, cin: usize, ksize: usize, cout: usize) -> Layer {
+        Layer::conv2d(name, out_hw + ksize - 1, cin, ksize, 1, 0, cout)
     }
 
     pub fn linear(name: &str, m: usize, k: usize, n: usize) -> Layer {
@@ -62,6 +135,8 @@ impl Layer {
             repeats: 1,
             act_nz: 0.5,
             w_nz: 0.5,
+            conv: None,
+            rnn: None,
         }
     }
 
@@ -75,6 +150,8 @@ impl Layer {
             repeats: steps,
             act_nz: 0.5,
             w_nz: 0.5,
+            conv: None,
+            rnn: Some(RecurrentSpec { steps, input, hidden, gates }),
         }
     }
 
@@ -124,6 +201,35 @@ mod tests {
         assert_eq!(l.gemm.k, 363);
         assert_eq!(l.gemm.n, 96);
         assert_eq!(l.macs(), 3025 * 363 * 96);
+        // The synthesized geometry reproduces the folded output plane.
+        let g = l.conv.unwrap();
+        assert_eq!(g.out_hw(), 55);
+        assert_eq!(g.patch_k(), 363);
+    }
+
+    #[test]
+    fn conv2d_geometry_folds_with_stride_and_pad() {
+        // AlexNet conv1: 227×227×3, 11×11 stride 4 pad 0 → 55×55×96.
+        let l = Layer::conv2d("c1", 227, 3, 11, 4, 0, 96);
+        assert_eq!(l.gemm.m, 3025);
+        assert_eq!(l.gemm.k, 363);
+        assert_eq!(l.gemm.n, 96);
+        // ResNet stem: 224×224×3, 7×7 stride 2 pad 3 → 112×112×64.
+        let l = Layer::conv2d("stem", 224, 3, 7, 2, 3, 64);
+        assert_eq!(l.conv.unwrap().out_hw(), 112);
+        assert_eq!(l.gemm.m, 112 * 112);
+        // Same-padded 3×3 keeps the plane size.
+        let l = Layer::conv2d("b", 14, 256, 3, 1, 1, 512);
+        assert_eq!(l.conv.unwrap().out_hw(), 14);
+    }
+
+    #[test]
+    fn recurrent_carries_spec() {
+        let l = Layer::recurrent("lstm", 35, 650, 650, 4);
+        let s = l.rnn.unwrap();
+        assert_eq!(s.steps, 35);
+        assert_eq!(s.input + s.hidden, l.gemm.k);
+        assert_eq!(s.gates * s.hidden, l.gemm.n);
     }
 
     #[test]

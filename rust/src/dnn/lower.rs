@@ -1,0 +1,424 @@
+//! Workload lowering: how convolutions and recurrent cells actually run
+//! on the tiled ternary GEMM engine.
+//!
+//! Convolutions lower via **im2col**: each output-plane position becomes
+//! one M-row whose K entries are the kernel-window patch gathered from a
+//! real activation plane ([`im2col_plane`]). The lowered GEMM is checked
+//! two independent ways: [`conv_ref_direct`] re-derives every operand in
+//! convolution coordinates (window-centric gather straight from the
+//! image, never touching the im2col plane) while composing per tile with
+//! the same `dot_ref` flavor semantics as [`reference_gemm`], and
+//! [`conv_ref_naive`] is the plain integer convolution the exact
+//! (near-memory) flavor must equal outright.
+//!
+//! Recurrent cells run **step by step**: the gate GEMM executes once per
+//! time step against *resident* weights (registered once, hit from the
+//! tile cache on every later step), with the hidden state threaded
+//! `h_t → h_{t+1}` through a deterministic ternarization of the cell
+//! output ([`cell_update`]). The surrogate cell keeps LSTM/GRU dataflow
+//! (gate partitioning, cell-state carry, update/reset gating) with
+//! sign-threshold nonlinearities so the whole trace stays exact integer
+//! math — reproducible across designs, thread counts, and runs.
+
+use std::sync::Arc;
+
+use crate::array::encoding::Trit;
+use crate::array::mac::{dot_exact, dot_ref, Flavor};
+use crate::array::TernaryStorage;
+use crate::dnn::layer::{ConvGeom, RecurrentSpec};
+use crate::engine::resident::WeightId;
+use crate::engine::tiling::{extract_tile_weights, reference_gemm, TileGrid};
+use crate::engine::TernaryGemmEngine;
+
+/// Gather the first `m_run` kernel-window patches of `image` into a
+/// row-major `m_run × patch_k` im2col plane, ready to be the M-plane of
+/// a GEMM. `image` is channel-major (`c · in_hw² + y · in_hw + x`); row
+/// `wi` is output position `(wi / out_hw, wi % out_hw)` and column
+/// `(c · ksize + kr) · ksize + kc` is that window's tap, with padding
+/// taps (coordinates off the plane) contributing zero.
+pub fn im2col_plane(image: &[Trit], g: &ConvGeom, m_run: usize) -> Arc<[Trit]> {
+    assert_eq!(image.len(), g.cin * g.in_hw * g.in_hw, "image must be cin×in_hw²");
+    let out_hw = g.out_hw();
+    assert!(m_run <= out_hw * out_hw, "m_run exceeds the output plane");
+    let k = g.patch_k();
+    let mut plane = vec![0 as Trit; m_run * k];
+    for wi in 0..m_run {
+        let (oy, ox) = (wi / out_hw, wi % out_hw);
+        let row = &mut plane[wi * k..(wi + 1) * k];
+        for c in 0..g.cin {
+            for kr in 0..g.ksize {
+                let iy = (oy * g.stride + kr) as isize - g.pad as isize;
+                if iy < 0 || iy >= g.in_hw as isize {
+                    continue; // whole kernel row is padding
+                }
+                for kc in 0..g.ksize {
+                    let ix = (ox * g.stride + kc) as isize - g.pad as isize;
+                    if ix < 0 || ix >= g.in_hw as isize {
+                        continue;
+                    }
+                    row[(c * g.ksize + kr) * g.ksize + kc] =
+                        image[c * g.in_hw * g.in_hw + iy as usize * g.in_hw + ix as usize];
+                }
+            }
+        }
+    }
+    Arc::from(plane)
+}
+
+/// Plain integer direct convolution over the first `m_run` output
+/// positions: `out[wi · cout + co] = Σ_taps image[tap] · w[tap][co]`,
+/// exact i32 accumulation, no tiling, no saturation. The engine's
+/// near-memory (exact-flavor) output must equal this outright.
+pub fn conv_ref_naive(image: &[Trit], w: &[Trit], g: &ConvGeom, m_run: usize) -> Vec<i32> {
+    assert_eq!(image.len(), g.cin * g.in_hw * g.in_hw);
+    assert_eq!(w.len(), g.patch_k() * g.cout);
+    let out_hw = g.out_hw();
+    let mut out = vec![0i32; m_run * g.cout];
+    for wi in 0..m_run {
+        let (oy, ox) = (wi / out_hw, wi % out_hw);
+        for c in 0..g.cin {
+            for kr in 0..g.ksize {
+                let iy = (oy * g.stride + kr) as isize - g.pad as isize;
+                if iy < 0 || iy >= g.in_hw as isize {
+                    continue;
+                }
+                for kc in 0..g.ksize {
+                    let ix = (ox * g.stride + kc) as isize - g.pad as isize;
+                    if ix < 0 || ix >= g.in_hw as isize {
+                        continue;
+                    }
+                    let a = image[c * g.in_hw * g.in_hw + iy as usize * g.in_hw + ix as usize];
+                    if a == 0 {
+                        continue;
+                    }
+                    let tap = (c * g.ksize + kr) * g.ksize + kc;
+                    for co in 0..g.cout {
+                        out[wi * g.cout + co] += a as i32 * w[tap * g.cout + co] as i32;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Direct-convolution reference with the *engine's* tile composition:
+/// per tile of `grid`, the K-slice of each window patch is gathered
+/// straight from `image` in convolution coordinates (never via an
+/// im2col plane) and evaluated with `dot_ref` (or the exact MAC when
+/// `flavor` is `None`), partial sums recombined exactly as
+/// [`reference_gemm`] does. Bit-equal to
+/// `reference_gemm(im2col_plane(...), ...)` if and only if the im2col
+/// gather and the conv-coordinate gather agree on every tap — the
+/// conformance check for the lowering itself, saturation included.
+pub fn conv_ref_direct(
+    image: &[Trit],
+    w: &[Trit],
+    g: &ConvGeom,
+    m_run: usize,
+    grid: &TileGrid,
+    flavor: Option<Flavor>,
+) -> Vec<i32> {
+    assert_eq!(image.len(), g.cin * g.in_hw * g.in_hw);
+    assert_eq!(grid.k, g.patch_k());
+    assert_eq!(grid.n, g.cout);
+    assert_eq!(w.len(), grid.k * grid.n);
+    let out_hw = g.out_hw();
+    let (rows, cols) = (grid.rows, grid.cols);
+    let mut out = vec![0i32; m_run * grid.n];
+    let mut wbuf = vec![0 as Trit; rows * cols];
+    let mut xbuf = vec![0 as Trit; rows];
+    for tile in grid.tiles() {
+        extract_tile_weights(w, grid.k, grid.n, &tile, rows, cols, &mut wbuf);
+        let mut storage = TernaryStorage::new(rows, cols);
+        storage.write_matrix(&wbuf);
+        for wi in 0..m_run {
+            let (oy, ox) = (wi / out_hw, wi % out_hw);
+            xbuf.fill(0);
+            // Gather this tile's K-slice of the patch in conv coords:
+            // absolute patch index kk ↦ (channel, kernel row, kernel col).
+            for (slot, kk) in (tile.k0..tile.k0 + tile.k_len).enumerate() {
+                let kc = kk % g.ksize;
+                let kr = (kk / g.ksize) % g.ksize;
+                let c = kk / (g.ksize * g.ksize);
+                let iy = (oy * g.stride + kr) as isize - g.pad as isize;
+                let ix = (ox * g.stride + kc) as isize - g.pad as isize;
+                if iy < 0 || iy >= g.in_hw as isize || ix < 0 || ix >= g.in_hw as isize {
+                    continue;
+                }
+                xbuf[slot] =
+                    image[c * g.in_hw * g.in_hw + iy as usize * g.in_hw + ix as usize];
+            }
+            let partial: Vec<i32> = match flavor {
+                Some(f) => dot_ref(&storage, &xbuf, f),
+                None => dot_exact(&storage, &xbuf).into_iter().map(|v| v as i32).collect(),
+            };
+            let dst = &mut out[wi * grid.n + tile.n0..wi * grid.n + tile.n0 + tile.n_len];
+            for (d, s) in dst.iter_mut().zip(&partial[..tile.n_len]) {
+                *d += s;
+            }
+        }
+    }
+    out
+}
+
+/// Deterministic ternarization threshold for recurrent state: half the
+/// standard deviation of a K-long ternary dot product at ~50% operand
+/// density (`√k / 2`, floored at 1 so ±1 pre-activations never all
+/// saturate on tiny cells). Matches the TWN-style `0.7·E|x|` intent
+/// while staying a pure function of the layer shape.
+pub fn cell_theta(k: usize) -> f64 {
+    ((k as f64).sqrt() / 2.0).max(1.0)
+}
+
+fn tern(v: i32, theta: f64) -> Trit {
+    if v as f64 > theta {
+        1
+    } else if (v as f64) < -theta {
+        -1
+    } else {
+        0
+    }
+}
+
+/// One recurrent state update from the gate pre-activations of a step.
+///
+/// Gate columns are laid out `[gate0 · hidden | gate1 · hidden | ...]`
+/// (the order the per-step GEMM produces). The cell is a deterministic
+/// ternary surrogate that preserves the real cells' dataflow:
+///
+/// * **LSTM** (gates `i, f, g, o`): `c_t = clamp(f̂·c + î·ĝ, −1, 1)`,
+///   `h_t = ô·c_t` — forget-gated carry plus input-gated candidate,
+///   output-gated exposure.
+/// * **GRU** (gates `z, r, n`): `h_t = h` where the update gate fires
+///   (`ẑ ≠ 0`), else `n̂·|r̂|` — update-gated carry vs reset-gated
+///   candidate.
+///
+/// where `x̂ = tern(x, theta)`. Returns the new hidden state; `cell` is
+/// the carried LSTM cell state (ignored and left untouched for 3-gate
+/// cells).
+pub fn cell_update(
+    spec: &RecurrentSpec,
+    gates: &[i32],
+    h: &mut [Trit],
+    cell: &mut [Trit],
+    theta: f64,
+) {
+    assert_eq!(gates.len(), spec.gates * spec.hidden);
+    assert_eq!(h.len(), spec.hidden);
+    let hid = spec.hidden;
+    if spec.gates == 4 {
+        assert_eq!(cell.len(), hid);
+        for j in 0..hid {
+            let (i_g, f_g, g_g, o_g) = (
+                tern(gates[j], theta),
+                tern(gates[hid + j], theta),
+                tern(gates[2 * hid + j], theta),
+                tern(gates[3 * hid + j], theta),
+            );
+            let c = (f_g as i32 * cell[j] as i32 + i_g as i32 * g_g as i32).clamp(-1, 1);
+            cell[j] = c as Trit;
+            h[j] = (o_g as i32 * c) as Trit;
+        }
+    } else {
+        for j in 0..hid {
+            let (z_g, r_g, n_g) = (
+                tern(gates[j], theta),
+                tern(gates[hid + j], theta),
+                tern(gates[2 * hid + j], theta),
+            );
+            if z_g == 0 {
+                h[j] = (n_g as i32 * (r_g as i32).abs()) as Trit;
+            }
+            // z_g ≠ 0: carry h[j] unchanged.
+        }
+    }
+}
+
+/// Serial single-threaded reference for a stepped recurrent layer:
+/// `h_0 = 0`, per step `z_t = [x_t ; h_{t−1}]` runs through
+/// [`reference_gemm`] (m = 1) and [`cell_update`] threads the state.
+/// Returns the per-step gate pre-activations — the values the engine's
+/// resident stepped execution must reproduce bit-for-bit.
+pub fn reference_recurrent_trace(
+    xs: &[Trit],
+    w: &[Trit],
+    spec: &RecurrentSpec,
+    grid: &TileGrid,
+    flavor: Option<Flavor>,
+    steps_run: usize,
+) -> Vec<Vec<i32>> {
+    assert_eq!(xs.len(), spec.steps * spec.input, "xs must be steps×input");
+    assert!(steps_run <= spec.steps);
+    let k = spec.input + spec.hidden;
+    let theta = cell_theta(k);
+    let mut h = vec![0 as Trit; spec.hidden];
+    let mut cell = vec![0 as Trit; spec.hidden];
+    let mut trace = Vec::with_capacity(steps_run);
+    let mut z = vec![0 as Trit; k];
+    for t in 0..steps_run {
+        z[..spec.input].copy_from_slice(&xs[t * spec.input..(t + 1) * spec.input]);
+        z[spec.input..].copy_from_slice(&h);
+        let y = reference_gemm(&z, w, 1, grid, flavor);
+        cell_update(spec, &y, &mut h, &mut cell, theta);
+        trace.push(y);
+    }
+    trace
+}
+
+/// Execute a stepped recurrent layer on the engine against resident
+/// weights: the gate GEMM runs once per step via `gemm_resident_arc`
+/// (every step after the first hits the tile cache), hidden state
+/// threaded exactly as [`reference_recurrent_trace`] does. Returns the
+/// per-step gate pre-activations.
+pub fn run_recurrent_resident(
+    engine: &TernaryGemmEngine,
+    id: WeightId,
+    xs: &[Trit],
+    spec: &RecurrentSpec,
+    steps_run: usize,
+) -> Vec<Vec<i32>> {
+    assert_eq!(xs.len(), spec.steps * spec.input, "xs must be steps×input");
+    assert!(steps_run <= spec.steps);
+    let k = spec.input + spec.hidden;
+    let theta = cell_theta(k);
+    let mut h = vec![0 as Trit; spec.hidden];
+    let mut cell = vec![0 as Trit; spec.hidden];
+    let mut trace = Vec::with_capacity(steps_run);
+    let mut z = vec![0 as Trit; k];
+    for t in 0..steps_run {
+        z[..spec.input].copy_from_slice(&xs[t * spec.input..(t + 1) * spec.input]);
+        z[spec.input..].copy_from_slice(&h);
+        let y = engine
+            .gemm_resident_arc(id, Arc::from(&z[..]), 1)
+            .expect("recurrent step shapes are valid");
+        cell_update(spec, &y, &mut h, &mut cell, theta);
+        trace.push(y);
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dnn::layer::Layer;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn im2col_identity_conv_is_the_image() {
+        // 1×1 kernel, stride 1, no padding: the plane is the image with
+        // rows in scan order.
+        let g = ConvGeom { in_hw: 4, ksize: 1, stride: 1, pad: 0, cin: 2, cout: 3 };
+        let mut rng = Rng::new(1);
+        let image = rng.ternary_vec(2 * 16, 0.4);
+        let plane = im2col_plane(&image, &g, 16);
+        for wi in 0..16 {
+            assert_eq!(plane[wi * 2], image[wi]);
+            assert_eq!(plane[wi * 2 + 1], image[16 + wi]);
+        }
+    }
+
+    #[test]
+    fn im2col_padding_taps_are_zero() {
+        // 3×3 same-padded on a 3×3 plane: window 0 (corner) has its
+        // first row and column of taps off-plane.
+        let g = ConvGeom { in_hw: 3, ksize: 3, stride: 1, pad: 1, cin: 1, cout: 1 };
+        let image: Vec<Trit> = vec![1; 9];
+        let plane = im2col_plane(&image, &g, 9);
+        let w0 = &plane[..9];
+        // Taps (kr=0, *) and (kc=0, *) of the corner window are padding.
+        assert_eq!(w0, &[0, 0, 0, 0, 1, 1, 0, 1, 1]);
+        // Center window sees the full plane.
+        assert_eq!(&plane[4 * 9..5 * 9], &[1; 9]);
+    }
+
+    #[test]
+    fn naive_conv_equals_exact_im2col_gemm() {
+        let g = ConvGeom { in_hw: 8, ksize: 3, stride: 2, pad: 1, cin: 3, cout: 5 };
+        let m = g.out_hw() * g.out_hw();
+        let mut rng = Rng::new(7);
+        let image = rng.ternary_vec(3 * 64, 0.5);
+        let w = rng.ternary_vec(g.patch_k() * g.cout, 0.5);
+        let grid = TileGrid::new(g.patch_k(), g.cout, 16, 8);
+        let via_plane = reference_gemm(&im2col_plane(&image, &g, m), &w, m, &grid, None);
+        assert_eq!(conv_ref_naive(&image, &w, &g, m), via_plane);
+        assert_eq!(conv_ref_direct(&image, &w, &g, m, &grid, None), via_plane);
+    }
+
+    #[test]
+    fn direct_reference_matches_plane_reference_with_saturation() {
+        let g = ConvGeom { in_hw: 6, ksize: 5, stride: 1, pad: 2, cin: 2, cout: 4 };
+        let m = g.out_hw() * g.out_hw();
+        let mut rng = Rng::new(11);
+        let image = rng.ternary_vec(2 * 36, 0.3);
+        let w = rng.ternary_vec(g.patch_k() * g.cout, 0.3);
+        let grid = TileGrid::new(g.patch_k(), g.cout, 16, 4);
+        for flavor in [Some(Flavor::Cim1), Some(Flavor::Cim2)] {
+            let plane = im2col_plane(&image, &g, m);
+            assert_eq!(
+                conv_ref_direct(&image, &w, &g, m, &grid, flavor),
+                reference_gemm(&plane, &w, m, &grid, flavor),
+                "{flavor:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn lstm_cell_gates_behave() {
+        let spec = RecurrentSpec { steps: 1, input: 4, hidden: 2, gates: 4 };
+        let mut h = vec![0 as Trit; 2];
+        let mut c = vec![1 as Trit, -1];
+        // θ=1: gate fires above |1|. Unit j=0: i=+, f=0, g=+, o=+ →
+        // c=clamp(0+1)=1, h=1. Unit j=1: all gates quiet → c, h decay
+        // to 0.
+        let gates = vec![2, 0, /* i */ 0, 0, /* f */ 2, 0, /* g */ 2, 0 /* o */];
+        cell_update(&spec, &gates, &mut h, &mut c, 1.0);
+        assert_eq!(c, vec![1, 0]);
+        assert_eq!(h, vec![1, 0]);
+    }
+
+    #[test]
+    fn gru_update_gate_carries_state() {
+        let spec = RecurrentSpec { steps: 1, input: 4, hidden: 2, gates: 3 };
+        let mut h = vec![1 as Trit, 1];
+        let mut c = Vec::new();
+        // j=0: z fires → carry h=1. j=1: z quiet, r fires, n negative →
+        // h = −1.
+        let gates = vec![2, 0, /* z */ 0, 2, /* r */ 0, -2 /* n */];
+        cell_update(&spec, &gates, &mut h, &mut c, 1.0);
+        assert_eq!(h, vec![1, -1]);
+    }
+
+    #[test]
+    fn recurrent_trace_threads_hidden_state() {
+        // With a fixed input, the trace must differ from the h≡0
+        // restart after the state first moves — i.e. hidden state is
+        // genuinely threaded between steps.
+        let l = Layer::recurrent("r", 6, 32, 16, 4);
+        let spec = l.rnn.unwrap();
+        let mut rng = Rng::new(3);
+        let xs = rng.ternary_vec(spec.steps * spec.input, 0.2);
+        let w = rng.ternary_vec(l.gemm.k * l.gemm.n, 0.2);
+        let grid = TileGrid::new(l.gemm.k, l.gemm.n, 16, 16);
+        let trace = reference_recurrent_trace(&xs, &w, &spec, &grid, None, spec.steps);
+        assert_eq!(trace.len(), spec.steps);
+        // Restarting each step with h = 0 must diverge somewhere (the
+        // state-carry term is live).
+        let stateless: Vec<Vec<i32>> = (0..spec.steps)
+            .map(|t| {
+                let mut z = vec![0 as Trit; l.gemm.k];
+                z[..spec.input].copy_from_slice(&xs[t * spec.input..(t + 1) * spec.input]);
+                reference_gemm(&z, &w, 1, &grid, None)
+            })
+            .collect();
+        assert_ne!(trace, stateless);
+        // But step 0 (h starts at 0) is identical by construction.
+        assert_eq!(trace[0], stateless[0]);
+    }
+
+    #[test]
+    fn theta_floors_at_one() {
+        assert_eq!(cell_theta(1), 1.0);
+        assert!(cell_theta(1300) > 17.0);
+    }
+}

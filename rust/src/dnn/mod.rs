@@ -3,6 +3,7 @@
 
 pub mod benchmarks;
 pub mod layer;
+pub mod lower;
 pub mod ternary;
 
-pub use layer::{Gemm, Layer, LayerKind, Network};
+pub use layer::{ConvGeom, Gemm, Layer, LayerKind, Network, RecurrentSpec};

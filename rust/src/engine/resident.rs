@@ -371,6 +371,23 @@ impl TileCache {
         }
     }
 
+    /// Deterministic snapshot of the shared partition's CLOCK state:
+    /// the victim-queue order with each region's slot, placed rect and
+    /// second-chance bit. The arch-level packed sweep-miss model
+    /// (`arch::packed_sweep_model`) replays placements against a real
+    /// `TileCache` and compares these snapshots to detect the
+    /// steady-state cycle of the sweep.
+    pub fn clock_signature(&self) -> Vec<(TileKey, usize, Rect, bool)> {
+        self.partitions[SHARED_PARTITION]
+            .order
+            .iter()
+            .map(|key| {
+                let info = &self.map[key];
+                (*key, info.slot, info.rect, info.referenced)
+            })
+            .collect()
+    }
+
     /// Forget every region placed on `slot` (the streaming path borrowed
     /// the whole array, so no placement there matches its cells anymore).
     pub fn invalidate_slot(&mut self, slot: usize) {

@@ -1,0 +1,149 @@
+//! Workload-lowering conformance battery: true im2col conv lowering and
+//! stepped recurrent execution on the functional engine.
+//!
+//! - Conv: the engine's GEMM over an `im2col_plane` must be bit-exact
+//!   against both the tiled GEMM reference *and* the direct-convolution
+//!   reference (which gathers taps in conv coordinates, never building
+//!   the im2col plane) for every design, thread count and window shape
+//!   — 1×1, 3×3 (pad), 5×5, and strided — including truncated output
+//!   planes. The exact near-memory flavor must additionally equal the
+//!   naive i32 convolution outright.
+//! - Recurrent: `run_recurrent_resident` must reproduce the serial
+//!   stepped reference bit-for-bit (hidden state threaded h_t → h_{t+1}
+//!   through the deterministic ternary cell) with the per-gate GEMMs
+//!   hitting the resident cache at exactly `(steps − 1) × tiles` after
+//!   the cold step programs each tile once.
+
+use sitecim::array::Design;
+use sitecim::device::Tech;
+use sitecim::dnn::{lower, ConvGeom, RecurrentSpec};
+use sitecim::engine::tiling::reference_gemm;
+use sitecim::engine::{EngineConfig, TernaryGemmEngine};
+use sitecim::util::rng::Rng;
+
+/// Window shapes chosen to cover the suite's conv vocabulary at test
+/// scale: pointwise, padded 3×3, large 5×5, and a strided downsampler.
+fn geoms() -> Vec<ConvGeom> {
+    vec![
+        ConvGeom { in_hw: 6, ksize: 1, stride: 1, pad: 0, cin: 8, cout: 12 },
+        ConvGeom { in_hw: 8, ksize: 3, stride: 1, pad: 1, cin: 4, cout: 10 },
+        ConvGeom { in_hw: 9, ksize: 5, stride: 1, pad: 2, cin: 3, cout: 7 },
+        ConvGeom { in_hw: 11, ksize: 3, stride: 2, pad: 1, cin: 5, cout: 9 },
+    ]
+}
+
+#[test]
+fn im2col_gemm_is_bit_exact_vs_direct_conv_across_designs_and_threads() {
+    for (gi, g) in geoms().iter().enumerate() {
+        let (m, k, n) = (g.out_hw() * g.out_hw(), g.patch_k(), g.cout);
+        let mut rng = Rng::new(600 + gi as u64);
+        let image = rng.ternary_vec(g.cin * g.in_hw * g.in_hw, 0.4);
+        let w = rng.ternary_vec(k * n, 0.5);
+        let x = lower::im2col_plane(&image, g, m);
+        for design in Design::ALL {
+            for threads in [1usize, 2, 4] {
+                // 64×32 arrays force k-sharding (5×5 taps exceed one
+                // array) and engage the CiM 16-row-group saturation.
+                let engine = TernaryGemmEngine::new(
+                    EngineConfig::new(design, Tech::Femfet3T)
+                        .with_array_dims(64, 32)
+                        .with_threads(threads),
+                );
+                let grid = engine.grid(k, n);
+                let flavor = design.flavor();
+                let direct = lower::conv_ref_direct(&image, &w, g, m, &grid, flavor);
+                let tiled = reference_gemm(&x, &w, m, &grid, flavor);
+                assert_eq!(
+                    direct, tiled,
+                    "geom {gi} {design:?}: direct conv vs tiled GEMM reference"
+                );
+                let got = engine.gemm(&x, &w, m, k, n).unwrap();
+                assert_eq!(got, direct, "geom {gi} {design:?} threads={threads}");
+                if flavor.is_none() {
+                    assert_eq!(
+                        got,
+                        lower::conv_ref_naive(&image, &w, g, m),
+                        "geom {gi}: exact flavor must equal the naive convolution"
+                    );
+                }
+                // Truncated output plane: the first windows of the full
+                // plane, in the same raster order.
+                let m_run = (m / 2).max(1);
+                let x_run = lower::im2col_plane(&image, g, m_run);
+                assert_eq!(
+                    x_run[..],
+                    x[..m_run * k],
+                    "geom {gi}: truncated plane must be a prefix of the full plane"
+                );
+                assert_eq!(
+                    lower::conv_ref_direct(&image, &w, g, m_run, &grid, flavor),
+                    direct[..m_run * n],
+                    "geom {gi} {design:?}: truncated direct conv must be a prefix"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn stepped_recurrent_resident_matches_serial_reference_with_pinned_hits() {
+    let specs = [
+        ("lstm", RecurrentSpec { steps: 6, input: 24, hidden: 16, gates: 4 }),
+        ("gru", RecurrentSpec { steps: 5, input: 20, hidden: 12, gates: 3 }),
+    ];
+    for (name, spec) in specs {
+        let (k, n) = (spec.input + spec.hidden, spec.gates * spec.hidden);
+        let mut rng = Rng::new(700);
+        let xs = rng.ternary_vec(spec.steps * spec.input, 0.3);
+        let w = rng.ternary_vec(k * n, 0.5);
+        for design in Design::ALL {
+            for threads in [1usize, 4] {
+                let engine = TernaryGemmEngine::new(
+                    EngineConfig::new(design, Tech::Femfet3T)
+                        .with_array_dims(64, 32)
+                        .with_capacity_words(4 * 64 * 32)
+                        .with_threads(threads),
+                );
+                let grid = engine.grid(k, n);
+                let tiles = grid.n_tiles_total() as u64;
+                assert!(engine.pool_arrays() as u64 >= tiles, "all tiles must fit resident");
+                let want = lower::reference_recurrent_trace(
+                    &xs,
+                    &w,
+                    &spec,
+                    &grid,
+                    design.flavor(),
+                    spec.steps,
+                );
+                let id = engine.register_weight(&w, k, n).unwrap();
+                let got = lower::run_recurrent_resident(&engine, id, &xs, &spec, spec.steps);
+                assert_eq!(got, want, "{name} {design:?} threads={threads}: stepped trace");
+                let s = engine.stats();
+                assert_eq!(s.misses, tiles, "{name} {design:?}: cold step programs each tile");
+                assert_eq!(
+                    s.hits,
+                    (spec.steps as u64 - 1) * tiles,
+                    "{name} {design:?}: every later step must hit resident weights"
+                );
+                assert_eq!(s.evictions, 0, "{name} {design:?}");
+                assert_eq!(s.gemms, spec.steps as u64, "{name}: one GEMM call per step");
+            }
+        }
+        // A truncated unroll is the exact prefix of the full trace: the
+        // hidden state threads causally, so earlier steps cannot depend
+        // on later ones.
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+                .with_array_dims(64, 32)
+                .with_capacity_words(4 * 64 * 32)
+                .with_threads(1),
+        );
+        let grid = engine.grid(k, n);
+        let full =
+            lower::reference_recurrent_trace(&xs, &w, &spec, &grid, Design::Cim1.flavor(), spec.steps);
+        let id = engine.register_weight(&w, k, n).unwrap();
+        let got = lower::run_recurrent_resident(&engine, id, &xs, &spec, 3);
+        assert_eq!(got.len(), 3, "{name}: truncated unroll runs 3 steps");
+        assert_eq!(got[..], full[..3], "{name}: truncated trace is a prefix of the full trace");
+    }
+}

@@ -6,15 +6,18 @@
 //! where the old LRU policy measured exactly zero — sub-array packing /
 //! cross-array sharding must be exact under the same pressure, and the
 //! analytic `Residency::Bounded` charge must equal the engine's
-//! *measured* steady-state write rows exactly across a capacity sweep.
+//! *measured* steady-state write rows exactly across a capacity sweep —
+//! including the packing-aware replayed model on conv-shaped shard
+//! mixes that shelf-pack several regions per array.
 
 use sitecim::arch::{
-    sweep_miss_fraction, sweep_miss_fraction_weighted, AccelConfig, Accelerator, Residency,
+    packed_sweep_model, sweep_miss_fraction, sweep_miss_fraction_packed,
+    sweep_miss_fraction_weighted, AccelConfig, Accelerator, Residency,
 };
 use sitecim::array::Design;
 use sitecim::device::Tech;
 use sitecim::dnn::{Layer, Network};
-use sitecim::engine::tiling::reference_gemm;
+use sitecim::engine::tiling::{reference_gemm, TileGrid};
 use sitecim::engine::{EngineConfig, TernaryGemmEngine};
 use sitecim::util::rng::Rng;
 
@@ -265,6 +268,92 @@ fn weighted_sweep_closed_form_matches_measured_ragged_tile_counters() {
             );
         }
     }
+}
+
+#[test]
+fn packed_sweep_model_matches_measured_conv_shaped_shelf_packed_rows() {
+    // Conv-shaped grids break the one-region-per-array premise of the
+    // weighted closed form: AlexNet conv1's im2col GEMM (363×96) shards
+    // into (256,96) + (107,96) — both narrower than half an array — and
+    // the shelf packer puts them in ONE array, while conv2 (2400×256)
+    // adds nine full tiles and a 96-row tail. `packed_sweep_model`
+    // replays the real shelf packer and CLOCK scan (it drives the same
+    // `TileCache`), so its per-cycle miss rows must equal the engine's
+    // measured `write_rows` delta *exactly* at every capacity — and at
+    // the packed fit point (11 arrays for 12 regions) it reports zero
+    // steady-state misses where the region-count closed form still
+    // charges the sweep tail every pass.
+    let convs = [(363usize, 96usize), (2400usize, 256usize)];
+    let m = 1usize;
+    let mut rng = Rng::new(502);
+    let weights: Vec<(Vec<i8>, usize, usize)> =
+        convs.iter().map(|&(k, n)| (rng.ternary_vec(k * n, 0.5), k, n)).collect();
+    let xs: Vec<Vec<i8>> = convs.iter().map(|&(k, _)| rng.ternary_vec(m * k, 0.5)).collect();
+    // Placement order under one worker is FIFO: each call's shards in
+    // grid order (k-major per n-stripe), calls in submission order.
+    let regions: Vec<(usize, usize)> = convs
+        .iter()
+        .flat_map(|&(k, n)| TileGrid::new(k, n, 256, 256).shards(256, 256))
+        .map(|s| (s.k_len, s.n_len))
+        .collect();
+    assert_eq!(regions.len(), 12, "2 conv1 shards + 10 conv2 shards");
+    assert_eq!(regions[..2], [(256, 96), (107, 96)], "the pair that shelf-packs one array");
+    let rows: Vec<u64> = regions.iter().map(|&(r, _)| r as u64).collect();
+    let total: u64 = rows.iter().sum();
+    assert_eq!(total, 2763);
+
+    for cap in [2u64, 3, 5, 8, 10, 11] {
+        let model = packed_sweep_model(&regions, cap, 256, 256);
+        assert_eq!(model.total_rows, total);
+        assert!(
+            model.warmup_passes + model.period <= 32,
+            "cap {cap}: CLOCK orbit unexpectedly long ({model:?})"
+        );
+        let engine = TernaryGemmEngine::new(
+            EngineConfig::new(Design::Cim1, Tech::Femfet3T)
+                .with_capacity_words(cap * 256 * 256)
+                .with_threads(1),
+        );
+        assert_eq!(engine.pool_arrays(), cap as usize);
+        let ids: Vec<_> = weights
+            .iter()
+            .map(|(w, k, n)| engine.register_weight(w, *k, *n).unwrap())
+            .collect();
+        let wants: Vec<Vec<i32>> = weights
+            .iter()
+            .zip(&xs)
+            .map(|((w, k, n), x)| {
+                reference_gemm(x, w, m, &engine.grid(*k, *n), Design::Cim1.flavor())
+            })
+            .collect();
+        let one_pass = |tag: &str| {
+            for ((id, x), want) in ids.iter().zip(&xs).zip(&wants) {
+                assert_eq!(&engine.gemm_resident(*id, x, m).unwrap(), want, "cap {cap} {tag}");
+            }
+        };
+        for _ in 0..model.warmup_passes {
+            one_pass("warmup");
+        }
+        let before = engine.stats();
+        for _ in 0..model.period {
+            one_pass("steady");
+        }
+        let measured = engine.stats().since(&before).write_rows;
+        assert_eq!(measured, model.miss_rows_per_cycle, "cap {cap}: packed model vs measured");
+        assert_eq!(
+            sweep_miss_fraction_packed(&regions, cap, 256, 256),
+            measured as f64 / (model.period * total) as f64,
+            "cap {cap}: the packed fraction is exactly the measured ratio"
+        );
+    }
+
+    // The fit point the packed model finds and the weighted form cannot:
+    // conv1's two sub-half-width shards share one array, so 11 arrays
+    // hold all 12 regions — measured zero steady-state rows above —
+    // while the region-count form still charges rows until 12.
+    assert_eq!(sweep_miss_fraction_packed(&regions, 11, 256, 256), 0.0);
+    assert!(sweep_miss_fraction_weighted(&rows, 11) > 0.0);
+    assert_eq!(sweep_miss_fraction_weighted(&rows, 12), 0.0);
 }
 
 #[test]
